@@ -1,0 +1,76 @@
+//! Autotuning use case (the paper's §4 motivation): use a calibrated
+//! model as a *pruning heuristic* — rank the four DG differentiation
+//! variants per device without running them, then verify the ranking
+//! against actual execution.
+//!
+//! Run: `cargo run --release --example autotune_dg`
+
+use perflex::calibrate::eval_with_kernel;
+use perflex::coordinator::experiments::calibrate_case;
+use perflex::coordinator::expsets;
+use perflex::coordinator::report::fmt_time;
+use perflex::gpusim::{fleet, measure};
+use perflex::uipick::apps::{build_dg, DgVariant};
+
+fn main() -> Result<(), String> {
+    let cases = expsets::eval_cases();
+    let dg_case = &cases[1];
+    let env: std::collections::BTreeMap<String, i64> = [
+        ("nelements".to_string(), 131072i64),
+        ("nmatrices".to_string(), 3),
+    ]
+    .into_iter()
+    .collect();
+    let variants = [
+        DgVariant::Plain,
+        DgVariant::UPrefetch,
+        DgVariant::MPrefetch,
+        DgVariant::MPrefetchT,
+    ];
+
+    let aot = if perflex::runtime::artifacts_available() {
+        Some(perflex::runtime::Artifacts::load()?)
+    } else {
+        None
+    };
+    let mut correct = 0;
+    let mut total = 0;
+    for device in fleet() {
+        println!("== {} ==", device.name);
+        let (cm, fit) = calibrate_case(dg_case, &device, true, aot.as_ref())?;
+        let model = cm.to_model();
+        let mut rows = Vec::new();
+        for v in variants {
+            let knl = build_dg(v, 64, 16)?;
+            let predicted = eval_with_kernel(&model, &fit, &knl, &env, 32)?;
+            let measured = measure(&device, &knl, &env)?;
+            rows.push((v.label(), predicted, measured));
+        }
+        let mut by_pred = rows.clone();
+        by_pred.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut by_meas = rows.clone();
+        by_meas.sort_by(|a, b| a.2.total_cmp(&b.2));
+        for (label, p, m) in &rows {
+            println!(
+                "   {label:<14} predicted {:>10}  measured {:>10}",
+                fmt_time(*p),
+                fmt_time(*m)
+            );
+        }
+        let pred_best = by_pred[0].0;
+        let meas_best = by_meas[0].0;
+        total += 1;
+        if pred_best == meas_best {
+            correct += 1;
+        }
+        println!(
+            "   model picks '{pred_best}', truth is '{meas_best}' -> {}",
+            if pred_best == meas_best { "CORRECT" } else { "MISS" }
+        );
+    }
+    println!("\nfastest-variant identification: {correct}/{total} devices");
+    if correct < total {
+        return Err("model failed to identify the fastest variant somewhere".into());
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT-lower the L2 calibration graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts (consumed by rust/src/runtime/artifacts.rs):
+  artifacts/lm_step.hlo.txt   — full Levenberg-Marquardt iteration
+  artifacts/predict.hlo.txt   — batched model prediction
+  artifacts/eval_cost.hlo.txt — masked SSE cost (LM accept/reject probe)
+  artifacts/manifest.json     — shape/dtype contract shared with Rust
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Padded shape contract.  Large enough for every measurement-kernel set in
+# the paper's evaluation (the biggest, DG, uses ~60 rows x 21 features).
+L = 128        # max measurement kernels per calibration
+N = 256        # max prediction batch
+J = 24         # max model features
+P = J + 1      # feature cost params + p_edge
+DTYPE = "float64"
+
+MANIFEST_VERSION = 3
+
+
+def _spec(shape):
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(DTYPE))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts():
+    """Lower all entry points; returns {name: hlo_text}."""
+    scalar = _spec(())
+    lowered_lm = jax.jit(model.lm_step).lower(
+        _spec((L, J)), _spec((L,)), _spec((L,)), _spec((3, J)),
+        _spec((P,)), scalar, scalar,
+    )
+    lowered_predict = jax.jit(model.predict).lower(
+        _spec((N, J)), _spec((3, J)), _spec((P,)), scalar,
+    )
+    lowered_cost = jax.jit(model.eval_cost).lower(
+        _spec((L, J)), _spec((L,)), _spec((L,)), _spec((3, J)),
+        _spec((P,)), scalar,
+    )
+    return {
+        "lm_step": to_hlo_text(lowered_lm),
+        "predict": to_hlo_text(lowered_predict),
+        "eval_cost": to_hlo_text(lowered_cost),
+    }
+
+
+def manifest() -> dict:
+    return {
+        "version": MANIFEST_VERSION,
+        "dtype": DTYPE,
+        "L": L,
+        "N": N,
+        "J": J,
+        "P": P,
+        "ridge": model.RIDGE,
+        "entries": {
+            "lm_step": {
+                "file": "lm_step.hlo.txt",
+                "args": ["F[L,J]", "t[L]", "mask[L]", "groups[3,J]",
+                         "p[P]", "mode[]", "lam[]"],
+                "returns": ["pred[L]", "resid[L]", "jac[L,P]",
+                            "delta[P]", "cost[]"],
+            },
+            "predict": {
+                "file": "predict.hlo.txt",
+                "args": ["F[N,J]", "groups[3,J]", "p[P]", "mode[]"],
+                "returns": ["pred[N]"],
+            },
+            "eval_cost": {
+                "file": "eval_cost.hlo.txt",
+                "args": ["F[L,J]", "t[L]", "mask[L]", "groups[3,J]",
+                         "p[P]", "mode[]"],
+                "returns": ["cost[]"],
+            },
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    texts = build_artifacts()
+    for name, text in texts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars to {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote manifest to {mpath}")
+
+
+if __name__ == "__main__":
+    main()

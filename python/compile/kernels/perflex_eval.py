@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: blocked, batched Perflex cost-model forward + Jacobian.
+
+This is the compute hot-spot of the paper's calibration loop (Section 7.2):
+for every measurement kernel k we evaluate the model
+
+    pred_k = g(features_k, p)
+
+for the paper's three-cost-component model family and its closed-form
+Jacobian d pred_k / d p.  Two model forms are supported, mixed by a traced
+``mode`` scalar so a single AOT artifact serves both:
+
+  linear     (Eq. 7):  pred = c_overhead + c_gmem + c_onchip
+  nonlinear  (Eq. 8):  pred = c_overhead + c_gmem * s(c_gmem - c_onchip)
+                              + c_onchip * s(c_onchip - c_gmem)
+
+with a *scale-invariant* variant of the differentiable step (Eq. 6; the
+paper notes variations of its Eq. 6 are admissible):
+
+    s(u) = (tanh(p_edge * u / (a + b + eps)) + 1) / 2,  u = a - b,
+
+so the switch depends only on the cost *ratio* — making the model
+consistent between calibration on output-scaled features (Sec. 7.2) and
+prediction on raw feature values.  Using s(-u) = 1 - s(u):
+
+    pred_nl = o + b + u * s(u),   a = c_gmem, b = c_onchip.
+
+Cost components are group-masked weighted feature sums:
+
+    c_g = F @ (w * groups[g]),   w = p[:J],  p_edge = p[J].
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): rather than the GPU
+one-thread-per-row mapping a CUDA port would use, the feature matrix is
+tiled into VMEM-resident row blocks via BlockSpec; the group reductions are
+expressed as a dense [BL,J]x[J,3] contraction (MXU-eligible) and the
+tanh-switch + Jacobian are fused element-wise (VPU) work on the same
+resident block — one HBM->VMEM pass per block.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _eval_block_kernel(f_ref, groups_ref, p_ref, mode_ref, pred_ref, jac_ref):
+    """Pallas kernel body: one [BL, J] row-block of the feature matrix."""
+    F = f_ref[...]                      # [BL, J]   VMEM-resident block
+    G = groups_ref[...]                 # [3, J]    group one-hot masks
+    p = p_ref[...]                      # [J + 1]   weights + p_edge
+    mode = mode_ref[0]                  # 0.0 = linear, 1.0 = nonlinear
+
+    J = G.shape[1]
+    w = p[:J]
+    e = p[J]
+
+    # Cost components: c[:, g] = F @ (w * G[g]).  Contraction -> MXU.
+    wg = w[None, :] * G                 # [3, J]
+    c = jnp.dot(F, wg.T, preferred_element_type=F.dtype)  # [BL, 3]
+    o, a, b = c[:, 0], c[:, 1], c[:, 2]
+
+    # Scale-invariant step switch and closed-form derivatives.
+    eps = jnp.asarray(1e-30, dtype=F.dtype)
+    u = a - b
+    denom = a + b + eps
+    r = u / denom
+    th = jnp.tanh(e * r)
+    s1 = (th + 1.0) * 0.5               # s(u); s(-u) = 1 - s1
+    sech2 = 1.0 - th * th
+    # dr/da = 2b/denom^2, dr/db = -2a/denom^2.
+    dr_da = 2.0 * b / (denom * denom)
+    dr_db = -2.0 * a / (denom * denom)
+    half_e_sech2 = 0.5 * e * sech2
+
+    pred_nl = o + b + u * s1            # Eq. 8
+    pred_lin = o + a + b                # Eq. 7
+    pred = mode * pred_nl + (1.0 - mode) * pred_lin
+
+    # d pred / d c_g, mixed across the two model forms.
+    da_nl = s1 + u * half_e_sech2 * dr_da
+    db_nl = 1.0 - s1 + u * half_e_sech2 * dr_db
+    da = mode * da_nl + (1.0 - mode)
+    db = mode * db_nl + (1.0 - mode)
+    de = mode * (0.5 * u * r * sech2)   # d pred / d p_edge
+
+    # d pred / d w_j = F[:, j] * (G0_j + da * G1_j + db * G2_j).
+    coef = (
+        G[0][None, :]
+        + da[:, None] * G[1][None, :]
+        + db[:, None] * G[2][None, :]
+    )                                   # [BL, J]
+    jac_w = F * coef
+
+    pred_ref[...] = pred
+    jac_ref[...] = jnp.concatenate([jac_w, de[:, None]], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def _perflex_eval_padded(F, groups, p, mode_arr, *, block_rows):
+    L, J = F.shape
+    P = J + 1
+    grid = (L // block_rows,)
+    return pl.pallas_call(
+        _eval_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, J), lambda i: (i, 0)),
+            pl.BlockSpec((3, J), lambda i: (0, 0)),
+            pl.BlockSpec((P,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, P), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L,), F.dtype),
+            jax.ShapeDtypeStruct((L, P), F.dtype),
+        ],
+        interpret=True,
+    )(F, groups, p, mode_arr)
+
+
+def perflex_eval(F, groups, p, mode, *, block_rows=32):
+    """Batched model forward + Jacobian via the Pallas kernel.
+
+    Args:
+      F:      [L, J] feature-value matrix (row = measurement kernel).
+      groups: [3, J] one-hot masks assigning feature j to cost component
+              (0 = overhead, 1 = gmem, 2 = onchip).
+      p:      [J + 1] parameters; p[:J] feature costs, p[J] = p_edge.
+      mode:   scalar in [0, 1]; 0 = linear (Eq. 7), 1 = nonlinear (Eq. 8).
+
+    Returns:
+      (pred [L], jac [L, J + 1]).
+    """
+    F = jnp.asarray(F)
+    groups = jnp.asarray(groups, dtype=F.dtype)
+    p = jnp.asarray(p, dtype=F.dtype)
+    mode_arr = jnp.asarray(mode, dtype=F.dtype).reshape((1,))
+
+    L, J = F.shape
+    bl = min(block_rows, L)
+    pad = (-L) % bl
+    if pad:
+        # Zero rows are harmless: c = 0 -> pred = 0, jac row = 0.
+        F = jnp.concatenate([F, jnp.zeros((pad, J), F.dtype)], axis=0)
+    pred, jac = _perflex_eval_padded(F, groups, p, mode_arr, block_rows=bl)
+    return pred[:L], jac[:L]

@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracle for the ``perflex_eval`` Pallas kernel.
+
+Implements the same three-cost-component model family (Eq. 6-8 of the
+paper) with no Pallas involvement.  ``perflex_forward_ref`` is additionally
+differentiable with ``jax.jacfwd``, which the test suite uses to validate
+the hand-derived Jacobian returned by both the kernel and
+``perflex_eval_ref``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def perflex_forward_ref(F, groups, p, mode):
+    """Model forward only: pred [L].  Differentiable w.r.t. ``p``."""
+    F = jnp.asarray(F)
+    groups = jnp.asarray(groups, dtype=F.dtype)
+    p = jnp.asarray(p, dtype=F.dtype)
+    J = F.shape[1]
+    w = p[:J]
+    e = p[J]
+    c = F @ (w[None, :] * groups).T          # [L, 3]
+    o, a, b = c[:, 0], c[:, 1], c[:, 2]
+    u = a - b
+    denom = a + b + jnp.asarray(1e-30, dtype=F.dtype)
+    s1 = (jnp.tanh(e * u / denom) + 1.0) * 0.5
+    pred_nl = o + b + u * s1
+    pred_lin = o + a + b
+    return mode * pred_nl + (1.0 - mode) * pred_lin
+
+
+def perflex_eval_ref(F, groups, p, mode):
+    """Forward + closed-form Jacobian, pure jnp: (pred [L], jac [L, J+1])."""
+    F = jnp.asarray(F)
+    groups = jnp.asarray(groups, dtype=F.dtype)
+    p = jnp.asarray(p, dtype=F.dtype)
+    mode = jnp.asarray(mode, dtype=F.dtype)
+    J = F.shape[1]
+    w = p[:J]
+    e = p[J]
+    c = F @ (w[None, :] * groups).T
+    o, a, b = c[:, 0], c[:, 1], c[:, 2]
+    eps = jnp.asarray(1e-30, dtype=F.dtype)
+    u = a - b
+    denom = a + b + eps
+    r = u / denom
+    th = jnp.tanh(e * r)
+    s1 = (th + 1.0) * 0.5
+    sech2 = 1.0 - th * th
+    dr_da = 2.0 * b / (denom * denom)
+    dr_db = -2.0 * a / (denom * denom)
+    half_e_sech2 = 0.5 * e * sech2
+
+    pred = mode * (o + b + u * s1) + (1.0 - mode) * (o + a + b)
+
+    da = mode * (s1 + u * half_e_sech2 * dr_da) + (1.0 - mode)
+    db = mode * (1.0 - s1 + u * half_e_sech2 * dr_db) + (1.0 - mode)
+    de = mode * (0.5 * u * r * sech2)
+    coef = (
+        groups[0][None, :]
+        + da[:, None] * groups[1][None, :]
+        + db[:, None] * groups[2][None, :]
+    )
+    jac = jnp.concatenate([F * coef, de[:, None]], axis=1)
+    return pred, jac

@@ -1,0 +1,92 @@
+"""L2: JAX compute graph for Perflex model calibration and prediction.
+
+Calls the L1 Pallas kernel (``kernels.perflex_eval``) for the batched
+forward + Jacobian, then fuses the surrounding Levenberg-Marquardt step so
+that one AOT executable performs a full LM iteration (Section 7.2 of the
+paper): residual, Jacobian, damped-normal-equation solve, step and cost.
+
+The Rust coordinator owns the LM *loop* (accept/reject, damping schedule);
+Python is never on that path — these functions are lowered once by
+``aot.py`` to HLO text artifacts with fixed, padded shapes.
+
+Shape/padding contract (must match rust/src/runtime/artifacts.rs):
+  * rows are padded to L with ``mask`` zero on padding rows;
+  * feature columns are padded to J; unused columns have all-zero F and
+    group masks, and the ridge term pins their delta to exactly 0;
+  * p has length J + 1, the trailing entry being p_edge (Eq. 6);
+  * ``mode`` selects the model family: 0 = linear Eq. 7, 1 = nonlinear
+    Eq. 8 (intermediate values give a homotopy, used by tests only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.perflex_eval import perflex_eval  # noqa: E402
+
+#: Ridge added to the damped normal equations.  Feature values are scaled
+#: to O(1) by the Rust caller, so A entries are O(L); 1e-9 is negligible
+#: for active columns but pins all-zero (padding) columns to delta = 0.
+RIDGE = 1e-9
+
+
+def spd_solve(M, g):
+    """Solve ``M x = g`` for symmetric positive-definite ``M``.
+
+    Statically-unrolled Gauss-Jordan elimination without pivoting: the
+    damped normal equations are SPD + ridge, so pivoting is unnecessary.
+    Deliberately NOT ``jnp.linalg.solve`` — that lowers to a LAPACK
+    typed-FFI custom-call (API_VERSION_TYPED_FFI) which the runtime's
+    xla_extension 0.5.1 rejects; this version lowers to plain HLO ops.
+    """
+    P = M.shape[0]
+    A = jnp.concatenate([M, g[:, None]], axis=1)  # [P, P+1]
+    for k in range(P):
+        row = A[k] / A[k, k]
+        A = A - A[:, k : k + 1] * row[None, :]
+        A = A.at[k].set(row)
+    return A[:, P]
+
+
+def lm_step(F, t, mask, groups, p, mode, lam):
+    """One Levenberg-Marquardt step for min_p || mask * (t - g(F, p)) ||.
+
+    Args:
+      F:      [L, J] feature matrix (padded).
+      t:      [L]    target output feature (1.0 after output scaling).
+      mask:   [L]    1.0 for real measurement-kernel rows, 0.0 padding.
+      groups: [3, J] cost-component masks (overhead, gmem, onchip).
+      p:      [J+1]  current parameters (p[J] = p_edge).
+      mode:   scalar, 0 = linear model, 1 = nonlinear overlap model.
+      lam:    scalar Marquardt damping.
+
+    Returns:
+      (pred [L], resid [L], jac [L, J+1], delta [J+1], cost scalar)
+      where p + delta is the proposed next iterate and cost = sum resid^2.
+    """
+    pred, jac = perflex_eval(F, groups, p, mode)
+    resid = (t - pred) * mask
+    Jm = jac * mask[:, None]
+    A = Jm.T @ Jm
+    g = Jm.T @ resid
+    P = A.shape[0]
+    M = A + lam * jnp.diag(jnp.diag(A)) + RIDGE * jnp.eye(P, dtype=A.dtype)
+    delta = spd_solve(M, g)
+    cost = jnp.sum(resid * resid)
+    return pred, resid, jac, delta, cost
+
+
+def predict(F, groups, p, mode):
+    """Batched model prediction (no Jacobian consumers): pred [N]."""
+    pred, _ = perflex_eval(F, groups, p, mode)
+    return pred
+
+
+def eval_cost(F, t, mask, groups, p, mode):
+    """Masked sum-of-squares cost at ``p`` (used for LM accept/reject)."""
+    pred, _ = perflex_eval(F, groups, p, mode)
+    resid = (t - pred) * mask
+    return jnp.sum(resid * resid)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repository root.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,75 @@
+"""AOT artifact generation: HLO text structure and manifest contract."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import perflex_forward_ref
+
+
+@pytest.fixture(scope="module")
+def texts():
+    return aot.build_artifacts()
+
+
+def test_all_entries_lower_to_hlo_text(texts):
+    for name in ("lm_step", "predict", "eval_cost"):
+        text = texts[name]
+        assert "ENTRY" in text, name
+        assert "f64" in text, name
+        assert len(text) > 500, name
+
+
+def test_lm_step_signature_shapes(texts):
+    text = texts["lm_step"]
+    # Inputs: F[L,J], t[L], mask[L], groups[3,J], p[P], mode, lam.
+    assert f"f64[{aot.L},{aot.J}]" in text
+    assert f"f64[3,{aot.J}]" in text
+    assert f"f64[{aot.P}]" in text
+    # Jacobian output and the PxP normal-equation solve must be present.
+    assert f"f64[{aot.L},{aot.P}]" in text
+    assert f"f64[{aot.P},{aot.P}]" in text
+
+
+def test_predict_signature_shapes(texts):
+    assert f"f64[{aot.N},{aot.J}]" in texts["predict"]
+
+
+def test_manifest_matches_module_constants():
+    m = aot.manifest()
+    assert m["L"] == aot.L and m["J"] == aot.J and m["P"] == aot.J + 1
+    assert m["dtype"] == "float64"
+    assert set(m["entries"]) == {"lm_step", "predict", "eval_cost"}
+    json.dumps(m)  # serializable
+
+
+def test_padded_full_shape_execution():
+    """Run lm_step at the exact artifact shapes (what Rust will feed)."""
+    rng = np.random.default_rng(0)
+    L, J, P = aot.L, aot.J, aot.P
+    rows, cols = 40, 10
+    F = np.zeros((L, J))
+    F[:rows, :cols] = rng.uniform(0.2, 2.0, size=(rows, cols))
+    groups = np.zeros((3, J))
+    groups[0, 0] = 1
+    groups[1, 1:5] = 1
+    groups[2, 5:cols] = 1
+    p_true = np.zeros(P)
+    p_true[:cols] = rng.uniform(0.1, 1.0, size=cols)
+    p_true[-1] = 8.0
+    t = np.zeros(L)
+    t[:rows] = np.asarray(
+        perflex_forward_ref(F[:rows], groups, p_true, 1.0)
+    )
+    mask = np.zeros(L)
+    mask[:rows] = 1.0
+
+    pred, resid, jac, delta, cost = model.lm_step(
+        F, t, mask, groups, p_true, 1.0, 1e-3
+    )
+    assert pred.shape == (L,) and jac.shape == (L, P)
+    np.testing.assert_allclose(np.asarray(resid)[:rows], 0.0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(delta), 0.0, atol=1e-9)
+    assert float(cost) < 1e-20

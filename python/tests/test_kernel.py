@@ -1,0 +1,124 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes of the Pallas ``perflex_eval`` kernel and
+asserts allclose against the pure-jnp oracle (ref.py), and validates the
+hand-derived Jacobian against ``jax.jacfwd`` of the reference forward.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.perflex_eval import perflex_eval
+from compile.kernels.ref import perflex_eval_ref, perflex_forward_ref
+
+
+def _problem(L, J, seed, dtype):
+    rng = np.random.default_rng(seed)
+    F = rng.uniform(0.0, 2.0, size=(L, J)).astype(dtype)
+    # Random (not necessarily one-hot) group masks exercise generality.
+    groups = rng.uniform(0.0, 1.0, size=(3, J)).astype(dtype)
+    p = np.concatenate(
+        [rng.uniform(0.01, 1.0, size=J), rng.uniform(0.5, 20.0, size=1)]
+    ).astype(dtype)
+    return F, groups, p
+
+
+TOL = {np.float32: dict(rtol=2e-5, atol=2e-5),
+       np.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    L=st.integers(min_value=1, max_value=70),
+    J=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mode=st.sampled_from([0.0, 1.0, 0.37]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    block_rows=st.sampled_from([1, 8, 32]),
+)
+def test_kernel_matches_ref(L, J, seed, mode, dtype, block_rows):
+    F, groups, p = _problem(L, J, seed, dtype)
+    pred_k, jac_k = perflex_eval(F, groups, p, mode, block_rows=block_rows)
+    pred_r, jac_r = perflex_eval_ref(F, groups, p, mode)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(pred_k, pred_r, **tol)
+    np.testing.assert_allclose(jac_k, jac_r, **tol)
+    assert pred_k.shape == (L,)
+    assert jac_k.shape == (L, J + 1)
+    assert pred_k.dtype == np.dtype(dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    L=st.integers(min_value=1, max_value=24),
+    J=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mode=st.sampled_from([0.0, 1.0, 0.5]),
+)
+def test_closed_form_jacobian_matches_autodiff(L, J, seed, mode):
+    F, groups, p = _problem(L, J, seed, np.float64)
+    _, jac_k = perflex_eval(F, groups, p, mode)
+    jac_ad = jax.jacfwd(lambda pp: perflex_forward_ref(F, groups, pp, mode))(
+        jnp.asarray(p)
+    )
+    np.testing.assert_allclose(jac_k, jac_ad, rtol=1e-9, atol=1e-9)
+
+
+def test_linear_mode_is_plain_weighted_sum():
+    F, groups, p = _problem(17, 6, 0, np.float64)
+    pred, jac = perflex_eval(F, groups, p, 0.0)
+    w = p[:6]
+    expected = F @ (w * groups.sum(axis=0))
+    np.testing.assert_allclose(pred, expected, rtol=1e-12)
+    # Linear model: no p_edge sensitivity.
+    np.testing.assert_allclose(jac[:, -1], 0.0, atol=0.0)
+
+
+def test_nonlinear_mode_approximates_max_for_large_edge():
+    """Eq. 8 with sharp step ~= overhead + max(c_gmem, c_onchip) (Eq. 3)."""
+    rng = np.random.default_rng(7)
+    J = 6
+    F = rng.uniform(0.5, 2.0, size=(40, J))
+    groups = np.zeros((3, J))
+    groups[0, 0] = 1.0          # overhead
+    groups[1, 1:3] = 1.0        # gmem
+    groups[2, 3:] = 1.0         # onchip
+    p = np.concatenate([rng.uniform(0.1, 1.0, size=J), [1e4]])
+    pred, _ = perflex_eval(F, groups, p, 1.0)
+    w = p[:J]
+    c = F @ (w[None, :] * groups).T
+    expected = c[:, 0] + np.maximum(c[:, 1], c[:, 2])
+    np.testing.assert_allclose(pred, expected, rtol=1e-6)
+
+
+def test_step_function_figure4_shape():
+    """The scale-invariant switch s(u) = (tanh(p_edge u/(a+b))+1)/2 is
+    monotone in the gmem share and hits 0/0.5/1 at the extremes (the
+    shape of the paper's Figure 4, in ratio coordinates)."""
+    # a sweeps 0..1 while b = 1-a: r = a-b spans -1..1.
+    a = np.linspace(0.0, 1.0, 41)
+    F = np.stack([a, 1.0 - a], axis=1)
+    groups = np.array([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0]])
+    p = np.array([1.0, 1.0, 10.0])
+    pred, _ = perflex_eval(F, groups, p, 1.0)
+    # pred = b + (a-b) * s(r); recover s where a != b.
+    u = 2.0 * a - 1.0
+    s = np.where(np.abs(u) > 1e-12, (np.asarray(pred) - (1.0 - a)) / u, 0.5)
+    assert s[0] == pytest.approx(0.0, abs=1e-8)      # all on-chip
+    assert s[-1] == pytest.approx(1.0, abs=1e-8)     # all gmem
+    assert s[20] == pytest.approx(0.5, abs=1e-9)     # balanced
+    assert np.all(np.diff(s) >= -1e-9)               # monotone
+
+
+def test_padding_rows_are_inert():
+    F, groups, p = _problem(33, 5, 3, np.float64)   # 33 pads to 64 / 44
+    pred, jac = perflex_eval(F, groups, p, 1.0, block_rows=32)
+    pred2, jac2 = perflex_eval(F, groups, p, 1.0, block_rows=11)
+    np.testing.assert_allclose(pred, pred2, rtol=1e-12)
+    np.testing.assert_allclose(jac, jac2, rtol=1e-12)

@@ -1,0 +1,127 @@
+"""L2 tests: the fused Levenberg-Marquardt step and prediction graph."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import perflex_forward_ref
+
+
+def _synthetic(L=48, J=8, seed=0, mode=1.0, noise=0.0):
+    """Feature data generated from known ground-truth parameters."""
+    rng = np.random.default_rng(seed)
+    F = rng.uniform(0.2, 2.0, size=(L, J))
+    groups = np.zeros((3, J))
+    groups[0, 0] = 1.0
+    groups[1, 1 : J // 2] = 1.0
+    groups[2, J // 2 :] = 1.0
+    p_true = np.concatenate([rng.uniform(0.1, 1.0, size=J), [8.0]])
+    t = np.asarray(perflex_forward_ref(F, groups, p_true, mode))
+    if noise:
+        t = t * (1.0 + noise * rng.standard_normal(L))
+    mask = np.ones(L)
+    return F, t, mask, groups, p_true
+
+
+def _run_lm(F, t, mask, groups, p0, mode, iters=60):
+    """Reference LM driver (mirrors the Rust loop in calibrate/)."""
+    p = jnp.asarray(p0)
+    lam = 1e-3
+    _, _, _, _, cost = model.lm_step(F, t, mask, groups, p, mode, lam)
+    for _ in range(iters):
+        _, _, _, delta, cost = model.lm_step(F, t, mask, groups, p, mode, lam)
+        p_new = p + delta
+        new_cost = model.eval_cost(F, t, mask, groups, p_new, mode)
+        if new_cost < cost:
+            p, cost, lam = p_new, new_cost, max(lam / 3.0, 1e-12)
+        else:
+            lam = min(lam * 5.0, 1e8)
+    return np.asarray(p), float(cost)
+
+
+def test_lm_recovers_linear_parameters_exactly():
+    F, t, mask, groups, p_true = _synthetic(mode=0.0, seed=1)
+    p0 = np.full_like(p_true, 0.5)
+    p, cost = _run_lm(F, t, mask, groups, p0, mode=0.0)
+    assert cost < 1e-18
+    np.testing.assert_allclose(p[:-1], p_true[:-1], rtol=1e-6)
+
+
+def test_lm_fits_nonlinear_overlap_model():
+    F, t, mask, groups, p_true = _synthetic(mode=1.0, seed=2)
+    p0 = np.concatenate([np.full(len(p_true) - 1, 0.5), [5.0]])
+    p, cost = _run_lm(F, t, mask, groups, p0, mode=1.0, iters=120)
+    pred = np.asarray(perflex_forward_ref(F, groups, p, 1.0))
+    rel = np.abs(pred - t) / np.abs(t)
+    assert np.max(rel) < 1e-3, f"max rel err {np.max(rel)}"
+
+
+def test_lm_step_decreases_cost_from_far_start():
+    F, t, mask, groups, _ = _synthetic(mode=1.0, seed=3)
+    p0 = np.concatenate([np.full(len(groups[0]), 3.0), [1.0]])
+    _, cost0 = _run_lm(F, t, mask, groups, p0, mode=1.0, iters=1)
+    _, cost40 = _run_lm(F, t, mask, groups, p0, mode=1.0, iters=40)
+    assert cost40 < cost0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    extra=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_row_padding_does_not_change_step(extra, seed):
+    """mask=0 rows (the padding contract with Rust) must be inert."""
+    F, t, mask, groups, p_true = _synthetic(L=24, seed=seed)
+    p0 = np.full_like(p_true, 0.4)
+    rng = np.random.default_rng(seed)
+    Fp = np.concatenate([F, rng.uniform(0, 5, size=(extra, F.shape[1]))])
+    tp = np.concatenate([t, rng.uniform(0, 5, size=extra)])
+    mp = np.concatenate([mask, np.zeros(extra)])
+
+    out_a = model.lm_step(F, t, mask, groups, p0, 1.0, 1e-3)
+    out_b = model.lm_step(Fp, tp, mp, groups, p0, 1.0, 1e-3)
+    np.testing.assert_allclose(out_a[3], out_b[3], rtol=1e-9)  # delta
+    np.testing.assert_allclose(out_a[4], out_b[4], rtol=1e-12)  # cost
+
+
+def test_column_padding_pins_unused_params():
+    """All-zero feature columns (padding contract) get delta exactly ~0."""
+    F, t, mask, groups, p_true = _synthetic(L=24, J=6, seed=5)
+    Jpad = 4
+    Fp = np.concatenate([F, np.zeros((F.shape[0], Jpad))], axis=1)
+    gp = np.concatenate([groups, np.zeros((3, Jpad))], axis=1)
+    p0 = np.concatenate([np.full(6, 0.4), np.zeros(Jpad), [8.0]])
+    _, _, _, delta, _ = model.lm_step(Fp, t, mask, gp, p0, 1.0, 1e-3)
+    np.testing.assert_allclose(delta[6 : 6 + Jpad], 0.0, atol=1e-12)
+
+
+def test_predict_matches_forward_ref():
+    F, t, mask, groups, p_true = _synthetic(seed=6)
+    pred = model.predict(F, groups, p_true, 1.0)
+    ref = perflex_forward_ref(F, groups, p_true, 1.0)
+    np.testing.assert_allclose(pred, ref, rtol=1e-12)
+
+
+def test_eval_cost_consistent_with_lm_step():
+    F, t, mask, groups, p_true = _synthetic(seed=7, noise=0.05)
+    p0 = p_true * 1.3
+    *_, cost = model.lm_step(F, t, mask, groups, p0, 1.0, 1e-3)
+    cost2 = model.eval_cost(F, t, mask, groups, p0, 1.0)
+    np.testing.assert_allclose(float(cost), float(cost2), rtol=1e-12)
+
+
+def test_output_scaled_calibration_matches_paper_scaling():
+    """scale_features_by_output(): divide F rows by t, target becomes 1."""
+    F, t, mask, groups, p_true = _synthetic(mode=0.0, seed=8)
+    Fs = F / t[:, None]
+    ts = np.ones_like(t)
+    p0 = np.full_like(p_true, 0.5)
+    p, cost = _run_lm(Fs, ts, mask, groups, p0, mode=0.0)
+    assert cost < 1e-18
+    np.testing.assert_allclose(p[:-1], p_true[:-1], rtol=1e-6)

@@ -1,0 +1,50 @@
+//! Benchmark + ablation: Levenberg-Marquardt calibration through the
+//! native symbolic path vs the AOT JAX/Pallas artifact (EXPERIMENTS.md
+//! §Perf records the comparison).
+use perflex::bench_harness::bench;
+use perflex::calibrate::{FeatureData, LmOptions};
+use perflex::model::{CostGroup, CostModel};
+use perflex::runtime::{artifacts_available, fit_cost_model_aot, fit_cost_model_native, Artifacts};
+use perflex::util::Rng;
+
+fn synthetic(rows: usize, terms: usize) -> (CostModel, FeatureData) {
+    let mut cm = CostModel::new("titan_v", true);
+    for i in 0..terms {
+        let g = match i % 3 {
+            0 => CostGroup::Overhead,
+            1 => CostGroup::Gmem,
+            _ => CostGroup::OnChip,
+        };
+        cm = cm.term(&format!("t{i}"), &format!("f_mem_access_tag:x{i}"), g);
+    }
+    let mut rng = Rng::new(9);
+    let mut data = FeatureData {
+        feature_ids: cm.feature_columns(),
+        ..Default::default()
+    };
+    for _ in 0..rows {
+        let f: Vec<f64> = (0..terms).map(|_| rng.uniform_in(0.2, 2.0)).collect();
+        let t: f64 = f.iter().enumerate().map(|(i, v)| 0.1 * (i + 1) as f64 * v).sum();
+        data.rows.push(f);
+        data.outputs.push(t);
+        data.labels.push("syn".into());
+    }
+    data.scale_features_by_output();
+    (cm, data)
+}
+
+fn main() {
+    let (cm, data) = synthetic(100, 12);
+    let opts = LmOptions::default();
+    bench("LM fit, native symbolic backend", 20, || {
+        let _ = fit_cost_model_native(&cm, &data, &opts).unwrap();
+    });
+    if artifacts_available() {
+        let artifacts = Artifacts::load().unwrap();
+        bench("LM fit, AOT JAX/Pallas backend", 20, || {
+            let _ = fit_cost_model_aot(&artifacts, &cm, &data, &opts).unwrap();
+        });
+    } else {
+        println!("bench LM fit, AOT backend: SKIPPED (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,29 @@
+//! Benchmark: symbolic statistics gathering (Algorithm 1+2) and
+//! quasi-polynomial re-evaluation — the paper's amortization claim.
+use perflex::bench_harness::bench;
+use perflex::uipick::apps::{build_dg, build_matmul, DgVariant};
+
+fn main() {
+    let mm = build_matmul(perflex::ir::DType::F32, true, 16).unwrap();
+    let dg = build_dg(DgVariant::MPrefetchT, 64, 16).unwrap();
+    bench("stats::gather(matmul_pf)", 50, || {
+        let _ = perflex::stats::gather(&mm, 32).unwrap();
+    });
+    bench("stats::gather(dg_m_prefetch_t)", 50, || {
+        let _ = perflex::stats::gather(&dg, 32).unwrap();
+    });
+    // Amortized re-evaluation: one gather, many sizes.
+    let st = perflex::stats::gather(&mm, 32).unwrap();
+    let madd = st.op_count(perflex::ir::DType::F32, "madd");
+    bench("QPoly re-eval x1000 sizes", 20, || {
+        let mut acc = 0.0;
+        for n in 0..1000i128 {
+            let e = [("n".to_string(), 1024 + 16 * n)].into_iter().collect();
+            acc += madd.eval_f64(&e);
+        }
+        assert!(acc > 0.0);
+    });
+    bench("kernel build+transform (matmul_pf)", 50, || {
+        let _ = build_matmul(perflex::ir::DType::F32, true, 16).unwrap();
+    });
+}

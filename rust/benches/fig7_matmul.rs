@@ -1,0 +1,14 @@
+//! End-to-end harness benchmark: regenerates the paper's fig7 and
+//! reports its headline statistics plus wall time.
+use perflex::bench_harness::bench;
+
+fn main() {
+    let mut summary = std::collections::BTreeMap::new();
+    bench("experiment fig7 (end-to-end)", 3, || {
+        let rep = perflex::coordinator::run_experiment("fig7", true).unwrap();
+        summary = rep.summary.clone();
+    });
+    for (k, v) in &summary {
+        println!("    fig7.{k} = {v:.6}");
+    }
+}

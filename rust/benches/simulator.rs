@@ -1,0 +1,17 @@
+//! Benchmark: simulated-GPU measurement throughput (the experiment
+//! harnesses call this thousands of times).
+use perflex::bench_harness::bench;
+use perflex::gpusim::{device_by_id, measure, simulate_time};
+use perflex::uipick::apps::build_matmul;
+
+fn main() {
+    let knl = build_matmul(perflex::ir::DType::F32, true, 16).unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let env = [("n".to_string(), 2048i64)].into_iter().collect();
+    bench("simulate_time(matmul_pf)", 100, || {
+        let _ = simulate_time(&dev, &knl, &env).unwrap();
+    });
+    bench("measure(matmul_pf) [60 trials]", 100, || {
+        let _ = measure(&dev, &knl, &env).unwrap();
+    });
+}

@@ -1,0 +1,25 @@
+//! Minimal criterion-style benchmark harness (criterion is not in the
+//! offline crate set; see Cargo.toml).  Prints mean / min / max over a
+//! fixed iteration count after a warmup run.
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations (plus one warmup) and report.
+pub fn bench(name: &str, iters: u32, mut f: impl FnMut()) {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+}

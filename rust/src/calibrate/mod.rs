@@ -1,0 +1,631 @@
+//! Model calibration (paper Section 7.2) and prediction (§7.3).
+//!
+//! Feature values are gathered for a measurement-kernel set, optionally
+//! scaled by the output (the paper's `scale_features_by_output`), and
+//! the model is fitted by Levenberg-Marquardt.  The LM *loop* lives
+//! here in Rust; the residual/Jacobian/step evaluation is a pluggable
+//! [`LmBackend`]:
+//!
+//! * [`NativeBackend`] — the general path: any model expression, using
+//!   symbolic differentiation (`ModelExpr::diff`).
+//! * `runtime::AotBackend` — the accelerated path for the builtin
+//!   three-component family, executing the AOT-compiled JAX/Pallas
+//!   `lm_step` artifact on the PJRT CPU client.
+
+use std::collections::BTreeMap;
+
+use crate::features::FeatureSpec;
+use crate::gpusim::{measure, DeviceProfile};
+use crate::model::{Model, ModelExpr};
+use crate::stats;
+use crate::uipick::GeneratedKernel;
+
+/// Feature values for a measurement-kernel set.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureData {
+    /// Input-feature identifiers (column order).
+    pub feature_ids: Vec<String>,
+    /// One row of input-feature values per measurement kernel.
+    pub rows: Vec<Vec<f64>>,
+    /// Output-feature (wall time) per measurement kernel.
+    pub outputs: Vec<f64>,
+    /// Kernel labels for diagnostics.
+    pub labels: Vec<String>,
+    /// Whether `scale_features_by_output` has been applied.
+    pub scaled: bool,
+}
+
+impl FeatureData {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// §7.2: divide each input-feature row by its output value and set
+    /// outputs to 1, making the fit minimize *relative* error.
+    pub fn scale_features_by_output(&mut self) {
+        for (row, t) in self.rows.iter_mut().zip(&self.outputs) {
+            for v in row.iter_mut() {
+                *v /= *t;
+            }
+        }
+        for t in self.outputs.iter_mut() {
+            *t = 1.0;
+        }
+        self.scaled = true;
+    }
+}
+
+/// Evaluate the model's input features and measure its output feature
+/// for every kernel in the measurement set.
+pub fn gather_feature_values(
+    model: &Model,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+) -> Result<FeatureData, String> {
+    gather_features_by_ids(model.input_features(), kernels, device)
+}
+
+/// Like [`gather_feature_values`] but with an explicit feature-column
+/// order (the AOT backend requires the cost model's term order).
+pub fn gather_features_by_ids(
+    ids: Vec<String>,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+) -> Result<FeatureData, String> {
+    let specs: Vec<FeatureSpec> = ids
+        .iter()
+        .map(|id| FeatureSpec::parse(id))
+        .collect::<Result<_, _>>()?;
+    let mut data = FeatureData {
+        feature_ids: ids,
+        ..Default::default()
+    };
+    for gk in kernels {
+        let st = stats::gather(&gk.kernel, device.sub_group_size)?;
+        let env: BTreeMap<String, i128> = gk
+            .env
+            .iter()
+            .map(|(k, v)| (k.clone(), *v as i128))
+            .collect();
+        let row: Vec<f64> = specs
+            .iter()
+            .map(|s| s.eval(&st, &env))
+            .collect::<Result<_, _>>()?;
+        // Kernels a device cannot launch (e.g. 18x18 work-groups on the
+        // AMD R9 Fury) are skipped, exactly as the paper had to; their
+        // exclusive features stay at the bound of 0.
+        let t = match measure(device, &gk.kernel, &gk.env) {
+            Ok(t) => t,
+            Err(e) if e.contains("CL_INVALID_WORK_GROUP_SIZE") => continue,
+            Err(e) => return Err(e),
+        };
+        data.rows.push(row);
+        data.outputs.push(t);
+        data.labels.push(format!(
+            "{}[{}]",
+            gk.kernel.name,
+            gk.env
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+    }
+    Ok(data)
+}
+
+/// One Levenberg-Marquardt backend: given parameters and damping,
+/// produce a proposed step and the current cost.
+pub trait LmBackend {
+    /// Sum-of-squares cost at `p`.
+    fn cost(&mut self, p: &[f64]) -> Result<f64, String>;
+    /// `(delta, cost_at_p)` for the damped normal equations at `p`.
+    fn step(&mut self, p: &[f64], lam: f64) -> Result<(Vec<f64>, f64), String>;
+}
+
+/// Native backend: symbolic-differentiation Jacobian over the model
+/// expression (handles arbitrary user models).
+pub struct NativeBackend {
+    expr: ModelExpr,
+    param_names: Vec<String>,
+    grads: Vec<ModelExpr>,
+    feature_ids: Vec<String>,
+    rows: Vec<Vec<f64>>,
+    outputs: Vec<f64>,
+}
+
+impl NativeBackend {
+    pub fn new(model: &Model, data: &FeatureData) -> NativeBackend {
+        Self::with_params(model, data, model.params())
+    }
+
+    /// Use an explicit parameter ordering (must cover the model's
+    /// parameters; extras are allowed and simply have zero gradient).
+    pub fn with_params(
+        model: &Model,
+        data: &FeatureData,
+        param_names: Vec<String>,
+    ) -> NativeBackend {
+        let grads = param_names
+            .iter()
+            .map(|p| model.expr.diff(p))
+            .collect();
+        NativeBackend {
+            expr: model.expr.clone(),
+            param_names,
+            grads,
+            feature_ids: data.feature_ids.clone(),
+            rows: data.rows.clone(),
+            outputs: data.outputs.clone(),
+        }
+    }
+
+    pub fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+
+    fn envs(&self, p: &[f64], row: &[f64]) -> (BTreeMap<String, f64>, BTreeMap<String, f64>) {
+        let params: BTreeMap<String, f64> = self
+            .param_names
+            .iter()
+            .cloned()
+            .zip(p.iter().copied())
+            .collect();
+        let feats: BTreeMap<String, f64> = self
+            .feature_ids
+            .iter()
+            .cloned()
+            .zip(row.iter().copied())
+            .collect();
+        (params, feats)
+    }
+
+    /// Predictions at `p` for every row.
+    pub fn predict(&self, p: &[f64]) -> Result<Vec<f64>, String> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let (pe, fe) = self.envs(p, row);
+                self.expr.eval(&pe, &fe)
+            })
+            .collect()
+    }
+}
+
+const RIDGE: f64 = 1e-9;
+
+impl LmBackend for NativeBackend {
+    fn cost(&mut self, p: &[f64]) -> Result<f64, String> {
+        let pred = self.predict(p)?;
+        Ok(pred
+            .iter()
+            .zip(&self.outputs)
+            .map(|(g, t)| (t - g) * (t - g))
+            .sum())
+    }
+
+    fn step(&mut self, p: &[f64], lam: f64) -> Result<(Vec<f64>, f64), String> {
+        let np = self.param_names.len();
+        let l = self.rows.len();
+        let mut jac = vec![vec![0.0; np]; l];
+        let mut resid = vec![0.0; l];
+        for (k, row) in self.rows.iter().enumerate() {
+            let (pe, fe) = self.envs(p, row);
+            let g = self.expr.eval(&pe, &fe)?;
+            resid[k] = self.outputs[k] - g;
+            for (i, gexpr) in self.grads.iter().enumerate() {
+                jac[k][i] = gexpr.eval(&pe, &fe)?;
+            }
+        }
+        // Damped normal equations: (JtJ + lam diag(JtJ) + ridge I) d = Jt r.
+        let mut a = vec![vec![0.0; np]; np];
+        let mut b = vec![0.0; np];
+        for k in 0..l {
+            for i in 0..np {
+                b[i] += jac[k][i] * resid[k];
+                for j in 0..np {
+                    a[i][j] += jac[k][i] * jac[k][j];
+                }
+            }
+        }
+        for i in 0..np {
+            a[i][i] += lam * a[i][i] + RIDGE;
+        }
+        let delta = solve_dense(&mut a, &mut b)?;
+        let cost = resid.iter().map(|r| r * r).sum();
+        Ok((delta, cost))
+    }
+}
+
+/// Gaussian elimination with partial pivoting (P <= ~25 here).
+pub fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) -> Result<Vec<f64>, String> {
+    let n = b.len();
+    for col in 0..n {
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        if a[pivot][col].abs() < 1e-300 {
+            return Err("singular normal equations".into());
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for k in col + 1..n {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Ok(x)
+}
+
+/// LM driver options.
+#[derive(Clone, Debug)]
+pub struct LmOptions {
+    pub max_iters: usize,
+    pub init_lambda: f64,
+    pub tol: f64,
+    /// Per-parameter lower bounds (projected LM).  The builtin cost
+    /// models bound cost coefficients at 0 — the paper's
+    /// interpretability criterion ("carrying out additional operations
+    /// should never reduce cost") — and the overlap edge at 1 so the
+    /// step switch cannot flatten or invert.
+    pub lower_bounds: Option<Vec<f64>>,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions {
+            max_iters: 200,
+            init_lambda: 1e-3,
+            tol: 1e-14,
+            lower_bounds: None,
+        }
+    }
+}
+
+impl LmOptions {
+    /// Bounds for a cost model with `n_terms` cost coefficients plus a
+    /// trailing p_edge.
+    pub fn cost_model_bounds(n_terms: usize) -> LmOptions {
+        let mut lb = vec![0.0; n_terms];
+        lb.push(1.0);
+        LmOptions {
+            lower_bounds: Some(lb),
+            ..LmOptions::default()
+        }
+    }
+}
+
+/// Calibration result.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub param_names: Vec<String>,
+    pub params: Vec<f64>,
+    /// Final sum-of-squares residual (the §7.2 diagnostic Perflex logs).
+    pub residual: f64,
+    pub iterations: usize,
+}
+
+impl FitResult {
+    pub fn param(&self, name: &str) -> Option<f64> {
+        self.param_names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.params[i])
+    }
+}
+
+/// The Levenberg-Marquardt loop (accept/reject with damping schedule).
+pub fn levenberg_marquardt(
+    backend: &mut dyn LmBackend,
+    param_names: Vec<String>,
+    p0: Vec<f64>,
+    opts: &LmOptions,
+) -> Result<FitResult, String> {
+    let mut p = p0;
+    let mut lam = opts.init_lambda;
+    let mut cost = backend.cost(&p)?;
+    let mut iters = 0;
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        let (delta, _) = backend.step(&p, lam)?;
+        let mut p_new: Vec<f64> =
+            p.iter().zip(&delta).map(|(a, d)| a + d).collect();
+        if let Some(lb) = &opts.lower_bounds {
+            for (v, b) in p_new.iter_mut().zip(lb) {
+                if *v < *b {
+                    *v = *b;
+                }
+            }
+        }
+        let new_cost = backend.cost(&p_new)?;
+        if new_cost.is_finite() && new_cost < cost {
+            let improvement = (cost - new_cost) / cost.max(1e-300);
+            p = p_new;
+            cost = new_cost;
+            lam = (lam / 3.0).max(1e-14);
+            if improvement < opts.tol {
+                break;
+            }
+        } else {
+            lam = (lam * 5.0).min(1e10);
+            if lam >= 1e10 {
+                break;
+            }
+        }
+    }
+    Ok(FitResult {
+        param_names,
+        params: p,
+        residual: cost,
+        iterations: iters,
+    })
+}
+
+/// Heuristic starting point: each term contributes ~equally to the
+/// (scaled) output, and the overlap edge starts moderately sharp.
+pub fn initial_params(data: &FeatureData, n_terms: usize, with_edge: bool) -> Vec<f64> {
+    let l = data.len().max(1);
+    let t_mean: f64 = data.outputs.iter().sum::<f64>() / l as f64;
+    let mut p0 = Vec::with_capacity(n_terms + usize::from(with_edge));
+    for j in 0..n_terms {
+        let f_mean: f64 =
+            data.rows.iter().map(|r| r[j]).sum::<f64>() / l as f64;
+        p0.push(if f_mean.abs() > 1e-300 {
+            t_mean / (n_terms as f64 * f_mean)
+        } else {
+            0.0
+        });
+    }
+    if with_edge {
+        // Dimensionless sharpness of the scale-invariant switch.
+        p0.push(5.0);
+    }
+    p0
+}
+
+/// Fit a model natively (arbitrary expression path).
+pub fn fit_model(
+    model: &Model,
+    data: &FeatureData,
+    opts: &LmOptions,
+) -> Result<FitResult, String> {
+    let names = model.params();
+    let with_edge = names.iter().any(|n| n == "p_edge");
+    let n_terms = names.len() - usize::from(with_edge);
+    // Order params so p_edge (if present) is last, matching initial_params.
+    let mut ordered: Vec<String> = names
+        .iter()
+        .filter(|n| *n != "p_edge")
+        .cloned()
+        .collect();
+    if with_edge {
+        ordered.push("p_edge".into());
+    }
+    let p0 = initial_params(data, n_terms, with_edge);
+    let mut backend = NativeBackend::with_params(model, data, ordered.clone());
+    levenberg_marquardt(&mut backend, ordered, p0, opts)
+}
+
+/// Predict the output feature for a kernel using fitted parameters
+/// (§7.3 `model.eval_with_kernel`).
+pub fn eval_with_kernel(
+    model: &Model,
+    fit: &FitResult,
+    kernel: &crate::ir::Kernel,
+    env: &BTreeMap<String, i64>,
+    sub_group_size: u64,
+) -> Result<f64, String> {
+    let st = stats::gather(kernel, sub_group_size)?;
+    let ienv: BTreeMap<String, i128> =
+        env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
+    let mut feats = BTreeMap::new();
+    for id in model.input_features() {
+        let spec = FeatureSpec::parse(&id)?;
+        feats.insert(id, spec.eval(&st, &ienv)?);
+    }
+    let params: BTreeMap<String, f64> = fit
+        .param_names
+        .iter()
+        .cloned()
+        .zip(fit.params.iter().copied())
+        .collect();
+    model.expr.eval(&params, &feats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_id;
+    use crate::model::{CostGroup, CostModel};
+    use crate::uipick::KernelCollection;
+    use crate::util::prop;
+
+    #[test]
+    fn solve_dense_small_system() {
+        let mut a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let mut b = vec![5.0, 10.0];
+        let x = solve_dense(&mut a, &mut b).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_solver_inverts_random_spd_systems() {
+        prop::check("gaussian elimination", 40, |rng| {
+            let n = rng.int_in(1, 8) as usize;
+            // SPD-ish: A = M^T M + I.
+            let m: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
+                .collect();
+            let mut a = vec![vec![0.0; n]; n];
+            for i in 0..n {
+                for j in 0..n {
+                    for k in 0..n {
+                        a[i][j] += m[k][i] * m[k][j];
+                    }
+                }
+                a[i][i] += 1.0;
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+            let mut b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i][j] * x_true[j]).sum())
+                .collect();
+            let mut a2 = a.clone();
+            let x = solve_dense(&mut a2, &mut b).map_err(|e| e)?;
+            for i in 0..n {
+                prop::ensure_close(x[i], x_true[i], 1e-6, "solution")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lm_recovers_linear_model_exactly() {
+        // Synthetic: t = 2*f1 + 3*f2.
+        let model = Model::new(
+            "f_cl_wall_time_titan_v",
+            "p_a * f_op_float32_madd + p_b * f_thread_groups",
+        )
+        .unwrap();
+        let mut data = FeatureData {
+            feature_ids: vec![
+                "f_op_float32_madd".into(),
+                "f_thread_groups".into(),
+            ],
+            ..Default::default()
+        };
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..20 {
+            let f1 = rng.uniform_in(1.0, 10.0);
+            let f2 = rng.uniform_in(1.0, 10.0);
+            data.rows.push(vec![f1, f2]);
+            data.outputs.push(2.0 * f1 + 3.0 * f2);
+            data.labels.push("synthetic".into());
+        }
+        let fit = fit_model(&model, &data, &LmOptions::default()).unwrap();
+        assert!(fit.residual < 1e-18, "{}", fit.residual);
+        assert!((fit.param("p_a").unwrap() - 2.0).abs() < 1e-6);
+        assert!((fit.param("p_b").unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lm_fits_nonlinear_overlap_model() {
+        // Synthetic data generated by the max()-like overlap form.
+        let cm = CostModel::new("titan_v", true)
+            .term("g1", "f_mem_access_tag:aLD", CostGroup::Gmem)
+            .term("o1", "f_op_float32_madd", CostGroup::OnChip);
+        let model = cm.to_model();
+        let (pg, po, edge) = (0.7, 0.4, 25.0);
+        let mut data = FeatureData {
+            feature_ids: vec![
+                "f_mem_access_tag:aLD".into(),
+                "f_op_float32_madd".into(),
+            ],
+            ..Default::default()
+        };
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..40 {
+            let fg = rng.uniform_in(0.5, 4.0);
+            let fo = rng.uniform_in(0.5, 4.0);
+            let (a, b) = (pg * fg, po * fo);
+            let u: f64 = a - b;
+            let s1 = ((edge * u / (a + b + 1e-30)).tanh() + 1.0) / 2.0;
+            data.rows.push(vec![fg, fo]);
+            data.outputs.push(b + u * s1);
+            data.labels.push("synthetic".into());
+        }
+        let fit = fit_model(&model, &data, &LmOptions::default()).unwrap();
+        let pred_model = fit.residual / data.len() as f64;
+        assert!(pred_model < 1e-4, "mse {pred_model}");
+        assert!((fit.param("p_g1").unwrap() - pg).abs() < 0.05, "{fit:?}");
+        assert!((fit.param("p_o1").unwrap() - po).abs() < 0.05, "{fit:?}");
+    }
+
+    #[test]
+    fn end_to_end_flops_calibration_predicts_unseen_size() {
+        // §2.2 in miniature: calibrate a 1-term madd model on the madd
+        // microbenchmarks, then predict a held-out variant within 25%.
+        let dev = device_by_id("titan_v").unwrap();
+        let knls = KernelCollection::all()
+            .generate_kernels(&[
+                "flops_madd_pattern",
+                "dtype:float32",
+                "nelements:524288,1048576",
+                "m:1024,1408",
+            ])
+            .unwrap();
+        assert_eq!(knls.len(), 4);
+        let model = Model::new(
+            "f_cl_wall_time_titan_v",
+            "p_f32madd * f_op_float32_madd + p_launch * f_sync_kernel_launch",
+        )
+        .unwrap();
+        let mut data = gather_feature_values(&model, &knls, &dev).unwrap();
+        data.scale_features_by_output();
+        let fit = fit_model(&model, &data, &LmOptions::default()).unwrap();
+
+        // Held-out: different (nelements, m).
+        let test = KernelCollection::all()
+            .generate_kernels(&[
+                "flops_madd_pattern",
+                "dtype:float32",
+                "nelements:786432",
+                "m:1280",
+            ])
+            .unwrap();
+        let predicted = eval_with_kernel(
+            &model,
+            &fit,
+            &test[0].kernel,
+            &test[0].env,
+            dev.sub_group_size,
+        )
+        .unwrap();
+        let actual = measure(&dev, &test[0].kernel, &test[0].env).unwrap();
+        let rel = (predicted - actual).abs() / actual;
+        assert!(rel < 0.25, "predicted {predicted}, actual {actual}");
+
+        // Interpretability: implied madd throughput is within an order
+        // of magnitude of peak (it is a *throughput* kernel).
+        let p_madd = fit.param("p_f32madd").unwrap();
+        let implied = 2.0 * 32.0 / p_madd; // flops/s at SG granularity
+        assert!(
+            implied > 0.2 * dev.peak_flops() && implied < 3.0 * dev.peak_flops(),
+            "implied {implied:.3e} vs peak {:.3e}",
+            dev.peak_flops()
+        );
+    }
+
+    #[test]
+    fn scale_features_by_output_normalizes() {
+        let mut d = FeatureData {
+            feature_ids: vec!["f_thread_groups".into()],
+            rows: vec![vec![10.0], vec![40.0]],
+            outputs: vec![2.0, 8.0],
+            labels: vec!["a".into(), "b".into()],
+            scaled: false,
+        };
+        d.scale_features_by_output();
+        assert_eq!(d.rows, vec![vec![5.0], vec![5.0]]);
+        assert_eq!(d.outputs, vec![1.0, 1.0]);
+        assert!(d.scaled);
+    }
+}

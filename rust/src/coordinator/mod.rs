@@ -1,0 +1,16 @@
+//! Experiment coordinator: reproduces every table and figure of the
+//! paper's evaluation (Section 8) on the simulated fleet.
+//!
+//! * [`expsets`] — the three evaluation models and their measurement-
+//!   kernel sets (the content of Fig. 6).
+//! * [`experiments`] — one harness per table/figure; each produces an
+//!   [`report::ExperimentReport`] with both human-readable text and a
+//!   JSON document written under `reports/`.
+//! * [`report`] — rendering and error-statistics helpers.
+
+pub mod experiments;
+pub mod expsets;
+pub mod report;
+
+pub use experiments::{run_experiment, EXPERIMENT_IDS};
+pub use report::ExperimentReport;

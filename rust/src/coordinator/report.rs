@@ -1,0 +1,200 @@
+//! Report rendering and error statistics.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Geometric mean of relative errors (the paper reports errors this
+/// way, citing Fleming & Wallace 1986).  Zero errors are clamped.
+pub fn geomean(errors: &[f64]) -> f64 {
+    if errors.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = errors.iter().map(|e| e.max(1e-9).ln()).sum();
+    (s / errors.len() as f64).exp()
+}
+
+/// Relative error |predicted - measured| / measured.
+pub fn rel_err(predicted: f64, measured: f64) -> f64 {
+    (predicted - measured).abs() / measured.abs().max(1e-300)
+}
+
+/// One prediction record.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub device: String,
+    pub variant: String,
+    pub sizes: BTreeMap<String, i64>,
+    pub measured: f64,
+    pub predicted: f64,
+}
+
+impl Prediction {
+    pub fn rel_err(&self) -> f64 {
+        rel_err(self.predicted, self.measured)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", self.device.as_str().into()),
+            ("variant", self.variant.as_str().into()),
+            (
+                "sizes",
+                Json::Obj(
+                    self.sizes
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v)))
+                        .collect(),
+                ),
+            ),
+            ("measured_s", self.measured.into()),
+            ("predicted_s", self.predicted.into()),
+            ("rel_err", self.rel_err().into()),
+        ])
+    }
+}
+
+/// A finished experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub id: String,
+    pub title: String,
+    pub lines: Vec<String>,
+    pub predictions: Vec<Prediction>,
+    pub summary: BTreeMap<String, f64>,
+}
+
+impl ExperimentReport {
+    pub fn new(id: &str, title: &str) -> ExperimentReport {
+        ExperimentReport {
+            id: id.to_string(),
+            title: title.to_string(),
+            lines: Vec::new(),
+            predictions: Vec::new(),
+            summary: BTreeMap::new(),
+        }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    /// Geomean relative error over all predictions.
+    pub fn overall_geomean(&self) -> f64 {
+        geomean(
+            &self
+                .predictions
+                .iter()
+                .map(Prediction::rel_err)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Geomean over predictions matching (device, variant) filters.
+    pub fn geomean_where(
+        &self,
+        device: Option<&str>,
+        variant: Option<&str>,
+    ) -> f64 {
+        geomean(
+            &self
+                .predictions
+                .iter()
+                .filter(|p| device.is_none_or(|d| p.device == d))
+                .filter(|p| variant.is_none_or(|v| p.variant == v))
+                .map(Prediction::rel_err)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.id.as_str().into()),
+            ("title", self.title.as_str().into()),
+            (
+                "lines",
+                Json::Arr(self.lines.iter().map(|l| l.as_str().into()).collect()),
+            ),
+            (
+                "predictions",
+                Json::Arr(self.predictions.iter().map(Prediction::to_json).collect()),
+            ),
+            (
+                "summary",
+                Json::Obj(
+                    self.summary
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render to text.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        if !self.summary.is_empty() {
+            out.push_str("-- summary --\n");
+            for (k, v) in &self.summary {
+                out.push_str(&format!("{k}: {v:.6}\n"));
+            }
+        }
+        out
+    }
+
+    /// Write `reports/<id>.json`.
+    pub fn write_json(&self, dir: &std::path::Path) -> Result<(), String> {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.to_json().to_string()).map_err(|e| e.to_string())
+    }
+}
+
+/// Pretty-print seconds.
+pub fn fmt_time(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else {
+        format!("{:.1} us", t * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_matches_hand_calculation() {
+        let g = geomean(&[0.01, 0.04]);
+        assert!((g - 0.02).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn report_roundtrips_json() {
+        let mut r = ExperimentReport::new("figX", "test");
+        r.line("hello");
+        r.predictions.push(Prediction {
+            device: "titan_v".into(),
+            variant: "pf".into(),
+            sizes: [("n".to_string(), 2048i64)].into_iter().collect(),
+            measured: 1e-3,
+            predicted: 1.1e-3,
+        });
+        r.summary.insert("geomean".into(), r.overall_geomean());
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("id").and_then(Json::as_str),
+            Some("figX")
+        );
+        assert!((r.overall_geomean() - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,482 @@
+//! Perflex kernel features (paper Section 6.1).
+//!
+//! A *feature* maps (kernel, problem-size parameters) to a number.
+//! Features are named by structured identifiers beginning with `f_`:
+//!
+//! ```text
+//! f_op_float32_madd
+//! f_mem_access_global_float32_load
+//! f_mem_access_global_float32_lstrides:{0:1,1:>16}_afr:1
+//! f_mem_access_tag:aLD
+//! f_sync_local_barrier_per_wg
+//! f_sync_kernel_launch
+//! f_thread_groups
+//! f_cl_wall_time_titan_v
+//! ```
+//!
+//! All fields after the `f_mem_access` prefix are optional filters; an
+//! access contributes to the feature iff it matches every given filter
+//! (the paper's property-based characterization), or is named directly
+//! by its memory-access tag.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::ir::{DType, MemScope};
+use crate::stats::{Direction, KernelStats, MemAccessStat};
+
+/// A constraint on an integer quantity (stride or AFR).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Constraint {
+    Eq(i64),
+    Gt(i64),
+    Lt(i64),
+}
+
+impl Constraint {
+    pub fn matches(&self, v: f64) -> bool {
+        match self {
+            Constraint::Eq(c) => (v - *c as f64).abs() < 1e-9,
+            Constraint::Gt(c) => v > *c as f64 + 1e-9,
+            Constraint::Lt(c) => v < *c as f64 - 1e-9,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Constraint, String> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix('>') {
+            rest.parse()
+                .map(Constraint::Gt)
+                .map_err(|_| format!("bad constraint '{s}'"))
+        } else if let Some(rest) = s.strip_prefix('<') {
+            rest.parse()
+                .map(Constraint::Lt)
+                .map_err(|_| format!("bad constraint '{s}'"))
+        } else {
+            s.parse()
+                .map(Constraint::Eq)
+                .map_err(|_| format!("bad constraint '{s}'"))
+        }
+    }
+}
+
+impl fmt::Display for Constraint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Constraint::Eq(c) => write!(f, "{c}"),
+            Constraint::Gt(c) => write!(f, ">{c}"),
+            Constraint::Lt(c) => write!(f, "<{c}"),
+        }
+    }
+}
+
+/// Filter describing a family of memory accesses (§6.1.1's "memory
+/// access pattern" characteristics).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemAccessFilter {
+    pub tag: Option<String>,
+    pub scope: Option<MemScope>,
+    pub dtype: Option<DType>,
+    pub direction: Option<Direction>,
+    pub lstrides: BTreeMap<u8, Constraint>,
+    pub gstrides: BTreeMap<u8, Constraint>,
+    pub afr: Option<Constraint>,
+}
+
+impl MemAccessFilter {
+    pub fn matches(&self, m: &MemAccessStat, env: &BTreeMap<String, i128>) -> bool {
+        if let Some(t) = &self.tag {
+            if m.tag.as_deref() != Some(t.as_str()) {
+                return false;
+            }
+        }
+        if let Some(s) = self.scope {
+            if m.scope != s {
+                return false;
+            }
+        }
+        if let Some(d) = self.dtype {
+            if m.dtype != d {
+                return false;
+            }
+        }
+        if let Some(dir) = self.direction {
+            if m.direction != dir {
+                return false;
+            }
+        }
+        for (axis, c) in &self.lstrides {
+            if !c.matches(m.lstrides[*axis as usize].eval_f64(env)) {
+                return false;
+            }
+        }
+        for (axis, c) in &self.gstrides {
+            if !c.matches(m.gstrides[*axis as usize].eval_f64(env)) {
+                return false;
+            }
+        }
+        if let Some(c) = &self.afr {
+            if !c.matches(m.afr(env)) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A parsed feature identifier.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeatureSpec {
+    /// `f_op_<dtype>_<op>` — arithmetic count, sub-group granularity.
+    Op { dtype: DType, op: String },
+    /// `f_mem_access_...` — classified memory access count.
+    MemAccess(MemAccessFilter),
+    /// `f_sync_local_barrier_per_wg` — per-work-item barriers × groups.
+    SyncBarrierPerWg,
+    /// `f_sync_kernel_launch` — constant 1 per launch.
+    SyncKernelLaunch,
+    /// `f_thread_groups` — total work-group count.
+    ThreadGroups,
+    /// `f_cl_wall_time_<device>` — measured output feature.
+    WallTime { device: String },
+}
+
+impl FeatureSpec {
+    /// Parse a feature identifier (with its `f_` prefix).
+    pub fn parse(id: &str) -> Result<FeatureSpec, String> {
+        let body = id
+            .strip_prefix("f_")
+            .ok_or_else(|| format!("feature id must start with f_: '{id}'"))?;
+        if let Some(rest) = body.strip_prefix("op_") {
+            let (dts, op) = rest
+                .rsplit_once('_')
+                .ok_or_else(|| format!("bad op feature '{id}'"))?;
+            let dtype = DType::parse(dts).ok_or_else(|| format!("bad dtype in '{id}'"))?;
+            if !matches!(op, "add" | "sub" | "mul" | "div" | "madd") {
+                return Err(format!("bad op '{op}' in '{id}'"));
+            }
+            return Ok(FeatureSpec::Op {
+                dtype,
+                op: op.to_string(),
+            });
+        }
+        if let Some(rest) = body.strip_prefix("mem_access") {
+            return Ok(FeatureSpec::MemAccess(parse_mem_filter(rest)?));
+        }
+        match body {
+            "sync_local_barrier_per_wg" => Ok(FeatureSpec::SyncBarrierPerWg),
+            "sync_kernel_launch" => Ok(FeatureSpec::SyncKernelLaunch),
+            "thread_groups" => Ok(FeatureSpec::ThreadGroups),
+            _ => {
+                if let Some(dev) = body.strip_prefix("cl_wall_time_") {
+                    Ok(FeatureSpec::WallTime {
+                        device: dev.to_string(),
+                    })
+                } else {
+                    Err(format!("unknown feature '{id}'"))
+                }
+            }
+        }
+    }
+
+    /// Evaluate against gathered statistics at concrete sizes.
+    /// `WallTime` cannot be computed from statistics (it is measured);
+    /// evaluating it here is an error.
+    pub fn eval(
+        &self,
+        stats: &KernelStats,
+        env: &BTreeMap<String, i128>,
+    ) -> Result<f64, String> {
+        let sg = stats.sub_group_size;
+        match self {
+            FeatureSpec::Op { dtype, op } => {
+                Ok(stats.op_count(*dtype, op).eval_f64(env))
+            }
+            FeatureSpec::MemAccess(f) => Ok(stats
+                .mem
+                .iter()
+                .filter(|m| f.matches(m, env))
+                .map(|m| m.count_at_granularity(sg).eval_f64(env))
+                .sum()),
+            FeatureSpec::SyncBarrierPerWg => {
+                Ok(stats.barriers_per_wi.eval_f64(env) * stats.num_groups.eval_f64(env))
+            }
+            FeatureSpec::SyncKernelLaunch => Ok(1.0),
+            FeatureSpec::ThreadGroups => Ok(stats.num_groups.eval_f64(env)),
+            FeatureSpec::WallTime { device } => Err(format!(
+                "f_cl_wall_time_{device} is an output feature; measure it on a device"
+            )),
+        }
+    }
+
+    pub fn is_wall_time(&self) -> bool {
+        matches!(self, FeatureSpec::WallTime { .. })
+    }
+}
+
+fn parse_mem_filter(rest: &str) -> Result<MemAccessFilter, String> {
+    let mut f = MemAccessFilter::default();
+    // Split on '_' but keep {...} groups intact.
+    let mut parts: Vec<String> = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in rest.trim_start_matches('_').chars() {
+        match ch {
+            '{' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            '}' => {
+                depth -= 1;
+                cur.push(ch);
+            }
+            '_' if depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.is_empty() {
+        parts.push(cur);
+    }
+    // Memory-access tags may contain underscores (e.g. `dg_plain_u`):
+    // after `tag:`, greedily absorb parts until a recognized keyword.
+    let is_keyword = |p: &str| -> bool {
+        matches!(p, "global" | "local" | "load" | "store")
+            || DType::parse(p).is_some()
+            || p.starts_with("lstrides:")
+            || p.starts_with("gstrides:")
+            || p.starts_with("afr:")
+    };
+    let mut merged: Vec<String> = Vec::new();
+    let mut in_tag = false;
+    for part in parts.into_iter().filter(|p| !p.is_empty()) {
+        if part.starts_with("tag:") {
+            in_tag = true;
+            merged.push(part);
+        } else if in_tag && !is_keyword(&part) {
+            let last = merged.last_mut().unwrap();
+            last.push('_');
+            last.push_str(&part);
+        } else {
+            in_tag = false;
+            merged.push(part);
+        }
+    }
+    for part in merged.iter() {
+        if let Some(t) = part.strip_prefix("tag:") {
+            f.tag = Some(t.to_string());
+        } else if part == "global" {
+            f.scope = Some(MemScope::Global);
+        } else if part == "local" {
+            f.scope = Some(MemScope::Local);
+        } else if part == "load" {
+            f.direction = Some(Direction::Load);
+        } else if part == "store" {
+            f.direction = Some(Direction::Store);
+        } else if let Some(dt) = DType::parse(part) {
+            f.dtype = Some(dt);
+        } else if let Some(body) = part.strip_prefix("lstrides:") {
+            f.lstrides = parse_stride_map(body)?;
+        } else if let Some(body) = part.strip_prefix("gstrides:") {
+            f.gstrides = parse_stride_map(body)?;
+        } else if let Some(body) = part.strip_prefix("afr:") {
+            f.afr = Some(Constraint::parse(body)?);
+        } else {
+            return Err(format!("bad mem_access field '{part}'"));
+        }
+    }
+    Ok(f)
+}
+
+fn parse_stride_map(body: &str) -> Result<BTreeMap<u8, Constraint>, String> {
+    let inner = body
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| format!("expected {{...}} in '{body}'"))?;
+    let mut out = BTreeMap::new();
+    for pair in inner.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (axis, c) = pair
+            .split_once(':')
+            .ok_or_else(|| format!("expected axis:constraint in '{pair}'"))?;
+        let axis: u8 = axis
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad axis '{axis}'"))?;
+        out.insert(axis, Constraint::parse(c)?);
+    }
+    Ok(out)
+}
+
+impl fmt::Display for FeatureSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FeatureSpec::Op { dtype, op } => write!(f, "f_op_{dtype}_{op}"),
+            FeatureSpec::MemAccess(m) => {
+                write!(f, "f_mem_access")?;
+                if let Some(t) = &m.tag {
+                    write!(f, "_tag:{t}")?;
+                }
+                if let Some(s) = m.scope {
+                    write!(
+                        f,
+                        "_{}",
+                        match s {
+                            MemScope::Global => "global",
+                            MemScope::Local => "local",
+                            MemScope::Private => "private",
+                        }
+                    )?;
+                }
+                if let Some(d) = m.dtype {
+                    write!(f, "_{d}")?;
+                }
+                if let Some(d) = m.direction {
+                    write!(f, "_{}", d.feature_name())?;
+                }
+                let write_map = |f: &mut fmt::Formatter<'_>,
+                                 name: &str,
+                                 m: &BTreeMap<u8, Constraint>|
+                 -> fmt::Result {
+                    if !m.is_empty() {
+                        write!(f, "_{name}:{{")?;
+                        for (i, (k, v)) in m.iter().enumerate() {
+                            if i > 0 {
+                                write!(f, ",")?;
+                            }
+                            write!(f, "{k}:{v}")?;
+                        }
+                        write!(f, "}}")?;
+                    }
+                    Ok(())
+                };
+                write_map(f, "lstrides", &m.lstrides)?;
+                write_map(f, "gstrides", &m.gstrides)?;
+                if let Some(a) = &m.afr {
+                    write!(f, "_afr:{a}")?;
+                }
+                Ok(())
+            }
+            FeatureSpec::SyncBarrierPerWg => write!(f, "f_sync_local_barrier_per_wg"),
+            FeatureSpec::SyncKernelLaunch => write!(f, "f_sync_kernel_launch"),
+            FeatureSpec::ThreadGroups => write!(f, "f_thread_groups"),
+            FeatureSpec::WallTime { device } => write!(f, "f_cl_wall_time_{device}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_op_feature() {
+        let f = FeatureSpec::parse("f_op_float32_madd").unwrap();
+        assert_eq!(
+            f,
+            FeatureSpec::Op {
+                dtype: DType::F32,
+                op: "madd".into()
+            }
+        );
+        assert_eq!(f.to_string(), "f_op_float32_madd");
+        assert!(FeatureSpec::parse("f_op_float32_xor").is_err());
+    }
+
+    #[test]
+    fn parse_mem_access_with_strides_and_afr() {
+        let id = "f_mem_access_global_float32_load_lstrides:{0:1,1:>16}_afr:1";
+        let f = FeatureSpec::parse(id).unwrap();
+        match &f {
+            FeatureSpec::MemAccess(m) => {
+                assert_eq!(m.scope, Some(MemScope::Global));
+                assert_eq!(m.dtype, Some(DType::F32));
+                assert_eq!(m.direction, Some(Direction::Load));
+                assert_eq!(m.lstrides.get(&0), Some(&Constraint::Eq(1)));
+                assert_eq!(m.lstrides.get(&1), Some(&Constraint::Gt(16)));
+                assert_eq!(m.afr, Some(Constraint::Eq(1)));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(f.to_string(), id);
+    }
+
+    #[test]
+    fn parse_tagged_access() {
+        let f = FeatureSpec::parse("f_mem_access_tag:aLD").unwrap();
+        match &f {
+            FeatureSpec::MemAccess(m) => assert_eq!(m.tag.as_deref(), Some("aLD")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_tag_with_underscores() {
+        let f = FeatureSpec::parse("f_mem_access_tag:dg_u_prefetch_u").unwrap();
+        match &f {
+            FeatureSpec::MemAccess(m) => {
+                assert_eq!(m.tag.as_deref(), Some("dg_u_prefetch_u"))
+            }
+            other => panic!("{other:?}"),
+        }
+        // Tag followed by keyword fields still parses.
+        let f =
+            FeatureSpec::parse("f_mem_access_tag:mm_pf_a_global_float32_load")
+                .unwrap();
+        match &f {
+            FeatureSpec::MemAccess(m) => {
+                assert_eq!(m.tag.as_deref(), Some("mm_pf_a"));
+                assert_eq!(m.scope, Some(MemScope::Global));
+                assert_eq!(m.direction, Some(Direction::Load));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_sync_and_misc() {
+        assert_eq!(
+            FeatureSpec::parse("f_sync_local_barrier_per_wg").unwrap(),
+            FeatureSpec::SyncBarrierPerWg
+        );
+        assert_eq!(
+            FeatureSpec::parse("f_thread_groups").unwrap(),
+            FeatureSpec::ThreadGroups
+        );
+        match FeatureSpec::parse("f_cl_wall_time_titan_v").unwrap() {
+            FeatureSpec::WallTime { device } => assert_eq!(device, "titan_v"),
+            other => panic!("{other:?}"),
+        }
+        assert!(FeatureSpec::parse("g_bogus").is_err());
+    }
+
+    #[test]
+    fn constraint_semantics() {
+        assert!(Constraint::Eq(16).matches(16.0));
+        assert!(!Constraint::Eq(16).matches(17.0));
+        assert!(Constraint::Gt(16).matches(17.0));
+        assert!(!Constraint::Gt(16).matches(16.0));
+        assert!(Constraint::Lt(4).matches(3.0));
+    }
+
+    #[test]
+    fn roundtrip_display_parse() {
+        for id in [
+            "f_op_float64_div",
+            "f_mem_access_global_float32_store",
+            "f_mem_access_local_float32",
+            "f_mem_access_tag:bLD",
+            "f_mem_access_global_float32_load_lstrides:{0:1}_gstrides:{0:>0,1:0}_afr:>1",
+            "f_sync_kernel_launch",
+            "f_cl_wall_time_amd_r9_fury",
+        ] {
+            let f = FeatureSpec::parse(id).unwrap();
+            assert_eq!(f.to_string(), id, "roundtrip of {id}");
+            assert_eq!(FeatureSpec::parse(&f.to_string()).unwrap(), f);
+        }
+    }
+}

@@ -1,0 +1,570 @@
+//! The simulator's execution-cost model and measurement procedure.
+
+use std::collections::BTreeMap;
+
+use super::device::DeviceProfile;
+use crate::ir::{DType, Kernel, MemScope};
+use crate::stats::{self, Granularity, KernelStats, MemAccessStat};
+use crate::util::Rng;
+
+/// Per-component cost breakdown of one simulated execution (useful for
+/// debugging, the simulator's own tests, and DESIGN.md analyses; the
+/// black-box calibration path never reads it).
+#[derive(Clone, Debug, Default)]
+pub struct CostBreakdown {
+    pub t_dram: f64,
+    pub t_l2: f64,
+    pub t_lsu: f64,
+    pub t_latency: f64,
+    pub t_gmem: f64,
+    pub t_arith: f64,
+    pub t_lmem: f64,
+    pub t_onchip: f64,
+    pub t_barrier: f64,
+    pub t_launch: f64,
+    pub utilization: f64,
+    pub total: f64,
+}
+
+fn env_i128(env: &BTreeMap<String, i64>) -> BTreeMap<String, i128> {
+    env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect()
+}
+
+/// Coalescing analysis of one sub-group's 32 lane addresses: returns
+/// (unique cache lines touched, unique addresses) from the evaluated
+/// lid strides.
+fn lines_per_subgroup(
+    knl: &Kernel,
+    m: &MemAccessStat,
+    e: &BTreeMap<String, i128>,
+    line_bytes: u64,
+    sg: u64,
+) -> (u64, u64) {
+    let dsize = m.dtype.size_bytes() as i128;
+    let ls: Vec<i128> = (0..3)
+        .map(|ax| m.lstrides[ax].eval(e).floor())
+        .collect();
+    let (l0, l1) = (knl.lsize(0).max(1), knl.lsize(1).max(1));
+    let mut lines: Vec<i128> = Vec::with_capacity(sg as usize);
+    let mut addrs: Vec<i128> = Vec::with_capacity(sg as usize);
+    for t in 0..sg {
+        let lid0 = (t % l0) as i128;
+        let lid1 = ((t / l0) % l1) as i128;
+        let lid2 = (t / (l0 * l1)) as i128;
+        let addr = (lid0 * ls[0] + lid1 * ls[1] + lid2 * ls[2]) * dsize;
+        let line = addr.div_euclid(line_bytes as i128);
+        if !lines.contains(&line) {
+            lines.push(line);
+        }
+        if !addrs.contains(&addr) {
+            addrs.push(addr);
+        }
+    }
+    (lines.len() as u64, addrs.len() as u64)
+}
+
+/// Innermost non-zero sequential-loop stride in bytes (None if the
+/// access is loop-invariant).
+fn innermost_seq_stride_bytes(m: &MemAccessStat, e: &BTreeMap<String, i128>) -> Option<i128> {
+    let dsize = m.dtype.size_bytes() as i128;
+    m.loop_strides
+        .iter()
+        .rev()
+        .map(|(_, s)| s.eval(e).floor().abs() * dsize)
+        .find(|s| *s != 0)
+}
+
+/// Deterministic execution-time estimate (no noise), with breakdown.
+pub fn simulate_breakdown(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+) -> Result<CostBreakdown, String> {
+    let wg_size = knl.work_group_size();
+    if wg_size > dev.max_wg_size {
+        return Err(format!(
+            "CL_INVALID_WORK_GROUP_SIZE: kernel '{}' uses {wg_size} work-items, \
+             device '{}' allows {}",
+            knl.name, dev.id, dev.max_wg_size
+        ));
+    }
+    let stats = stats::gather(knl, dev.sub_group_size)?;
+    Ok(breakdown_from_stats(dev, knl, &stats, env))
+}
+
+/// Core cost model over gathered statistics.
+pub(crate) fn breakdown_from_stats(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    stats: &KernelStats,
+    env: &BTreeMap<String, i64>,
+) -> CostBreakdown {
+    let e = env_i128(env);
+    let sg = dev.sub_group_size;
+    let clock = dev.clock_ghz * 1e9;
+    let n_wg = stats.num_groups.eval_f64(&e).max(1.0);
+    let wg_size = stats.work_group_size.max(1);
+
+    // Warp quantization: a 324-item work-group occupies ceil(324/32) =
+    // 11 sub-group slots; issue-bound costs scale by slots*sg/size.
+    let wg_slots = (wg_size + sg - 1) / sg;
+    let wq = (wg_slots * sg) as f64 / wg_size as f64;
+    // Residency is limited by the WG budget, raw threads, and the SM's
+    // warp-slot budget (64 slots): odd-sized groups waste slots, which
+    // is precisely why the paper's 18x18 stencil tends to lose.
+    let resident_wgs_per_sm = dev
+        .wgs_per_sm
+        .min((2048 / wg_size).max(1))
+        .min((64 / wg_slots).max(1)) as f64;
+    let resident_wgs = dev.sm_count as f64 * resident_wgs_per_sm;
+    let resident_sgs_per_sm = resident_wgs_per_sm * (wg_size as f64 / sg as f64);
+
+    // ---- Arithmetic (on-chip) -------------------------------------
+    let mut t_arith = 0.0;
+    for op in &stats.ops {
+        let wi_ops = op.count_sg.eval_f64(&e) * sg as f64;
+        if wi_ops <= 0.0 {
+            continue;
+        }
+        let lanes = match op.op.as_str() {
+            "div" => dev.div_lanes_per_sm,
+            _ => dev.fma_lanes_per_sm,
+        } as f64;
+        let ratio = match op.dtype {
+            DType::F64 => dev.f64_ratio,
+            _ => 1.0,
+        };
+        t_arith += wi_ops * wq / (dev.sm_count as f64 * lanes * ratio * clock);
+    }
+
+    // ---- Local memory (on-chip) -----------------------------------
+    let mut t_lmem = 0.0;
+    for m in stats.mem.iter().filter(|m| m.scope == MemScope::Local) {
+        let wi = m.count_wi.eval_f64(&e);
+        if wi <= 0.0 {
+            continue;
+        }
+        // Bank conflicts: stride-s access across 32 banks serializes by
+        // gcd(s, 32); capped — modern LDS/shared pipes mitigate worst
+        // cases.
+        let s0 = m.lstrides[0].eval(&e).floor().unsigned_abs() as u64 % 32;
+        let conflict = if s0 == 0 {
+            1 // broadcast
+        } else {
+            num_gcd(s0, 32).min(4)
+        } as f64;
+        t_lmem += wi * conflict * wq
+            / (dev.sm_count as f64 * dev.lmem_elems_per_sm_cycle as f64 * clock);
+    }
+
+    // ---- Global memory --------------------------------------------
+    // Three-level model: the LSU issues one line-transaction per cycle
+    // per SM (scattered warp accesses replay); per-WG tiles that fit L1
+    // absorb intra-WG reuse; L2 absorbs footprint-level reuse; DRAM
+    // traffic pays a row-locality derate for large-stride streams.
+    let mut dram_time = 0.0;
+    let mut l2_bytes = 0.0;
+    let mut lsu_transactions = 0.0;
+    let mut mem_transactions = 0.0;
+    let l1_capacity = dev.l1_kb_per_sm as f64 * 1024.0;
+    let l2_capacity = dev.l2_kb as f64 * 1024.0;
+    for m in stats.mem.iter().filter(|m| m.scope == MemScope::Global) {
+        let wi = m.count_wi.eval_f64(&e);
+        if wi <= 0.0 {
+            continue;
+        }
+        let dsize = m.dtype.size_bytes() as f64;
+        // Sub-group instances: uniform accesses issue one per SG.
+        let sg_instances = wi / sg as f64 * wq;
+        let (lines_u, addrs_u) = match m.granularity {
+            Granularity::SubGroup => (1, 1),
+            Granularity::WorkItem => {
+                lines_per_subgroup(knl, m, &e, dev.line_bytes, sg)
+            }
+        };
+        let (lines, uniq_addrs) = (lines_u as f64, addrs_u as f64);
+        // Every touched line costs an LSU issue slot even when it hits
+        // in cache (scattered-access replay).
+        lsu_transactions += sg_instances * lines;
+
+        // Sequential streaming reuse: a small-stride loop revisits the
+        // same line on consecutive iterations — if the warp's working
+        // lines survive in L1 across iterations.
+        let retained =
+            lines * dev.line_bytes as f64 * resident_sgs_per_sm <= l1_capacity;
+        let seq_stride = innermost_seq_stride_bytes(m, &e);
+        let seq_reuse = match seq_stride {
+            Some(s) if (s as u64) < dev.line_bytes && s > 0 && retained => {
+                s as f64 / dev.line_bytes as f64
+            }
+            _ => 1.0,
+        };
+        let issued = sg_instances * lines * seq_reuse;
+        let issued_bytes = issued * dev.line_bytes as f64;
+
+        // Per-WG tile (group inames pinned), inflated by the line
+        // overfetch of the access's coalescing pattern.
+        let overfetch =
+            (lines * dev.line_bytes as f64) / (uniq_addrs * dsize).max(1.0);
+        let wg_tile_bytes =
+            m.footprint_per_wg.eval_f64(&e).max(1.0) * dsize * overfetch.max(1.0);
+        let to_l2 = if wg_tile_bytes <= l1_capacity {
+            // Intra-WG reuse is L1-served: L2 sees roughly one tile per
+            // work-group plus a small residual of capacity misses.
+            (n_wg * wg_tile_bytes + 0.02 * issued_bytes).min(issued_bytes)
+        } else {
+            issued_bytes
+        };
+        l2_bytes += to_l2;
+        mem_transactions += to_l2 / dev.line_bytes as f64;
+
+        // L2 capacity: footprints that stay hot (well under capacity,
+        // since concurrent streams compete for the cache) are fetched
+        // from DRAM ~once; larger footprints still see partial
+        // concurrent-WG reuse.
+        let footprint_bytes = m.footprint.eval_f64(&e).min(wi) * dsize;
+        let dram_bytes = if to_l2 > footprint_bytes {
+            let miss = if footprint_bytes <= l2_capacity / 4.0 {
+                0.05
+            } else {
+                0.5
+            };
+            footprint_bytes + miss * (to_l2 - footprint_bytes)
+        } else {
+            to_l2
+        };
+        // DRAM row locality: large-stride streams hop rows.
+        let hop = match seq_stride {
+            Some(s) if s as u64 > dev.row_hop_bytes => dev.row_hop_factor,
+            _ => 1.0,
+        };
+        dram_time += dram_bytes * hop / dev.peak_bw();
+    }
+    let t_l2 = l2_bytes / (dev.l2_gbps * 1e9);
+    // LSU issue serialization: one line-transaction per SM per cycle.
+    let t_lsu = lsu_transactions / (dev.sm_count as f64 * clock);
+    // Memory-level parallelism bound on latency.
+    let total_sgs = n_wg * (wg_size as f64 / sg as f64);
+    let mlp = (dev.sm_count as f64 * resident_sgs_per_sm)
+        .min(total_sgs)
+        .max(1.0);
+    let t_latency = mem_transactions * dev.dram_latency_ns * 1e-9 / mlp;
+    let t_gmem = dram_time.max(t_l2).max(t_latency).max(t_lsu);
+
+    // ---- Synchronization & launch ----------------------------------
+    let barriers = stats.barriers_per_wi.eval_f64(&e);
+    let t_barrier = barriers * n_wg * dev.barrier_ns * 1e-9 / resident_wgs;
+    let t_launch = dev.kernel_launch_us * 1e-6 + n_wg * dev.wg_launch_ns * 1e-9;
+
+    // ---- Waves / utilization ---------------------------------------
+    // Partial waves and partial warps (wq) both waste issue slots.
+    let waves = (n_wg / resident_wgs).ceil().max(1.0);
+    let utilization =
+        ((n_wg / (waves * resident_wgs)).min(1.0) / wq).max(1e-3);
+
+    // ---- Overlap (Eq. 3's max(), partially) -------------------------
+    let t_onchip = t_arith + t_lmem;
+    let t_core = t_gmem.max(t_onchip) + (1.0 - dev.overlap) * t_gmem.min(t_onchip);
+
+    let total = t_launch + t_barrier + t_core / utilization;
+    CostBreakdown {
+        t_dram: dram_time,
+        t_l2,
+        t_lsu,
+        t_latency,
+        t_gmem,
+        t_arith,
+        t_lmem,
+        t_onchip,
+        t_barrier,
+        t_launch,
+        utilization,
+        total,
+    }
+}
+
+fn num_gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+/// Deterministic execution time (seconds).
+pub fn simulate_time(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+) -> Result<f64, String> {
+    simulate_breakdown(dev, knl, env).map(|b| b.total)
+}
+
+/// The paper's measurement procedure: 60 timing trials, average, with
+/// anomalous events (AMD) excluded as the paper does.  Deterministic
+/// given (device, kernel name, sizes).
+pub fn measure(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+) -> Result<f64, String> {
+    let base = simulate_time(dev, knl, env)?;
+    // Reproducible seed from device, kernel and sizes.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in dev.id.bytes().chain(knl.name.bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    for (k, v) in env {
+        for b in k.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h = (h ^ *v as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Rng::new(h);
+    let mut trials: Vec<f64> = (0..60)
+        .map(|_| {
+            let mut t = base * rng.lognormal_factor(dev.noise_sigma);
+            if dev.anomaly_rate > 0.0 && rng.uniform() < dev.anomaly_rate {
+                t *= 1e5; // the Fury's anomalous events
+            }
+            t
+        })
+        .collect();
+    // Exclude anomalies: drop trials more than 8x the median.
+    trials.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = trials[trials.len() / 2];
+    let kept: Vec<f64> = trials.into_iter().filter(|t| *t <= 8.0 * median).collect();
+    Ok(kept.iter().sum::<f64>() / kept.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{device_by_id, fleet};
+    use crate::ir::{Access, AffExpr, ArrayDecl, Expr, Kernel, LhsRef, Stmt};
+    use crate::polyhedral::{LoopExtent, NestedDomain, QPoly};
+    use crate::transform::{add_prefetch, assume, split_iname, tag_inames};
+
+    fn env(n: i64) -> BTreeMap<String, i64> {
+        [("n".to_string(), n)].into_iter().collect()
+    }
+
+    fn matmul(prefetch: bool) -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let mut k = Kernel::new(
+            if prefetch { "mm_pf" } else { "mm_nopf" },
+            &["n"],
+            dom,
+        );
+        for name in ["a", "b", "c"] {
+            k.add_array(ArrayDecl::global(
+                name,
+                crate::ir::DType::F32,
+                vec![n.clone(), n.clone()],
+            ));
+        }
+        k.add_temp("acc", crate::ir::DType::F32);
+        k.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["i", "j"],
+        ));
+        k.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Temp("acc".into()),
+                Expr::add(
+                    Expr::temp("acc"),
+                    Expr::mul(
+                        Expr::load(Access::tagged(
+                            "a",
+                            "aLD",
+                            vec![AffExpr::var("i"), AffExpr::var("k")],
+                        )),
+                        Expr::load(Access::tagged(
+                            "b",
+                            "bLD",
+                            vec![AffExpr::var("k"), AffExpr::var("j")],
+                        )),
+                    ),
+                ),
+                &["i", "j", "k"],
+            )
+            .with_deps(&["init"]),
+        );
+        k.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::new(
+                    "c",
+                    vec![AffExpr::var("i"), AffExpr::var("j")],
+                )),
+                Expr::temp("acc"),
+                &["i", "j"],
+            )
+            .with_deps(&["upd"]),
+        );
+        let k = assume(&k, "n >= 16 and n % 16 = 0").unwrap();
+        let k = split_iname(&k, "i", 16).unwrap();
+        let k = split_iname(&k, "j", 16).unwrap();
+        let mut k = tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0").unwrap();
+        if prefetch {
+            k = split_iname(&k, "k", 16).unwrap();
+            k = add_prefetch(&k, "a", &["i_in", "k_in"], false).unwrap();
+            k = add_prefetch(&k, "b", &["k_in", "j_in"], false).unwrap();
+        }
+        k
+    }
+
+    #[test]
+    fn prefetch_beats_no_prefetch_on_all_devices() {
+        let pf = matmul(true);
+        let nopf = matmul(false);
+        for d in fleet() {
+            let t_pf = simulate_time(&d, &pf, &env(2048)).unwrap();
+            let t_no = simulate_time(&d, &nopf, &env(2048)).unwrap();
+            assert!(
+                t_pf < t_no,
+                "{}: prefetch {t_pf:.4} !< no-prefetch {t_no:.4}",
+                d.id
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_matmul_hits_plausible_flops_fraction() {
+        // The paper: tiled prefetching matmul achieves 8-20% of peak on
+        // all five GPUs.  Allow a slightly wider band for the simulator.
+        let pf = matmul(true);
+        for d in fleet() {
+            let t = simulate_time(&d, &pf, &env(2048)).unwrap();
+            let flops = 2.0 * 2048f64.powi(3) / t;
+            let frac = flops / d.peak_flops();
+            assert!(
+                (0.03..0.45).contains(&frac),
+                "{}: {:.1}% of peak (t={t:.4}s)",
+                d.id,
+                frac * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn time_scales_with_problem_size() {
+        let pf = matmul(true);
+        let d = device_by_id("titan_v").unwrap();
+        // Out of cache the scaling is near-cubic:
+        // (3584/2048)^3 ~ 5.36; allow slack for launch overheads and
+        // the (mild) cache-regime shift at small sizes.
+        let t1 = simulate_time(&d, &pf, &env(1024)).unwrap();
+        let t2 = simulate_time(&d, &pf, &env(2048)).unwrap();
+        let t3 = simulate_time(&d, &pf, &env(3584)).unwrap();
+        assert!(t2 > 4.0 * t1, "scaling too flat: t1={t1} t2={t2}");
+        let ratio = t3 / t2;
+        assert!(
+            (4.0..7.0).contains(&ratio),
+            "out-of-cache scaling not cubic: {ratio} (t2={t2}, t3={t3})"
+        );
+    }
+
+    #[test]
+    fn overlap_devices_hide_onchip_cost() {
+        // On Titan V (overlap 0.95) the prefetch variant's total should
+        // sit near max(gmem, onchip); on K40c near the sum.
+        let pf = matmul(true);
+        let tv = device_by_id("titan_v").unwrap();
+        let b = simulate_breakdown(&tv, &pf, &env(2048)).unwrap();
+        let core = b.total - b.t_launch - b.t_barrier;
+        let max_c = b.t_gmem.max(b.t_onchip) / b.utilization;
+        let sum_c = (b.t_gmem + b.t_onchip) / b.utilization;
+        assert!((core - max_c).abs() < 0.15 * max_c, "{b:?}");
+
+        let k40 = device_by_id("tesla_k40c").unwrap();
+        let b = simulate_breakdown(&k40, &pf, &env(2048)).unwrap();
+        let core = b.total - b.t_launch - b.t_barrier;
+        let sum_c40 = (b.t_gmem + b.t_onchip) / b.utilization;
+        assert!((core - sum_c40).abs() < 0.15 * sum_c40, "{b:?}");
+        let _ = sum_c;
+    }
+
+    #[test]
+    fn amd_rejects_oversized_work_groups() {
+        // 18x18 = 324 work-items exceeds the Fury's limit.
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", QPoly::int(18)),
+            LoopExtent::zero_to("j", QPoly::int(18)),
+        ]);
+        let mut k = Kernel::new("big_wg", &["n"], dom);
+        k.add_array(ArrayDecl::global("x", crate::ir::DType::F32, vec![n]));
+        k.add_stmt(Stmt::new(
+            "s",
+            LhsRef::Array(Access::new(
+                "x",
+                vec![AffExpr::scaled_var("i", 18).plus(&AffExpr::var("j"))],
+            )),
+            Expr::fconst(1.0),
+            &["i", "j"],
+        ));
+        let k = tag_inames(&k, "i:l.1, j:l.0").unwrap();
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        let err = simulate_time(&amd, &k, &env(1024)).unwrap_err();
+        assert!(err.contains("CL_INVALID_WORK_GROUP_SIZE"), "{err}");
+        let tv = device_by_id("titan_v").unwrap();
+        assert!(simulate_time(&tv, &k, &env(1024)).is_ok());
+    }
+
+    #[test]
+    fn measure_is_deterministic_and_near_true_time() {
+        let pf = matmul(true);
+        let d = device_by_id("gtx_titan_x").unwrap();
+        let t1 = measure(&d, &pf, &env(1024)).unwrap();
+        let t2 = measure(&d, &pf, &env(1024)).unwrap();
+        assert_eq!(t1, t2);
+        let truth = simulate_time(&d, &pf, &env(1024)).unwrap();
+        assert!((t1 - truth).abs() / truth < 0.05, "{t1} vs {truth}");
+    }
+
+    #[test]
+    fn amd_anomalies_are_excluded() {
+        let pf = matmul(true);
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        let t = measure(&amd, &pf, &env(1024)).unwrap();
+        let truth = simulate_time(&amd, &pf, &env(1024)).unwrap();
+        // Without exclusion a single 1e5x trial would blow the mean up
+        // by ~1e3x; with exclusion we stay near truth.
+        assert!(t < 2.0 * truth, "anomaly leaked into mean: {t} vs {truth}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_empty_kernels() {
+        // An almost-empty kernel's time ~ kernel launch + wg launches,
+        // and grows with the group count (paper §6.1.4).
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("g", n.clone()),
+            LoopExtent::zero_to("l", QPoly::int(256)),
+        ]);
+        let mut k = Kernel::new("empty", &["n"], dom);
+        k.add_array(ArrayDecl::global("x", crate::ir::DType::F32, vec![n.clone()]));
+        k.add_stmt(Stmt::new(
+            "s",
+            LhsRef::Array(Access::new("x", vec![AffExpr::var("g")])),
+            Expr::fconst(0.0),
+            &["g"],
+        ));
+        let k = tag_inames(&k, "g:g.0, l:l.0").unwrap();
+        let d = device_by_id("titan_v").unwrap();
+        let t_small = simulate_time(&d, &k, &env(16)).unwrap();
+        let t_big = simulate_time(&d, &k, &env(65536)).unwrap();
+        assert!(t_big > t_small * 1.5, "{t_small} vs {t_big}");
+        assert!(t_small >= d.kernel_launch_us * 1e-6);
+    }
+}

@@ -1,0 +1,22 @@
+//! Simulated GPU fleet — the measurement substrate.
+//!
+//! The paper evaluates on five physical GPUs (Table 2).  This
+//! environment has none, so per the substitution rule (DESIGN.md §3)
+//! we build a SIMT *cost simulator* per device.  Calibration still
+//! treats each device as a black box: Perflex only ever sees wall
+//! times.  Crucially, the simulator's cost structure is finer-grained
+//! than the model's feature space — 128-byte transaction coalescing
+//! enumerated over actual sub-group lane addresses, sequential-reuse
+//! and DRAM row-locality effects, an L2 capacity model, bank
+//! conflicts, wave quantization / partial-wave utilization, launch
+//! overheads and device-specific memory/compute overlap, plus
+//! log-normal measurement noise — so models must genuinely *fit*, and
+//! the paper's qualitative cross-device differences (e.g. Kepler/Fermi
+//! hiding almost no on-chip cost, AMD's 256-work-item limit) are
+//! reproduced.
+
+pub mod device;
+pub mod exec;
+
+pub use device::{device_by_id, fleet, DeviceProfile};
+pub use exec::{measure, simulate_time, CostBreakdown};

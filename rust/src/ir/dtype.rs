@@ -1,0 +1,68 @@
+//! Scalar data types.
+
+use std::fmt;
+
+/// Element type of arrays and temporaries.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    /// Perflex feature-identifier spelling, e.g. `float32`.
+    pub fn feature_name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+            DType::I32 => "int32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "float64" | "f64" => Some(DType::F64),
+            "int32" | "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    /// OpenCL C spelling (for the pseudo-code generator).
+    pub fn ocl_name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float",
+            DType::F64 => "double",
+            DType::I32 => "int",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.feature_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_names() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F64.size_bytes(), 8);
+        assert_eq!(DType::parse("float32"), Some(DType::F32));
+        assert_eq!(DType::parse("float64"), Some(DType::F64));
+        assert_eq!(DType::parse("bogus"), None);
+        assert_eq!(DType::F32.to_string(), "float32");
+    }
+}

@@ -1,0 +1,559 @@
+//! Expression trees and affine index expressions.
+//!
+//! Array subscripts are [`AffExpr`] — integer-affine combinations of
+//! inames and parameters.  Quasi-affine subscripts are exactly what the
+//! paper's polyhedrally-based stride and footprint reasoning requires
+//! (Section 6.1.1 "recall that we assume these indices are affine").
+//!
+//! Right-hand sides are [`Expr`] trees; [`Expr::count_ops`] implements
+//! the per-statement operation counting of Algorithm 1, including the
+//! multiply-add sequence detection used for the `madd` feature.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::polyhedral::QPoly;
+
+/// Integer-affine expression `Σ coeff_i · var_i + constant` over inames
+/// and parameters.
+#[derive(Clone, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AffExpr {
+    pub terms: BTreeMap<String, i64>,
+    pub constant: i64,
+}
+
+impl AffExpr {
+    pub fn zero() -> AffExpr {
+        AffExpr::default()
+    }
+
+    pub fn cst(c: i64) -> AffExpr {
+        AffExpr {
+            terms: BTreeMap::new(),
+            constant: c,
+        }
+    }
+
+    pub fn var(name: &str) -> AffExpr {
+        let mut terms = BTreeMap::new();
+        terms.insert(name.to_string(), 1);
+        AffExpr {
+            terms,
+            constant: 0,
+        }
+    }
+
+    /// `coeff * var`.
+    pub fn scaled_var(name: &str, coeff: i64) -> AffExpr {
+        AffExpr::var(name).scaled(coeff)
+    }
+
+    pub fn scaled(&self, c: i64) -> AffExpr {
+        if c == 0 {
+            return AffExpr::zero();
+        }
+        AffExpr {
+            terms: self.terms.iter().map(|(k, v)| (k.clone(), v * c)).collect(),
+            constant: self.constant * c,
+        }
+    }
+
+    pub fn plus(&self, o: &AffExpr) -> AffExpr {
+        let mut out = self.clone();
+        for (k, v) in &o.terms {
+            let e = out.terms.entry(k.clone()).or_insert(0);
+            *e += v;
+            if *e == 0 {
+                out.terms.remove(k);
+            }
+        }
+        out.constant += o.constant;
+        out
+    }
+
+    pub fn plus_cst(&self, c: i64) -> AffExpr {
+        let mut out = self.clone();
+        out.constant += c;
+        out
+    }
+
+    pub fn minus(&self, o: &AffExpr) -> AffExpr {
+        self.plus(&o.scaled(-1))
+    }
+
+    /// Coefficient of `var` (0 if absent).
+    pub fn coeff(&self, var: &str) -> i64 {
+        self.terms.get(var).copied().unwrap_or(0)
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Substitute `var := replacement` (affine).
+    pub fn subst(&self, var: &str, replacement: &AffExpr) -> AffExpr {
+        let c = self.coeff(var);
+        if c == 0 {
+            return self.clone();
+        }
+        let mut out = self.clone();
+        out.terms.remove(var);
+        out.plus(&replacement.scaled(c))
+    }
+
+    /// Rename a variable (e.g. iname retagging).
+    pub fn rename(&self, from: &str, to: &str) -> AffExpr {
+        self.subst(from, &AffExpr::var(to))
+    }
+
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> i64 {
+        let mut acc = self.constant;
+        for (v, c) in &self.terms {
+            let val = env
+                .get(v)
+                .unwrap_or_else(|| panic!("unbound variable '{v}' in affine expr"));
+            acc += c * val;
+        }
+        acc
+    }
+
+    pub fn to_qpoly(&self) -> QPoly {
+        let mut out = QPoly::int(self.constant as i128);
+        for (v, c) in &self.terms {
+            out = &out + &QPoly::var(v).scale(crate::util::Rat::int(*c as i128));
+        }
+        out
+    }
+
+    pub fn vars(&self) -> impl Iterator<Item = &String> {
+        self.terms.keys()
+    }
+}
+
+impl fmt::Display for AffExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (v, c) in &self.terms {
+            if !first {
+                write!(f, " + ")?;
+            }
+            first = false;
+            if *c == 1 {
+                write!(f, "{v}")?;
+            } else {
+                write!(f, "{c}*{v}")?;
+            }
+        }
+        if self.constant != 0 || first {
+            if !first {
+                write!(f, " + ")?;
+            }
+            write!(f, "{}", self.constant)?;
+        }
+        Ok(())
+    }
+}
+
+/// A (possibly tagged) array access.  Direction (load/store) is implied
+/// by position: LHS = store, inside RHS = load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Access {
+    pub array: String,
+    /// Memory-access tag (`a$aLD[i,k]` in the paper's Loopy syntax),
+    /// used to name individual accesses in models (Section 6.1.1) and to
+    /// select accesses in the work-removal transformation.
+    pub tag: Option<String>,
+    pub indices: Vec<AffExpr>,
+}
+
+impl Access {
+    pub fn new(array: &str, indices: Vec<AffExpr>) -> Access {
+        Access {
+            array: array.to_string(),
+            tag: None,
+            indices,
+        }
+    }
+
+    pub fn tagged(array: &str, tag: &str, indices: Vec<AffExpr>) -> Access {
+        Access {
+            array: array.to_string(),
+            tag: Some(tag.to_string()),
+            indices,
+        }
+    }
+}
+
+impl fmt::Display for Access {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.array)?;
+        if let Some(t) = &self.tag {
+            write!(f, "${t}")?;
+        }
+        write!(f, "[")?;
+        for (i, ix) in self.indices.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{ix}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Binary arithmetic operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    pub fn feature_name(&self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::Div => "div",
+        }
+    }
+
+    fn symbol(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+        }
+    }
+}
+
+/// Right-hand-side expression tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    FConst(f64),
+    /// Reference to a private temporary (e.g. accumulator).
+    Temp(String),
+    Load(Access),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn fconst(x: f64) -> Expr {
+        Expr::FConst(x)
+    }
+
+    pub fn temp(name: &str) -> Expr {
+        Expr::Temp(name.to_string())
+    }
+
+    pub fn load(a: Access) -> Expr {
+        Expr::Load(a)
+    }
+
+    pub fn bin(op: BinOp, lhs: Expr, rhs: Expr) -> Expr {
+        Expr::Bin(op, Box::new(lhs), Box::new(rhs))
+    }
+
+    pub fn add(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Add, lhs, rhs)
+    }
+
+    pub fn sub(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Sub, lhs, rhs)
+    }
+
+    pub fn mul(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Mul, lhs, rhs)
+    }
+
+    pub fn div(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Div, lhs, rhs)
+    }
+
+    /// All loads in evaluation order.
+    pub fn loads(&self) -> Vec<&Access> {
+        let mut out = Vec::new();
+        self.visit_loads(&mut |a| out.push(a));
+        out
+    }
+
+    fn visit_loads<'a>(&'a self, f: &mut impl FnMut(&'a Access)) {
+        match self {
+            Expr::Load(a) => f(a),
+            Expr::Bin(_, l, r) => {
+                l.visit_loads(f);
+                r.visit_loads(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Temporaries read by this expression.
+    pub fn temps_read(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        self.visit_temps(&mut |t| out.push(t));
+        out
+    }
+
+    fn visit_temps<'a>(&'a self, f: &mut impl FnMut(&'a str)) {
+        match self {
+            Expr::Temp(t) => f(t),
+            Expr::Bin(_, l, r) => {
+                l.visit_temps(f);
+                r.visit_temps(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Count arithmetic operations with multiply-add fusion
+    /// (Algorithm 1's per-statement `n_ops,S`).
+    ///
+    /// An `Add`/`Sub` with a `Mul` as either operand counts as one
+    /// `madd` (fused multiply-add), matching the paper's treatment of
+    /// GPU FMA units; the fused `Mul` is not counted separately.
+    pub fn count_ops(&self) -> OpCounts {
+        let mut c = OpCounts::default();
+        self.count_into(&mut c);
+        c
+    }
+
+    fn count_into(&self, c: &mut OpCounts) {
+        match self {
+            Expr::Bin(op @ (BinOp::Add | BinOp::Sub), l, r) => {
+                // madd detection: a +/- b*c (either side).
+                if let Expr::Bin(BinOp::Mul, ml, mr) = &**r {
+                    c.madd += 1;
+                    l.count_into(c);
+                    ml.count_into(c);
+                    mr.count_into(c);
+                } else if let Expr::Bin(BinOp::Mul, ml, mr) = &**l {
+                    c.madd += 1;
+                    r.count_into(c);
+                    ml.count_into(c);
+                    mr.count_into(c);
+                } else {
+                    match op {
+                        BinOp::Add => c.add += 1,
+                        _ => c.sub += 1,
+                    }
+                    l.count_into(c);
+                    r.count_into(c);
+                }
+            }
+            Expr::Bin(BinOp::Mul, l, r) => {
+                c.mul += 1;
+                l.count_into(c);
+                r.count_into(c);
+            }
+            Expr::Bin(BinOp::Div, l, r) => {
+                c.div += 1;
+                l.count_into(c);
+                r.count_into(c);
+            }
+            _ => {}
+        }
+    }
+
+    /// Substitute iname `var := replacement` in all access subscripts.
+    pub fn subst_index(&self, var: &str, replacement: &AffExpr) -> Expr {
+        match self {
+            Expr::Load(a) => Expr::Load(Access {
+                array: a.array.clone(),
+                tag: a.tag.clone(),
+                indices: a
+                    .indices
+                    .iter()
+                    .map(|ix| ix.subst(var, replacement))
+                    .collect(),
+            }),
+            Expr::Bin(op, l, r) => Expr::Bin(
+                *op,
+                Box::new(l.subst_index(var, replacement)),
+                Box::new(r.subst_index(var, replacement)),
+            ),
+            other => other.clone(),
+        }
+    }
+
+    /// Map every load through `f` (used by prefetch redirection and
+    /// work removal).
+    pub fn map_loads(&self, f: &mut impl FnMut(&Access) -> Expr) -> Expr {
+        match self {
+            Expr::Load(a) => f(a),
+            Expr::Bin(op, l, r) => {
+                Expr::Bin(*op, Box::new(l.map_loads(f)), Box::new(r.map_loads(f)))
+            }
+            other => other.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::FConst(x) => write!(f, "{x:?}"),
+            Expr::Temp(t) => write!(f, "{t}"),
+            Expr::Load(a) => write!(f, "{a}"),
+            Expr::Bin(op, l, r) => write!(f, "({l} {} {r})", op.symbol()),
+        }
+    }
+}
+
+/// Per-statement arithmetic operation counts (single execution).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub add: u64,
+    pub sub: u64,
+    pub mul: u64,
+    pub div: u64,
+    pub madd: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.add + self.sub + self.mul + self.div + self.madd
+    }
+
+    /// FLOP count with madd = 2 flops (the convention used when
+    /// comparing against peak rates in Table 3).
+    pub fn flops(&self) -> u64 {
+        self.add + self.sub + self.mul + self.div + 2 * self.madd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn affine_arithmetic() {
+        // 16*i_out + i_in
+        let e = AffExpr::scaled_var("i_out", 16).plus(&AffExpr::var("i_in"));
+        assert_eq!(e.coeff("i_out"), 16);
+        assert_eq!(e.eval(&env(&[("i_out", 2), ("i_in", 3)])), 35);
+    }
+
+    #[test]
+    fn affine_subst_models_loop_split() {
+        // i -> 16*i_out + i_in applied to n*i + k
+        let e = AffExpr::scaled_var("i", 3).plus(&AffExpr::var("k"));
+        let split = AffExpr::scaled_var("i_out", 16).plus(&AffExpr::var("i_in"));
+        let s = e.subst("i", &split);
+        assert_eq!(s.coeff("i_out"), 48);
+        assert_eq!(s.coeff("i_in"), 3);
+        assert_eq!(s.coeff("k"), 1);
+        assert_eq!(s.coeff("i"), 0);
+    }
+
+    #[test]
+    fn affine_cancellation_drops_terms() {
+        let e = AffExpr::var("i").minus(&AffExpr::var("i"));
+        assert!(e.is_constant());
+        assert_eq!(e, AffExpr::zero());
+    }
+
+    #[test]
+    fn madd_detection() {
+        // acc + a*b  -> 1 madd, 0 add, 0 mul
+        let e = Expr::add(
+            Expr::temp("acc"),
+            Expr::mul(
+                Expr::load(Access::new("a", vec![AffExpr::var("i")])),
+                Expr::load(Access::new("b", vec![AffExpr::var("i")])),
+            ),
+        );
+        let c = e.count_ops();
+        assert_eq!(c.madd, 1);
+        assert_eq!(c.add + c.mul, 0);
+        assert_eq!(c.flops(), 2);
+    }
+
+    #[test]
+    fn madd_detection_left_operand() {
+        let e = Expr::add(
+            Expr::mul(Expr::temp("x"), Expr::temp("y")),
+            Expr::temp("acc"),
+        );
+        assert_eq!(e.count_ops().madd, 1);
+    }
+
+    #[test]
+    fn plain_ops_counted_separately() {
+        // (a + b) / (a - b) with one extra mul below the div
+        let a = || Expr::temp("a");
+        let b = || Expr::temp("b");
+        let e = Expr::div(Expr::add(a(), b()), Expr::sub(Expr::mul(a(), b()), b()));
+        let c = e.count_ops();
+        assert_eq!(c.add, 1);
+        assert_eq!(c.div, 1);
+        // a*b - b fuses into one madd
+        assert_eq!(c.madd, 1);
+        assert_eq!(c.sub, 0);
+        assert_eq!(c.mul, 0);
+    }
+
+    #[test]
+    fn fdiff_stencil_counts() {
+        // u[j+1] + u[i+1] - 4*u[c] + u[i+1,j+2] + u[i+2,j+1]  — the
+        // paper's five-point stencil: 3 adds + 1 (mul-sub -> madd).
+        let u = |i: AffExpr, j: AffExpr| Expr::load(Access::new("u", vec![i, j]));
+        let i = || AffExpr::var("i");
+        let j = || AffExpr::var("j");
+        let e = Expr::add(
+            Expr::add(
+                Expr::sub(
+                    Expr::add(
+                        u(i(), j().plus_cst(1)),
+                        u(i().plus_cst(1), j()),
+                    ),
+                    Expr::mul(
+                        Expr::fconst(4.0),
+                        u(i().plus_cst(1), j().plus_cst(1)),
+                    ),
+                ),
+                u(i().plus_cst(1), j().plus_cst(2)),
+            ),
+            u(i().plus_cst(2), j().plus_cst(1)),
+        );
+        let c = e.count_ops();
+        assert_eq!(c.madd, 1);
+        assert_eq!(c.add, 3);
+        assert_eq!(e.loads().len(), 5);
+    }
+
+    #[test]
+    fn map_loads_rewrites() {
+        let e = Expr::add(
+            Expr::load(Access::new("a", vec![AffExpr::var("i")])),
+            Expr::load(Access::new("b", vec![AffExpr::var("i")])),
+        );
+        let out = e.map_loads(&mut |a| {
+            if a.array == "a" {
+                Expr::fconst(0.0)
+            } else {
+                Expr::Load(a.clone())
+            }
+        });
+        assert_eq!(out.loads().len(), 1);
+    }
+
+    #[test]
+    fn display_roundtrips_visually() {
+        let e = Expr::add(
+            Expr::temp("acc"),
+            Expr::mul(
+                Expr::load(Access::tagged("a", "aLD", vec![AffExpr::var("i")])),
+                Expr::temp("x"),
+            ),
+        );
+        assert_eq!(e.to_string(), "(acc + (a$aLD[i] * x))");
+    }
+}

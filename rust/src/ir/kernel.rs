@@ -1,0 +1,641 @@
+//! Kernels: statements over a polyhedral domain with OpenCL-model tags.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::dtype::DType;
+use super::expr::{Access, AffExpr, Expr};
+use crate::polyhedral::{Assumptions, NestedDomain, QPoly};
+use crate::util::Rat;
+
+/// How an iname is realized (the paper's `tag_inames`): a group (grid)
+/// axis, a local (work-item) axis, a sequential loop, or unrolled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexTag {
+    Group(u8),
+    Local(u8),
+    Sequential,
+    Unroll,
+}
+
+impl IndexTag {
+    /// Parse the Loopy spelling: `g.0`, `l.1`, `seq`, `unr`.
+    pub fn parse(s: &str) -> Option<IndexTag> {
+        if let Some(ax) = s.strip_prefix("g.") {
+            return ax.parse().ok().map(IndexTag::Group);
+        }
+        if let Some(ax) = s.strip_prefix("l.") {
+            return ax.parse().ok().map(IndexTag::Local);
+        }
+        match s {
+            "seq" => Some(IndexTag::Sequential),
+            "unr" => Some(IndexTag::Unroll),
+            _ => None,
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, IndexTag::Group(_) | IndexTag::Local(_))
+    }
+}
+
+/// Memory space of an array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemScope {
+    Global,
+    /// OpenCL local / scratchpad, shared within a work-group.
+    Local,
+    /// Per-work-item private storage.
+    Private,
+}
+
+/// An array declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub scope: MemScope,
+    /// Per-axis extents (parametric).
+    pub shape: Vec<QPoly>,
+    /// Layout permutation: axes listed slowest-varying first.  The
+    /// default `0..d` is row-major; `tag_data_axes` permutes this
+    /// (the paper's DG "transposed element data" variant).
+    pub axis_order: Vec<usize>,
+}
+
+impl ArrayDecl {
+    pub fn global(name: &str, dtype: DType, shape: Vec<QPoly>) -> ArrayDecl {
+        let d = shape.len();
+        ArrayDecl {
+            name: name.to_string(),
+            dtype,
+            scope: MemScope::Global,
+            shape,
+            axis_order: (0..d).collect(),
+        }
+    }
+
+    pub fn local(name: &str, dtype: DType, shape: Vec<QPoly>) -> ArrayDecl {
+        ArrayDecl {
+            scope: MemScope::Local,
+            ..ArrayDecl::global(name, dtype, shape)
+        }
+    }
+
+    /// Element strides per axis under the layout permutation.
+    pub fn strides(&self) -> Vec<QPoly> {
+        let d = self.shape.len();
+        let mut strides = vec![QPoly::one(); d];
+        // Walk the layout from fastest (last in axis_order) to slowest.
+        let mut running = QPoly::one();
+        for &axis in self.axis_order.iter().rev() {
+            strides[axis] = running.clone();
+            running = &running * &self.shape[axis];
+        }
+        strides
+    }
+
+    /// Total element count.
+    pub fn size_elems(&self) -> QPoly {
+        self.shape
+            .iter()
+            .fold(QPoly::one(), |acc, s| &acc * s)
+    }
+}
+
+/// A private scalar temporary (accumulator, work-removal target, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TempDecl {
+    pub name: String,
+    pub dtype: DType,
+}
+
+/// Statement left-hand side.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LhsRef {
+    Temp(String),
+    Array(Access),
+}
+
+impl fmt::Display for LhsRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LhsRef::Temp(t) => write!(f, "{t}"),
+            LhsRef::Array(a) => write!(f, "{a}"),
+        }
+    }
+}
+
+/// One assignment statement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stmt {
+    pub id: String,
+    pub lhs: LhsRef,
+    pub rhs: Expr,
+    /// Inames this statement nests within, ordered outer → inner; must
+    /// be a subsequence of the kernel domain order.
+    pub within: Vec<String>,
+    /// Ids of statements that must execute before this one (within an
+    /// iteration of the shared surrounding loops).
+    pub deps: Vec<String>,
+}
+
+impl Stmt {
+    pub fn new(id: &str, lhs: LhsRef, rhs: Expr, within: &[&str]) -> Stmt {
+        Stmt {
+            id: id.to_string(),
+            lhs,
+            rhs,
+            within: within.iter().map(|s| s.to_string()).collect(),
+            deps: Vec::new(),
+        }
+    }
+
+    pub fn with_deps(mut self, deps: &[&str]) -> Stmt {
+        self.deps = deps.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Store access, if the LHS is an array.
+    pub fn store(&self) -> Option<&Access> {
+        match &self.lhs {
+            LhsRef::Array(a) => Some(a),
+            LhsRef::Temp(_) => None,
+        }
+    }
+}
+
+/// A flattened array subscript as a linear form with quasi-polynomial
+/// coefficients: `Σ coeff(iname) · iname + constant` (element units).
+#[derive(Clone, Debug, Default)]
+pub struct LinForm {
+    pub coeffs: BTreeMap<String, QPoly>,
+    pub constant: QPoly,
+}
+
+impl LinForm {
+    pub fn coeff(&self, var: &str) -> QPoly {
+        self.coeffs.get(var).cloned().unwrap_or_else(QPoly::zero)
+    }
+}
+
+/// A kernel: the unit the paper's counting, modeling and measurement
+/// all operate on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// Problem-size parameters (e.g. `n`, `nelements`).
+    pub params: Vec<String>,
+    /// Full loop nest (includes parallel inames), outer → inner.
+    pub domain: NestedDomain,
+    pub iname_tags: BTreeMap<String, IndexTag>,
+    pub arrays: BTreeMap<String, ArrayDecl>,
+    pub temps: BTreeMap<String, TempDecl>,
+    pub stmts: Vec<Stmt>,
+    pub assumptions: Assumptions,
+    /// Nesting preference for sequential loops (`prioritize_loops`).
+    pub loop_priority: Vec<String>,
+}
+
+impl Kernel {
+    pub fn new(name: &str, params: &[&str], domain: NestedDomain) -> Kernel {
+        Kernel {
+            name: name.to_string(),
+            params: params.iter().map(|s| s.to_string()).collect(),
+            domain,
+            iname_tags: BTreeMap::new(),
+            arrays: BTreeMap::new(),
+            temps: BTreeMap::new(),
+            stmts: Vec::new(),
+            assumptions: Assumptions::none(),
+            loop_priority: Vec::new(),
+        }
+    }
+
+    pub fn add_array(&mut self, decl: ArrayDecl) -> &mut Self {
+        self.arrays.insert(decl.name.clone(), decl);
+        self
+    }
+
+    pub fn add_temp(&mut self, name: &str, dtype: DType) -> &mut Self {
+        self.temps.insert(
+            name.to_string(),
+            TempDecl {
+                name: name.to_string(),
+                dtype,
+            },
+        );
+        self
+    }
+
+    pub fn add_stmt(&mut self, stmt: Stmt) -> &mut Self {
+        self.stmts.push(stmt);
+        self
+    }
+
+    pub fn tag(&self, iname: &str) -> IndexTag {
+        self.iname_tags
+            .get(iname)
+            .copied()
+            .unwrap_or(IndexTag::Sequential)
+    }
+
+    pub fn stmt(&self, id: &str) -> Option<&Stmt> {
+        self.stmts.iter().find(|s| s.id == id)
+    }
+
+    /// The first iname carrying tag `t`, if any.
+    pub fn iname_with_tag(&self, t: IndexTag) -> Option<&str> {
+        self.iname_tags
+            .iter()
+            .find(|(_, tag)| **tag == t)
+            .map(|(k, _)| k.as_str())
+    }
+
+    /// All inames carrying tag `t` (several inames may share a local
+    /// axis, e.g. a stencil's interior iname plus its prefetch-fetch
+    /// iname; the work-group size is the max of their extents).
+    pub fn inames_with_tag(&self, t: IndexTag) -> Vec<&str> {
+        self.iname_tags
+            .iter()
+            .filter(|(_, tag)| **tag == t)
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+
+    /// Constant extent of an iname (required for local axes).
+    fn const_extent(&self, iname: &str) -> Option<u64> {
+        let l = self.domain.loops.iter().find(|l| l.var == iname)?;
+        let e = self.assumptions.simplify(&l.extent());
+        e.as_constant().and_then(|r| r.as_integer()).map(|v| v as u64)
+    }
+
+    /// Work-group size along local axis `axis` (1 if untagged).
+    /// With several inames on one axis this is the max extent: shorter
+    /// inames execute predicated, leaving work-items idle (the paper's
+    /// finite-difference halo threads).
+    pub fn lsize(&self, axis: u8) -> u64 {
+        self.inames_with_tag(IndexTag::Local(axis))
+            .iter()
+            .map(|iname| {
+                self.const_extent(iname).unwrap_or_else(|| {
+                    panic!("local iname '{iname}' must have constant extent")
+                })
+            })
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Total work-items per work-group.
+    pub fn work_group_size(&self) -> u64 {
+        (0..3).map(|ax| self.lsize(ax)).product()
+    }
+
+    /// Grid extent (number of work-groups) along group axis `axis`.
+    pub fn gsize(&self, axis: u8) -> QPoly {
+        self.iname_with_tag(IndexTag::Group(axis))
+            .map(|iname| {
+                let l = self
+                    .domain
+                    .loops
+                    .iter()
+                    .find(|l| l.var == iname)
+                    .expect("tagged iname not in domain");
+                self.assumptions.simplify(&l.extent())
+            })
+            .unwrap_or_else(QPoly::one)
+    }
+
+    /// Total work-group count (the paper's `f_thread_groups`).
+    pub fn num_groups(&self) -> QPoly {
+        (0..3).fold(QPoly::one(), |acc, ax| &acc * &self.gsize(ax))
+    }
+
+    /// Flatten an access subscript into element-unit linear form using
+    /// the array's layout.
+    pub fn flatten_access(&self, access: &Access) -> LinForm {
+        let decl = self
+            .arrays
+            .get(&access.array)
+            .unwrap_or_else(|| panic!("unknown array '{}'", access.array));
+        assert_eq!(
+            decl.shape.len(),
+            access.indices.len(),
+            "rank mismatch accessing '{}'",
+            access.array
+        );
+        let strides = decl.strides();
+        let mut out = LinForm::default();
+        for (idx, stride) in access.indices.iter().zip(&strides) {
+            for (v, c) in &idx.terms {
+                let add = stride.scale(Rat::int(*c as i128));
+                let cur = out.coeffs.entry(v.clone()).or_insert_with(QPoly::zero);
+                *cur = &*cur + &add;
+            }
+            out.constant =
+                &out.constant + &stride.scale(Rat::int(idx.constant as i128));
+        }
+        // Drop zero coefficients.
+        out.coeffs.retain(|_, c| !c.is_zero());
+        out
+    }
+
+    /// Stride (elements) of `access` w.r.t. the local axis `axis`
+    /// (the `ls0, ls1, ...` of Section 6.1.1).
+    pub fn lid_stride(&self, access: &Access, axis: u8) -> QPoly {
+        self.thread_stride(access, IndexTag::Local(axis))
+    }
+
+    /// Stride (elements) w.r.t. the group axis `axis` (`gs0, gs1, ...`).
+    pub fn gid_stride(&self, access: &Access, axis: u8) -> QPoly {
+        self.thread_stride(access, IndexTag::Group(axis))
+    }
+
+    fn thread_stride(&self, access: &Access, tag: IndexTag) -> QPoly {
+        let lf = self.flatten_access(access);
+        // Sum over all inames carrying this tag: an access uses at most
+        // one of them, so this selects the relevant coefficient.
+        self.inames_with_tag(tag)
+            .iter()
+            .fold(QPoly::zero(), |acc, iname| &acc + &lf.coeff(iname))
+    }
+
+    /// Stride (elements) w.r.t. a sequential iname (Table 1's "loop
+    /// stride").
+    pub fn loop_stride(&self, access: &Access, iname: &str) -> QPoly {
+        self.flatten_access(access).coeff(iname)
+    }
+
+    /// Statement's projected domain (Algorithm 1).
+    pub fn stmt_domain(&self, stmt: &Stmt) -> NestedDomain {
+        self.domain.project(&stmt.within)
+    }
+
+    /// Sequential inames a statement nests in (innermost trip counts).
+    pub fn sequential_within<'a>(&self, stmt: &'a Stmt) -> Vec<&'a str> {
+        stmt.within
+            .iter()
+            .filter(|i| !self.tag(i).is_parallel())
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    /// Basic well-formedness checks; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        let order = self.domain.var_names();
+        for s in &self.stmts {
+            // `within` must be a subsequence of the domain order.
+            let mut pos = 0usize;
+            for w in &s.within {
+                match order[pos..].iter().position(|v| v == w) {
+                    Some(off) => pos += off + 1,
+                    None => {
+                        return Err(format!(
+                            "stmt '{}': iname '{w}' not in domain order {order:?}",
+                            s.id
+                        ))
+                    }
+                }
+            }
+            // All accessed arrays/temps must be declared, subscripts
+            // must reference only in-scope inames or parameters.
+            let check_access = |a: &Access| -> Result<(), String> {
+                if !self.arrays.contains_key(&a.array) {
+                    return Err(format!("stmt '{}': unknown array '{}'", s.id, a.array));
+                }
+                for ix in &a.indices {
+                    for v in ix.vars() {
+                        let known = s.within.contains(v)
+                            || self.params.contains(v)
+                            || order.contains(v);
+                        if !known {
+                            return Err(format!(
+                                "stmt '{}': subscript var '{v}' unknown",
+                                s.id
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            };
+            for l in s.rhs.loads() {
+                check_access(l)?;
+            }
+            if let LhsRef::Array(a) = &s.lhs {
+                check_access(a)?;
+            }
+            if let LhsRef::Temp(t) = &s.lhs {
+                if !self.temps.contains_key(t) {
+                    return Err(format!("stmt '{}': unknown temp '{t}'", s.id));
+                }
+            }
+            for t in s.rhs.temps_read() {
+                if !self.temps.contains_key(t) {
+                    return Err(format!("stmt '{}': unknown temp '{t}'", s.id));
+                }
+            }
+            for d in &s.deps {
+                if self.stmt(d).is_none() {
+                    return Err(format!("stmt '{}': unknown dep '{d}'", s.id));
+                }
+            }
+        }
+        // Local axes need constant extents.
+        for (iname, tag) in &self.iname_tags {
+            if matches!(tag, IndexTag::Local(_)) && self.const_extent(iname).is_none() {
+                return Err(format!("local iname '{iname}' has non-constant extent"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable pseudo-OpenCL listing (inspection/debugging).
+    pub fn pseudocode(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "// kernel {} (wg {}x{})\n",
+            self.name,
+            self.lsize(0),
+            self.lsize(1)
+        ));
+        for l in &self.domain.loops {
+            let tag = self.tag(&l.var);
+            out.push_str(&format!(
+                "// iname {:>10} in [{}, {}] {:?}\n",
+                l.var, l.lo, l.hi, tag
+            ));
+        }
+        for s in &self.stmts {
+            out.push_str(&format!(
+                "{}: {} = {}   // within {:?}\n",
+                s.id, s.lhs, s.rhs, s.within
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::LoopExtent;
+
+    /// Hand-built fragment of the tiled matmul (§2.1 of the paper):
+    /// enough structure to exercise geometry + stride analysis.
+    fn tiled_matmul_fragment() -> Kernel {
+        let n = QPoly::var("n");
+        let nd16 = n.floor_div(16);
+        let domain = NestedDomain::new(vec![
+            LoopExtent::zero_to("i_out", nd16.clone()),
+            LoopExtent::zero_to("j_out", nd16.clone()),
+            LoopExtent::zero_to("i_in", QPoly::int(16)),
+            LoopExtent::zero_to("j_in", QPoly::int(16)),
+            LoopExtent::zero_to("k_out", nd16),
+            LoopExtent::zero_to("k_in", QPoly::int(16)),
+        ]);
+        let mut k = Kernel::new("mm", &["n"], domain);
+        k.assumptions = Assumptions::none().divisible_by("n", 16).at_least("n", 16);
+        k.iname_tags.insert("i_out".into(), IndexTag::Group(1));
+        k.iname_tags.insert("j_out".into(), IndexTag::Group(0));
+        k.iname_tags.insert("i_in".into(), IndexTag::Local(1));
+        k.iname_tags.insert("j_in".into(), IndexTag::Local(0));
+        k.add_array(ArrayDecl::global(
+            "a",
+            DType::F32,
+            vec![n.clone(), n.clone()],
+        ));
+        k.add_array(ArrayDecl::local(
+            "a_fetch",
+            DType::F32,
+            vec![QPoly::int(16), QPoly::int(16)],
+        ));
+        k.add_temp("acc", DType::F32);
+        // Prefetch of `a`, as the paper's generated code does it:
+        // a_fetch[lid(1), lid(0)] = a[16*gid(1) + lid(1), 16*k_out + lid(0)]
+        // i.e. the fetch loop is parallelized over the work-group, with
+        // j_in (lid 0) covering the k-tile column.
+        let a_ld = Access::tagged(
+            "a",
+            "aLD",
+            vec![
+                AffExpr::scaled_var("i_out", 16).plus(&AffExpr::var("i_in")),
+                AffExpr::scaled_var("k_out", 16).plus(&AffExpr::var("j_in")),
+            ],
+        );
+        k.add_stmt(
+            Stmt::new(
+                "fetch_a",
+                LhsRef::Array(Access::new(
+                    "a_fetch",
+                    vec![AffExpr::var("i_in"), AffExpr::var("j_in")],
+                )),
+                Expr::load(a_ld),
+                &["i_out", "j_out", "i_in", "j_in", "k_out"],
+            ),
+        );
+        k
+    }
+
+    #[test]
+    fn launch_geometry() {
+        let k = tiled_matmul_fragment();
+        assert_eq!(k.lsize(0), 16);
+        assert_eq!(k.lsize(1), 16);
+        assert_eq!(k.work_group_size(), 256);
+        // (n/16)^2 work-groups.
+        let groups = k.num_groups();
+        let env: std::collections::BTreeMap<_, _> =
+            [("n".to_string(), 64i128)].into_iter().collect();
+        assert_eq!(groups.eval(&env), Rat::int(16));
+    }
+
+    #[test]
+    fn stride_analysis_matches_table1() {
+        // Paper Table 1: global loads of `a` in the prefetching matmul
+        // have local strides {0: 1, 1: n}, global strides {0: 0, 1: 16n},
+        // loop (k_out) stride 16.
+        let k = tiled_matmul_fragment();
+        let s = &k.stmts[0];
+        let a_access = &s.rhs.loads()[0].clone();
+        let env: std::collections::BTreeMap<_, _> =
+            [("n".to_string(), 1024i128)].into_iter().collect();
+        assert_eq!(k.lid_stride(a_access, 0).eval(&env), Rat::int(1));
+        assert_eq!(k.lid_stride(a_access, 1).eval(&env), Rat::int(1024));
+        assert_eq!(k.gid_stride(a_access, 0).eval(&env), Rat::int(0));
+        assert_eq!(
+            k.gid_stride(a_access, 1).eval(&env),
+            Rat::int(16 * 1024)
+        );
+        assert_eq!(k.loop_stride(a_access, "k_out").eval(&env), Rat::int(16));
+    }
+
+    #[test]
+    fn local_array_strides() {
+        let k = tiled_matmul_fragment();
+        let store = k.stmts[0].store().unwrap().clone();
+        let env: std::collections::BTreeMap<_, _> =
+            [("n".to_string(), 1024i128)].into_iter().collect();
+        // a_fetch[i_in, j_in]: lid1 (i_in) stride 16, lid0 (j_in) stride 1.
+        assert_eq!(k.lid_stride(&store, 1).eval(&env), Rat::int(16));
+        assert_eq!(k.lid_stride(&store, 0).eval(&env), Rat::int(1));
+    }
+
+    #[test]
+    fn layout_permutation_transposes_strides() {
+        let n = QPoly::var("n");
+        let mut d = ArrayDecl::global("u", DType::F32, vec![n.clone(), QPoly::int(64)]);
+        let env: std::collections::BTreeMap<_, _> =
+            [("n".to_string(), 100i128)].into_iter().collect();
+        // Row-major: stride of axis0 = 64, axis1 = 1.
+        let s = d.strides();
+        assert_eq!(s[0].eval(&env), Rat::int(64));
+        assert_eq!(s[1].eval(&env), Rat::int(1));
+        // Transposed layout (the DG variant 4 trick): axis1 slowest.
+        d.axis_order = vec![1, 0];
+        let s = d.strides();
+        assert_eq!(s[0].eval(&env), Rat::int(1));
+        assert_eq!(s[1].eval(&env), Rat::int(100));
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        let k = tiled_matmul_fragment();
+        assert_eq!(k.validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_array() {
+        let mut k = tiled_matmul_fragment();
+        k.add_stmt(Stmt::new(
+            "bad",
+            LhsRef::Temp("acc".into()),
+            Expr::load(Access::new("nope", vec![AffExpr::var("i_in")])),
+            &["i_out", "i_in"],
+        ));
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_order_within() {
+        let mut k = tiled_matmul_fragment();
+        k.add_stmt(Stmt::new(
+            "bad_order",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["i_in", "i_out"], // wrong order
+        ));
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn stmt_domain_projection_counts() {
+        let k = tiled_matmul_fragment();
+        let dom = k.stmt_domain(&k.stmts[0]);
+        let env: std::collections::BTreeMap<_, _> =
+            [("n".to_string(), 64i128)].into_iter().collect();
+        // fetch_a nests in i_out, j_out, i_in, j_in, k_out:
+        // for n=64: 4 * 4 * 16 * 16 * 4 = 16384.
+        let c = k.assumptions.simplify(&dom.count());
+        assert_eq!(c.eval(&env), Rat::int(16384));
+    }
+}

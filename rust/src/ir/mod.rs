@@ -1,0 +1,23 @@
+//! Loopy-like kernel intermediate representation.
+//!
+//! Kernels are *static-control* array programs over a polyhedral loop
+//! domain, expressed against the OpenCL machine model (Section 1.2 of
+//! the paper): inames are tagged as group/local thread axes or left
+//! sequential, arrays live in global/local/private memory, and array
+//! subscripts are affine in the inames — the property all stride/
+//! footprint reasoning (Sections 5-6) relies on.
+//!
+//! * [`dtype`] — scalar types.
+//! * [`expr`] — affine index expressions and arithmetic expression trees
+//!   (with multiply-add detection).
+//! * [`kernel`] — statements, arrays, iname tags, launch geometry.
+
+pub mod dtype;
+pub mod expr;
+pub mod kernel;
+
+pub use dtype::DType;
+pub use expr::{Access, AffExpr, BinOp, Expr, OpCounts};
+pub use kernel::{
+    ArrayDecl, IndexTag, Kernel, LhsRef, MemScope, Stmt, TempDecl,
+};

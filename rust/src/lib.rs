@@ -1,0 +1,35 @@
+//! # perflex — cross-machine black-box GPU performance modeling
+//!
+//! A full-system reproduction of Stevens & Klöckner, *"A mechanism for
+//! balancing accuracy and scope in cross-machine black-box GPU
+//! performance modeling"* (IJHPCA 2020), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Loopy-like polyhedral kernel IR and
+//!   transformations, symbolic operation counting, the Perflex feature
+//!   and model DSL, the UiPiCK measurement-kernel generator collection,
+//!   the Levenberg-Marquardt calibrator, a simulated five-GPU fleet
+//!   (substituting for the paper's physical testbed), and the
+//!   experiment coordinator that regenerates every table and figure.
+//! * **L2/L1 (python/compile, build-time only)** — the batched model
+//!   evaluation + Jacobian + LM step, with the hot block written as a
+//!   Pallas kernel, AOT-lowered to HLO text and executed from Rust via
+//!   the PJRT CPU client ([`runtime`]).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod gpusim;
+pub mod ir;
+pub mod bench_harness;
+pub mod calibrate;
+pub mod coordinator;
+pub mod features;
+pub mod model;
+pub mod polyhedral;
+pub mod runtime;
+pub mod schedule;
+pub mod stats;
+pub mod transform;
+pub mod uipick;
+pub mod util;

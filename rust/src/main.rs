@@ -1,0 +1,213 @@
+//! `perflex` — command-line driver for the cross-machine black-box GPU
+//! performance-modeling framework.
+//!
+//! The CLI is hand-rolled (no clap in the offline crate set; see
+//! Cargo.toml).  Sub-commands:
+//!
+//! ```text
+//! perflex list-generators                 UiPiCK generator inventory
+//! perflex list-devices                    the simulated fleet (Table 2)
+//! perflex gen <tag>...                    generate measurement kernels
+//! perflex show <tag>...                   print kernel schedule listings
+//! perflex measure <device> <tag>...       measure kernels on a device
+//! perflex calibrate <case> <device>       calibrate an evaluation model
+//! perflex predict <case> <device> <variant> <k=v>...
+//! perflex experiment <id>|all [--no-aot] [--json <dir>]
+//! ```
+
+use std::collections::BTreeMap;
+
+use perflex::coordinator::experiments::calibrate_case;
+use perflex::coordinator::{run_experiment, EXPERIMENT_IDS};
+use perflex::gpusim::{device_by_id, fleet, measure};
+use perflex::uipick::KernelCollection;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage: perflex <command> [...]\n\
+     commands: list-generators | list-devices | gen | show | measure | \
+     calibrate | predict | experiment\n\
+     run `perflex experiment all` to reproduce the paper's evaluation"
+        .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<(), String> {
+    let cmd = args.first().ok_or_else(usage)?;
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "list-generators" => {
+            let c = KernelCollection::all();
+            for g in &c.generators {
+                println!("{:<20} tags: {:?}", g.name, g.tags);
+                for (arg, dom) in &g.arg_domains {
+                    println!("    {arg}: {dom:?}");
+                }
+            }
+            Ok(())
+        }
+        "list-devices" => {
+            for d in fleet() {
+                println!(
+                    "{:<14} {:<32} peak {:>5.1} TF, {:>4.0} GB/s, {} CUs",
+                    d.id,
+                    d.name,
+                    d.peak_flops() / 1e12,
+                    d.dram_gbps,
+                    d.sm_count
+                );
+            }
+            Ok(())
+        }
+        "gen" | "show" => {
+            let tags: Vec<&str> = rest.iter().map(|s| s.as_str()).collect();
+            if tags.is_empty() {
+                return Err(
+                    "gen/show needs filter tags, e.g. `perflex gen matmul_sq n:2048`"
+                        .into(),
+                );
+            }
+            let knls = KernelCollection::all().generate_kernels(&tags)?;
+            println!("{} kernel(s)", knls.len());
+            for k in &knls {
+                println!(
+                    "- {} (generator {}, env {:?})",
+                    k.kernel.name, k.generator, k.env
+                );
+                if cmd == "show" {
+                    let sched = perflex::schedule::linearize(&k.kernel)?;
+                    print!("{}", sched.listing(&k.kernel));
+                    println!();
+                }
+            }
+            Ok(())
+        }
+        "measure" => {
+            let dev_id = rest.first().ok_or("measure <device> <tag>...")?;
+            let device = device_by_id(dev_id)
+                .ok_or_else(|| format!("unknown device '{dev_id}'"))?;
+            let tags: Vec<&str> = rest[1..].iter().map(|s| s.as_str()).collect();
+            let knls = KernelCollection::all().generate_kernels(&tags)?;
+            for k in &knls {
+                match measure(&device, &k.kernel, &k.env) {
+                    Ok(t) => println!(
+                        "{:<28} {:?} -> {}",
+                        k.kernel.name,
+                        k.env,
+                        perflex::coordinator::report::fmt_time(t)
+                    ),
+                    Err(e) => {
+                        println!("{:<28} {:?} -> ERROR {e}", k.kernel.name, k.env)
+                    }
+                }
+            }
+            Ok(())
+        }
+        "calibrate" | "predict" => {
+            let case_id = rest
+                .first()
+                .ok_or("calibrate <case:matmul|dg|fdiff> <device>")?;
+            let dev_id = rest.get(1).ok_or("missing device")?;
+            let device = device_by_id(dev_id)
+                .ok_or_else(|| format!("unknown device '{dev_id}'"))?;
+            let cases = perflex::coordinator::expsets::eval_cases();
+            let case = cases
+                .iter()
+                .find(|c| c.id == case_id.as_str())
+                .ok_or_else(|| format!("unknown case '{case_id}' (matmul|dg|fdiff)"))?;
+            let aot = if perflex::runtime::artifacts_available() {
+                Some(perflex::runtime::Artifacts::load()?)
+            } else {
+                None
+            };
+            let (cm, fit) = calibrate_case(case, &device, true, aot.as_ref())?;
+            println!(
+                "calibrated {} on {} ({} params, residual {:.3e}, {} LM iters{})",
+                case.id,
+                device.id,
+                fit.params.len(),
+                fit.residual,
+                fit.iterations,
+                if aot.is_some() {
+                    ", AOT path"
+                } else {
+                    ", native path"
+                }
+            );
+            for (n, v) in fit.param_names.iter().zip(&fit.params) {
+                println!("    {n:<40} = {v:.4e}");
+            }
+            if cmd == "predict" {
+                let variant = rest.get(2).ok_or("predict ... <variant> <k=v>...")?;
+                let mut env: BTreeMap<String, i64> = BTreeMap::new();
+                for kv in &rest[3..] {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("expected k=v, got '{kv}'"))?;
+                    env.insert(k.into(), v.parse().map_err(|_| "bad int")?);
+                }
+                let kernel = build_variant(case_id, variant)?;
+                let predicted = perflex::calibrate::eval_with_kernel(
+                    &cm.to_model(),
+                    &fit,
+                    &kernel,
+                    &env,
+                    device.sub_group_size,
+                )?;
+                let measured = measure(&device, &kernel, &env)?;
+                println!(
+                    "predicted {} / measured {} (err {:.1}%)",
+                    perflex::coordinator::report::fmt_time(predicted),
+                    perflex::coordinator::report::fmt_time(measured),
+                    100.0 * (predicted - measured).abs() / measured
+                );
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let id = rest
+                .first()
+                .ok_or_else(|| format!("experiment <id>; known: {EXPERIMENT_IDS:?}"))?;
+            let use_aot = !rest.iter().any(|a| a == "--no-aot");
+            let json_dir = rest
+                .iter()
+                .position(|a| a == "--json")
+                .and_then(|i| rest.get(i + 1))
+                .map(std::path::PathBuf::from);
+            let rep = run_experiment(id, use_aot)?;
+            print!("{}", rep.render());
+            if let Some(dir) = json_dir {
+                rep.write_json(&dir)?;
+                println!("(json written to {}/{}.json)", dir.display(), rep.id);
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+fn build_variant(case: &str, variant: &str) -> Result<perflex::ir::Kernel, String> {
+    use perflex::uipick::apps::*;
+    match (case, variant) {
+        ("matmul", "prefetch") => build_matmul(perflex::ir::DType::F32, true, 16),
+        ("matmul", "no_prefetch") => build_matmul(perflex::ir::DType::F32, false, 16),
+        ("dg", v) => build_dg(DgVariant::parse(v)?, 64, 16),
+        ("fdiff", "16x16") => build_fdiff(16),
+        ("fdiff", "18x18") => build_fdiff(18),
+        _ => Err(format!("unknown variant '{variant}' for case '{case}'")),
+    }
+}

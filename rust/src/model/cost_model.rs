@@ -1,0 +1,256 @@
+//! The paper's three-cost-component model family (Section 8.1).
+//!
+//! Costs are grouped into overhead (barriers, launches), global memory
+//! and on-chip work; the *linear* model (Eq. 7) sums them, the
+//! *nonlinear* model (Eq. 8) lets on-chip cost hide behind global
+//! memory traffic through the differentiable step switch (Eq. 5/6).
+//!
+//! A [`CostModel`] expands to a general [`ModelExpr`] for the native
+//! evaluator, and maps directly onto the AOT JAX/Pallas `lm_step`
+//! artifact (feature columns + group masks + mode scalar) for the
+//! accelerated calibration path — both paths are cross-checked in
+//! tests and benchmarked as an ablation.
+
+use super::expr::ModelExpr;
+use super::Model;
+use crate::features::FeatureSpec;
+
+/// Cost component a feature belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostGroup {
+    Overhead = 0,
+    Gmem = 1,
+    OnChip = 2,
+}
+
+/// One `parameter * feature` cost term.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostTerm {
+    pub param: String,
+    pub feature: String,
+    pub group: CostGroup,
+}
+
+/// A model in the builtin family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// Device name for the output feature (`f_cl_wall_time_<device>`).
+    pub device: String,
+    pub terms: Vec<CostTerm>,
+    /// Eq. 8 (overlap) when true, Eq. 7 (linear) when false.
+    pub nonlinear: bool,
+}
+
+/// The parameter name of the step-sharpness parameter (Eq. 6).
+pub const EDGE_PARAM: &str = "p_edge";
+
+impl CostModel {
+    pub fn new(device: &str, nonlinear: bool) -> CostModel {
+        CostModel {
+            device: device.to_string(),
+            terms: Vec::new(),
+            nonlinear,
+        }
+    }
+
+    /// Add a term; the parameter name is derived from `param`
+    /// (prefixed `p_` if missing).
+    pub fn term(mut self, param: &str, feature: &str, group: CostGroup) -> CostModel {
+        let param = if param.starts_with("p_") {
+            param.to_string()
+        } else {
+            format!("p_{param}")
+        };
+        self.terms.push(CostTerm {
+            param,
+            feature: feature.to_string(),
+            group,
+        });
+        self
+    }
+
+    pub fn output_feature(&self) -> String {
+        format!("f_cl_wall_time_{}", self.device)
+    }
+
+    /// Ordered feature identifiers (the AOT artifact's column order).
+    pub fn feature_columns(&self) -> Vec<String> {
+        self.terms.iter().map(|t| t.feature.clone()).collect()
+    }
+
+    /// Ordered parameter names; for nonlinear models the trailing
+    /// parameter is [`EDGE_PARAM`] (matching the artifact's `p[J]`).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.terms.iter().map(|t| t.param.clone()).collect();
+        out.push(EDGE_PARAM.to_string());
+        out
+    }
+
+    /// Group mask matrix (3 x J), the artifact's `groups` argument.
+    pub fn groups_matrix(&self) -> [Vec<f64>; 3] {
+        let j = self.terms.len();
+        let mut g = [vec![0.0; j], vec![0.0; j], vec![0.0; j]];
+        for (col, t) in self.terms.iter().enumerate() {
+            g[t.group as usize][col] = 1.0;
+        }
+        g
+    }
+
+    /// The artifact's `mode` scalar.
+    pub fn mode(&self) -> f64 {
+        if self.nonlinear {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Group sub-expression `Σ p_i * f_i` over the given group.
+    fn group_expr(&self, group: CostGroup) -> ModelExpr {
+        let mut acc = ModelExpr::num(0.0);
+        for t in self.terms.iter().filter(|t| t.group == group) {
+            acc = ModelExpr::add(
+                acc,
+                ModelExpr::mul(
+                    ModelExpr::param(&t.param),
+                    ModelExpr::feature(&t.feature),
+                ),
+            );
+        }
+        acc.simplified()
+    }
+
+    /// Expand to a general Perflex model (the native-evaluator path).
+    ///
+    /// Nonlinear form matches the L1 kernel algebraically, using the
+    /// scale-invariant switch (a variation of the paper's Eq. 6, which
+    /// it explicitly admits): with u = a - b,
+    /// `o + b + u * (tanh(p_edge * u / (a + b + eps)) + 1) / 2`.
+    /// Scale invariance keeps calibration on output-scaled features
+    /// consistent with prediction on raw feature values.
+    pub fn to_model(&self) -> Model {
+        let o = self.group_expr(CostGroup::Overhead);
+        let a = self.group_expr(CostGroup::Gmem);
+        let b = self.group_expr(CostGroup::OnChip);
+        let expr = if self.nonlinear {
+            let u = ModelExpr::sub(a.clone(), b.clone());
+            let denom = ModelExpr::add(
+                ModelExpr::add(a, b.clone()),
+                ModelExpr::num(1e-30),
+            );
+            let s1 = ModelExpr::div(
+                ModelExpr::add(
+                    ModelExpr::tanh(ModelExpr::div(
+                        ModelExpr::mul(ModelExpr::param(EDGE_PARAM), u.clone()),
+                        denom,
+                    )),
+                    ModelExpr::num(1.0),
+                ),
+                ModelExpr::num(2.0),
+            );
+            ModelExpr::add(ModelExpr::add(o, b), ModelExpr::mul(u, s1)).simplified()
+        } else {
+            ModelExpr::add(ModelExpr::add(o, a), b).simplified()
+        };
+        Model {
+            output: FeatureSpec::parse(&self.output_feature()).expect("valid output"),
+            expr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn example(nonlinear: bool) -> CostModel {
+        CostModel::new("titan_v", nonlinear)
+            .term("launch", "f_sync_kernel_launch", CostGroup::Overhead)
+            .term("gmem_a", "f_mem_access_tag:aLD", CostGroup::Gmem)
+            .term("gmem_b", "f_mem_access_tag:bLD", CostGroup::Gmem)
+            .term("f32madd", "f_op_float32_madd", CostGroup::OnChip)
+            .term("f32l", "f_mem_access_local_float32", CostGroup::OnChip)
+    }
+
+    fn envs(
+        feats: &[(&str, f64)],
+        params: &[(&str, f64)],
+    ) -> (BTreeMap<String, f64>, BTreeMap<String, f64>) {
+        (
+            params
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            feats.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        )
+    }
+
+    #[test]
+    fn linear_model_sums_components() {
+        let m = example(false).to_model();
+        let (p, f) = envs(
+            &[
+                ("f_sync_kernel_launch", 1.0),
+                ("f_mem_access_tag:aLD", 10.0),
+                ("f_mem_access_tag:bLD", 20.0),
+                ("f_op_float32_madd", 100.0),
+                ("f_mem_access_local_float32", 50.0),
+            ],
+            &[
+                ("p_launch", 1.0),
+                ("p_gmem_a", 0.1),
+                ("p_gmem_b", 0.2),
+                ("p_f32madd", 0.01),
+                ("p_f32l", 0.02),
+            ],
+        );
+        // 1 + (1 + 4) + (1 + 1) = overhead 1, gmem 5, onchip 2.
+        assert!((m.expr.eval(&p, &f).unwrap() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonlinear_model_hides_smaller_component() {
+        let m = example(true).to_model();
+        let (mut p, f) = envs(
+            &[
+                ("f_sync_kernel_launch", 1.0),
+                ("f_mem_access_tag:aLD", 10.0),
+                ("f_mem_access_tag:bLD", 20.0),
+                ("f_op_float32_madd", 100.0),
+                ("f_mem_access_local_float32", 50.0),
+            ],
+            &[
+                ("p_launch", 1.0),
+                ("p_gmem_a", 0.1),
+                ("p_gmem_b", 0.2),
+                ("p_f32madd", 0.01),
+                ("p_f32l", 0.02),
+            ],
+        );
+        p.insert("p_edge".into(), 1e4.to_owned());
+        // gmem = 5, onchip = 2 -> total ≈ 1 + max(5, 2) = 6.
+        let v = m.expr.eval(&p, &f).unwrap();
+        assert!((v - 6.0).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn groups_matrix_matches_terms() {
+        let cm = example(true);
+        let g = cm.groups_matrix();
+        assert_eq!(g[0], vec![1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(g[1], vec![0.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(g[2], vec![0.0, 0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(cm.mode(), 1.0);
+        assert_eq!(example(false).mode(), 0.0);
+        assert_eq!(cm.param_names().last().unwrap(), EDGE_PARAM);
+    }
+
+    #[test]
+    fn model_params_include_edge_only_when_nonlinear() {
+        let lin = example(false).to_model();
+        assert!(!lin.params().contains(&EDGE_PARAM.to_string()));
+        let nl = example(true).to_model();
+        assert!(nl.params().contains(&EDGE_PARAM.to_string()));
+    }
+}

@@ -1,0 +1,522 @@
+//! Model expression trees: parsing, evaluation, symbolic
+//! differentiation (the calibration Jacobian of Section 7.2).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// An arithmetic expression over parameters (`p_...`), features
+/// (`f_...`), literals and `tanh`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelExpr {
+    Num(f64),
+    Param(String),
+    Feature(String),
+    Add(Box<ModelExpr>, Box<ModelExpr>),
+    Sub(Box<ModelExpr>, Box<ModelExpr>),
+    Mul(Box<ModelExpr>, Box<ModelExpr>),
+    Div(Box<ModelExpr>, Box<ModelExpr>),
+    Tanh(Box<ModelExpr>),
+}
+
+use ModelExpr::*;
+
+impl ModelExpr {
+    pub fn num(x: f64) -> ModelExpr {
+        Num(x)
+    }
+
+    pub fn param(name: &str) -> ModelExpr {
+        Param(name.to_string())
+    }
+
+    pub fn feature(name: &str) -> ModelExpr {
+        Feature(name.to_string())
+    }
+
+    pub fn add(a: ModelExpr, b: ModelExpr) -> ModelExpr {
+        Add(Box::new(a), Box::new(b))
+    }
+
+    pub fn sub(a: ModelExpr, b: ModelExpr) -> ModelExpr {
+        Sub(Box::new(a), Box::new(b))
+    }
+
+    pub fn mul(a: ModelExpr, b: ModelExpr) -> ModelExpr {
+        Mul(Box::new(a), Box::new(b))
+    }
+
+    pub fn div(a: ModelExpr, b: ModelExpr) -> ModelExpr {
+        Div(Box::new(a), Box::new(b))
+    }
+
+    pub fn tanh(a: ModelExpr) -> ModelExpr {
+        Tanh(Box::new(a))
+    }
+
+    /// Parse from text. Identifier characters include `:{},<>.$` so
+    /// feature ids with stride maps survive tokenization.
+    pub fn parse(text: &str) -> Result<ModelExpr, String> {
+        let tokens = tokenize(text)?;
+        let mut p = Parser { tokens, pos: 0 };
+        let e = p.expr()?;
+        if p.pos != p.tokens.len() {
+            return Err(format!("trailing tokens after expression: {:?}", &p.tokens[p.pos..]));
+        }
+        Ok(e)
+    }
+
+    /// Evaluate with parameter and feature environments.
+    pub fn eval(
+        &self,
+        params: &BTreeMap<String, f64>,
+        feats: &BTreeMap<String, f64>,
+    ) -> Result<f64, String> {
+        Ok(match self {
+            Num(x) => *x,
+            Param(p) => *params
+                .get(p)
+                .ok_or_else(|| format!("unbound parameter '{p}'"))?,
+            Feature(f) => *feats
+                .get(f)
+                .ok_or_else(|| format!("unbound feature '{f}'"))?,
+            Add(a, b) => a.eval(params, feats)? + b.eval(params, feats)?,
+            Sub(a, b) => a.eval(params, feats)? - b.eval(params, feats)?,
+            Mul(a, b) => a.eval(params, feats)? * b.eval(params, feats)?,
+            Div(a, b) => a.eval(params, feats)? / b.eval(params, feats)?,
+            Tanh(a) => a.eval(params, feats)?.tanh(),
+        })
+    }
+
+    /// Symbolic partial derivative w.r.t. parameter `p` (used for the
+    /// calibration Jacobian; models must be differentiable, §6).
+    pub fn diff(&self, p: &str) -> ModelExpr {
+        match self {
+            Num(_) | Feature(_) => Num(0.0),
+            Param(q) => Num(if q == p { 1.0 } else { 0.0 }),
+            Add(a, b) => ModelExpr::add(a.diff(p), b.diff(p)).simplified(),
+            Sub(a, b) => ModelExpr::sub(a.diff(p), b.diff(p)).simplified(),
+            Mul(a, b) => ModelExpr::add(
+                ModelExpr::mul(a.diff(p), (**b).clone()),
+                ModelExpr::mul((**a).clone(), b.diff(p)),
+            )
+            .simplified(),
+            Div(a, b) => ModelExpr::div(
+                ModelExpr::sub(
+                    ModelExpr::mul(a.diff(p), (**b).clone()),
+                    ModelExpr::mul((**a).clone(), b.diff(p)),
+                ),
+                ModelExpr::mul((**b).clone(), (**b).clone()),
+            )
+            .simplified(),
+            // d tanh(u) = (1 - tanh(u)^2) u'
+            Tanh(a) => {
+                let t = ModelExpr::tanh((**a).clone());
+                ModelExpr::mul(
+                    ModelExpr::sub(Num(1.0), ModelExpr::mul(t.clone(), t)),
+                    a.diff(p),
+                )
+                .simplified()
+            }
+        }
+    }
+
+    /// Constant-fold trivial algebra (0 + x, 1 * x, 0 * x, ...).
+    pub fn simplified(&self) -> ModelExpr {
+        match self {
+            Add(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (&a, &b) {
+                    (Num(x), Num(y)) => Num(x + y),
+                    (Num(z), _) if *z == 0.0 => b,
+                    (_, Num(z)) if *z == 0.0 => a,
+                    _ => ModelExpr::add(a, b),
+                }
+            }
+            Sub(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (&a, &b) {
+                    (Num(x), Num(y)) => Num(x - y),
+                    (_, Num(z)) if *z == 0.0 => a,
+                    _ => ModelExpr::sub(a, b),
+                }
+            }
+            Mul(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (&a, &b) {
+                    (Num(x), Num(y)) => Num(x * y),
+                    (Num(z), _) | (_, Num(z)) if *z == 0.0 => Num(0.0),
+                    (Num(o), _) if *o == 1.0 => b,
+                    (_, Num(o)) if *o == 1.0 => a,
+                    _ => ModelExpr::mul(a, b),
+                }
+            }
+            Div(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (&a, &b) {
+                    (Num(z), _) if *z == 0.0 => Num(0.0),
+                    (_, Num(o)) if *o == 1.0 => a,
+                    _ => ModelExpr::div(a, b),
+                }
+            }
+            Tanh(a) => ModelExpr::tanh(a.simplified()),
+            other => other.clone(),
+        }
+    }
+
+    fn collect(&self, params: &mut Vec<String>, feats: &mut Vec<String>) {
+        match self {
+            Param(p) => {
+                if !params.contains(p) {
+                    params.push(p.clone());
+                }
+            }
+            Feature(f) => {
+                if !feats.contains(f) {
+                    feats.push(f.clone());
+                }
+            }
+            Add(a, b) | Sub(a, b) | Mul(a, b) | Div(a, b) => {
+                a.collect(params, feats);
+                b.collect(params, feats);
+            }
+            Tanh(a) => a.collect(params, feats),
+            Num(_) => {}
+        }
+    }
+
+    /// Parameter names in first-occurrence order.
+    pub fn params(&self) -> Vec<String> {
+        let mut p = Vec::new();
+        let mut f = Vec::new();
+        self.collect(&mut p, &mut f);
+        p
+    }
+
+    /// Feature identifiers in first-occurrence order.
+    pub fn features(&self) -> Vec<String> {
+        let mut p = Vec::new();
+        let mut f = Vec::new();
+        self.collect(&mut p, &mut f);
+        f
+    }
+}
+
+impl fmt::Display for ModelExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Num(x) => write!(f, "{x}"),
+            Param(p) => write!(f, "{p}"),
+            Feature(x) => write!(f, "{x}"),
+            Add(a, b) => write!(f, "({a} + {b})"),
+            Sub(a, b) => write!(f, "({a} - {b})"),
+            Mul(a, b) => write!(f, "({a} * {b})"),
+            Div(a, b) => write!(f, "({a} / {b})"),
+            Tanh(a) => write!(f, "tanh({a})"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Number(f64),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    LParen,
+    RParen,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || matches!(c, '_' | ':' | '{' | '}' | ',' | '<' | '>' | '.' | '$')
+}
+
+fn tokenize(text: &str) -> Result<Vec<Tok>, String> {
+    let mut out = Vec::new();
+    let mut chars = text.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            '+' => {
+                chars.next();
+                out.push(Tok::Plus);
+            }
+            '-' => {
+                chars.next();
+                out.push(Tok::Minus);
+            }
+            '*' => {
+                chars.next();
+                out.push(Tok::Star);
+            }
+            '/' => {
+                chars.next();
+                out.push(Tok::Slash);
+            }
+            '(' => {
+                chars.next();
+                out.push(Tok::LParen);
+            }
+            ')' => {
+                chars.next();
+                out.push(Tok::RParen);
+            }
+            c if c.is_ascii_digit() => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_ascii_digit() || c == '.' || c == 'e' || c == 'E' {
+                        s.push(c);
+                        chars.next();
+                        // allow e-5 / e+5 exponents
+                        if (s.ends_with('e') || s.ends_with('E'))
+                            && matches!(chars.peek(), Some('-') | Some('+'))
+                        {
+                            s.push(chars.next().unwrap());
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Tok::Number(
+                    s.parse().map_err(|_| format!("bad number '{s}'"))?,
+                ));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if is_ident_char(c) {
+                        s.push(c);
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Tok::Ident(s));
+            }
+            other => return Err(format!("unexpected character '{other}'")),
+        }
+    }
+    Ok(out)
+}
+
+struct Parser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self) -> Result<ModelExpr, String> {
+        let mut lhs = self.term()?;
+        while let Some(t) = self.peek() {
+            match t {
+                Tok::Plus => {
+                    self.next();
+                    lhs = ModelExpr::add(lhs, self.term()?);
+                }
+                Tok::Minus => {
+                    self.next();
+                    lhs = ModelExpr::sub(lhs, self.term()?);
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<ModelExpr, String> {
+        let mut lhs = self.factor()?;
+        while let Some(t) = self.peek() {
+            match t {
+                Tok::Star => {
+                    self.next();
+                    lhs = ModelExpr::mul(lhs, self.factor()?);
+                }
+                Tok::Slash => {
+                    self.next();
+                    lhs = ModelExpr::div(lhs, self.factor()?);
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn factor(&mut self) -> Result<ModelExpr, String> {
+        match self.next() {
+            Some(Tok::Number(x)) => Ok(Num(x)),
+            Some(Tok::Minus) => Ok(ModelExpr::sub(Num(0.0), self.factor()?)),
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                match self.next() {
+                    Some(Tok::RParen) => Ok(e),
+                    other => Err(format!("expected ')', got {other:?}")),
+                }
+            }
+            Some(Tok::Ident(name)) => {
+                if name == "tanh" {
+                    match self.next() {
+                        Some(Tok::LParen) => {
+                            let e = self.expr()?;
+                            match self.next() {
+                                Some(Tok::RParen) => Ok(ModelExpr::tanh(e)),
+                                other => Err(format!("expected ')', got {other:?}")),
+                            }
+                        }
+                        other => Err(format!("expected '(' after tanh, got {other:?}")),
+                    }
+                } else if name.starts_with("p_") {
+                    Ok(Param(name))
+                } else if name.starts_with("f_") {
+                    Ok(Feature(name))
+                } else {
+                    Err(format!(
+                        "identifier '{name}' must start with p_ or f_ (or be tanh)"
+                    ))
+                }
+            }
+            other => Err(format!("unexpected token {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn envs() -> (BTreeMap<String, f64>, BTreeMap<String, f64>) {
+        let params = [("p_a".to_string(), 2.0), ("p_b".to_string(), 3.0)]
+            .into_iter()
+            .collect();
+        let feats = [("f_op_float32_madd".to_string(), 5.0)]
+            .into_iter()
+            .collect();
+        (params, feats)
+    }
+
+    #[test]
+    fn parse_and_eval_basic() {
+        let (p, f) = envs();
+        let e = ModelExpr::parse("p_a * f_op_float32_madd + p_b").unwrap();
+        assert_eq!(e.eval(&p, &f).unwrap(), 13.0);
+    }
+
+    #[test]
+    fn precedence_and_parens() {
+        let (p, f) = envs();
+        let e = ModelExpr::parse("(p_a + p_b) * 2").unwrap();
+        assert_eq!(e.eval(&p, &f).unwrap(), 10.0);
+        let e = ModelExpr::parse("p_a + p_b * 2").unwrap();
+        assert_eq!(e.eval(&p, &f).unwrap(), 8.0);
+        let e = ModelExpr::parse("-p_a + 4").unwrap();
+        assert_eq!(e.eval(&p, &f).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn tanh_eval_and_diff() {
+        let (mut p, f) = envs();
+        p.insert("p_edge".into(), 10.0);
+        let e = ModelExpr::parse("(tanh(p_edge * (p_a - p_b)) + 1) / 2").unwrap();
+        let v = e.eval(&p, &f).unwrap();
+        assert!((v - ((10.0f64 * -1.0).tanh() + 1.0) / 2.0).abs() < 1e-15);
+
+        // d/dp_a = edge * sech^2(edge*(a-b)) / 2
+        let d = e.diff("p_a");
+        let got = d.eval(&p, &f).unwrap();
+        let u: f64 = 10.0 * (2.0 - 3.0);
+        let expected = 10.0 * (1.0 - u.tanh().powi(2)) / 2.0;
+        assert!((got - expected).abs() < 1e-12, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn feature_ids_with_braces_tokenize() {
+        let e = ModelExpr::parse(
+            "p_x * f_mem_access_global_float32_lstrides:{0:1,1:>16}_afr:1",
+        )
+        .unwrap();
+        assert_eq!(
+            e.features(),
+            vec!["f_mem_access_global_float32_lstrides:{0:1,1:>16}_afr:1"]
+        );
+    }
+
+    #[test]
+    fn diff_of_linear_model_is_feature() {
+        let e = ModelExpr::parse("p_a * f_op_float32_madd + p_b * f_op_float32_madd")
+            .unwrap();
+        let d = e.diff("p_a").simplified();
+        assert_eq!(d, Feature("f_op_float32_madd".into()));
+    }
+
+    #[test]
+    fn prop_diff_matches_finite_difference() {
+        prop::check("symbolic diff vs finite difference", 40, |rng| {
+            // Random small expression over p_a, p_b, f_x.
+            fn gen(rng: &mut crate::util::Rng, depth: u32) -> ModelExpr {
+                if depth == 0 {
+                    match rng.below(4) {
+                        0 => Num(rng.uniform_in(0.5, 2.0)),
+                        1 => Param("p_a".into()),
+                        2 => Param("p_b".into()),
+                        _ => Feature("f_x".into()),
+                    }
+                } else {
+                    match rng.below(5) {
+                        0 => ModelExpr::add(gen(rng, depth - 1), gen(rng, depth - 1)),
+                        1 => ModelExpr::sub(gen(rng, depth - 1), gen(rng, depth - 1)),
+                        2 => ModelExpr::mul(gen(rng, depth - 1), gen(rng, depth - 1)),
+                        3 => ModelExpr::tanh(gen(rng, depth - 1)),
+                        _ => gen(rng, 0),
+                    }
+                }
+            }
+            let e = gen(rng, 3);
+            let a = rng.uniform_in(0.5, 1.5);
+            let b = rng.uniform_in(0.5, 1.5);
+            let fx = rng.uniform_in(0.5, 1.5);
+            let mk = |a: f64| -> BTreeMap<String, f64> {
+                [("p_a".to_string(), a), ("p_b".to_string(), b)]
+                    .into_iter()
+                    .collect()
+            };
+            let feats: BTreeMap<String, f64> =
+                [("f_x".to_string(), fx)].into_iter().collect();
+            let h = 1e-6;
+            let fd = (e.eval(&mk(a + h), &feats).unwrap()
+                - e.eval(&mk(a - h), &feats).unwrap())
+                / (2.0 * h);
+            let sym = e.diff("p_a").eval(&mk(a), &feats).unwrap();
+            prop::ensure_close(sym, fd, 1e-4, &format!("d/dp_a of {e}"))
+        });
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(ModelExpr::parse("p_a +").is_err());
+        assert!(ModelExpr::parse("q_bogus").is_err());
+        assert!(ModelExpr::parse("tanh p_a").is_err());
+        assert!(ModelExpr::parse("(p_a").is_err());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let e = ModelExpr::parse("1.5e-9 * p_a").unwrap();
+        let (p, f) = envs();
+        assert!((e.eval(&p, &f).unwrap() - 3e-9).abs() < 1e-24);
+    }
+}

@@ -1,0 +1,103 @@
+//! Perflex performance models (paper Section 6).
+//!
+//! A model is an output feature (typically `f_cl_wall_time_<device>`)
+//! approximated by an arithmetic expression over input features
+//! (`f_...`) and hardware-dependent parameters (`p_...`):
+//!
+//! ```text
+//! Model::new(
+//!     "f_cl_wall_time_titan_v",
+//!     "p_f32madd * f_op_float32_madd + p_f32l * f_mem_access_local_float32",
+//! )
+//! ```
+//!
+//! Expressions support `+ - * /`, parentheses, numeric literals and
+//! `tanh(...)` — enough to express the nonlinear overlap model (Eq. 8).
+//! [`expr::ModelExpr`] provides native evaluation and the symbolic
+//! differentiation w.r.t. parameters that calibration requires; the
+//! [`cost_model`] module provides the paper's three-cost-component
+//! builtin family, which additionally maps onto the AOT JAX/Pallas
+//! `lm_step` artifact.
+
+pub mod cost_model;
+pub mod expr;
+
+pub use cost_model::{CostGroup, CostModel, CostTerm};
+pub use expr::ModelExpr;
+
+use crate::features::FeatureSpec;
+
+/// A performance model: output feature ≈ expression.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub output: FeatureSpec,
+    pub expr: ModelExpr,
+}
+
+impl Model {
+    pub fn new(output: &str, expr_text: &str) -> Result<Model, String> {
+        let output = FeatureSpec::parse(output)?;
+        let expr = ModelExpr::parse(expr_text)?;
+        // Validate embedded feature identifiers eagerly.
+        for f in expr.features() {
+            FeatureSpec::parse(&f)?;
+        }
+        Ok(Model { output, expr })
+    }
+
+    /// Parameter names in deterministic order.
+    pub fn params(&self) -> Vec<String> {
+        self.expr.params()
+    }
+
+    /// Input feature identifiers in deterministic order.
+    pub fn input_features(&self) -> Vec<String> {
+        self.expr.features()
+    }
+
+    /// All features (inputs plus the output), parsed.
+    pub fn all_features(&self) -> Result<Vec<FeatureSpec>, String> {
+        let mut out = vec![self.output.clone()];
+        for f in self.input_features() {
+            out.push(FeatureSpec::parse(&f)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_from_paper_section_2_2() {
+        let m = Model::new(
+            "f_cl_wall_time_nvidia_geforce",
+            "p_f32madd * f_op_float32_madd",
+        )
+        .unwrap();
+        assert_eq!(m.params(), vec!["p_f32madd"]);
+        assert_eq!(m.input_features(), vec!["f_op_float32_madd"]);
+        assert!(m.output.is_wall_time());
+    }
+
+    #[test]
+    fn model_with_tagged_accesses() {
+        let m = Model::new(
+            "f_cl_wall_time_nvidia_geforce",
+            "p_f32madd * f_op_float32_madd + \
+             p_f32l * f_mem_access_local_float32 + \
+             p_f32ga * f_mem_access_tag:aLD + \
+             p_f32gb * f_mem_access_tag:bLD + \
+             p_f32gc * f_mem_access_global_float32_store",
+        )
+        .unwrap();
+        assert_eq!(m.params().len(), 5);
+        assert_eq!(m.input_features().len(), 5);
+    }
+
+    #[test]
+    fn rejects_malformed_features() {
+        assert!(Model::new("f_cl_wall_time_x", "p_a * f_bogus_feature").is_err());
+    }
+}

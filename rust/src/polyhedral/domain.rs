@@ -1,0 +1,431 @@
+//! Nested loop domains, point counting and divisibility assumptions.
+//!
+//! A [`NestedDomain`] is an ordered loop nest with inclusive affine (or
+//! floor-of-affine) bounds; inner bounds may reference outer loop
+//! variables.  This is exactly the static-control shape our Loopy-like
+//! IR produces, and counting its integer points (Algorithm 1's
+//! `|π_S(D)|`) is a nested symbolic summation.
+//!
+//! [`Assumptions`] carry `n mod k == 0` divisibility facts (the paper's
+//! `lp.assume(knl, "n % 16 = 0")`), used to rewrite `floor` atoms into
+//! plain polynomial terms so that, e.g., the tiled matmul madd count
+//! comes out as the clean `n^3/32` (per sub-group) rather than a
+//! floor-laden quasi-polynomial.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::qpoly::{Atom, QPoly};
+use super::sum::sum_over;
+use crate::util::Rat;
+
+/// One loop with inclusive bounds `lo <= var <= hi`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoopExtent {
+    pub var: String,
+    pub lo: QPoly,
+    pub hi: QPoly,
+}
+
+impl LoopExtent {
+    pub fn new(var: &str, lo: QPoly, hi: QPoly) -> LoopExtent {
+        LoopExtent {
+            var: var.to_string(),
+            lo,
+            hi,
+        }
+    }
+
+    /// `0 <= var <= extent - 1`.
+    pub fn zero_to(var: &str, extent: QPoly) -> LoopExtent {
+        LoopExtent::new(var, QPoly::zero(), &extent - &QPoly::one())
+    }
+
+    /// Trip count `hi - lo + 1`.
+    pub fn extent(&self) -> QPoly {
+        &(&self.hi - &self.lo) + &QPoly::one()
+    }
+}
+
+/// An ordered (outer → inner) affinely-bounded loop nest.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NestedDomain {
+    pub loops: Vec<LoopExtent>,
+}
+
+impl NestedDomain {
+    pub fn new(loops: Vec<LoopExtent>) -> NestedDomain {
+        NestedDomain { loops }
+    }
+
+    /// Number of integer points, as a quasi-polynomial in the parameters.
+    ///
+    /// Sums `1` from the innermost loop outward.  Valid wherever every
+    /// range is non-empty-or-trivially-empty (`hi >= lo - 1`), the same
+    /// chamber condition Ehrhart counting carries.
+    pub fn count(&self) -> QPoly {
+        self.sum(&QPoly::one())
+    }
+
+    /// Symbolic `Σ_domain body`.
+    pub fn sum(&self, body: &QPoly) -> QPoly {
+        let mut acc = body.clone();
+        for l in self.loops.iter().rev() {
+            acc = sum_over(&acc, &l.var, &l.lo, &l.hi);
+        }
+        acc
+    }
+
+    /// Sub-domain containing only the loops whose names are in `keep`
+    /// (Algorithm 1's projection onto the loops a statement resides in;
+    /// valid because statements live at prefix-closed nest positions and
+    /// kept inner bounds may only reference kept outer variables —
+    /// asserted).
+    pub fn project(&self, keep: &[String]) -> NestedDomain {
+        let kept: Vec<LoopExtent> = self
+            .loops
+            .iter()
+            .filter(|l| keep.contains(&l.var))
+            .cloned()
+            .collect();
+        let dropped: Vec<&String> = self
+            .loops
+            .iter()
+            .map(|l| &l.var)
+            .filter(|v| !keep.contains(v))
+            .collect();
+        for l in &kept {
+            for d in &dropped {
+                assert!(
+                    !l.lo.mentions(d) && !l.hi.mentions(d),
+                    "projection would drop variable '{d}' referenced by bounds of '{}'",
+                    l.var
+                );
+            }
+        }
+        NestedDomain { loops: kept }
+    }
+
+    pub fn var_names(&self) -> Vec<String> {
+        self.loops.iter().map(|l| l.var.clone()).collect()
+    }
+}
+
+impl fmt::Display for NestedDomain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{ ")?;
+        for (i, l) in self.loops.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{} <= {} <= {}", l.lo, l.var, l.hi)?;
+        }
+        write!(f, " }}")
+    }
+}
+
+/// Divisibility and range assumptions on parameters
+/// (`assume(knl, "n >= 1 and n % 16 = 0")`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Assumptions {
+    /// `var -> k` meaning `var ≡ 0 (mod k)`.
+    pub divisible: BTreeMap<String, i128>,
+    /// `var -> lo` meaning `var >= lo`.
+    pub min_value: BTreeMap<String, i128>,
+}
+
+impl Assumptions {
+    pub fn none() -> Assumptions {
+        Assumptions::default()
+    }
+
+    pub fn divisible_by(mut self, var: &str, k: i128) -> Assumptions {
+        assert!(k > 0);
+        self.divisible.insert(var.to_string(), k);
+        self
+    }
+
+    pub fn at_least(mut self, var: &str, lo: i128) -> Assumptions {
+        self.min_value.insert(var.to_string(), lo);
+        self
+    }
+
+    /// Parse the Loopy-style assumption string, e.g.
+    /// `"n >= 1 and n % 16 = 0"` (also accepts `==` and `mod`).
+    pub fn parse(text: &str) -> Result<Assumptions, String> {
+        let mut out = Assumptions::none();
+        for clause in text.split(" and ") {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some((lhs, rhs)) = clause.split_once(">=") {
+                let var = lhs.trim().to_string();
+                let lo: i128 = rhs
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad bound in '{clause}'"))?;
+                out.min_value.insert(var, lo);
+            } else if clause.contains('%') || clause.contains(" mod ") {
+                let body = clause.replace(" mod ", " % ");
+                let (lhs, rhs) = body
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected '=' in '{clause}'"))?;
+                let rhs_val: i128 = rhs
+                    .trim_start_matches('=')
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad rhs in '{clause}'"))?;
+                if rhs_val != 0 {
+                    return Err(format!("only '% k = 0' supported: '{clause}'"));
+                }
+                let (var, k) = lhs
+                    .split_once('%')
+                    .ok_or_else(|| format!("expected '%' in '{clause}'"))?;
+                let k: i128 = k
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad modulus in '{clause}'"))?;
+                out.divisible.insert(var.trim().to_string(), k);
+            } else {
+                return Err(format!("unsupported assumption clause '{clause}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn merge(&mut self, other: &Assumptions) {
+        for (k, v) in &other.divisible {
+            self.divisible.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.min_value {
+            self.min_value.insert(k.clone(), *v);
+        }
+    }
+
+    /// Modulus known for the value of a whole polynomial term set:
+    /// returns `m` such that `poly ≡ c (mod m)` would hold for the
+    /// non-constant part; used to decide floor simplification.
+    fn term_divisible(&self, mono_vars: &[(Atom, u32)], coeff: Rat, den: i128) -> bool {
+        // A term c * m is divisible by den (for all assignments
+        // satisfying the assumptions) if some variable v in m carries a
+        // divisibility modulus k with (c * k / den) integral.
+        for (a, _e) in mono_vars {
+            if let Atom::Var(v) = a {
+                if let Some(k) = self.divisible.get(v) {
+                    if (coeff * Rat::int(*k) / Rat::int(den)).is_integer() {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Rewrite floor atoms whose argument is exactly divisible under the
+    /// assumptions:  `floor((Σ c_i m_i + c0)/d) = Σ (c_i/d) m_i +
+    /// floor(c0/d)` when every non-constant term is divisible by `d`.
+    pub fn simplify(&self, p: &QPoly) -> QPoly {
+        p.map_atoms(&mut |a| match a {
+            Atom::Var(_) => QPoly::atom(a.clone()),
+            Atom::Floor { num, den } => {
+                let num = self.simplify(num);
+                let mut var_part = QPoly::zero();
+                let mut const_part = Rat::ZERO;
+                let mut all_divisible = true;
+                for (m, c) in num.terms() {
+                    if m.is_one() {
+                        const_part = *c;
+                    } else if self.term_divisible(&m.0, *c, *den) {
+                        var_part = &var_part
+                            + &QPoly::constant(*c / Rat::int(*den)).scale(Rat::ONE).mul_mono(m);
+                    } else {
+                        all_divisible = false;
+                        break;
+                    }
+                }
+                if all_divisible {
+                    let c_floor = (const_part / Rat::int(*den)).floor();
+                    &var_part + &QPoly::int(c_floor)
+                } else {
+                    num.floor_div(*den)
+                }
+            }
+        })
+    }
+}
+
+impl QPoly {
+    /// Multiply by a bare monomial (helper for assumption rewriting).
+    fn mul_mono(&self, m: &super::qpoly::Monomial) -> QPoly {
+        let mut mono_poly = QPoly::one();
+        for (a, e) in &m.0 {
+            mono_poly = &mono_poly * &QPoly::atom(a.clone()).pow(*e);
+        }
+        self * &mono_poly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn env(pairs: &[(&str, i128)]) -> BTreeMap<String, i128> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn brute_count(dom: &NestedDomain, e: &BTreeMap<String, i128>) -> i128 {
+        fn rec(loops: &[LoopExtent], env: &mut BTreeMap<String, i128>) -> i128 {
+            match loops.first() {
+                None => 1,
+                Some(l) => {
+                    let lo = l.lo.eval(env).floor();
+                    let hi = l.hi.eval(env).floor();
+                    let mut total = 0;
+                    let mut v = lo;
+                    while v <= hi {
+                        env.insert(l.var.clone(), v);
+                        total += rec(&loops[1..], env);
+                        v += 1;
+                    }
+                    env.remove(&l.var);
+                    total
+                }
+            }
+        }
+        let mut env = e.clone();
+        rec(&dom.loops, &mut env)
+    }
+
+    #[test]
+    fn box_domain_counts_product() {
+        // { 0 <= i < n, 0 <= j < n } has n^2 points.
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+        ]);
+        let c = dom.count();
+        assert_eq!(c, n.pow(2));
+    }
+
+    #[test]
+    fn paper_section5_triangular_example() {
+        // Paper §5 (modulo its off-by-one typo): points (i, j) with
+        // p <= i <= n, p <= j <= i - 1 number (n² + p² − 2np + n − p)/2.
+        let (n, p) = (QPoly::var("n"), QPoly::var("p"));
+        let dom = NestedDomain::new(vec![
+            LoopExtent::new("i", p.clone(), n.clone()),
+            LoopExtent::new("j", p.clone(), &QPoly::var("i") - &QPoly::one()),
+        ]);
+        let c = dom.count();
+        let expected = {
+            // (n^2 + p^2 - 2np + n - p) / 2
+            let t = &(&(&n.pow(2) + &p.pow(2)) - &(&n * &p).scale(Rat::int(2))) + &(&n - &p);
+            t.scale(Rat::new(1, 2))
+        };
+        assert_eq!(c, expected);
+        assert_eq!(c.eval(&env(&[("n", 10), ("p", 3)])), Rat::int(28));
+    }
+
+    #[test]
+    fn split_loop_with_assume_simplifies() {
+        // i split by 16 under n % 16 == 0:
+        // { 0 <= i_out <= floor((n-16)/16), 0 <= i_in <= 15 } has n points.
+        let n = QPoly::var("n");
+        let hi_out = (&n - &QPoly::int(16)).floor_div(16);
+        let dom = NestedDomain::new(vec![
+            LoopExtent::new("i_out", QPoly::zero(), hi_out),
+            LoopExtent::new("i_in", QPoly::zero(), QPoly::int(15)),
+        ]);
+        let raw = dom.count();
+        let asm = Assumptions::none().divisible_by("n", 16).at_least("n", 16);
+        let simplified = asm.simplify(&raw);
+        assert_eq!(simplified, n, "got {simplified}");
+    }
+
+    #[test]
+    fn assume_parse() {
+        let a = Assumptions::parse("n >= 1 and n % 16 = 0").unwrap();
+        assert_eq!(a.min_value.get("n"), Some(&1));
+        assert_eq!(a.divisible.get("n"), Some(&16));
+        let b = Assumptions::parse("m mod 8 = 0").unwrap();
+        assert_eq!(b.divisible.get("m"), Some(&8));
+        assert!(Assumptions::parse("n < 5").is_err());
+    }
+
+    #[test]
+    fn simplify_keeps_unprovable_floors() {
+        let n = QPoly::var("n");
+        let fd = (&n - &QPoly::int(3)).floor_div(7);
+        let asm = Assumptions::none().divisible_by("n", 16);
+        assert_eq!(asm.simplify(&fd), fd);
+    }
+
+    #[test]
+    fn projection_drops_inner_loops() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let proj = dom.project(&["i".into(), "j".into()]);
+        assert_eq!(proj.count(), n.pow(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "projection would drop")]
+    fn projection_rejects_dangling_bounds() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::new("j", QPoly::zero(), QPoly::var("i")),
+        ]);
+        let _ = dom.project(&["j".into()]);
+    }
+
+    #[test]
+    fn prop_count_matches_brute_force() {
+        prop::check("nested count vs brute force", 40, |rng| {
+            // Random 1-3 deep nest over small constant/parametric bounds.
+            let depth = rng.int_in(1, 3);
+            let mut loops = Vec::new();
+            let vars = ["i", "j", "k"];
+            for d in 0..depth {
+                let lo = QPoly::int(rng.int_in(0, 2) as i128);
+                let hi = match rng.int_in(0, 2) {
+                    0 => QPoly::int(rng.int_in(2, 6) as i128),
+                    1 => &QPoly::var("n") - &QPoly::one(),
+                    _ if d > 0 => QPoly::var(vars[(d - 1) as usize]),
+                    _ => QPoly::int(rng.int_in(2, 6) as i128),
+                };
+                loops.push(LoopExtent::new(vars[d as usize], lo, hi));
+            }
+            let dom = NestedDomain::new(loops);
+            let sym = dom.count();
+            let e = env(&[("n", rng.int_in(3, 9) as i128)]);
+            let brute = brute_count(&dom, &e);
+            prop::ensure(
+                sym.eval(&e) == Rat::int(brute),
+                format!("{dom} -> {sym}; brute {brute}"),
+            )
+        });
+    }
+
+    #[test]
+    fn symbolic_reevaluation_is_cheap_and_consistent() {
+        // The paper amortizes counting: one symbolic count, many sizes.
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let c = dom.count();
+        for nv in [64i128, 128, 1024, 4096] {
+            assert_eq!(c.eval(&env(&[("n", nv)])), Rat::int(nv * nv * nv));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Polyhedral counting machinery (the paper's Section 5 substrate).
+//!
+//! Replaces barvinok/isl: operation counts are **piecewise
+//! quasi-polynomials** in the problem-size parameters, obtained by exact
+//! symbolic summation (Faulhaber) over nested, affinely-bounded loop
+//! domains — the static-control programs produced by our Loopy-like IR.
+//!
+//! * [`qpoly`] — multivariate quasi-polynomials with exact rational
+//!   coefficients over parameter atoms and `floor(affine/d)` atoms.
+//! * [`sum`] — symbolic summation of a polynomial over an integer
+//!   interval with polynomial bounds (Bernoulli/Faulhaber power sums).
+//! * [`domain`] — nested loop domains, point counting, and
+//!   divisibility assumptions (`assume(n mod 16 == 0)`) that simplify
+//!   floor atoms into ordinary polynomial terms.
+
+pub mod domain;
+pub mod qpoly;
+pub mod sum;
+
+pub use domain::{Assumptions, LoopExtent, NestedDomain};
+pub use qpoly::{Atom, QPoly};
+pub use sum::sum_over;

@@ -1,0 +1,498 @@
+//! Multivariate quasi-polynomials with exact rational coefficients.
+//!
+//! A [`QPoly`] is a polynomial over *atoms*; an atom is either a named
+//! integer variable (problem-size parameter or loop index) or a
+//! `floor(poly / d)` term — exactly the quasi-polynomial class that
+//! integer point counts of parametric polytopes live in (Barvinok 1994).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::{Add, Mul, Neg, Sub};
+
+use crate::util::Rat;
+
+/// An indeterminate of a quasi-polynomial.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Atom {
+    /// A named integer variable (parameter or loop index).
+    Var(String),
+    /// `floor(num / den)` with `den > 0`.
+    Floor { num: Box<QPoly>, den: i128 },
+}
+
+impl Atom {
+    pub fn var(name: &str) -> Atom {
+        Atom::Var(name.to_string())
+    }
+}
+
+/// A power product of atoms, e.g. `n^2 * floor((n-16)/16)`.
+/// Invariant: sorted by atom, exponents > 0.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default)]
+pub struct Monomial(pub Vec<(Atom, u32)>);
+
+impl Monomial {
+    pub fn one() -> Monomial {
+        Monomial(Vec::new())
+    }
+
+    pub fn atom(a: Atom) -> Monomial {
+        Monomial(vec![(a, 1)])
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn degree(&self) -> u32 {
+        self.0.iter().map(|(_, e)| *e).sum()
+    }
+
+    fn mul(&self, other: &Monomial) -> Monomial {
+        let mut m: BTreeMap<Atom, u32> = BTreeMap::new();
+        for (a, e) in self.0.iter().chain(other.0.iter()) {
+            *m.entry(a.clone()).or_insert(0) += e;
+        }
+        Monomial(m.into_iter().collect())
+    }
+
+    /// Exponent of `atom` in this monomial.
+    pub fn exponent_of(&self, atom: &Atom) -> u32 {
+        self.0
+            .iter()
+            .find(|(a, _)| a == atom)
+            .map(|(_, e)| *e)
+            .unwrap_or(0)
+    }
+
+    /// Remove `atom` entirely, returning (exponent, remainder monomial).
+    fn split_off(&self, atom: &Atom) -> (u32, Monomial) {
+        let mut rest = Vec::new();
+        let mut exp = 0;
+        for (a, e) in &self.0 {
+            if a == atom {
+                exp = *e;
+            } else {
+                rest.push((a.clone(), *e));
+            }
+        }
+        (exp, Monomial(rest))
+    }
+}
+
+/// A quasi-polynomial: finite sum of `coeff * monomial` with exact
+/// rational coefficients.  Invariant: no zero coefficients stored.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default)]
+pub struct QPoly {
+    terms: BTreeMap<Monomial, Rat>,
+}
+
+impl QPoly {
+    pub fn zero() -> QPoly {
+        QPoly::default()
+    }
+
+    pub fn one() -> QPoly {
+        QPoly::constant(Rat::ONE)
+    }
+
+    pub fn constant(c: Rat) -> QPoly {
+        let mut terms = BTreeMap::new();
+        if !c.is_zero() {
+            terms.insert(Monomial::one(), c);
+        }
+        QPoly { terms }
+    }
+
+    pub fn int(n: i128) -> QPoly {
+        QPoly::constant(Rat::int(n))
+    }
+
+    pub fn var(name: &str) -> QPoly {
+        QPoly::atom(Atom::var(name))
+    }
+
+    pub fn atom(a: Atom) -> QPoly {
+        let mut terms = BTreeMap::new();
+        terms.insert(Monomial::atom(a), Rat::ONE);
+        QPoly { terms }
+    }
+
+    /// `floor(self / den)` as a new quasi-polynomial atom (den > 0).
+    /// Constant arguments fold immediately.
+    pub fn floor_div(&self, den: i128) -> QPoly {
+        assert!(den > 0, "floor_div by non-positive {den}");
+        if den == 1 {
+            return self.clone();
+        }
+        if let Some(c) = self.as_constant() {
+            return QPoly::constant(Rat::int((c / Rat::int(den)).floor()));
+        }
+        QPoly::atom(Atom::Floor {
+            num: Box::new(self.clone()),
+            den,
+        })
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn terms(&self) -> impl Iterator<Item = (&Monomial, &Rat)> {
+        self.terms.iter()
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// If the polynomial is a constant, return it.
+    pub fn as_constant(&self) -> Option<Rat> {
+        match self.terms.len() {
+            0 => Some(Rat::ZERO),
+            1 => {
+                let (m, c) = self.terms.iter().next().unwrap();
+                m.is_one().then_some(*c)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn degree(&self) -> u32 {
+        self.terms.keys().map(Monomial::degree).max().unwrap_or(0)
+    }
+
+    fn insert_term(&mut self, m: Monomial, c: Rat) {
+        if c.is_zero() {
+            return;
+        }
+        let entry = self.terms.entry(m);
+        match entry {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(c);
+            }
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let s = *o.get() + c;
+                if s.is_zero() {
+                    o.remove();
+                } else {
+                    *o.get_mut() = s;
+                }
+            }
+        }
+    }
+
+    pub fn scale(&self, c: Rat) -> QPoly {
+        if c.is_zero() {
+            return QPoly::zero();
+        }
+        QPoly {
+            terms: self.terms.iter().map(|(m, k)| (m.clone(), *k * c)).collect(),
+        }
+    }
+
+    pub fn pow(&self, k: u32) -> QPoly {
+        let mut out = QPoly::one();
+        for _ in 0..k {
+            out = &out * self;
+        }
+        out
+    }
+
+    /// Collect by powers of `atom`: returns `cs` with
+    /// `self = sum_k cs[k] * atom^k` and `atom` absent from all `cs[k]`.
+    pub fn coeffs_in(&self, atom: &Atom) -> Vec<QPoly> {
+        let max_e = self
+            .terms
+            .keys()
+            .map(|m| m.exponent_of(atom))
+            .max()
+            .unwrap_or(0) as usize;
+        let mut out = vec![QPoly::zero(); max_e + 1];
+        for (m, c) in &self.terms {
+            let (e, rest) = m.split_off(atom);
+            out[e as usize].insert_term(rest, *c);
+        }
+        out
+    }
+
+    /// Substitute `atom := value` (a polynomial).
+    pub fn subst(&self, atom: &Atom, value: &QPoly) -> QPoly {
+        let cs = self.coeffs_in(atom);
+        let mut out = QPoly::zero();
+        let mut pw = QPoly::one();
+        for c in cs {
+            out = &out + &(&c * &pw);
+            pw = &pw * value;
+        }
+        out
+    }
+
+    /// True if `atom` occurs anywhere (including inside floor atoms).
+    pub fn mentions(&self, name: &str) -> bool {
+        self.terms.keys().any(|m| {
+            m.0.iter().any(|(a, _)| match a {
+                Atom::Var(v) => v == name,
+                Atom::Floor { num, .. } => num.mentions(name),
+            })
+        })
+    }
+
+    /// Substitute `name := value`, including occurrences inside floor
+    /// atoms (constant floors fold).  Used by `fix_parameters`.
+    pub fn subst_deep(&self, name: &str, value: &QPoly) -> QPoly {
+        self.map_atoms(&mut |a| match a {
+            Atom::Var(v) if v == name => value.clone(),
+            Atom::Var(_) => QPoly::atom(a.clone()),
+            Atom::Floor { num, den } => num.subst_deep(name, value).floor_div(*den),
+        })
+    }
+
+    /// Exact evaluation at integer parameter values.
+    pub fn eval(&self, env: &BTreeMap<String, i128>) -> Rat {
+        let mut acc = Rat::ZERO;
+        for (m, c) in &self.terms {
+            let mut v = *c;
+            for (a, e) in &m.0 {
+                let base = match a {
+                    Atom::Var(name) => Rat::int(
+                        *env.get(name)
+                            .unwrap_or_else(|| panic!("unbound parameter '{name}'")),
+                    ),
+                    Atom::Floor { num, den } => {
+                        Rat::int((num.eval(env) / Rat::int(*den)).floor())
+                    }
+                };
+                v = v * base.pow(*e);
+            }
+            acc += v;
+        }
+        acc
+    }
+
+    pub fn eval_f64(&self, env: &BTreeMap<String, i128>) -> f64 {
+        self.eval(env).to_f64()
+    }
+
+    /// Rewrite floor atoms using divisibility assumptions; see
+    /// [`crate::polyhedral::Assumptions::simplify`].
+    pub(crate) fn map_atoms(&self, f: &mut impl FnMut(&Atom) -> QPoly) -> QPoly {
+        let mut out = QPoly::zero();
+        for (m, c) in &self.terms {
+            let mut term = QPoly::constant(*c);
+            for (a, e) in &m.0 {
+                let sub = f(a);
+                term = &term * &sub.pow(*e);
+            }
+            out = &out + &term;
+        }
+        out
+    }
+}
+
+impl Add for &QPoly {
+    type Output = QPoly;
+    fn add(self, o: &QPoly) -> QPoly {
+        let mut out = self.clone();
+        for (m, c) in &o.terms {
+            out.insert_term(m.clone(), *c);
+        }
+        out
+    }
+}
+
+impl Sub for &QPoly {
+    type Output = QPoly;
+    fn sub(self, o: &QPoly) -> QPoly {
+        self + &(-o)
+    }
+}
+
+impl Neg for &QPoly {
+    type Output = QPoly;
+    fn neg(self) -> QPoly {
+        self.scale(-Rat::ONE)
+    }
+}
+
+impl Mul for &QPoly {
+    type Output = QPoly;
+    fn mul(self, o: &QPoly) -> QPoly {
+        let mut out = QPoly::zero();
+        for (ma, ca) in &self.terms {
+            for (mb, cb) in &o.terms {
+                out.insert_term(ma.mul(mb), *ca * *cb);
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Atom {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Atom::Var(v) => write!(f, "{v}"),
+            Atom::Floor { num, den } => write!(f, "floor(({num})/{den})"),
+        }
+    }
+}
+
+impl fmt::Display for QPoly {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.terms.is_empty() {
+            return write!(f, "0");
+        }
+        for (i, (m, c)) in self.terms.iter().enumerate() {
+            if i > 0 {
+                write!(f, " + ")?;
+            }
+            if m.is_one() {
+                write!(f, "{c}")?;
+                continue;
+            }
+            if *c != Rat::ONE {
+                write!(f, "{c}*")?;
+            }
+            for (j, (a, e)) in m.0.iter().enumerate() {
+                if j > 0 {
+                    write!(f, "*")?;
+                }
+                if *e == 1 {
+                    write!(f, "{a}")?;
+                } else {
+                    write!(f, "{a}^{e}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn env(pairs: &[(&str, i128)]) -> BTreeMap<String, i128> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn constants_fold() {
+        let p = &QPoly::int(3) + &QPoly::int(4);
+        assert_eq!(p.as_constant(), Some(Rat::int(7)));
+        let q = &p - &p;
+        assert!(q.is_zero());
+    }
+
+    #[test]
+    fn polynomial_arithmetic_and_eval() {
+        let n = QPoly::var("n");
+        // (n + 1)^2 = n^2 + 2n + 1
+        let p = (&n + &QPoly::one()).pow(2);
+        assert_eq!(p.eval(&env(&[("n", 9)])), Rat::int(100));
+        assert_eq!(p.num_terms(), 3);
+        assert_eq!(p.degree(), 2);
+    }
+
+    #[test]
+    fn floor_atom_eval() {
+        let n = QPoly::var("n");
+        // floor((n - 16) / 16)
+        let fd = (&n - &QPoly::int(16)).floor_div(16);
+        assert_eq!(fd.eval(&env(&[("n", 64)])), Rat::int(3));
+        assert_eq!(fd.eval(&env(&[("n", 65)])), Rat::int(3));
+        assert_eq!(fd.eval(&env(&[("n", 80)])), Rat::int(4));
+    }
+
+    #[test]
+    fn constant_floor_folds() {
+        let p = QPoly::int(37).floor_div(16);
+        assert_eq!(p.as_constant(), Some(Rat::int(2)));
+    }
+
+    #[test]
+    fn subst_replaces_variable() {
+        let n = Atom::var("n");
+        let p = &QPoly::var("n").pow(2) + &QPoly::var("m");
+        let q = p.subst(&n, &(&QPoly::var("k") + &QPoly::one()));
+        assert_eq!(
+            q.eval(&env(&[("k", 3), ("m", 5)])),
+            Rat::int(21) // (3+1)^2 + 5
+        );
+    }
+
+    #[test]
+    fn coeffs_in_roundtrip() {
+        let v = Atom::var("v");
+        let p = {
+            // v^2 * n + 3v + 7
+            let t1 = &QPoly::var("v").pow(2) * &QPoly::var("n");
+            let t2 = QPoly::var("v").scale(Rat::int(3));
+            &(&t1 + &t2) + &QPoly::int(7)
+        };
+        let cs = p.coeffs_in(&v);
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0].as_constant(), Some(Rat::int(7)));
+        assert_eq!(cs[1].as_constant(), Some(Rat::int(3)));
+        assert!(!cs[2].mentions("v"));
+        // Reassemble.
+        let re = {
+            let vq = QPoly::var("v");
+            let mut acc = QPoly::zero();
+            let mut pw = QPoly::one();
+            for c in &cs {
+                acc = &acc + &(c * &pw);
+                pw = &pw * &vq;
+            }
+            acc
+        };
+        assert_eq!(re, p);
+    }
+
+    #[test]
+    fn prop_mul_distributes_over_add() {
+        prop::check("qpoly distributivity", 64, |rng| {
+            let rand_poly = |rng: &mut crate::util::Rng| {
+                let mut p = QPoly::zero();
+                for _ in 0..rng.int_in(0, 4) {
+                    let c = Rat::int(rng.int_in(-5, 5) as i128);
+                    let deg_n = rng.int_in(0, 2) as u32;
+                    let deg_m = rng.int_in(0, 2) as u32;
+                    let mono = &QPoly::var("n").pow(deg_n) * &QPoly::var("m").pow(deg_m);
+                    p = &p + &mono.scale(c);
+                }
+                p
+            };
+            let (a, b, c) = (rand_poly(rng), rand_poly(rng), rand_poly(rng));
+            let lhs = &a * &(&b + &c);
+            let rhs = &(&a * &b) + &(&a * &c);
+            prop::ensure(lhs == rhs, format!("({a}) * ({b} + {c})"))
+        });
+    }
+
+    #[test]
+    fn prop_eval_is_ring_homomorphism() {
+        prop::check("qpoly eval hom", 64, |rng| {
+            let e = env(&[("n", rng.int_in(0, 40) as i128), ("m", rng.int_in(0, 40) as i128)]);
+            let mk = |rng: &mut crate::util::Rng| {
+                let c = Rat::int(rng.int_in(-4, 4) as i128);
+                let p = &QPoly::var("n").pow(rng.int_in(0, 3) as u32)
+                    * &QPoly::var("m").pow(rng.int_in(0, 2) as u32);
+                p.scale(c)
+            };
+            let (a, b) = (mk(rng), mk(rng));
+            prop::ensure(
+                (&a + &b).eval(&e) == a.eval(&e) + b.eval(&e)
+                    && (&a * &b).eval(&e) == a.eval(&e) * b.eval(&e),
+                format!("a={a} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let p = &QPoly::var("n").pow(2).scale(Rat::new(1, 2)) + &QPoly::var("n").scale(Rat::new(1, 2));
+        assert_eq!(p.to_string(), "1/2*n + 1/2*n^2");
+    }
+}

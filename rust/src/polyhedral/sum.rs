@@ -1,0 +1,192 @@
+//! Symbolic summation of polynomials over integer intervals.
+//!
+//! `sum_over(P, v, lo, hi)` computes `Σ_{v=lo}^{hi} P` exactly, where the
+//! bounds are themselves quasi-polynomials in outer variables/parameters.
+//! This is the engine behind nested-domain point counting: summing `1`
+//! over a loop nest from the innermost loop outward yields the Ehrhart-
+//! style quasi-polynomial count.
+//!
+//! Power sums `S_k(N) = Σ_{v=0}^{N} v^k` are generated on demand through
+//! the recurrence `(N+1)^{k+1} = Σ_{j<=k} C(k+1, j) S_j(N)` (equivalent
+//! to Faulhaber's formula) with exact rational coefficients.
+
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use super::qpoly::{Atom, QPoly};
+use crate::util::Rat;
+
+/// Binomial coefficient as a rational.
+fn binom(n: u32, k: u32) -> Rat {
+    let mut out = Rat::ONE;
+    for i in 0..k {
+        out = out * Rat::new((n - i) as i128, (i + 1) as i128);
+    }
+    out
+}
+
+/// Memoized Faulhaber polynomials in the formal variable `__N`.
+static POWER_SUMS: Lazy<Mutex<Vec<QPoly>>> = Lazy::new(|| Mutex::new(Vec::new()));
+
+const N_VAR: &str = "__faulhaber_N";
+
+/// `S_k` as a polynomial in the formal variable `__faulhaber_N`.
+fn power_sum(k: u32) -> QPoly {
+    let mut cache = POWER_SUMS.lock().unwrap();
+    while cache.len() <= k as usize {
+        let j = cache.len() as u32;
+        let n = QPoly::var(N_VAR);
+        let np1 = &n + &QPoly::one();
+        // S_j = [ (N+1)^{j+1} - Σ_{i<j} C(j+1, i) S_i ] / (j+1)
+        let mut acc = np1.pow(j + 1);
+        for (i, si) in cache.iter().enumerate() {
+            acc = &acc - &si.scale(binom(j + 1, i as u32));
+        }
+        cache.push(acc.scale(Rat::new(1, (j + 1) as i128)));
+    }
+    cache[k as usize].clone()
+}
+
+/// `Σ_{v=0}^{N} v^k` with `N` replaced by the polynomial `n`.
+fn power_sum_at(k: u32, n: &QPoly) -> QPoly {
+    power_sum(k).subst(&Atom::var(N_VAR), n)
+}
+
+/// Exact symbolic `Σ_{v=lo}^{hi} p` (inclusive bounds).
+///
+/// Validity: like Ehrhart/Barvinok counting this produces the polynomial
+/// that agrees with the true sum whenever `hi >= lo - 1` (an empty range
+/// `hi = lo - 1` correctly yields 0).  Bounds must not mention `v`, and
+/// `v` must not occur inside floor atoms of `p` (our loop nests never
+/// produce that shape; asserted).
+pub fn sum_over(p: &QPoly, v: &str, lo: &QPoly, hi: &QPoly) -> QPoly {
+    assert!(
+        !lo.mentions(v) && !hi.mentions(v),
+        "summation bounds of '{v}' must not mention it"
+    );
+    let atom = Atom::var(v);
+    let coeffs = p.coeffs_in(&atom);
+    // Assert v does not hide inside floor atoms of the coefficients.
+    for c in &coeffs {
+        assert!(
+            !c.mentions(v),
+            "'{v}' occurs inside a floor atom; unsupported summation shape"
+        );
+    }
+    let lo_m1 = lo - &QPoly::one();
+    let mut out = QPoly::zero();
+    for (k, c) in coeffs.iter().enumerate() {
+        if c.is_zero() {
+            continue;
+        }
+        // Σ_{v=lo}^{hi} v^k = S_k(hi) - S_k(lo - 1).
+        let s = &power_sum_at(k as u32, hi) - &power_sum_at(k as u32, &lo_m1);
+        out = &out + &(c * &s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::util::prop;
+
+    fn env(pairs: &[(&str, i128)]) -> BTreeMap<String, i128> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn faulhaber_small_cases() {
+        // S_1(N) = N(N+1)/2
+        let s1 = power_sum(1);
+        assert_eq!(s1.eval(&env(&[(N_VAR, 10)])), Rat::int(55));
+        // S_2(N) = N(N+1)(2N+1)/6
+        let s2 = power_sum(2);
+        assert_eq!(s2.eval(&env(&[(N_VAR, 10)])), Rat::int(385));
+        // S_3(10) = 3025
+        assert_eq!(power_sum(3).eval(&env(&[(N_VAR, 10)])), Rat::int(3025));
+    }
+
+    #[test]
+    fn sum_of_one_is_extent() {
+        // Σ_{v=0}^{n-1} 1 = n
+        let n = QPoly::var("n");
+        let s = sum_over(
+            &QPoly::one(),
+            "v",
+            &QPoly::zero(),
+            &(&n - &QPoly::one()),
+        );
+        assert_eq!(s, n);
+    }
+
+    #[test]
+    fn empty_range_gives_zero() {
+        // Σ_{v=5}^{4} anything = 0
+        let s = sum_over(&QPoly::var("v"), "v", &QPoly::int(5), &QPoly::int(4));
+        assert!(s.is_zero());
+    }
+
+    #[test]
+    fn triangular_sum() {
+        // Σ_{i=0}^{n-1} i = n(n-1)/2
+        let n = QPoly::var("n");
+        let s = sum_over(&QPoly::var("i"), "i", &QPoly::zero(), &(&n - &QPoly::one()));
+        for nv in [1i128, 2, 5, 17] {
+            assert_eq!(
+                s.eval(&env(&[("n", nv)])),
+                Rat::int(nv * (nv - 1) / 2),
+                "n={nv}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_symbolic_sum_matches_brute_force() {
+        prop::check("faulhaber vs brute force", 48, |rng| {
+            // Random polynomial in v and n of small degree.
+            let mut p = QPoly::zero();
+            for _ in 0..rng.int_in(1, 4) {
+                let c = Rat::int(rng.int_in(-3, 3) as i128);
+                let mono = &QPoly::var("v").pow(rng.int_in(0, 4) as u32)
+                    * &QPoly::var("n").pow(rng.int_in(0, 2) as u32);
+                p = &p + &mono.scale(c);
+            }
+            let lo = rng.int_in(-3, 3) as i128;
+            let hi = lo + rng.int_in(-1, 8) as i128; // may be empty
+            let nv = rng.int_in(0, 6) as i128;
+
+            let sym = sum_over(&p, "v", &QPoly::int(lo), &QPoly::int(hi));
+            let sym_val = sym.eval(&env(&[("n", nv)]));
+
+            let mut brute = Rat::ZERO;
+            let mut v = lo;
+            while v <= hi {
+                brute += p.eval(&env(&[("v", v), ("n", nv)]));
+                v += 1;
+            }
+            prop::ensure(
+                sym_val == brute,
+                format!("p={p} lo={lo} hi={hi} n={nv}: {sym_val} vs {brute}"),
+            )
+        });
+    }
+
+    #[test]
+    fn parametric_bounds() {
+        // Σ_{v=p}^{n} (v - p) = (n-p)(n-p+1)/2
+        let (n, pvar) = (QPoly::var("n"), QPoly::var("p"));
+        let body = &QPoly::var("v") - &pvar;
+        let s = sum_over(&body, "v", &pvar, &n);
+        for (nv, pv) in [(10i128, 3i128), (5, 5), (7, 0)] {
+            let d = nv - pv;
+            assert_eq!(
+                s.eval(&env(&[("n", nv), ("p", pv)])),
+                Rat::int(d * (d + 1) / 2)
+            );
+        }
+    }
+}

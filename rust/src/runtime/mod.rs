@@ -1,0 +1,367 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas calibration artifacts
+//! and drive them from the Rust LM loop.
+//!
+//! `python/compile/aot.py` lowers three entry points to HLO *text*
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos — see
+//! /opt/xla-example/README.md) with fixed padded shapes recorded in
+//! `artifacts/manifest.json`.  This module compiles them once on the
+//! PJRT CPU client and exposes [`AotBackend`], an [`LmBackend`] for the
+//! builtin three-cost-component model family.  Python never runs on
+//! this path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::calibrate::{FeatureData, LmBackend};
+use crate::model::CostModel;
+use crate::util::json::Json;
+
+/// Shape contract from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: i64,
+    pub l: usize,
+    pub n: usize,
+    pub j: usize,
+    pub p: usize,
+}
+
+/// Default artifact directory (override with `PERFLEX_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PERFLEX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if the AOT artifacts appear to be built.
+pub fn artifacts_available() -> bool {
+    let d = artifacts_dir();
+    d.join("manifest.json").exists() && d.join("lm_step.hlo.txt").exists()
+}
+
+/// Compiled AOT executables.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    lm_step: xla::PjRtLoadedExecutable,
+    predict: xla::PjRtLoadedExecutable,
+    eval_cost: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    file: &str,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| format!("loading {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| format!("compiling {}: {e}", path.display()))
+}
+
+impl Artifacts {
+    /// Load and compile all artifacts from the default directory.
+    pub fn load() -> Result<Artifacts, String> {
+        Self::load_from(&artifacts_dir())
+    }
+
+    pub fn load_from(dir: &Path) -> Result<Artifacts, String> {
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest: {e}"))?;
+        let m = Json::parse(&mtext)?;
+        let get = |k: &str| -> Result<i64, String> {
+            m.get(k)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("manifest missing '{k}'"))
+        };
+        let manifest = Manifest {
+            version: get("version")?,
+            l: get("L")? as usize,
+            n: get("N")? as usize,
+            j: get("J")? as usize,
+            p: get("P")? as usize,
+        };
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT: {e}"))?;
+        Ok(Artifacts {
+            lm_step: load_exe(&client, dir, "lm_step.hlo.txt")?,
+            predict: load_exe(&client, dir, "predict.hlo.txt")?,
+            eval_cost: load_exe(&client, dir, "eval_cost.hlo.txt")?,
+            manifest,
+            client,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn matrix_literal(
+        &self,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+    ) -> Result<xla::Literal, String> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| format!("reshape: {e}"))
+    }
+
+    /// Run one fused LM step.  All arrays are padded to manifest shapes.
+    /// Returns (pred[L], resid[L], delta[P], cost).
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm_step(
+        &self,
+        f: &[f64],
+        t: &[f64],
+        mask: &[f64],
+        groups: &[f64],
+        p: &[f64],
+        mode: f64,
+        lam: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, f64), String> {
+        let (l, j, np) = (self.manifest.l, self.manifest.j, self.manifest.p);
+        let args = [
+            self.matrix_literal(f, l, j)?,
+            xla::Literal::vec1(t),
+            xla::Literal::vec1(mask),
+            self.matrix_literal(groups, 3, j)?,
+            xla::Literal::vec1(p),
+            xla::Literal::scalar(mode),
+            xla::Literal::scalar(lam),
+        ];
+        let result = self
+            .lm_step
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| format!("lm_step execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("lm_step fetch: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| format!("lm_step tuple: {e}"))?;
+        if parts.len() != 5 {
+            return Err(format!("lm_step returned {} outputs", parts.len()));
+        }
+        let as_vec = |lit: &xla::Literal| -> Result<Vec<f64>, String> {
+            lit.to_vec::<f64>().map_err(|e| format!("to_vec: {e}"))
+        };
+        let pred = as_vec(&parts[0])?;
+        let resid = as_vec(&parts[1])?;
+        let delta = as_vec(&parts[3])?;
+        let cost = as_vec(&parts[4])?[0];
+        debug_assert_eq!(delta.len(), np);
+        Ok((pred, resid, delta, cost))
+    }
+
+    /// Masked SSE cost at `p`.
+    pub fn eval_cost(
+        &self,
+        f: &[f64],
+        t: &[f64],
+        mask: &[f64],
+        groups: &[f64],
+        p: &[f64],
+        mode: f64,
+    ) -> Result<f64, String> {
+        let (l, j) = (self.manifest.l, self.manifest.j);
+        let args = [
+            self.matrix_literal(f, l, j)?,
+            xla::Literal::vec1(t),
+            xla::Literal::vec1(mask),
+            self.matrix_literal(groups, 3, j)?,
+            xla::Literal::vec1(p),
+            xla::Literal::scalar(mode),
+        ];
+        let result = self
+            .eval_cost
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| format!("eval_cost execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("eval_cost fetch: {e}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| format!("eval_cost tuple: {e}"))?;
+        Ok(out.to_vec::<f64>().map_err(|e| format!("{e}"))?[0])
+    }
+
+    /// Batched prediction for up to `manifest.n` rows.
+    pub fn predict(
+        &self,
+        f: &[f64],
+        groups: &[f64],
+        p: &[f64],
+        mode: f64,
+    ) -> Result<Vec<f64>, String> {
+        let (n, j) = (self.manifest.n, self.manifest.j);
+        let args = [
+            self.matrix_literal(f, n, j)?,
+            self.matrix_literal(groups, 3, j)?,
+            xla::Literal::vec1(p),
+            xla::Literal::scalar(mode),
+        ];
+        let result = self
+            .predict
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| format!("predict execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("predict fetch: {e}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| format!("predict tuple: {e}"))?;
+        out.to_vec::<f64>().map_err(|e| format!("{e}"))
+    }
+}
+
+/// AOT-accelerated LM backend for the builtin cost-model family.
+pub struct AotBackend<'a> {
+    artifacts: &'a Artifacts,
+    /// Padded [L x J] feature matrix (row-major).
+    f: Vec<f64>,
+    t: Vec<f64>,
+    mask: Vec<f64>,
+    /// Padded [3 x J] group masks.
+    groups: Vec<f64>,
+    mode: f64,
+    /// Real (unpadded) parameter count (J_real + 1).
+    pub n_params: usize,
+    j_real: usize,
+}
+
+impl<'a> AotBackend<'a> {
+    /// Pad the feature data and group masks of a cost model into the
+    /// artifact's fixed shapes.
+    pub fn new(
+        artifacts: &'a Artifacts,
+        cm: &CostModel,
+        data: &FeatureData,
+    ) -> Result<AotBackend<'a>, String> {
+        let (l, j) = (artifacts.manifest.l, artifacts.manifest.j);
+        let j_real = cm.terms.len();
+        if data.len() > l {
+            return Err(format!(
+                "measurement set of {} rows exceeds artifact capacity {l}",
+                data.len()
+            ));
+        }
+        if j_real > j {
+            return Err(format!(
+                "model with {j_real} features exceeds artifact capacity {j}"
+            ));
+        }
+        if data.feature_ids != cm.feature_columns() {
+            return Err("feature data column order must match the cost model".into());
+        }
+        let mut f = vec![0.0; l * j];
+        let mut t = vec![0.0; l];
+        let mut mask = vec![0.0; l];
+        for (r, row) in data.rows.iter().enumerate() {
+            f[r * j..r * j + j_real].copy_from_slice(row);
+            t[r] = data.outputs[r];
+            mask[r] = 1.0;
+        }
+        let gm = cm.groups_matrix();
+        let mut groups = vec![0.0; 3 * j];
+        for (gi, grow) in gm.iter().enumerate() {
+            groups[gi * j..gi * j + j_real].copy_from_slice(grow);
+        }
+        Ok(AotBackend {
+            artifacts,
+            f,
+            t,
+            mask,
+            groups,
+            mode: cm.mode(),
+            n_params: j_real + 1,
+            j_real,
+        })
+    }
+
+    fn pad_params(&self, p: &[f64]) -> Vec<f64> {
+        let np = self.artifacts.manifest.p;
+        let mut out = vec![0.0; np];
+        out[..self.j_real].copy_from_slice(&p[..self.j_real]);
+        // p_edge lives in the final artifact slot.
+        out[np - 1] = p[self.n_params - 1];
+        out
+    }
+}
+
+impl LmBackend for AotBackend<'_> {
+    fn cost(&mut self, p: &[f64]) -> Result<f64, String> {
+        self.artifacts.eval_cost(
+            &self.f,
+            &self.t,
+            &self.mask,
+            &self.groups,
+            &self.pad_params(p),
+            self.mode,
+        )
+    }
+
+    fn step(&mut self, p: &[f64], lam: f64) -> Result<(Vec<f64>, f64), String> {
+        let (_, _, delta_pad, cost) = self.artifacts.lm_step(
+            &self.f,
+            &self.t,
+            &self.mask,
+            &self.groups,
+            &self.pad_params(p),
+            self.mode,
+            lam,
+        )?;
+        let np = self.artifacts.manifest.p;
+        let mut delta = vec![0.0; self.n_params];
+        delta[..self.j_real].copy_from_slice(&delta_pad[..self.j_real]);
+        delta[self.n_params - 1] = delta_pad[np - 1];
+        Ok((delta, cost))
+    }
+}
+
+/// Environment-variable hook: `BTreeMap` of param name -> value, used
+/// by the coordinator's fit entry points.
+pub fn fit_cost_model_aot(
+    artifacts: &Artifacts,
+    cm: &CostModel,
+    data: &FeatureData,
+    opts: &crate::calibrate::LmOptions,
+) -> Result<crate::calibrate::FitResult, String> {
+    let mut backend = AotBackend::new(artifacts, cm, data)?;
+    let p0 = crate::calibrate::initial_params(data, cm.terms.len(), true);
+    let mut opts = opts.clone();
+    if opts.lower_bounds.is_none() {
+        opts.lower_bounds =
+            crate::calibrate::LmOptions::cost_model_bounds(cm.terms.len()).lower_bounds;
+    }
+    crate::calibrate::levenberg_marquardt(&mut backend, cm.param_names(), p0, &opts)
+}
+
+/// Fit the same cost model natively (ablation / fallback path).
+pub fn fit_cost_model_native(
+    cm: &CostModel,
+    data: &FeatureData,
+    opts: &crate::calibrate::LmOptions,
+) -> Result<crate::calibrate::FitResult, String> {
+    let model = cm.to_model();
+    let names = cm.param_names();
+    let p0 = crate::calibrate::initial_params(data, cm.terms.len(), true);
+    let mut opts = opts.clone();
+    if opts.lower_bounds.is_none() {
+        opts.lower_bounds =
+            crate::calibrate::LmOptions::cost_model_bounds(cm.terms.len()).lower_bounds;
+    }
+    let mut backend =
+        crate::calibrate::NativeBackend::with_params(&model, data, names.clone());
+    crate::calibrate::levenberg_marquardt(&mut backend, names, p0, &opts)
+}
+
+/// Helper shared by tests and the coordinator: mapping from (BTreeMap)
+/// fit output.
+pub fn params_map(fit: &crate::calibrate::FitResult) -> BTreeMap<String, f64> {
+    fit.param_names
+        .iter()
+        .cloned()
+        .zip(fit.params.iter().copied())
+        .collect()
+}

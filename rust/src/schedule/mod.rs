@@ -1,0 +1,533 @@
+//! Program linearization and barrier placement (paper §5, barrier
+//! counting: "the program linearization is found automatically by a
+//! search procedure and determines the ordering of statements and the
+//! nesting of loops, which enables a subsequent procedure that
+//! determines synchronization locations").
+//!
+//! The linearized schedule drives three consumers: barrier counting
+//! (statistics), the OpenCL-like pseudo-code listing, and the GPU
+//! simulator's per-work-group execution walk.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Kernel, LhsRef, MemScope, Stmt};
+use crate::polyhedral::QPoly;
+
+/// One node of the linearized schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleItem {
+    /// Execute statement (index into `kernel.stmts`).
+    Stmt(usize),
+    /// Work-group-wide local barrier.
+    Barrier,
+    /// A sequential loop over `iname`.
+    Loop {
+        iname: String,
+        body: Vec<ScheduleItem>,
+    },
+}
+
+/// A linearized kernel schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Schedule {
+    pub items: Vec<ScheduleItem>,
+}
+
+impl Schedule {
+    /// Per-work-item barrier count (a quasi-polynomial in the problem
+    /// size), i.e. the number of `barrier()` calls one work-item passes
+    /// through — the paper multiplies this by the work-group count in
+    /// models.
+    pub fn barrier_count(&self, knl: &Kernel) -> QPoly {
+        fn walk(items: &[ScheduleItem], knl: &Kernel, trip: &QPoly, acc: &mut QPoly) {
+            for it in items {
+                match it {
+                    ScheduleItem::Barrier => *acc = &*acc + trip,
+                    ScheduleItem::Loop { iname, body } => {
+                        let l = knl
+                            .domain
+                            .loops
+                            .iter()
+                            .find(|l| &l.var == iname)
+                            .expect("scheduled loop not in domain");
+                        let t = trip * &l.extent();
+                        walk(body, knl, &t, acc);
+                    }
+                    ScheduleItem::Stmt(_) => {}
+                }
+            }
+        }
+        let mut acc = QPoly::zero();
+        walk(&self.items, knl, &QPoly::one(), &mut acc);
+        knl.assumptions.simplify(&acc)
+    }
+
+    /// Flat listing for debugging / the pseudo-code generator.
+    pub fn listing(&self, knl: &Kernel) -> String {
+        fn walk(items: &[ScheduleItem], knl: &Kernel, depth: usize, out: &mut String) {
+            let pad = "  ".repeat(depth);
+            for it in items {
+                match it {
+                    ScheduleItem::Stmt(i) => {
+                        let s = &knl.stmts[*i];
+                        out.push_str(&format!("{pad}{}: {} = {}\n", s.id, s.lhs, s.rhs));
+                    }
+                    ScheduleItem::Barrier => {
+                        out.push_str(&format!("{pad}barrier(CLK_LOCAL_MEM_FENCE);\n"))
+                    }
+                    ScheduleItem::Loop { iname, body } => {
+                        out.push_str(&format!("{pad}for {iname} {{\n"));
+                        walk(body, knl, depth + 1, out);
+                        out.push_str(&format!("{pad}}}\n"));
+                    }
+                }
+            }
+        }
+        let mut out = String::new();
+        walk(&self.items, knl, 0, &mut out);
+        out
+    }
+}
+
+/// Which local arrays a statement writes / reads, restricted to arrays
+/// in `communicating` (arrays whose accesses actually cross work-item
+/// boundaries).
+fn local_io(
+    knl: &Kernel,
+    s: &Stmt,
+    communicating: &[String],
+) -> (Vec<String>, Vec<String>) {
+    let mut writes = Vec::new();
+    let mut reads = Vec::new();
+    if let LhsRef::Array(a) = &s.lhs {
+        if knl.arrays[&a.array].scope == MemScope::Local
+            && communicating.contains(&a.array)
+        {
+            writes.push(a.array.clone());
+        }
+    }
+    for l in s.rhs.loads() {
+        if knl.arrays[&l.array].scope == MemScope::Local
+            && communicating.contains(&l.array)
+        {
+            reads.push(l.array.clone());
+        }
+    }
+    (writes, reads)
+}
+
+/// Local arrays that are accessed with more than one distinct
+/// local-iname coefficient signature: data written by one work-item is
+/// (potentially) read by another, so barriers are required.  Arrays
+/// whose every access shares one lid mapping are thread-private in
+/// pattern (the lmem microbenchmark's shape) and need no barrier.
+fn communicating_local_arrays(knl: &Kernel) -> Vec<String> {
+    use std::collections::BTreeMap;
+    let mut sigs: BTreeMap<String, Vec<Vec<(String, QPoly)>>> = BTreeMap::new();
+    let mut record = |knl: &Kernel, a: &crate::ir::Access| {
+        if knl.arrays[&a.array].scope != MemScope::Local {
+            return;
+        }
+        let lf = knl.flatten_access(a);
+        let sig: Vec<(String, QPoly)> = lf
+            .coeffs
+            .iter()
+            .filter(|(v, _)| knl.tag(v).is_parallel())
+            .map(|(v, c)| (v.clone(), c.clone()))
+            .collect();
+        let e = sigs.entry(a.array.clone()).or_default();
+        if !e.contains(&sig) {
+            e.push(sig);
+        }
+    };
+    for s in &knl.stmts {
+        for l in s.rhs.loads() {
+            record(knl, l);
+        }
+        if let LhsRef::Array(a) = &s.lhs {
+            record(knl, a);
+        }
+    }
+    sigs.into_iter()
+        .filter(|(_, v)| v.len() > 1)
+        .map(|(k, _)| k)
+        .collect()
+}
+
+/// Linearize a kernel: nest statements into their sequential loops,
+/// ordering groups topologically by dependencies, then insert local
+/// barriers.
+pub fn linearize(knl: &Kernel) -> Result<Schedule, String> {
+    knl.validate()?;
+    // Sequential loop path per statement (parallel inames are not
+    // runtime loops).
+    let paths: Vec<Vec<String>> = knl
+        .stmts
+        .iter()
+        .map(|s| {
+            s.within
+                .iter()
+                .filter(|i| !knl.tag(i).is_parallel())
+                .cloned()
+                .collect()
+        })
+        .collect();
+    let idx: Vec<usize> = (0..knl.stmts.len()).collect();
+    let mut items = build_level(knl, &idx, &paths, 0)?;
+    let communicating = communicating_local_arrays(knl);
+    insert_barriers(knl, &mut items, false, &communicating);
+    Ok(Schedule { items })
+}
+
+/// Group statements at nesting `depth` and order the groups
+/// topologically (groups are atomic; cyclic inter-group deps error).
+fn build_level(
+    knl: &Kernel,
+    stmts: &[usize],
+    paths: &[Vec<String>],
+    depth: usize,
+) -> Result<Vec<ScheduleItem>, String> {
+    // Group key: next sequential iname at this depth, or None (leaf).
+    let mut groups: Vec<(Option<String>, Vec<usize>)> = Vec::new();
+    for &si in stmts {
+        let key = paths[si].get(depth).cloned();
+        match groups.iter_mut().find(|(k, _)| *k == key && k.is_some()) {
+            Some((_, members)) => members.push(si),
+            None => groups.push((key, vec![si])),
+        }
+    }
+
+    // Topological order over groups induced by statement deps.
+    let gidx_of = |si: usize| -> usize {
+        groups
+            .iter()
+            .position(|(_, members)| members.contains(&si))
+            .unwrap()
+    };
+    let n = groups.len();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for &si in stmts {
+        for dep in &knl.stmts[si].deps {
+            if let Some(di) = knl.stmts.iter().position(|s| &s.id == dep) {
+                if stmts.contains(&di) {
+                    let (gd, gs) = (gidx_of(di), gidx_of(si));
+                    if gd != gs && !edges.contains(&(gd, gs)) {
+                        edges.push((gd, gs));
+                    }
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = Vec::new();
+    let mut placed = vec![false; n];
+    while order.len() < n {
+        let next = (0..n).find(|&g| {
+            !placed[g] && edges.iter().all(|(a, b)| *b != g || placed[*a])
+        });
+        match next {
+            Some(g) => {
+                placed[g] = true;
+                order.push(g);
+            }
+            None => {
+                return Err(format!(
+                    "linearize: cyclic loop-group dependencies in '{}' at depth {depth}",
+                    knl.name
+                ))
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for g in order {
+        let (key, members) = &groups[g];
+        match key {
+            None => {
+                for &si in members {
+                    out.push(ScheduleItem::Stmt(si));
+                }
+            }
+            Some(iname) => {
+                let body = build_level(knl, members, paths, depth + 1)?;
+                out.push(ScheduleItem::Loop {
+                    iname: iname.clone(),
+                    body,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Summarize local reads/writes of an item tree.
+fn item_local_io(
+    knl: &Kernel,
+    item: &ScheduleItem,
+    communicating: &[String],
+) -> (Vec<String>, Vec<String>) {
+    match item {
+        ScheduleItem::Stmt(i) => local_io(knl, &knl.stmts[*i], communicating),
+        ScheduleItem::Barrier => (Vec::new(), Vec::new()),
+        ScheduleItem::Loop { body, .. } => {
+            let mut w = Vec::new();
+            let mut r = Vec::new();
+            for it in body {
+                let (iw, ir) = item_local_io(knl, it, communicating);
+                w.extend(iw);
+                r.extend(ir);
+            }
+            (w, r)
+        }
+    }
+}
+
+/// Insert local barriers:
+///  * between a local write and a later local read of the same array
+///    within one sequence (RAW across work-items), and
+///  * at the head of a loop body that both reads and writes a local
+///    array (WAR across iterations — the paper's matmul shows exactly
+///    this two-barrier-per-iteration pattern).
+fn insert_barriers(
+    knl: &Kernel,
+    items: &mut Vec<ScheduleItem>,
+    is_loop_body: bool,
+    communicating: &[String],
+) {
+    // Recurse first.
+    for it in items.iter_mut() {
+        if let ScheduleItem::Loop { body, .. } = it {
+            insert_barriers(knl, body, true, communicating);
+        }
+    }
+    let io: Vec<(Vec<String>, Vec<String>)> = items
+        .iter()
+        .map(|it| item_local_io(knl, it, communicating))
+        .collect();
+
+    // RAW: find the last writer before the first reader of any array
+    // written earlier in the sequence.
+    let mut insert_positions: Vec<usize> = Vec::new();
+    let mut written: BTreeMap<String, usize> = BTreeMap::new();
+    for (pos, (w, r)) in io.iter().enumerate() {
+        for arr in r {
+            if written.contains_key(arr) {
+                insert_positions.push(pos);
+                written.clear();
+                break;
+            }
+        }
+        for arr in w {
+            written.insert(arr.clone(), pos);
+        }
+    }
+
+    // WAR wraparound: loop body that reads and writes the same local
+    // array needs a barrier before the first writer.
+    let mut head_barrier_pos: Option<usize> = None;
+    if is_loop_body {
+        let reads_any: Vec<&String> = io.iter().flat_map(|(_, r)| r).collect();
+        for (pos, (w, _)) in io.iter().enumerate() {
+            if w.iter().any(|arr| reads_any.contains(&arr)) {
+                head_barrier_pos = Some(pos);
+                break;
+            }
+        }
+    }
+
+    // Apply inserts back-to-front.
+    let mut all: Vec<usize> = insert_positions;
+    if let Some(p) = head_barrier_pos {
+        all.push(p);
+    }
+    all.sort_unstable();
+    all.dedup();
+    for &p in all.iter().rev() {
+        items.insert(p, ScheduleItem::Barrier);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Access, AffExpr, ArrayDecl, DType, Expr};
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+    use crate::transform::{add_prefetch, assume, split_iname, tag_inames};
+    use crate::util::Rat;
+    use std::collections::BTreeMap as Map;
+
+    fn matmul(prefetch: bool) -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let mut k = Kernel::new("matmul", &["n"], dom);
+        for name in ["a", "b", "c"] {
+            k.add_array(ArrayDecl::global(
+                name,
+                DType::F32,
+                vec![n.clone(), n.clone()],
+            ));
+        }
+        k.add_temp("acc", DType::F32);
+        k.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["i", "j"],
+        ));
+        k.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Temp("acc".into()),
+                Expr::add(
+                    Expr::temp("acc"),
+                    Expr::mul(
+                        Expr::load(Access::new(
+                            "a",
+                            vec![AffExpr::var("i"), AffExpr::var("k")],
+                        )),
+                        Expr::load(Access::new(
+                            "b",
+                            vec![AffExpr::var("k"), AffExpr::var("j")],
+                        )),
+                    ),
+                ),
+                &["i", "j", "k"],
+            )
+            .with_deps(&["init"]),
+        );
+        k.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::new(
+                    "c",
+                    vec![AffExpr::var("i"), AffExpr::var("j")],
+                )),
+                Expr::temp("acc"),
+                &["i", "j"],
+            )
+            .with_deps(&["upd"]),
+        );
+        let k = assume(&k, "n >= 16 and n % 16 = 0").unwrap();
+        let k = split_iname(&k, "i", 16).unwrap();
+        let k = split_iname(&k, "j", 16).unwrap();
+        let mut k = tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0").unwrap();
+        if prefetch {
+            k = split_iname(&k, "k", 16).unwrap();
+            k = add_prefetch(&k, "a", &["i_in", "k_in"], false).unwrap();
+            k = add_prefetch(&k, "b", &["k_in", "j_in"], false).unwrap();
+        }
+        k
+    }
+
+    fn env(n: i128) -> Map<String, i128> {
+        [("n".to_string(), n)].into_iter().collect()
+    }
+
+    #[test]
+    fn no_prefetch_matmul_has_no_barriers() {
+        let k = matmul(false);
+        let s = linearize(&k).unwrap();
+        assert_eq!(s.barrier_count(&k), QPoly::zero());
+        // Structure: init; loop k { upd }; store.
+        assert!(matches!(s.items[0], ScheduleItem::Stmt(_)));
+        assert!(matches!(s.items[1], ScheduleItem::Loop { .. }));
+        assert!(matches!(s.items[2], ScheduleItem::Stmt(_)));
+    }
+
+    #[test]
+    fn prefetch_matmul_has_two_barriers_per_k_out() {
+        // The paper's generated kernel: per k_out iteration, one barrier
+        // before the fetches and one after, i.e. count = 2 * n/16.
+        let k = matmul(true);
+        let s = linearize(&k).unwrap();
+        let count = s.barrier_count(&k);
+        assert_eq!(count.eval(&env(1024)), Rat::int(2 * 1024 / 16));
+        assert_eq!(count.eval(&env(2048)), Rat::int(2 * 2048 / 16));
+    }
+
+    #[test]
+    fn prefetch_schedule_orders_fetch_before_compute() {
+        let k = matmul(true);
+        let s = linearize(&k).unwrap();
+        let listing = s.listing(&k);
+        let pos = |pat: &str| listing.find(pat).unwrap_or(usize::MAX);
+        assert!(pos("init") < pos("for k_out"), "{listing}");
+        assert!(pos("fetch_a") < pos("for k_in"), "{listing}");
+        assert!(pos("fetch_b") < pos("for k_in"), "{listing}");
+        assert!(pos("for k_in") < pos("store"), "{listing}");
+        // Two barriers inside k_out loop, in the expected places.
+        let k_out_body = &listing[pos("for k_out")..];
+        let first_barrier = k_out_body.find("barrier").unwrap();
+        let fetch_pos = k_out_body.find("fetch_").unwrap();
+        assert!(first_barrier < fetch_pos, "{listing}");
+    }
+
+    #[test]
+    fn deps_break_textual_order() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+        let mut k = Kernel::new("t", &["n"], dom);
+        k.add_array(ArrayDecl::global("x", DType::F32, vec![n]));
+        k.add_temp("t0", DType::F32);
+        // Textually: consumer first, producer second; deps must flip.
+        k.add_stmt(
+            Stmt::new(
+                "consume",
+                LhsRef::Array(Access::new("x", vec![AffExpr::var("i")])),
+                Expr::temp("t0"),
+                &["i"],
+            )
+            .with_deps(&["produce"]),
+        );
+        k.add_stmt(Stmt::new(
+            "produce",
+            LhsRef::Temp("t0".into()),
+            Expr::fconst(1.0),
+            &["i"],
+        ));
+        let s = linearize(&k).unwrap();
+        let listing = s.listing(&k);
+        assert!(listing.find("produce").unwrap() < listing.find("consume").unwrap());
+    }
+
+    #[test]
+    fn cyclic_group_deps_error() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", QPoly::int(4)),
+        ]);
+        let mut k = Kernel::new("t", &["n"], dom);
+        k.add_temp("t0", DType::F32);
+        k.add_temp("t1", DType::F32);
+        // s1 in loop i depends on s2 (loop j) and s3 (loop j) depends
+        // on s0 (loop i): cycle between the i-group and j-group.
+        k.add_stmt(Stmt::new("s0", LhsRef::Temp("t0".into()), Expr::fconst(0.0), &["i"]));
+        k.add_stmt(
+            Stmt::new("s1", LhsRef::Temp("t0".into()), Expr::temp("t1"), &["i"])
+                .with_deps(&["s2"]),
+        );
+        k.add_stmt(Stmt::new("s2", LhsRef::Temp("t1".into()), Expr::fconst(1.0), &["j"]));
+        k.add_stmt(
+            Stmt::new("s3", LhsRef::Temp("t1".into()), Expr::temp("t0"), &["j"])
+                .with_deps(&["s1"]),
+        );
+        // group(i) needs group(j) (s1<-s2) and group(j) needs group(i)
+        // (s3<-s1)... both groups mutually depend -> error.
+        let err = linearize(&k);
+        assert!(err.is_err(), "{err:?}");
+    }
+
+    #[test]
+    fn barrier_count_scales_with_problem_size() {
+        let k = matmul(true);
+        let s = linearize(&k).unwrap();
+        let c = s.barrier_count(&k);
+        // Symbolic: 2 * (n/16) = n/8.
+        let expected = QPoly::var("n").scale(Rat::new(1, 8));
+        assert_eq!(c, expected, "got {c}");
+    }
+}

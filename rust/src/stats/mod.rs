@@ -1,0 +1,559 @@
+//! Kernel statistics gathering (paper Section 5, Algorithms 1 and 2).
+//!
+//! Produces symbolic, problem-size-parametric counts:
+//!
+//! * arithmetic operations by (dtype, op) with multiply-add fusion,
+//!   counted at **sub-group** granularity;
+//! * memory accesses classified by scope, direction, data width, local
+//!   and global thread-axis strides, with per-access footprints and
+//!   access-to-footprint ratios (AFR); global accesses count per
+//!   **work-item**, except `lid(0)`-stride-0 ("uniform") accesses which
+//!   count per sub-group; local accesses count per sub-group;
+//! * per-work-item barrier counts (via the linearized schedule);
+//! * launch statistics (work-group count, work-group size).
+//!
+//! All counts are [`QPoly`]s: computed once per kernel, cheaply
+//! re-evaluated for new problem sizes (the paper's amortization).
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Access, DType, IndexTag, Kernel, LhsRef, MemScope, Stmt};
+use crate::polyhedral::QPoly;
+use crate::schedule::linearize;
+use crate::util::Rat;
+
+/// Load or store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Load,
+    Store,
+}
+
+impl Direction {
+    pub fn feature_name(&self) -> &'static str {
+        match self {
+            Direction::Load => "load",
+            Direction::Store => "store",
+        }
+    }
+}
+
+/// Counting granularity of an operation (paper Section 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    WorkItem,
+    SubGroup,
+}
+
+/// One classified memory access (one array reference in one statement).
+#[derive(Clone, Debug)]
+pub struct MemAccessStat {
+    pub stmt_id: String,
+    pub array: String,
+    pub tag: Option<String>,
+    pub scope: MemScope,
+    pub direction: Direction,
+    pub dtype: DType,
+    /// Stride in elements along local axes 0..3.
+    pub lstrides: [QPoly; 3],
+    /// Stride in elements along group axes 0..3.
+    pub gstrides: [QPoly; 3],
+    /// Total executions at work-item granularity.
+    pub count_wi: QPoly,
+    /// Index-footprint size in elements (Algorithm 2, box image).
+    pub footprint: QPoly,
+    /// Footprint restricted to a single work-group (group inames
+    /// pinned): the per-WG tile the simulator checks against L1.
+    pub footprint_per_wg: QPoly,
+    /// Modeled cost granularity per the paper's counting rules.
+    pub granularity: Granularity,
+    /// Stride in elements w.r.t. each enclosing *sequential* iname
+    /// (Table 1's "loop stride"; drives the simulator's DRAM-locality
+    /// model).  Ordered outer → inner.
+    pub loop_strides: Vec<(String, QPoly)>,
+}
+
+impl MemAccessStat {
+    /// Count at the access's modeled granularity for sub-group size
+    /// `sg` (exact division expected for our 256-item work-groups).
+    pub fn count_at_granularity(&self, sg: u64) -> QPoly {
+        match self.granularity {
+            Granularity::WorkItem => self.count_wi.clone(),
+            Granularity::SubGroup => self.count_wi.scale(Rat::new(1, sg as i128)),
+        }
+    }
+
+    /// Access-to-footprint ratio at concrete parameter values.
+    ///
+    /// The footprint is a per-axis bounding box (Algorithm 2); for
+    /// strided patterns that skip elements the box over-approximates
+    /// the image, so it is clamped by the access count (an access can
+    /// never touch more elements than it performs) — keeping AFR >= 1.
+    pub fn afr(&self, env: &BTreeMap<String, i128>) -> f64 {
+        let count = self.count_wi.eval_f64(env);
+        let fp = self.footprint.eval_f64(env).min(count);
+        if fp == 0.0 {
+            return 0.0;
+        }
+        count / fp
+    }
+}
+
+/// Aggregated arithmetic count for one (dtype, op) pair.
+#[derive(Clone, Debug)]
+pub struct OpStat {
+    pub dtype: DType,
+    /// `add`, `sub`, `mul`, `div`, or `madd`.
+    pub op: String,
+    /// Count at sub-group granularity (already divided by `sg`).
+    pub count_sg: QPoly,
+}
+
+/// Full statistics bundle for a kernel.
+#[derive(Clone, Debug)]
+pub struct KernelStats {
+    pub kernel_name: String,
+    pub ops: Vec<OpStat>,
+    pub mem: Vec<MemAccessStat>,
+    /// Barriers encountered by a single work-item.
+    pub barriers_per_wi: QPoly,
+    /// Total work-group count.
+    pub num_groups: QPoly,
+    pub work_group_size: u64,
+    pub sub_group_size: u64,
+}
+
+impl KernelStats {
+    /// Sum of op counts matching dtype/op (sub-group granularity).
+    pub fn op_count(&self, dtype: DType, op: &str) -> QPoly {
+        self.ops
+            .iter()
+            .filter(|o| o.dtype == dtype && o.op == op)
+            .fold(QPoly::zero(), |acc, o| &acc + &o.count_sg)
+    }
+
+    /// Memory accesses matching a predicate.
+    pub fn mem_matching<'a>(
+        &'a self,
+        pred: impl Fn(&MemAccessStat) -> bool + 'a,
+    ) -> impl Iterator<Item = &'a MemAccessStat> {
+        self.mem.iter().filter(move |m| pred(m))
+    }
+}
+
+/// Work-item-granularity execution count of a statement: the projected
+/// domain count times the extents of parallel axes the statement is
+/// uniform over (every work-group executes every statement; work-items
+/// execute uniformly along local axes absent from `within`).
+pub fn stmt_exec_count_wi(knl: &Kernel, stmt: &Stmt) -> QPoly {
+    let dom = knl.stmt_domain(stmt);
+    let mut count = dom.count();
+    for axis in 0..3u8 {
+        for tag in [IndexTag::Group(axis), IndexTag::Local(axis)] {
+            let covered = stmt
+                .within
+                .iter()
+                .any(|i| knl.tag(i) == tag);
+            if !covered {
+                let extent = match tag {
+                    IndexTag::Group(a) => knl.gsize(a),
+                    IndexTag::Local(a) => QPoly::int(knl.lsize(a) as i128),
+                    _ => unreachable!(),
+                };
+                count = &count * &extent;
+            }
+        }
+    }
+    knl.assumptions.simplify(&count)
+}
+
+/// Symbolic per-axis range `[min, max]` of an affine subscript over the
+/// statement's iteration space (interval arithmetic over the domain
+/// bounds; parameters contribute their own value).  With `pin_groups`,
+/// group-tagged inames are treated like parameters (pinned to one
+/// work-group), giving the per-WG tile range.
+fn subscript_range(
+    knl: &Kernel,
+    idx: &crate::ir::AffExpr,
+    pin_groups: bool,
+) -> (QPoly, QPoly) {
+    let mut min = QPoly::int(idx.constant as i128);
+    let mut max = min.clone();
+    for (v, c) in &idx.terms {
+        let pinned =
+            pin_groups && matches!(knl.tag(v), crate::ir::IndexTag::Group(_));
+        let (lo, hi) = match knl.domain.loops.iter().find(|l| &l.var == v) {
+            Some(l) if !pinned => (l.lo.clone(), l.hi.clone()),
+            _ => (QPoly::var(v), QPoly::var(v)), // parameter / pinned
+        };
+        let c = Rat::int(*c as i128);
+        if c > Rat::ZERO {
+            min = &min + &lo.scale(c);
+            max = &max + &hi.scale(c);
+        } else {
+            min = &min + &hi.scale(c);
+            max = &max + &lo.scale(c);
+        }
+    }
+    (min, max)
+}
+
+/// Algorithm 2: per-access footprint size in elements (box image of the
+/// iteration space under the affine index map).
+fn access_footprint(knl: &Kernel, access: &Access, pin_groups: bool) -> QPoly {
+    let mut size = QPoly::one();
+    for idx in &access.indices {
+        let (min, max) = subscript_range(knl, idx, pin_groups);
+        let extent = &(&max - &min) + &QPoly::one();
+        size = &size * &extent;
+    }
+    knl.assumptions.simplify(&size)
+}
+
+/// Statement result dtype (type inference: the LHS's declared type).
+fn stmt_dtype(knl: &Kernel, stmt: &Stmt) -> DType {
+    match &stmt.lhs {
+        LhsRef::Temp(t) => knl.temps[t].dtype,
+        LhsRef::Array(a) => knl.arrays[&a.array].dtype,
+    }
+}
+
+fn classify_access(
+    knl: &Kernel,
+    stmt: &Stmt,
+    access: &Access,
+    direction: Direction,
+    count_wi: &QPoly,
+) -> MemAccessStat {
+    let decl = &knl.arrays[&access.array];
+    let mk_strides = |f: &dyn Fn(u8) -> QPoly| -> [QPoly; 3] {
+        [
+            knl.assumptions.simplify(&f(0)),
+            knl.assumptions.simplify(&f(1)),
+            knl.assumptions.simplify(&f(2)),
+        ]
+    };
+    let lstrides = mk_strides(&|ax| knl.lid_stride(access, ax));
+    let gstrides = mk_strides(&|ax| knl.gid_stride(access, ax));
+    // Uniform global accesses (lid(0) stride 0) count per sub-group;
+    // local accesses always count per sub-group (on-chip).
+    let granularity = match decl.scope {
+        MemScope::Global if lstrides[0].is_zero() => Granularity::SubGroup,
+        MemScope::Global => Granularity::WorkItem,
+        _ => Granularity::SubGroup,
+    };
+    let loop_strides = stmt
+        .within
+        .iter()
+        .filter(|i| !knl.tag(i).is_parallel())
+        .map(|i| {
+            (
+                i.clone(),
+                knl.assumptions.simplify(&knl.loop_stride(access, i)),
+            )
+        })
+        .collect();
+    MemAccessStat {
+        stmt_id: stmt.id.clone(),
+        array: access.array.clone(),
+        tag: access.tag.clone(),
+        scope: decl.scope,
+        direction,
+        dtype: decl.dtype,
+        lstrides,
+        gstrides,
+        count_wi: count_wi.clone(),
+        footprint: access_footprint(knl, access, false),
+        footprint_per_wg: access_footprint(knl, access, true),
+        granularity,
+        loop_strides,
+    }
+}
+
+/// Gather all statistics for a kernel (Algorithm 1 driver).
+pub fn gather(knl: &Kernel, sub_group_size: u64) -> Result<KernelStats, String> {
+    knl.validate()?;
+    let sched = linearize(knl)?;
+
+    let mut ops: BTreeMap<(DType, String), QPoly> = BTreeMap::new();
+    let mut mem: Vec<MemAccessStat> = Vec::new();
+
+    for stmt in &knl.stmts {
+        let count_wi = stmt_exec_count_wi(knl, stmt);
+        let count_sg = count_wi.scale(Rat::new(1, sub_group_size as i128));
+        let dtype = stmt_dtype(knl, stmt);
+
+        // Arithmetic (sub-group granularity).
+        let oc = stmt.rhs.count_ops();
+        for (name, n) in [
+            ("add", oc.add),
+            ("sub", oc.sub),
+            ("mul", oc.mul),
+            ("div", oc.div),
+            ("madd", oc.madd),
+        ] {
+            if n > 0 {
+                let add = count_sg.scale(Rat::int(n as i128));
+                let e = ops
+                    .entry((dtype, name.to_string()))
+                    .or_insert_with(QPoly::zero);
+                *e = &*e + &add;
+            }
+        }
+
+        // Memory accesses.
+        for l in stmt.rhs.loads() {
+            if knl.arrays[&l.array].scope == MemScope::Private {
+                continue;
+            }
+            mem.push(classify_access(knl, stmt, l, Direction::Load, &count_wi));
+        }
+        if let LhsRef::Array(a) = &stmt.lhs {
+            if knl.arrays[&a.array].scope != MemScope::Private {
+                mem.push(classify_access(knl, stmt, a, Direction::Store, &count_wi));
+            }
+        }
+    }
+
+    Ok(KernelStats {
+        kernel_name: knl.name.clone(),
+        ops: ops
+            .into_iter()
+            .map(|((dtype, op), count_sg)| OpStat {
+                dtype,
+                op,
+                count_sg: knl.assumptions.simplify(&count_sg),
+            })
+            .collect(),
+        mem,
+        barriers_per_wi: sched.barrier_count(knl),
+        num_groups: knl.num_groups(),
+        work_group_size: knl.work_group_size(),
+        sub_group_size,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDecl, Expr};
+    use crate::ir::AffExpr;
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+    use crate::transform::{add_prefetch, assume, split_iname, tag_inames};
+
+    fn env(n: i128) -> BTreeMap<String, i128> {
+        [("n".to_string(), n)].into_iter().collect()
+    }
+
+    fn matmul(prefetch: bool) -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let mut k = Kernel::new("matmul", &["n"], dom);
+        for name in ["a", "b", "c"] {
+            k.add_array(ArrayDecl::global(
+                name,
+                DType::F32,
+                vec![n.clone(), n.clone()],
+            ));
+        }
+        k.add_temp("acc", DType::F32);
+        k.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["i", "j"],
+        ));
+        k.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Temp("acc".into()),
+                Expr::add(
+                    Expr::temp("acc"),
+                    Expr::mul(
+                        Expr::load(Access::tagged(
+                            "a",
+                            "aLD",
+                            vec![AffExpr::var("i"), AffExpr::var("k")],
+                        )),
+                        Expr::load(Access::tagged(
+                            "b",
+                            "bLD",
+                            vec![AffExpr::var("k"), AffExpr::var("j")],
+                        )),
+                    ),
+                ),
+                &["i", "j", "k"],
+            )
+            .with_deps(&["init"]),
+        );
+        k.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::new(
+                    "c",
+                    vec![AffExpr::var("i"), AffExpr::var("j")],
+                )),
+                Expr::temp("acc"),
+                &["i", "j"],
+            )
+            .with_deps(&["upd"]),
+        );
+        let k = assume(&k, "n >= 16 and n % 16 = 0").unwrap();
+        let k = split_iname(&k, "i", 16).unwrap();
+        let k = split_iname(&k, "j", 16).unwrap();
+        let mut k = tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0").unwrap();
+        if prefetch {
+            k = split_iname(&k, "k", 16).unwrap();
+            k = add_prefetch(&k, "a", &["i_in", "k_in"], false).unwrap();
+            k = add_prefetch(&k, "b", &["k_in", "j_in"], false).unwrap();
+        }
+        k
+    }
+
+    #[test]
+    fn madd_count_is_n_cubed_over_subgroup() {
+        // f_madd at sub-group granularity = n^3 / 32.
+        for pf in [false, true] {
+            let k = matmul(pf);
+            let s = gather(&k, 32).unwrap();
+            let madd = s.op_count(DType::F32, "madd");
+            assert_eq!(
+                madd.eval(&env(1024)),
+                Rat::new(1024i128.pow(3), 32),
+                "prefetch={pf}"
+            );
+        }
+    }
+
+    #[test]
+    fn global_load_counts_with_and_without_prefetch() {
+        // Without prefetch: n^3 work-item loads each of a and b.
+        let k = matmul(false);
+        let s = gather(&k, 32).unwrap();
+        let count = |arr: &str| -> Rat {
+            s.mem_matching(|m| {
+                m.array == arr && m.direction == Direction::Load
+            })
+            .fold(QPoly::zero(), |acc, m| &acc + &m.count_at_granularity(32))
+            .eval(&env(1024))
+        };
+        assert_eq!(count("b"), Rat::int(1024i128.pow(3)));
+        // `a[i, k]` is uniform in lid(0) (j_in): counted per sub-group.
+        assert_eq!(count("a"), Rat::new(1024i128.pow(3), 32));
+
+        // With prefetch: 16x fewer global loads, all per work-item.
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        let count_pf = |arr: &str| -> Rat {
+            s.mem_matching(|m| {
+                m.array == arr
+                    && m.direction == Direction::Load
+                    && m.scope == MemScope::Global
+            })
+            .fold(QPoly::zero(), |acc, m| &acc + &m.count_at_granularity(32))
+            .eval(&env(1024))
+        };
+        assert_eq!(count_pf("a"), Rat::new(1024i128.pow(3), 16));
+        assert_eq!(count_pf("b"), Rat::new(1024i128.pow(3), 16));
+    }
+
+    #[test]
+    fn local_traffic_counts_per_subgroup() {
+        // Prefetch variant: 2 local loads per madd -> 2 n^3 work-item
+        // local loads -> n^3/16 at sub-group granularity; local stores
+        // = 2 * n^3/16 work-item = n^3/128 per sub-group... (16x fewer).
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        let local_loads = s
+            .mem_matching(|m| {
+                m.scope == MemScope::Local && m.direction == Direction::Load
+            })
+            .fold(QPoly::zero(), |acc, m| &acc + &m.count_at_granularity(32))
+            .eval(&env(1024));
+        assert_eq!(local_loads, Rat::new(2 * 1024i128.pow(3), 32));
+        let local_stores = s
+            .mem_matching(|m| {
+                m.scope == MemScope::Local && m.direction == Direction::Store
+            })
+            .fold(QPoly::zero(), |acc, m| &acc + &m.count_at_granularity(32))
+            .eval(&env(1024));
+        assert_eq!(local_stores, Rat::new(2 * 1024i128.pow(3), 16 * 32));
+    }
+
+    #[test]
+    fn afr_matches_table1() {
+        // Table 1: AFR of the prefetch loads of a and b is n/16.
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        let e = env(2048);
+        for tag in ["aLD", "bLD"] {
+            let m = s
+                .mem_matching(|m| m.tag.as_deref() == Some(tag))
+                .next()
+                .unwrap_or_else(|| panic!("no access tagged {tag}"));
+            assert_eq!(m.footprint.eval(&e), Rat::int(2048 * 2048), "{tag}");
+            let afr = m.afr(&e);
+            assert!((afr - 2048.0 / 16.0).abs() < 1e-9, "{tag}: afr={afr}");
+        }
+    }
+
+    #[test]
+    fn store_pattern_is_stride1_wi() {
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        let st = s
+            .mem_matching(|m| m.array == "c" && m.direction == Direction::Store)
+            .next()
+            .unwrap();
+        let e = env(1024);
+        assert_eq!(st.lstrides[0].eval(&e), Rat::int(1));
+        assert_eq!(st.granularity, Granularity::WorkItem);
+        assert_eq!(st.count_wi.eval(&e), Rat::int(1024 * 1024));
+    }
+
+    #[test]
+    fn barriers_and_launch_stats() {
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        assert_eq!(s.barriers_per_wi.eval(&env(1024)), Rat::int(128));
+        assert_eq!(s.num_groups.eval(&env(1024)), Rat::int(64 * 64));
+        assert_eq!(s.work_group_size, 256);
+
+        let k = matmul(false);
+        let s = gather(&k, 32).unwrap();
+        assert_eq!(s.barriers_per_wi, QPoly::zero());
+    }
+
+    #[test]
+    fn uniform_access_detected_per_subgroup() {
+        // A load whose lid(0) stride is 0 counts per sub-group.
+        let k = matmul(false);
+        let s = gather(&k, 32).unwrap();
+        let a_ld = s
+            .mem_matching(|m| m.tag.as_deref() == Some("aLD"))
+            .next()
+            .unwrap();
+        // a[i, k]: i = 16 i_out + i_in (lid 1), k sequential: no lid(0).
+        assert!(a_ld.lstrides[0].is_zero());
+        assert_eq!(a_ld.granularity, Granularity::SubGroup);
+        let b_ld = s
+            .mem_matching(|m| m.tag.as_deref() == Some("bLD"))
+            .next()
+            .unwrap();
+        assert_eq!(b_ld.granularity, Granularity::WorkItem);
+    }
+
+    #[test]
+    fn counts_reevaluate_across_sizes() {
+        let k = matmul(true);
+        let s = gather(&k, 32).unwrap();
+        let madd = s.op_count(DType::F32, "madd");
+        for n in [256i128, 512, 2048, 3584] {
+            assert_eq!(madd.eval(&env(n)), Rat::new(n.pow(3), 32));
+        }
+    }
+}

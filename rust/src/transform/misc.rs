@@ -1,0 +1,332 @@
+//! `tag_inames`, `assume`, `fix_parameters`, `prioritize_loops`,
+//! `tag_data_axes`, `unroll`.
+
+use crate::ir::{AffExpr, IndexTag, Kernel, LhsRef};
+use crate::polyhedral::{Assumptions, QPoly};
+
+/// Tag inames with thread axes, e.g.
+/// `tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0")`.
+///
+/// After tagging, the domain is canonicalized so parallel inames nest
+/// outermost (group axes, then local axes, each by descending axis
+/// number — lid(0) maps to adjacent SIMD lanes and therefore sits
+/// innermost among the parallel dims), and every statement's `within`
+/// list is re-sorted to the new domain order.
+pub fn tag_inames(knl: &Kernel, spec: &str) -> Result<Kernel, String> {
+    let mut out = knl.clone();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (iname, tag) = part
+            .split_once(':')
+            .ok_or_else(|| format!("tag_inames: expected 'iname:tag' in '{part}'"))?;
+        let tag = IndexTag::parse(tag.trim())
+            .ok_or_else(|| format!("tag_inames: bad tag in '{part}'"))?;
+        let iname = iname.trim();
+        if !out.domain.loops.iter().any(|l| l.var == iname) {
+            return Err(format!("tag_inames: unknown iname '{iname}'"));
+        }
+        out.iname_tags.insert(iname.to_string(), tag);
+    }
+    canonicalize_order(&mut out)?;
+    Ok(out)
+}
+
+/// Re-sort the domain: group axes desc, local axes desc, then sequential
+/// loops in their current relative order; re-sort each statement's
+/// `within` accordingly.
+pub(crate) fn canonicalize_order(knl: &mut Kernel) -> Result<(), String> {
+    let rank = |k: &Kernel, var: &str| -> (u8, u8) {
+        match k.tag(var) {
+            IndexTag::Group(a) => (0, u8::MAX - a),
+            IndexTag::Local(a) => (1, u8::MAX - a),
+            _ => (2, 0),
+        }
+    };
+    let mut loops = knl.domain.loops.clone();
+    // Stable sort keeps sequential loops in program order.
+    loops.sort_by_key(|l| rank(knl, &l.var));
+    // Parallel iname bounds must not depend on other inames.
+    for l in &loops {
+        if knl.tag(&l.var).is_parallel() {
+            for other in &loops {
+                if other.var != l.var
+                    && (l.lo.mentions(&other.var) || l.hi.mentions(&other.var))
+                {
+                    return Err(format!(
+                        "parallel iname '{}' has bounds depending on '{}'",
+                        l.var, other.var
+                    ));
+                }
+            }
+        }
+    }
+    knl.domain.loops = loops;
+    let order = knl.domain.var_names();
+    for s in &mut knl.stmts {
+        s.within
+            .sort_by_key(|w| order.iter().position(|v| v == w).unwrap_or(usize::MAX));
+    }
+    Ok(())
+}
+
+/// Add assumptions (`assume(&k, "n >= 1 and n % 16 = 0")`) and
+/// re-simplify all loop bounds under them.
+pub fn assume(knl: &Kernel, text: &str) -> Result<Kernel, String> {
+    let mut out = knl.clone();
+    let add = Assumptions::parse(text)?;
+    out.assumptions.merge(&add);
+    for l in &mut out.domain.loops {
+        l.lo = out.assumptions.simplify(&l.lo);
+        l.hi = out.assumptions.simplify(&l.hi);
+    }
+    Ok(out)
+}
+
+/// Fix a parameter to a constant value everywhere (Loopy's
+/// `fix_parameters`), removing it from the parameter list.
+pub fn fix_parameters(knl: &Kernel, param: &str, value: i64) -> Result<Kernel, String> {
+    if !knl.params.contains(&param.to_string()) {
+        return Err(format!("fix_parameters: unknown parameter '{param}'"));
+    }
+    let mut out = knl.clone();
+    let v = QPoly::int(value as i128);
+    for l in &mut out.domain.loops {
+        l.lo = l.lo.subst_deep(param, &v);
+        l.hi = l.hi.subst_deep(param, &v);
+    }
+    for a in out.arrays.values_mut() {
+        for s in &mut a.shape {
+            *s = s.subst_deep(param, &v);
+        }
+    }
+    let repl = AffExpr::cst(value);
+    for s in &mut out.stmts {
+        s.rhs = s.rhs.subst_index(param, &repl);
+        if let LhsRef::Array(acc) = &mut s.lhs {
+            for ix in &mut acc.indices {
+                *ix = ix.subst(param, &repl);
+            }
+        }
+    }
+    out.params.retain(|p| p != param);
+    out.assumptions.divisible.remove(param);
+    out.assumptions.min_value.remove(param);
+    Ok(out)
+}
+
+/// Set the preferred nesting of sequential loops (Loopy's
+/// `prioritize_loops`): listed inames nest in the given order (outer
+/// first); unlisted sequential loops keep their relative order and
+/// nest after the listed ones only if they originally did.
+pub fn prioritize_loops(knl: &Kernel, order: &[&str]) -> Result<Kernel, String> {
+    let mut out = knl.clone();
+    for o in order {
+        if !out.domain.loops.iter().any(|l| l.var == *o) {
+            return Err(format!("prioritize_loops: unknown iname '{o}'"));
+        }
+        if out.tag(o).is_parallel() {
+            return Err(format!("prioritize_loops: '{o}' is parallel"));
+        }
+    }
+    out.loop_priority = order.iter().map(|s| s.to_string()).collect();
+
+    // Reorder the sequential suffix of the domain to respect priority.
+    let mut seq: Vec<_> = out
+        .domain
+        .loops
+        .iter()
+        .filter(|l| !out.tag(&l.var).is_parallel())
+        .cloned()
+        .collect();
+    let par: Vec<_> = out
+        .domain
+        .loops
+        .iter()
+        .filter(|l| out.tag(&l.var).is_parallel())
+        .cloned()
+        .collect();
+    seq.sort_by_key(|l| {
+        order
+            .iter()
+            .position(|o| *o == l.var)
+            .unwrap_or(usize::MAX)
+    });
+    // Dependency sanity: bounds may only reference earlier loops.
+    let mut seen: Vec<String> = par.iter().map(|l| l.var.clone()).collect();
+    for l in &seq {
+        for prior in out.domain.loops.iter().map(|x| &x.var) {
+            if !seen.contains(prior)
+                && *prior != l.var
+                && (l.lo.mentions(prior) || l.hi.mentions(prior))
+            {
+                return Err(format!(
+                    "prioritize_loops: '{}' bound depends on later loop '{prior}'",
+                    l.var
+                ));
+            }
+        }
+        seen.push(l.var.clone());
+    }
+    out.domain.loops = par.into_iter().chain(seq).collect();
+    let new_order = out.domain.var_names();
+    for s in &mut out.stmts {
+        s.within.sort_by_key(|w| {
+            new_order
+                .iter()
+                .position(|v| v == w)
+                .unwrap_or(usize::MAX)
+        });
+    }
+    Ok(out)
+}
+
+/// Permute an array's memory layout (Loopy's `tag_data_axes`); the spec
+/// lists axes slowest-varying first, e.g. `"N1,N0"` transposes a 2-D
+/// array.  Used by the DG "transposed element data" variant.
+pub fn tag_data_axes(knl: &Kernel, array: &str, spec: &str) -> Result<Kernel, String> {
+    let mut out = knl.clone();
+    let decl = out
+        .arrays
+        .get_mut(array)
+        .ok_or_else(|| format!("tag_data_axes: unknown array '{array}'"))?;
+    let mut order = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let axis: usize = part
+            .strip_prefix('N')
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("tag_data_axes: bad axis '{part}'"))?;
+        if axis >= decl.shape.len() || order.contains(&axis) {
+            return Err(format!("tag_data_axes: invalid/duplicate axis '{part}'"));
+        }
+        order.push(axis);
+    }
+    if order.len() != decl.shape.len() {
+        return Err(format!(
+            "tag_data_axes: expected {} axes, got {}",
+            decl.shape.len(),
+            order.len()
+        ));
+    }
+    decl.axis_order = order;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Access, ArrayDecl, DType, Expr, Stmt};
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+    use crate::transform::split_iname;
+    use crate::util::Rat;
+    use std::collections::BTreeMap;
+
+    fn mm_like() -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let mut knl = Kernel::new("mm", &["n"], dom);
+        knl.add_array(ArrayDecl::global("a", DType::F32, vec![n.clone(), n.clone()]));
+        knl.add_array(ArrayDecl::global("c", DType::F32, vec![n.clone(), n]));
+        knl.add_temp("acc", DType::F32);
+        knl.add_stmt(Stmt::new(
+            "upd",
+            LhsRef::Temp("acc".into()),
+            Expr::add(
+                Expr::temp("acc"),
+                Expr::load(Access::new(
+                    "a",
+                    vec![AffExpr::var("i"), AffExpr::var("k")],
+                )),
+            ),
+            &["i", "j", "k"],
+        ));
+        assume(&knl, "n >= 16 and n % 16 = 0").unwrap()
+    }
+
+    #[test]
+    fn tag_inames_reorders_parallel_outermost() {
+        let k = mm_like();
+        let k = split_iname(&k, "i", 16).unwrap();
+        let k = split_iname(&k, "j", 16).unwrap();
+        let k = tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0").unwrap();
+        assert_eq!(
+            k.domain.var_names(),
+            vec!["i_out", "j_out", "i_in", "j_in", "k"]
+        );
+        assert_eq!(k.work_group_size(), 256);
+        assert_eq!(k.stmts[0].within, vec!["i_out", "j_out", "i_in", "j_in", "k"]);
+        assert_eq!(k.validate(), Ok(()));
+    }
+
+    #[test]
+    fn tag_inames_rejects_unknown() {
+        let k = mm_like();
+        assert!(tag_inames(&k, "zz:l.0").is_err());
+        assert!(tag_inames(&k, "i:w.9").is_err());
+    }
+
+    #[test]
+    fn fix_parameters_substitutes_everywhere() {
+        let k = mm_like();
+        let k2 = fix_parameters(&k, "n", 64).unwrap();
+        assert!(k2.params.is_empty());
+        assert_eq!(
+            k2.domain.count().eval(&BTreeMap::new()),
+            Rat::int(64 * 64 * 64)
+        );
+        let shape0 = &k2.arrays["a"].shape[0];
+        assert_eq!(shape0.as_constant(), Some(Rat::int(64)));
+    }
+
+    #[test]
+    fn prioritize_loops_reorders_sequential() {
+        let k = mm_like();
+        let k = split_iname(&k, "k", 16).unwrap();
+        let k = tag_inames(&k, "i:g.0").unwrap();
+        let k2 = prioritize_loops(&k, &["k_in", "k_out"]).unwrap();
+        // Listed loops nest first (in order); unlisted sequential loops
+        // follow in their prior relative order.
+        assert_eq!(k2.domain.var_names(), vec!["i", "k_in", "k_out", "j"]);
+        assert_eq!(k2.validate(), Ok(()));
+    }
+
+    #[test]
+    fn prioritize_rejects_parallel_inames() {
+        let k = mm_like();
+        let k = tag_inames(&k, "i:g.0").unwrap();
+        assert!(prioritize_loops(&k, &["i"]).is_err());
+    }
+
+    #[test]
+    fn tag_data_axes_transposes() {
+        let k = mm_like();
+        let k2 = tag_data_axes(&k, "a", "N1,N0").unwrap();
+        let env: BTreeMap<_, _> = [("n".to_string(), 100i128)].into_iter().collect();
+        let strides = k2.arrays["a"].strides();
+        assert_eq!(strides[0].eval(&env), Rat::int(1));
+        assert_eq!(strides[1].eval(&env), Rat::int(100));
+        assert!(tag_data_axes(&k, "a", "N0").is_err());
+        assert!(tag_data_axes(&k, "a", "N0,N0").is_err());
+    }
+
+    #[test]
+    fn assume_simplifies_existing_bounds() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![LoopExtent::new(
+            "v",
+            QPoly::zero(),
+            (&n - &QPoly::int(16)).floor_div(16),
+        )]);
+        let k = Kernel::new("t", &["n"], dom);
+        let k2 = assume(&k, "n % 16 = 0 and n >= 16").unwrap();
+        let expected = &n.scale(Rat::new(1, 16)) - &QPoly::one();
+        assert_eq!(k2.domain.loops[0].hi, expected);
+    }
+}

@@ -1,0 +1,24 @@
+//! Loopy-style program transformations (paper Sections 1.1, 2.1, 7.1.1).
+//!
+//! Mathematically-equivalent program variants are produced by chaining
+//! these transformations over a clean initial kernel — the mechanism
+//! UiPiCK generators use to produce both the application kernels being
+//! modeled and the measurement kernels that calibrate the models.
+//!
+//! * [`split`] — `split_iname`: tile a loop into outer/inner pairs.
+//! * [`misc`] — `tag_inames`, `assume`, `fix_parameters`,
+//!   `prioritize_loops`, `tag_data_axes`, `unroll`.
+//! * [`prefetch`] — `add_prefetch`: stage an array tile through local
+//!   memory (with bounding-box support for stencils).
+//! * [`remove_work`] — Algorithm 3: strip on-chip work to isolate
+//!   global-memory access patterns for microbenchmark synthesis.
+
+pub mod misc;
+pub mod prefetch;
+pub mod remove_work;
+pub mod split;
+
+pub use misc::{assume, fix_parameters, prioritize_loops, tag_data_axes, tag_inames};
+pub use prefetch::add_prefetch;
+pub use remove_work::remove_work;
+pub use split::split_iname;

@@ -1,0 +1,349 @@
+//! The work-removal transformation (paper §7.1.1, Algorithm 3).
+//!
+//! Strips arithmetic and local-memory operations from a kernel, leaving
+//! a selected subset of its global memory accesses *with their loop
+//! environment intact*, so microbenchmarks can exercise an access
+//! pattern exactly as the application kernel performs it.  Kept loads
+//! are folded into a `read_tgt` accumulator; if no global store
+//! survives, a `read_tgt_dest` store (one entry per work-item, simple
+//! stride-1 pattern) is appended so optimizing compilers cannot drop
+//! the chain.
+
+use crate::ir::{
+    Access, AffExpr, ArrayDecl, Expr, IndexTag, Kernel, LhsRef, MemScope, Stmt,
+};
+use crate::polyhedral::QPoly;
+
+/// Which global accesses to remove alongside all on-chip work.
+/// Accesses are matched by array name or by memory-access tag.
+#[derive(Clone, Debug, Default)]
+pub struct RemoveSpec {
+    pub remove_arrays: Vec<String>,
+    pub remove_tags: Vec<String>,
+}
+
+impl RemoveSpec {
+    pub fn arrays(names: &[&str]) -> RemoveSpec {
+        RemoveSpec {
+            remove_arrays: names.iter().map(|s| s.to_string()).collect(),
+            remove_tags: Vec::new(),
+        }
+    }
+
+    fn removes(&self, acc: &Access) -> bool {
+        self.remove_arrays.contains(&acc.array)
+            || acc
+                .tag
+                .as_ref()
+                .is_some_and(|t| self.remove_tags.contains(t))
+    }
+}
+
+/// Algorithm 3.  Returns the measurement kernel with name
+/// `<name>_rmwork`.
+pub fn remove_work(knl: &Kernel, spec: &RemoveSpec) -> Result<Kernel, String> {
+    let mut out = knl.clone();
+    out.name = format!("{}_rmwork", knl.name);
+
+    let local_arrays: Vec<String> = out
+        .arrays
+        .values()
+        .filter(|a| a.scope == MemScope::Local)
+        .map(|a| a.name.clone())
+        .collect();
+    let is_global =
+        |out: &Kernel, a: &Access| out.arrays[&a.array].scope == MemScope::Global;
+
+    // Determine the dtype of the kept loads (for read_tgt).
+    let mut kept_dtype = None;
+    for s in &knl.stmts {
+        for l in s.rhs.loads() {
+            if is_global(&out, l) && !spec.removes(l) {
+                kept_dtype = Some(out.arrays[&l.array].dtype);
+            }
+        }
+    }
+    let dtype = kept_dtype.ok_or_else(|| {
+        "remove_work: no global loads survive the removal spec".to_string()
+    })?;
+
+    out.add_temp("read_tgt", dtype);
+    let init = Stmt::new(
+        "init_read_tgt",
+        LhsRef::Temp("read_tgt".into()),
+        Expr::fconst(0.0),
+        &[],
+    );
+
+    let mut new_stmts: Vec<Stmt> = vec![init];
+    let mut kept_store = false;
+    let mut counter = 0usize;
+    for s in &knl.stmts {
+        // Kept global loads accumulate into read_tgt, one statement per
+        // load, preserving the source statement's loop environment.
+        for l in s.rhs.loads() {
+            if is_global(&out, l) && !spec.removes(l) {
+                counter += 1;
+                new_stmts.push(Stmt {
+                    id: format!("acc_read_{counter}"),
+                    lhs: LhsRef::Temp("read_tgt".into()),
+                    rhs: Expr::add(Expr::temp("read_tgt"), Expr::Load(l.clone())),
+                    within: s.within.clone(),
+                    deps: vec!["init_read_tgt".to_string()],
+                });
+            }
+        }
+        // A kept global store becomes `store = read_tgt`.
+        if let LhsRef::Array(st) = &s.lhs {
+            if is_global(&out, st) && !spec.removes(st) {
+                kept_store = true;
+                new_stmts.push(Stmt {
+                    id: format!("store_{}", s.id),
+                    lhs: LhsRef::Array(st.clone()),
+                    rhs: Expr::temp("read_tgt"),
+                    within: s.within.clone(),
+                    deps: vec!["init_read_tgt".to_string()],
+                });
+            }
+        }
+        // Original statement is dropped (this strips all arithmetic and
+        // every local-memory transaction).
+    }
+
+    if !kept_store {
+        // Create read_tgt_dest with one entry per work-item and a
+        // straightforward stride-1 store: dest[wg1*ls1 + lid1][wg0*ls0
+        // + lid0] (rank = number of used parallel axes).
+        let mut dims: Vec<QPoly> = Vec::new();
+        let mut idxs: Vec<AffExpr> = Vec::new();
+        let mut within: Vec<String> = Vec::new();
+        for axis in (0..3u8).rev() {
+            let g = knl.iname_with_tag(IndexTag::Group(axis)).map(str::to_string);
+            let l = knl.iname_with_tag(IndexTag::Local(axis)).map(str::to_string);
+            if g.is_none() && l.is_none() {
+                continue;
+            }
+            let ls = knl.lsize(axis) as i64;
+            let dim = &knl.gsize(axis) * &QPoly::int(ls as i128);
+            let mut idx = AffExpr::zero();
+            if let Some(g) = &g {
+                idx = idx.plus(&AffExpr::scaled_var(g, ls));
+                within.push(g.clone());
+            }
+            if let Some(l) = &l {
+                idx = idx.plus(&AffExpr::var(l));
+                within.push(l.clone());
+            }
+            dims.push(dim);
+            idxs.push(idx);
+        }
+        if dims.is_empty() {
+            // Fully sequential kernel: single-element destination.
+            dims.push(QPoly::one());
+            idxs.push(AffExpr::cst(0));
+        }
+        out.add_array(ArrayDecl {
+            name: "read_tgt_dest".into(),
+            dtype,
+            scope: MemScope::Global,
+            shape: dims,
+            axis_order: (0..idxs.len()).collect(),
+        });
+        // Keep `within` consistent with domain order.
+        let order = out.domain.var_names();
+        within.sort_by_key(|w| order.iter().position(|v| v == w).unwrap_or(usize::MAX));
+        let deps: Vec<String> = new_stmts.iter().map(|s| s.id.clone()).collect();
+        new_stmts.push(Stmt {
+            id: "store_read_tgt_dest".into(),
+            lhs: LhsRef::Array(Access::new("read_tgt_dest", idxs.clone())),
+            rhs: Expr::temp("read_tgt"),
+            within,
+            deps,
+        });
+    }
+
+    out.stmts = new_stmts;
+
+    // Drop now-unused local arrays and temps (keep read_tgt).
+    for la in &local_arrays {
+        out.arrays.remove(la);
+    }
+    let used_temps: Vec<String> = out
+        .stmts
+        .iter()
+        .flat_map(|s| {
+            s.rhs
+                .temps_read()
+                .into_iter()
+                .map(str::to_string)
+                .chain(match &s.lhs {
+                    LhsRef::Temp(t) => Some(t.clone()),
+                    _ => None,
+                })
+        })
+        .collect();
+    out.temps.retain(|name, _| used_temps.contains(name));
+
+    // Remove fetch inames that no longer index anything? They remain in
+    // the domain harmlessly (zero-cost loops are dropped by scheduling
+    // if no statement nests in them).
+    out.validate()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+    use crate::transform::{add_prefetch, assume, split_iname, tag_inames};
+    use crate::util::Rat;
+    use std::collections::BTreeMap;
+
+    fn env(n: i128) -> BTreeMap<String, i128> {
+        [("n".to_string(), n)].into_iter().collect()
+    }
+
+    /// The paper's running example: tiled prefetching matmul.
+    fn prefetching_matmul() -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("i", n.clone()),
+            LoopExtent::zero_to("j", n.clone()),
+            LoopExtent::zero_to("k", n.clone()),
+        ]);
+        let mut k = Kernel::new("matmul", &["n"], dom);
+        for name in ["a", "b", "c"] {
+            k.add_array(ArrayDecl::global(
+                name,
+                DType::F32,
+                vec![n.clone(), n.clone()],
+            ));
+        }
+        k.add_temp("acc", DType::F32);
+        k.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["i", "j"],
+        ));
+        k.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Temp("acc".into()),
+                Expr::add(
+                    Expr::temp("acc"),
+                    Expr::mul(
+                        Expr::load(Access::tagged(
+                            "a",
+                            "aLD",
+                            vec![AffExpr::var("i"), AffExpr::var("k")],
+                        )),
+                        Expr::load(Access::tagged(
+                            "b",
+                            "bLD",
+                            vec![AffExpr::var("k"), AffExpr::var("j")],
+                        )),
+                    ),
+                ),
+                &["i", "j", "k"],
+            )
+            .with_deps(&["init"]),
+        );
+        k.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::new(
+                    "c",
+                    vec![AffExpr::var("i"), AffExpr::var("j")],
+                )),
+                Expr::temp("acc"),
+                &["i", "j"],
+            )
+            .with_deps(&["upd"]),
+        );
+        let k = assume(&k, "n >= 16 and n % 16 = 0").unwrap();
+        let k = split_iname(&k, "i", 16).unwrap();
+        let k = split_iname(&k, "j", 16).unwrap();
+        let k = split_iname(&k, "k", 16).unwrap();
+        let k = tag_inames(&k, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0").unwrap();
+        let k = add_prefetch(&k, "a", &["i_in", "k_in"], false).unwrap();
+        add_prefetch(&k, "b", &["k_in", "j_in"], false).unwrap()
+    }
+
+    #[test]
+    fn isolates_b_load_like_paper_section_7_1_1() {
+        // remove_work(knl, remove_vars=["a", "c"]) keeps only the b
+        // pattern: read_tgt += b[...] inside k_out, plus the dest store.
+        let k = prefetching_matmul();
+        let m = remove_work(&k, &RemoveSpec::arrays(&["a", "c"])).unwrap();
+
+        // No local arrays, no arithmetic beyond the accumulate.
+        assert!(m.arrays.values().all(|a| a.scope != MemScope::Local));
+        let accs: Vec<_> = m
+            .stmts
+            .iter()
+            .filter(|s| s.id.starts_with("acc_read"))
+            .collect();
+        assert_eq!(accs.len(), 1);
+        let b_ld = &accs[0].rhs.loads()[0].clone();
+        assert_eq!(b_ld.array, "b");
+
+        // The access pattern to b is unchanged (paper invariant):
+        // lid0 stride 1, gid0 stride 16, k_out stride 16n.
+        let e = env(1024);
+        assert_eq!(m.lid_stride(b_ld, 0).eval(&e), Rat::int(1));
+        assert_eq!(m.gid_stride(b_ld, 0).eval(&e), Rat::int(16));
+        assert_eq!(m.loop_stride(b_ld, "k_out").eval(&e), Rat::int(16 * 1024));
+
+        // Store chain kept alive through read_tgt_dest.
+        let st = m.stmt("store_read_tgt_dest").unwrap();
+        let dest = st.store().unwrap().clone();
+        assert_eq!(dest.array, "read_tgt_dest");
+        // Simple stride-1 pattern: lid0 stride 1.
+        assert_eq!(m.lid_stride(&dest, 0).eval(&e), Rat::int(1));
+        assert_eq!(m.validate(), Ok(()));
+    }
+
+    #[test]
+    fn keeps_existing_store_when_not_removed() {
+        // Removing only `a`: the b load is kept and the original c
+        // store survives as `c[...] = read_tgt`; no dest array needed.
+        let k = prefetching_matmul();
+        let m = remove_work(&k, &RemoveSpec::arrays(&["a"])).unwrap();
+        assert!(m.stmt("store_store").is_some());
+        assert!(!m.arrays.contains_key("read_tgt_dest"));
+        let accs: Vec<_> = m
+            .stmts
+            .iter()
+            .filter(|s| s.id.starts_with("acc_read"))
+            .collect();
+        assert_eq!(accs.len(), 1);
+        assert_eq!(accs[0].rhs.loads()[0].array, "b");
+        assert_eq!(m.validate(), Ok(()));
+    }
+
+    #[test]
+    fn errors_when_nothing_left() {
+        let k = prefetching_matmul();
+        let err = remove_work(&k, &RemoveSpec::arrays(&["a", "b", "c"])).unwrap_err();
+        assert!(err.contains("no global loads"), "{err}");
+    }
+
+    #[test]
+    fn removal_by_tag() {
+        let k = prefetching_matmul();
+        let spec = RemoveSpec {
+            remove_arrays: vec!["c".into()],
+            remove_tags: vec!["aLD".into()],
+        };
+        let m = remove_work(&k, &spec).unwrap();
+        let accs: Vec<_> = m
+            .stmts
+            .iter()
+            .filter(|s| s.id.starts_with("acc_read"))
+            .collect();
+        assert_eq!(accs.len(), 1);
+        assert_eq!(accs[0].rhs.loads()[0].array, "b");
+    }
+}

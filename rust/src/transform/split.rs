@@ -1,0 +1,204 @@
+//! `split_iname`: divide one loop into an outer/inner nested pair.
+
+use crate::ir::{AffExpr, Kernel, LhsRef};
+use crate::polyhedral::{LoopExtent, QPoly};
+
+/// Split `iname` (which must start at 0) by `factor`:
+/// `iname = factor * iname_out + iname_in`, with
+/// `0 <= iname_in < factor` and `0 <= iname_out <= floor((extent-1)/factor)`.
+///
+/// Matches Loopy's `lp.split_iname`.  Without a divisibility assumption
+/// on the extent the outer bound stays a floor quasi-polynomial and the
+/// final partial tile would need a guard; all kernels in this
+/// reproduction either carry `assume(extent % factor == 0)` or only use
+/// sizes where the split is exact (the paper's `groups_fit:True`), so
+/// `split_iname` rejects unprovable splits rather than emitting
+/// conditionals.
+pub fn split_iname(knl: &Kernel, iname: &str, factor: i64) -> Result<Kernel, String> {
+    assert!(factor > 0);
+    let mut out = knl.clone();
+    let pos = out
+        .domain
+        .loops
+        .iter()
+        .position(|l| l.var == iname)
+        .ok_or_else(|| format!("split_iname: unknown iname '{iname}'"))?;
+
+    let l = out.domain.loops[pos].clone();
+    if !l.lo.is_zero() {
+        return Err(format!("split_iname: '{iname}' must start at 0"));
+    }
+    let extent = l.extent();
+
+    // Provability: the extent must be a multiple of `factor`, either as
+    // a constant or via divisibility assumptions.
+    let simplified_extent = out.assumptions.simplify(&extent);
+    let exact = match simplified_extent.as_constant() {
+        Some(c) => c
+            .as_integer()
+            .map(|v| v % factor as i128 == 0)
+            .unwrap_or(false),
+        None => {
+            // floor(extent/f) * f == extent after assumption rewriting?
+            let fd = out
+                .assumptions
+                .simplify(&simplified_extent.floor_div(factor as i128));
+            &fd.scale(crate::util::Rat::int(factor as i128)) == &simplified_extent
+        }
+    };
+    if !exact {
+        return Err(format!(
+            "split_iname: cannot prove {factor} divides extent '{extent}' of \
+             '{iname}'; add an assume(... % {factor} == 0) or use sizes \
+             where groups fit"
+        ));
+    }
+
+    let outer = format!("{iname}_out");
+    let inner = format!("{iname}_in");
+    let hi_out = {
+        let fd = (&extent - &QPoly::one()).floor_div(factor as i128);
+        out.assumptions.simplify(&fd)
+    };
+    out.domain.loops.splice(
+        pos..=pos,
+        [
+            LoopExtent::new(&outer, QPoly::zero(), hi_out),
+            LoopExtent::new(&inner, QPoly::zero(), QPoly::int(factor as i128 - 1)),
+        ],
+    );
+
+    // Rewrite all statements: iname -> factor*outer + inner.
+    let replacement = AffExpr::scaled_var(&outer, factor).plus(&AffExpr::var(&inner));
+    for s in &mut out.stmts {
+        s.rhs = s.rhs.subst_index(iname, &replacement);
+        if let LhsRef::Array(a) = &mut s.lhs {
+            for ix in &mut a.indices {
+                *ix = ix.subst(iname, &replacement);
+            }
+        }
+        if let Some(i) = s.within.iter().position(|w| w == iname) {
+            s.within
+                .splice(i..=i, [outer.clone(), inner.clone()]);
+        }
+    }
+
+    // Loop priority: replace mention.
+    if let Some(i) = out.loop_priority.iter().position(|w| w == iname) {
+        out.loop_priority
+            .splice(i..=i, [outer.clone(), inner.clone()]);
+    }
+    out.iname_tags.remove(iname);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Access, ArrayDecl, DType, Expr, IndexTag, Stmt};
+    use crate::polyhedral::{Assumptions, NestedDomain};
+    use crate::util::Rat;
+    use std::collections::BTreeMap;
+
+    fn env(n: i128) -> BTreeMap<String, i128> {
+        [("n".to_string(), n)].into_iter().collect()
+    }
+
+    fn simple_copy_kernel() -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+        let mut k = Kernel::new("copy", &["n"], dom);
+        k.assumptions = Assumptions::none().divisible_by("n", 16).at_least("n", 16);
+        k.add_array(ArrayDecl::global("x", DType::F32, vec![n.clone()]));
+        k.add_array(ArrayDecl::global("y", DType::F32, vec![n]));
+        k.add_stmt(Stmt::new(
+            "cp",
+            LhsRef::Array(Access::new("y", vec![AffExpr::var("i")])),
+            Expr::load(Access::new("x", vec![AffExpr::var("i")])),
+            &["i"],
+        ));
+        k
+    }
+
+    #[test]
+    fn split_rewrites_domain_and_subscripts() {
+        let k = simple_copy_kernel();
+        let k2 = split_iname(&k, "i", 16).unwrap();
+        assert_eq!(k2.domain.loops.len(), 2);
+        assert_eq!(k2.domain.loops[0].var, "i_out");
+        assert_eq!(k2.domain.loops[1].var, "i_in");
+        // Point count preserved.
+        assert_eq!(
+            k2.domain.count().eval(&env(64)),
+            k.domain.count().eval(&env(64))
+        );
+        // Subscript rewritten to 16*i_out + i_in.
+        let s = &k2.stmts[0];
+        let ld = &s.rhs.loads()[0];
+        assert_eq!(ld.indices[0].coeff("i_out"), 16);
+        assert_eq!(ld.indices[0].coeff("i_in"), 1);
+        assert_eq!(ld.indices[0].coeff("i"), 0);
+        assert_eq!(s.within, vec!["i_out", "i_in"]);
+        assert_eq!(k2.validate(), Ok(()));
+    }
+
+    #[test]
+    fn split_outer_bound_simplifies_under_assume() {
+        let k = simple_copy_kernel();
+        let k2 = split_iname(&k, "i", 16).unwrap();
+        // 0 <= i_out <= n/16 - 1, cleanly (no floor atom).
+        let hi = &k2.domain.loops[0].hi;
+        let expected = &QPoly::var("n").scale(Rat::new(1, 16)) - &QPoly::one();
+        assert_eq!(hi, &expected, "got {hi}");
+    }
+
+    #[test]
+    fn split_rejects_unprovable_divisibility() {
+        let mut k = simple_copy_kernel();
+        k.assumptions = Assumptions::none(); // drop the % 16 fact
+        let err = split_iname(&k, "i", 16).unwrap_err();
+        assert!(err.contains("cannot prove"), "{err}");
+    }
+
+    #[test]
+    fn split_constant_extent() {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to("j", QPoly::int(64))]);
+        let mut k = Kernel::new("t", &["n"], dom);
+        k.add_array(ArrayDecl::global("x", DType::F32, vec![n]));
+        k.add_stmt(Stmt::new(
+            "s",
+            LhsRef::Array(Access::new("x", vec![AffExpr::var("j")])),
+            Expr::fconst(1.0),
+            &["j"],
+        ));
+        let k2 = split_iname(&k, "j", 16).unwrap();
+        assert_eq!(k2.domain.loops[0].hi, QPoly::int(3));
+        assert_eq!(k2.domain.count().eval(&BTreeMap::new()), Rat::int(64));
+    }
+
+    #[test]
+    fn double_split_composes() {
+        let k = simple_copy_kernel();
+        let k2 = split_iname(&k, "i", 16).unwrap();
+        let k3 = split_iname(&k2, "i_in", 4).unwrap();
+        assert_eq!(
+            k3.domain.var_names(),
+            vec!["i_out", "i_in_out", "i_in_in"]
+        );
+        assert_eq!(k3.domain.count().eval(&env(64)), Rat::int(64));
+        let ld = &k3.stmts[0].rhs.loads()[0];
+        assert_eq!(ld.indices[0].coeff("i_out"), 16);
+        assert_eq!(ld.indices[0].coeff("i_in_out"), 4);
+        assert_eq!(ld.indices[0].coeff("i_in_in"), 1);
+    }
+
+    #[test]
+    fn split_preserves_tags_of_other_inames() {
+        let mut k = simple_copy_kernel();
+        k.iname_tags.insert("i".into(), IndexTag::Sequential);
+        let k2 = split_iname(&k, "i", 16).unwrap();
+        // The split iname's own tag is dropped (retag explicitly).
+        assert!(!k2.iname_tags.contains_key("i"));
+    }
+}

@@ -1,0 +1,682 @@
+//! Application-kernel builders and their generators: the three
+//! evaluation computations of Section 8 (matrix multiplication, DG
+//! differentiation, 2-D five-point finite differences) plus a square
+//! transpose.
+//!
+//! Builders are public: the experiment coordinator uses them directly
+//! to construct the kernels whose execution times the models predict.
+
+use std::collections::BTreeMap;
+
+use super::{ints, strs, GeneratedKernel, Generator, VariantArgs};
+use crate::ir::{
+    Access, AffExpr, ArrayDecl, DType, Expr, Kernel, LhsRef, MemScope, Stmt,
+};
+use crate::polyhedral::{LoopExtent, NestedDomain, QPoly};
+use crate::transform::{
+    add_prefetch, assume, prioritize_loops, split_iname, tag_data_axes, tag_inames,
+};
+
+/// §2.1 / §8.3: square matmul `c = a @ b` with 16x16 work-groups,
+/// optionally prefetching 16x16 tiles of both inputs into local memory.
+pub fn build_matmul(dtype: DType, prefetch: bool, tile: i64) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("i", n.clone()),
+        LoopExtent::zero_to("j", n.clone()),
+        LoopExtent::zero_to("k", n.clone()),
+    ]);
+    let name = if prefetch { "matmul_pf" } else { "matmul_nopf" };
+    // Variant-specific memory-access tags: the paper's five distinct
+    // matmul gmem patterns (mm-PF-a, mm-PF-b, mm-noPF-a, mm-noPF-b and
+    // the shared stride-1 store) become distinguishable model features.
+    let vtag = if prefetch { "mm_pf" } else { "mm_nopf" };
+    let tag_a = format!("{vtag}_a");
+    let tag_b = format!("{vtag}_b");
+    let mut knl = Kernel::new(name, &["n"], dom);
+    for arr in ["a", "b", "c"] {
+        knl.add_array(ArrayDecl::global(arr, dtype, vec![n.clone(), n.clone()]));
+    }
+    knl.add_temp("acc", dtype);
+    knl.add_stmt(Stmt::new(
+        "init",
+        LhsRef::Temp("acc".into()),
+        Expr::fconst(0.0),
+        &["i", "j"],
+    ));
+    knl.add_stmt(
+        Stmt::new(
+            "upd",
+            LhsRef::Temp("acc".into()),
+            Expr::add(
+                Expr::temp("acc"),
+                Expr::mul(
+                    Expr::load(Access::tagged(
+                        "a",
+                        &tag_a,
+                        vec![AffExpr::var("i"), AffExpr::var("k")],
+                    )),
+                    Expr::load(Access::tagged(
+                        "b",
+                        &tag_b,
+                        vec![AffExpr::var("k"), AffExpr::var("j")],
+                    )),
+                ),
+            ),
+            &["i", "j", "k"],
+        )
+        .with_deps(&["init"]),
+    );
+    knl.add_stmt(
+        Stmt::new(
+            "store",
+            LhsRef::Array(Access::tagged(
+                "c",
+                &format!("{vtag}_st"),
+                vec![AffExpr::var("i"), AffExpr::var("j")],
+            )),
+            Expr::temp("acc"),
+            &["i", "j"],
+        )
+        .with_deps(&["upd"]),
+    );
+    let knl = assume(&knl, &format!("n >= {tile} and n % {tile} = 0"))?;
+    let knl = split_iname(&knl, "i", tile)?;
+    let knl = split_iname(&knl, "j", tile)?;
+    let mut knl = tag_inames(&knl, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0")?;
+    if prefetch {
+        knl = split_iname(&knl, "k", tile)?;
+        knl = add_prefetch(&knl, "a", &["i_in", "k_in"], false)?;
+        knl = add_prefetch(&knl, "b", &["k_in", "j_in"], false)?;
+    }
+    Ok(knl)
+}
+
+/// DG differentiation variants (§8.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DgVariant {
+    /// Variant 1: tile/parallelize i and k only.
+    Plain,
+    /// Variant 2: prefetch 16x16 tiles of the element data `u`.
+    UPrefetch,
+    /// Variant 3: prefetch tiles of the differentiation matrix.
+    MPrefetch,
+    /// Variant 4: variant 3 plus transposed element-data layout.
+    MPrefetchT,
+}
+
+impl DgVariant {
+    pub fn parse(s: &str) -> Result<DgVariant, String> {
+        match s {
+            "plain" => Ok(DgVariant::Plain),
+            "u_prefetch" => Ok(DgVariant::UPrefetch),
+            "m_prefetch" => Ok(DgVariant::MPrefetch),
+            "m_prefetch_t" => Ok(DgVariant::MPrefetchT),
+            other => Err(format!("unknown DG variant '{other}'")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DgVariant::Plain => "plain",
+            DgVariant::UPrefetch => "u_prefetch",
+            DgVariant::MPrefetch => "m_prefetch",
+            DgVariant::MPrefetchT => "m_prefetch_t",
+        }
+    }
+}
+
+/// §8.4: `res[m, e, i] = Σ_j diff_mat[m, i, j] * u[e, j]` over
+/// `nelements` elements with `nunit_nodes` nodes and `nmatrices`
+/// differentiation matrices; element index parallelized over
+/// (g.0, l.0), node index over (g.1, l.1).
+pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kernel, String> {
+    let nel = QPoly::var("nelements");
+    let nmat = QPoly::var("nmatrices");
+    let nun = QPoly::int(nunit_nodes as i128);
+
+    let mut loops = vec![
+        LoopExtent::zero_to("m", nmat.clone()),
+        LoopExtent::zero_to("i", nun.clone()),
+        LoopExtent::zero_to("e", nel.clone()),
+        LoopExtent::zero_to("j", nun.clone()),
+    ];
+    if variant == DgVariant::UPrefetch {
+        // Separate init/store m-loops (Loopy's duplicate_inames) so the
+        // u tile is fetched outside the m loop.
+        loops.insert(0, LoopExtent::zero_to("m_init", nmat.clone()));
+        loops.push(LoopExtent::zero_to("m_store", nmat.clone()));
+    }
+    let dom = NestedDomain::new(loops);
+    let name = format!("dg_diff_{}", variant.label());
+    let mut knl = Kernel::new(&name, &["nelements", "nmatrices"], dom);
+    knl.add_array(ArrayDecl::global(
+        "diff_mat",
+        DType::F32,
+        vec![nmat.clone(), nun.clone(), nun.clone()],
+    ));
+    knl.add_array(ArrayDecl::global(
+        "u",
+        DType::F32,
+        vec![nel.clone(), nun.clone()],
+    ));
+    knl.add_array(ArrayDecl::global(
+        "res",
+        DType::F32,
+        vec![nmat.clone(), nel.clone(), nun.clone()],
+    ));
+
+    // Pattern-identical accesses share a tag across variants so that a
+    // single work-removal microbenchmark calibrates them all (Fig. 6b's
+    // 11 distinct patterns, not 4 variants x 3 arrays):
+    //   u:  direct load (plain, m_prefetch), cooperative fetch
+    //       (u_prefetch), transposed direct load (m_prefetch_t)
+    //   dm: direct uniform load (plain, u_prefetch) vs tile fetch
+    //   res: untransposed vs transposed store.
+    let u_tag = match variant {
+        DgVariant::UPrefetch => "dg_u_fetch",
+        DgVariant::MPrefetchT => "dg_u_direct_t",
+        _ => "dg_u_direct",
+    };
+    let dm_tag = match variant {
+        DgVariant::MPrefetch | DgVariant::MPrefetchT => "dg_dm_fetch",
+        // u_prefetch restructures the loops (m innermost): its direct
+        // dm loads walk a 16 KiB loop stride — a different pattern
+        // (Table 1 counts the sequential loop stride) from plain's
+        // stride-1 j-innermost walk.
+        DgVariant::UPrefetch => "dg_dm_direct_mloop",
+        _ => "dg_dm_direct",
+    };
+    let res_tag = match variant {
+        DgVariant::MPrefetchT => "dg_res_t",
+        _ => "dg_res",
+    };
+    let vtag = res_tag.to_string(); // reuse helper name below
+    let _ = &vtag;
+    let dm_ld = Expr::load(Access::tagged(
+        "diff_mat",
+        dm_tag,
+        vec![AffExpr::var("m"), AffExpr::var("i"), AffExpr::var("j")],
+    ));
+    let u_ld = Expr::load(Access::tagged(
+        "u",
+        u_tag,
+        vec![AffExpr::var("e"), AffExpr::var("j")],
+    ));
+
+    if variant == DgVariant::UPrefetch {
+        // Private per-m accumulator array.
+        knl.add_array(ArrayDecl {
+            name: "acc".into(),
+            dtype: DType::F32,
+            scope: MemScope::Private,
+            shape: vec![nmat.clone()],
+            axis_order: vec![0],
+        });
+        knl.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Array(Access::new("acc", vec![AffExpr::var("m_init")])),
+            Expr::fconst(0.0),
+            &["m_init", "i", "e"],
+        ));
+        knl.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Array(Access::new("acc", vec![AffExpr::var("m")])),
+                Expr::add(
+                    Expr::load(Access::new("acc", vec![AffExpr::var("m")])),
+                    Expr::mul(dm_ld, u_ld),
+                ),
+                &["i", "e", "j", "m"],
+            )
+            .with_deps(&["init"]),
+        );
+        knl.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::tagged(
+                    "res",
+                    res_tag,
+                    vec![
+                        AffExpr::var("m_store"),
+                        AffExpr::var("e"),
+                        AffExpr::var("i"),
+                    ],
+                )),
+                Expr::load(Access::new("acc", vec![AffExpr::var("m_store")])),
+                &["i", "e", "m_store"],
+            )
+            .with_deps(&["upd"]),
+        );
+    } else {
+        knl.add_temp("acc", DType::F32);
+        knl.add_stmt(Stmt::new(
+            "init",
+            LhsRef::Temp("acc".into()),
+            Expr::fconst(0.0),
+            &["m", "i", "e"],
+        ));
+        knl.add_stmt(
+            Stmt::new(
+                "upd",
+                LhsRef::Temp("acc".into()),
+                Expr::add(Expr::temp("acc"), Expr::mul(dm_ld, u_ld)),
+                &["m", "i", "e", "j"],
+            )
+            .with_deps(&["init"]),
+        );
+        knl.add_stmt(
+            Stmt::new(
+                "store",
+                LhsRef::Array(Access::tagged(
+                    "res",
+                    res_tag,
+                    vec![AffExpr::var("m"), AffExpr::var("e"), AffExpr::var("i")],
+                )),
+                Expr::temp("acc"),
+                &["m", "i", "e"],
+            )
+            .with_deps(&["upd"]),
+        );
+    }
+
+    let knl = assume(
+        &knl,
+        &format!("nelements >= {lsize} and nelements % {lsize} = 0"),
+    )?;
+    let knl = split_iname(&knl, "i", lsize)?;
+    let knl = split_iname(&knl, "e", lsize)?;
+    let mut knl = tag_inames(&knl, "i_out:g.1, i_in:l.1, e_out:g.0, e_in:l.0")?;
+
+    match variant {
+        DgVariant::Plain => {}
+        DgVariant::UPrefetch => {
+            knl = split_iname(&knl, "j", lsize)?;
+            knl = add_prefetch(&knl, "u", &["e_in", "j_in"], false)?;
+            knl = prioritize_loops(
+                &knl,
+                &["m_init", "j_out", "j_in", "m", "m_store"],
+            )?;
+        }
+        DgVariant::MPrefetch | DgVariant::MPrefetchT => {
+            knl = split_iname(&knl, "j", lsize)?;
+            knl = add_prefetch(&knl, "diff_mat", &["j_in", "i_in"], false)?;
+            knl = prioritize_loops(&knl, &["m", "j_out", "j_in"])?;
+            if variant == DgVariant::MPrefetchT {
+                // Transposed element-data layout: lid(0) stride becomes
+                // 1 for both u loads and res stores.
+                knl = tag_data_axes(&knl, "u", "N1,N0")?;
+                knl = tag_data_axes(&knl, "res", "N0,N2,N1")?;
+            }
+        }
+    }
+    Ok(knl)
+}
+
+/// §8.5: 2-D five-point stencil with bounding-box prefetch.  `lsize` is
+/// the work-group edge (16 or 18); tiles of `(lsize-2)^2` interior
+/// points are computed per work-group.
+pub fn build_fdiff(lsize: i64) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let interior = lsize - 2;
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("i", n.clone()),
+        LoopExtent::zero_to("j", n.clone()),
+    ]);
+    let vtag = format!("fd{lsize}");
+    let mut knl = Kernel::new(&format!("fdiff_{lsize}x{lsize}"), &["n"], dom);
+    knl.add_array(ArrayDecl::global(
+        "u",
+        DType::F32,
+        vec![&n + &QPoly::int(2), &n + &QPoly::int(2)],
+    ));
+    knl.add_array(ArrayDecl::global("res", DType::F32, vec![n.clone(), n]));
+    let u_tag = format!("{vtag}_u");
+    let u = move |di: i64, dj: i64| {
+        Expr::load(Access::tagged(
+            "u",
+            &u_tag,
+            vec![
+                AffExpr::var("i").plus_cst(di),
+                AffExpr::var("j").plus_cst(dj),
+            ],
+        ))
+    };
+    // res[i,j] = u[i,j+1] + u[i+1,j] - 4*u[i+1,j+1] + u[i+1,j+2] + u[i+2,j+1]
+    let rhs = Expr::add(
+        Expr::add(
+            Expr::sub(
+                Expr::add(u(0, 1), u(1, 0)),
+                Expr::mul(Expr::fconst(4.0), u(1, 1)),
+            ),
+            u(1, 2),
+        ),
+        u(2, 1),
+    );
+    knl.add_stmt(Stmt::new(
+        "stencil",
+        LhsRef::Array(Access::tagged(
+            "res",
+            &format!("{vtag}_res"),
+            vec![AffExpr::var("i"), AffExpr::var("j")],
+        )),
+        rhs,
+        &["i", "j"],
+    ));
+    let knl = assume(
+        &knl,
+        &format!("n >= {interior} and n % {interior} = 0"),
+    )?;
+    let knl = split_iname(&knl, "i", interior)?;
+    let knl = split_iname(&knl, "j", interior)?;
+    let knl = tag_inames(&knl, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0")?;
+    // fetch_bounding_box: the lsize x lsize tile includes the halo; the
+    // fetch inames (tagged l.1/l.0) widen the work-group to lsize^2.
+    add_prefetch(&knl, "u", &["i_in", "j_in"], true)
+}
+
+/// Square transpose `out[j, i] = in[i, j]` — a classic
+/// uncoalesced-store pattern for the measurement library.
+pub fn build_transpose(tile: i64) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("i", n.clone()),
+        LoopExtent::zero_to("j", n.clone()),
+    ]);
+    let mut knl = Kernel::new("transpose_sq", &["n"], dom);
+    knl.add_array(ArrayDecl::global("inp", DType::F32, vec![n.clone(), n.clone()]));
+    knl.add_array(ArrayDecl::global("outp", DType::F32, vec![n.clone(), n]));
+    knl.add_stmt(Stmt::new(
+        "t",
+        LhsRef::Array(Access::tagged(
+            "outp",
+            "oST",
+            vec![AffExpr::var("j"), AffExpr::var("i")],
+        )),
+        Expr::load(Access::tagged(
+            "inp",
+            "iLD",
+            vec![AffExpr::var("i"), AffExpr::var("j")],
+        )),
+        &["i", "j"],
+    ));
+    let knl = assume(&knl, &format!("n >= {tile} and n % {tile} = 0"))?;
+    let knl = split_iname(&knl, "i", tile)?;
+    let knl = split_iname(&knl, "j", tile)?;
+    tag_inames(&knl, "i_out:g.1, i_in:l.1, j_out:g.0, j_in:l.0")
+}
+
+fn env1(k: &str, v: i64) -> BTreeMap<String, i64> {
+    [(k.to_string(), v)].into_iter().collect()
+}
+
+fn gen_matmul(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let dtype = DType::parse(args.get("dtype")?).ok_or("bad dtype")?;
+    let prefetch = args.get_bool("prefetch")?;
+    let tile = args.get_i64("lsize_0")?;
+    if args.get_i64("lsize_1")? != tile {
+        return Err("matmul_sq requires square work-groups".into());
+    }
+    if !args.get_bool("groups_fit")? {
+        return Err("matmul_sq currently requires groups_fit:True".into());
+    }
+    let n = args.get_i64("n")?;
+    if n % tile != 0 {
+        return Err(format!("n={n} not divisible by tile {tile}"));
+    }
+    Ok(GeneratedKernel {
+        kernel: build_matmul(dtype, prefetch, tile)?,
+        generator: "matmul_sq".into(),
+        args: args.clone(),
+        env: env1("n", n),
+    })
+}
+
+fn gen_dg(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let variant = DgVariant::parse(args.get("variant")?)?;
+    let nun = args.get_i64("nunit_nodes")?;
+    let nel = args.get_i64("nelements")?;
+    let nmat = args.get_i64("nmatrices")?;
+    let kernel = build_dg(variant, nun, 16)?;
+    let mut env = env1("nelements", nel);
+    env.insert("nmatrices".into(), nmat);
+    Ok(GeneratedKernel {
+        kernel,
+        generator: "dg_diff".into(),
+        args: args.clone(),
+        env,
+    })
+}
+
+fn gen_fdiff(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let lsize = args.get_i64("lsize")?;
+    let n = args.get_i64("n")?;
+    if n % (lsize - 2) != 0 {
+        return Err(format!("n={n} not divisible by interior {}", lsize - 2));
+    }
+    Ok(GeneratedKernel {
+        kernel: build_fdiff(lsize)?,
+        generator: "fdiff_2d5pt".into(),
+        args: args.clone(),
+        env: env1("n", n),
+    })
+}
+
+fn gen_transpose(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let n = args.get_i64("n")?;
+    Ok(GeneratedKernel {
+        kernel: build_transpose(16)?,
+        generator: "transpose_sq".into(),
+        args: args.clone(),
+        env: env1("n", n),
+    })
+}
+
+/// Application-kernel generators.
+pub fn generators() -> Vec<Generator> {
+    vec![
+        Generator {
+            name: "matmul_sq",
+            tags: &["matmul_sq", "matmul", "app"],
+            arg_domains: vec![
+                ("dtype", strs(&["float32", "float64"])),
+                ("prefetch", strs(&["True", "False"])),
+                ("lsize_0", ints(&[16])),
+                ("lsize_1", ints(&[16])),
+                ("groups_fit", strs(&["True"])),
+                ("n", ints(&[1024, 1536, 2048, 2560, 3072, 3584])),
+            ],
+            build: gen_matmul,
+        },
+        Generator {
+            name: "dg_diff",
+            tags: &["dg_diff", "dg", "app"],
+            arg_domains: vec![
+                (
+                    "variant",
+                    strs(&["plain", "u_prefetch", "m_prefetch", "m_prefetch_t"]),
+                ),
+                ("nunit_nodes", ints(&[64])),
+                ("nmatrices", ints(&[3])),
+                (
+                    "nelements",
+                    ints(&[32768, 65536, 131072, 262144, 524288]),
+                ),
+            ],
+            build: gen_dg,
+        },
+        Generator {
+            name: "fdiff_2d5pt",
+            tags: &["finite_diff", "fdiff_2d5pt", "app"],
+            arg_domains: vec![
+                ("lsize", ints(&[16, 18])),
+                // Multiples of lcm(14, 16) = 112 work for both tiles.
+                ("n", ints(&[2016, 4032, 6048, 8064])),
+            ],
+            build: gen_fdiff,
+        },
+        Generator {
+            name: "transpose_sq",
+            tags: &["transpose_sq", "transpose", "app"],
+            arg_domains: vec![("n", ints(&[1024, 2048, 4096]))],
+            build: gen_transpose,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{device_by_id, simulate_time};
+    use crate::util::Rat;
+
+    fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn dg_variants_all_build_and_validate() {
+        for v in [
+            DgVariant::Plain,
+            DgVariant::UPrefetch,
+            DgVariant::MPrefetch,
+            DgVariant::MPrefetchT,
+        ] {
+            let k = build_dg(v, 64, 16).unwrap();
+            k.validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", v.label()));
+            crate::schedule::linearize(&k)
+                .unwrap_or_else(|e| panic!("{} schedule: {e}", v.label()));
+            assert_eq!(k.work_group_size(), 256, "{}", v.label());
+        }
+    }
+
+    #[test]
+    fn dg_madd_count_matches_formula() {
+        // madds (SG granularity) = nmatrices * nunit_nodes^2 * nelements / 32.
+        let k = build_dg(DgVariant::MPrefetch, 64, 16).unwrap();
+        let s = crate::stats::gather(&k, 32).unwrap();
+        let e: BTreeMap<String, i128> =
+            [("nelements".to_string(), 4096i128), ("nmatrices".to_string(), 3)]
+                .into_iter()
+                .collect();
+        let madd = s.op_count(DType::F32, "madd");
+        assert_eq!(madd.eval(&e), Rat::new(3 * 64 * 64 * 4096, 32));
+    }
+
+    #[test]
+    fn dg_transposed_layout_fixes_lid0_stride() {
+        let e = env(&[("nelements", 4096), ("nmatrices", 3)]);
+        let ei: BTreeMap<String, i128> =
+            e.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
+        let k3 = build_dg(DgVariant::MPrefetch, 64, 16).unwrap();
+        let k4 = build_dg(DgVariant::MPrefetchT, 64, 16).unwrap();
+        let stride_of = |k: &Kernel, tag: &str| -> i128 {
+            let s = crate::stats::gather(k, 32).unwrap();
+            let m = s
+                .mem_matching(|m| m.tag.as_deref() == Some(tag))
+                .next()
+                .unwrap()
+                .clone();
+            m.lstrides[0].eval(&ei).floor()
+        };
+        // u loads: stride 64 (node-major) vs 1 (transposed).
+        assert_eq!(stride_of(&k3, "dg_u_direct"), 64);
+        assert_eq!(stride_of(&k4, "dg_u_direct_t"), 1);
+        assert_eq!(stride_of(&k3, "dg_res"), 64);
+        assert_eq!(stride_of(&k4, "dg_res_t"), 1);
+    }
+
+    #[test]
+    fn dg_transposed_variant_is_fastest_everywhere() {
+        // Paper §8.4: "the last variant is the fastest in all our
+        // measurements".
+        let e = env(&[("nelements", 131072), ("nmatrices", 3)]);
+        for dev in crate::gpusim::fleet() {
+            let mut times = Vec::new();
+            for v in [
+                DgVariant::Plain,
+                DgVariant::UPrefetch,
+                DgVariant::MPrefetch,
+                DgVariant::MPrefetchT,
+            ] {
+                let k = build_dg(v, 64, 16).unwrap();
+                times.push((v.label(), simulate_time(&dev, &k, &e).unwrap()));
+            }
+            let fastest = times
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert_eq!(
+                fastest.0, "m_prefetch_t",
+                "{}: times {times:?}",
+                dev.id
+            );
+        }
+    }
+
+    #[test]
+    fn fdiff_tiles_and_occupancy_match_paper() {
+        let k16 = build_fdiff(16).unwrap();
+        // 16x16 tile: 256 threads, 14x14 interior, 60 idle in compute.
+        assert_eq!(k16.work_group_size(), 256);
+        let tile = &k16.arrays["u_fetch"];
+        assert_eq!(tile.shape[0].as_constant(), Some(Rat::int(16)));
+        let k18 = build_fdiff(18).unwrap();
+        assert_eq!(k18.work_group_size(), 324);
+        assert_eq!(
+            k18.arrays["u_fetch"].shape[0].as_constant(),
+            Some(Rat::int(18))
+        );
+        // Interior statement executes (lsize-2)^2 per group.
+        let s = crate::stats::gather(&k16, 32).unwrap();
+        let e: BTreeMap<String, i128> = [("n".to_string(), 2016i128)].into_iter().collect();
+        let store = s
+            .mem_matching(|m| m.tag.as_deref() == Some("fd16_res"))
+            .next()
+            .unwrap()
+            .clone();
+        assert_eq!(store.count_wi.eval(&e), Rat::int(2016 * 2016));
+    }
+
+    #[test]
+    fn fdiff_16_beats_18_mostly_and_amd_rejects_18() {
+        let e = env(&[("n", 4032)]);
+        let k16 = build_fdiff(16).unwrap();
+        let k18 = build_fdiff(18).unwrap();
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        assert!(simulate_time(&amd, &k18, &e).is_err());
+        assert!(simulate_time(&amd, &k16, &e).is_ok());
+        // On the Nvidia devices both run; 16x16 is (slightly) faster on
+        // most (the paper's observed ranking, one miss allowed).
+        let mut wins16 = 0;
+        for id in ["titan_v", "gtx_titan_x", "tesla_k40c", "tesla_c2070"] {
+            let d = device_by_id(id).unwrap();
+            let t16 = simulate_time(&d, &k16, &e).unwrap();
+            let t18 = simulate_time(&d, &k18, &e).unwrap();
+            if t16 < t18 {
+                wins16 += 1;
+            }
+        }
+        assert!(wins16 >= 3, "16x16 won only {wins16}/4");
+    }
+
+    #[test]
+    fn fdiff_bandwidth_fraction_plausible() {
+        // Paper: the 16x16 variant achieves 40-82% of peak bandwidth.
+        let k16 = build_fdiff(16).unwrap();
+        let e = env(&[("n", 8064)]);
+        for dev in crate::gpusim::fleet() {
+            let t = simulate_time(&dev, &k16, &e).unwrap();
+            // Useful traffic: n^2 loads (footprint) + n^2 stores.
+            let bytes = 2.0 * 8064f64 * 8064.0 * 4.0;
+            let frac = bytes / t / dev.peak_bw();
+            assert!(
+                (0.15..0.95).contains(&frac),
+                "{}: {:.0}% of peak bw",
+                dev.id,
+                frac * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! Derived generators: work-removal microbenchmarks (§7.1.1/7.1.2's
+//! "subtractive" approach — build the application kernel, then strip
+//! everything except one global access pattern) and a few simple
+//! additional application patterns (axpy, vecadd, matvec, 1-D
+//! stencil).
+
+use std::collections::BTreeMap;
+
+use super::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
+use super::{ints, strs, GeneratedKernel, Generator, VariantArgs};
+use crate::ir::{
+    Access, AffExpr, ArrayDecl, DType, Expr, Kernel, LhsRef, Stmt,
+};
+use crate::polyhedral::{LoopExtent, NestedDomain, QPoly};
+use crate::transform::remove_work::{remove_work, RemoveSpec};
+use crate::transform::{assume, split_iname, tag_inames};
+
+fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Isolated matmul global-load patterns (the paper's running §7.1.1
+/// example): variants `pf_a`, `pf_b`, `nopf_a`, `nopf_b`.
+fn gen_gmem_from_matmul(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let variant = args.get("variant")?;
+    let n = args.get_i64("n")?;
+    let (prefetch, keep, remove_tag) = match variant {
+        "pf_a" => (true, "mm_pf_a", "mm_pf_b"),
+        "pf_b" => (true, "mm_pf_b", "mm_pf_a"),
+        "nopf_a" => (false, "mm_nopf_a", "mm_nopf_b"),
+        "nopf_b" => (false, "mm_nopf_b", "mm_nopf_a"),
+        other => return Err(format!("unknown matmul gmem variant '{other}'")),
+    };
+    let _ = keep;
+    let app = build_matmul(DType::F32, prefetch, 16)?;
+    let spec = RemoveSpec {
+        remove_arrays: vec!["c".into()],
+        remove_tags: vec![remove_tag.into()],
+    };
+    let mut kernel = remove_work(&app, &spec)?;
+    kernel.name = format!("gmem_mm_{variant}");
+    Ok(GeneratedKernel {
+        kernel,
+        generator: "gmem_from_matmul".into(),
+        args: args.clone(),
+        env: env(&[("n", n)]),
+    })
+}
+
+/// Isolated DG global access patterns (the 11 patterns of Fig. 6b are
+/// drawn from these plus the matmul/fdiff families).
+fn gen_gmem_from_dg(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let pattern = args.get("pattern")?;
+    let nel = args.get_i64("nelements")?;
+    let (variant, remove): (DgVariant, Vec<&str>) = match pattern {
+        "plain_u" => (DgVariant::Plain, vec!["diff_mat", "res"]),
+        "plain_dm" => (DgVariant::Plain, vec!["u", "res"]),
+        "upf_u" => (DgVariant::UPrefetch, vec!["diff_mat", "res"]),
+        "upf_dm" => (DgVariant::UPrefetch, vec!["u", "res"]),
+        "mpf_dm" => (DgVariant::MPrefetch, vec!["u", "res"]),
+        "mpf_u" => (DgVariant::MPrefetch, vec!["diff_mat", "res"]),
+        "t_u" => (DgVariant::MPrefetchT, vec!["diff_mat", "res"]),
+        "res_store" => (DgVariant::MPrefetch, vec!["diff_mat"]),
+        "t_res_store" => (DgVariant::MPrefetchT, vec!["diff_mat"]),
+        other => return Err(format!("unknown DG gmem pattern '{other}'")),
+    };
+    let app = build_dg(variant, 64, 16)?;
+    let mut kernel = remove_work(&app, &RemoveSpec::arrays(&remove))?;
+    kernel.name = format!("gmem_dg_{pattern}");
+    Ok(GeneratedKernel {
+        kernel,
+        generator: "gmem_from_dg".into(),
+        args: args.clone(),
+        env: env(&[("nelements", nel), ("nmatrices", 3)]),
+    })
+}
+
+/// Isolated stencil-tile load pattern for both work-group sizes.
+fn gen_gmem_from_fdiff(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    let lsize = args.get_i64("lsize")?;
+    let n = args.get_i64("n")?;
+    let app = build_fdiff(lsize)?;
+    let mut kernel = remove_work(&app, &RemoveSpec::arrays(&["res"]))?;
+    kernel.name = format!("gmem_fdiff_{lsize}");
+    Ok(GeneratedKernel {
+        kernel,
+        generator: "gmem_from_fdiff".into(),
+        args: args.clone(),
+        env: env(&[("n", n)]),
+    })
+}
+
+/// 1-D grid helper: n work-items in 256-wide groups (l.0 only).
+fn grid_1d(name: &str) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n)]);
+    let knl = Kernel::new(name, &["n"], dom);
+    let knl = assume(&knl, "n >= 256 and n % 256 = 0")?;
+    Ok(knl)
+}
+
+/// `y[i] = 2*x[i] + y[i]` — one madd, two loads, one store.
+pub fn build_axpy(dtype: DType) -> Result<Kernel, String> {
+    let mut knl = grid_1d("axpy")?;
+    let n = QPoly::var("n");
+    knl.add_array(ArrayDecl::global("x", dtype, vec![n.clone()]));
+    knl.add_array(ArrayDecl::global("y", dtype, vec![n]));
+    knl.add_stmt(Stmt::new(
+        "s",
+        LhsRef::Array(Access::tagged("y", "yST", vec![AffExpr::var("i")])),
+        Expr::add(
+            Expr::load(Access::tagged("y", "yLD", vec![AffExpr::var("i")])),
+            Expr::mul(
+                Expr::fconst(2.0),
+                Expr::load(Access::tagged("x", "xLD", vec![AffExpr::var("i")])),
+            ),
+        ),
+        &["i"],
+    ));
+    let knl = split_iname(&knl, "i", 256)?;
+    tag_inames(&knl, "i_out:g.0, i_in:l.0")
+}
+
+/// `z[i] = x[i] + y[i]`.
+pub fn build_vecadd(dtype: DType) -> Result<Kernel, String> {
+    let mut knl = grid_1d("vecadd")?;
+    let n = QPoly::var("n");
+    for a in ["x", "y", "z"] {
+        knl.add_array(ArrayDecl::global(a, dtype, vec![n.clone()]));
+    }
+    knl.add_stmt(Stmt::new(
+        "s",
+        LhsRef::Array(Access::new("z", vec![AffExpr::var("i")])),
+        Expr::add(
+            Expr::load(Access::new("x", vec![AffExpr::var("i")])),
+            Expr::load(Access::new("y", vec![AffExpr::var("i")])),
+        ),
+        &["i"],
+    ));
+    let knl = split_iname(&knl, "i", 256)?;
+    tag_inames(&knl, "i_out:g.0, i_in:l.0")
+}
+
+/// `y[i] = Σ_j A[i,j] * x[j]` — a row-major matvec: the A loads are
+/// lid-strided by n (uncoalesced), x is uniform.
+pub fn build_matvec(dtype: DType) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("i", n.clone()),
+        LoopExtent::zero_to("j", n.clone()),
+    ]);
+    let mut knl = Kernel::new("matvec", &["n"], dom);
+    knl.add_array(ArrayDecl::global("amat", dtype, vec![n.clone(), n.clone()]));
+    knl.add_array(ArrayDecl::global("x", dtype, vec![n.clone()]));
+    knl.add_array(ArrayDecl::global("y", dtype, vec![n]));
+    knl.add_temp("acc", dtype);
+    knl.add_stmt(Stmt::new(
+        "init",
+        LhsRef::Temp("acc".into()),
+        Expr::fconst(0.0),
+        &["i"],
+    ));
+    knl.add_stmt(
+        Stmt::new(
+            "upd",
+            LhsRef::Temp("acc".into()),
+            Expr::add(
+                Expr::temp("acc"),
+                Expr::mul(
+                    Expr::load(Access::tagged(
+                        "amat",
+                        "aLD",
+                        vec![AffExpr::var("i"), AffExpr::var("j")],
+                    )),
+                    Expr::load(Access::tagged("x", "xLD", vec![AffExpr::var("j")])),
+                ),
+            ),
+            &["i", "j"],
+        )
+        .with_deps(&["init"]),
+    );
+    knl.add_stmt(
+        Stmt::new(
+            "store",
+            LhsRef::Array(Access::new("y", vec![AffExpr::var("i")])),
+            Expr::temp("acc"),
+            &["i"],
+        )
+        .with_deps(&["upd"]),
+    );
+    let knl = assume(&knl, "n >= 256 and n % 256 = 0")?;
+    let knl = split_iname(&knl, "i", 256)?;
+    tag_inames(&knl, "i_out:g.0, i_in:l.0")
+}
+
+/// 1-D three-point stencil with bounding-box prefetch.
+pub fn build_stencil1d(dtype: DType) -> Result<Kernel, String> {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+    let mut knl = Kernel::new("stencil1d_3pt", &["n"], dom);
+    knl.add_array(ArrayDecl::global(
+        "u",
+        dtype,
+        vec![&n + &QPoly::int(2)],
+    ));
+    knl.add_array(ArrayDecl::global("res", dtype, vec![n]));
+    let u = |c: i64| {
+        Expr::load(Access::tagged(
+            "u",
+            "uLD",
+            vec![AffExpr::var("i").plus_cst(c)],
+        ))
+    };
+    knl.add_stmt(Stmt::new(
+        "s",
+        LhsRef::Array(Access::new("res", vec![AffExpr::var("i")])),
+        Expr::add(Expr::add(u(0), u(1)), u(2)),
+        &["i"],
+    ));
+    let knl = assume(&knl, "n >= 254 and n % 254 = 0")?;
+    let knl = split_iname(&knl, "i", 254)?;
+    let knl = tag_inames(&knl, "i_out:g.0, i_in:l.0")?;
+    crate::transform::add_prefetch(&knl, "u", &["i_in"], true)
+}
+
+fn gen_axpy(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    Ok(GeneratedKernel {
+        kernel: build_axpy(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?,
+        generator: "axpy".into(),
+        args: args.clone(),
+        env: env(&[("n", args.get_i64("n")?)]),
+    })
+}
+
+fn gen_vecadd(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    Ok(GeneratedKernel {
+        kernel: build_vecadd(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?,
+        generator: "vecadd".into(),
+        args: args.clone(),
+        env: env(&[("n", args.get_i64("n")?)]),
+    })
+}
+
+fn gen_matvec(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    Ok(GeneratedKernel {
+        kernel: build_matvec(DType::F32)?,
+        generator: "matvec".into(),
+        args: args.clone(),
+        env: env(&[("n", args.get_i64("n")?)]),
+    })
+}
+
+fn gen_stencil1d(args: &VariantArgs) -> Result<GeneratedKernel, String> {
+    Ok(GeneratedKernel {
+        kernel: build_stencil1d(DType::F32)?,
+        generator: "stencil1d_3pt".into(),
+        args: args.clone(),
+        env: env(&[("n", args.get_i64("n")?)]),
+    })
+}
+
+/// Derived + extra generators.
+pub fn generators() -> Vec<Generator> {
+    vec![
+        Generator {
+            name: "gmem_from_matmul",
+            tags: &["gmem_from_matmul", "gmem_workrm", "matmul", "micro"],
+            arg_domains: vec![
+                ("variant", strs(&["pf_a", "pf_b", "nopf_a", "nopf_b"])),
+                ("n", ints(&[1024, 1536, 2048, 2560, 3072, 3584])),
+            ],
+            build: gen_gmem_from_matmul,
+        },
+        Generator {
+            name: "gmem_from_dg",
+            tags: &["gmem_from_dg", "gmem_workrm", "dg", "micro"],
+            arg_domains: vec![
+                (
+                    "pattern",
+                    strs(&[
+                        "plain_u",
+                        "plain_dm",
+                        "upf_u",
+                        "upf_dm",
+                        "mpf_dm",
+                        "mpf_u",
+                        "t_u",
+                        "res_store",
+                        "t_res_store",
+                    ]),
+                ),
+                (
+                    "nelements",
+                    ints(&[32768, 65536, 131072, 262144, 524288]),
+                ),
+            ],
+            build: gen_gmem_from_dg,
+        },
+        Generator {
+            name: "gmem_from_fdiff",
+            tags: &["gmem_from_fdiff", "gmem_workrm", "finite_diff", "micro"],
+            arg_domains: vec![
+                ("lsize", ints(&[16, 18])),
+                ("n", ints(&[2016, 4032, 6048, 8064])),
+            ],
+            build: gen_gmem_from_fdiff,
+        },
+        Generator {
+            name: "axpy",
+            tags: &["axpy", "blas1", "app"],
+            arg_domains: vec![
+                ("dtype", strs(&["float32", "float64"])),
+                ("n", ints(&[1048576, 4194304, 16777216])),
+            ],
+            build: gen_axpy,
+        },
+        Generator {
+            name: "vecadd",
+            tags: &["vecadd", "blas1", "app"],
+            arg_domains: vec![
+                ("dtype", strs(&["float32", "float64"])),
+                ("n", ints(&[1048576, 4194304, 16777216])),
+            ],
+            build: gen_vecadd,
+        },
+        Generator {
+            name: "matvec",
+            tags: &["matvec", "blas2", "app"],
+            arg_domains: vec![("n", ints(&[2048, 4096, 8192]))],
+            build: gen_matvec,
+        },
+        Generator {
+            name: "stencil1d_3pt",
+            tags: &["stencil1d_3pt", "stencil", "app"],
+            arg_domains: vec![("n", ints(&[1048064, 4194304 - 4194304 % 254]))],
+            build: gen_stencil1d,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::MemScope;
+    use crate::stats::Direction;
+    use crate::util::Rat;
+
+    fn ienv(pairs: &[(&str, i128)]) -> BTreeMap<String, i128> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn matmul_b_pattern_microbenchmark_preserves_pattern() {
+        let mut args = VariantArgs::default();
+        args.map.insert("variant".into(), "pf_b".into());
+        args.map.insert("n".into(), "2048".into());
+        let g = gen_gmem_from_matmul(&args).unwrap();
+        let s = crate::stats::gather(&g.kernel, 32).unwrap();
+        let e = ienv(&[("n", 2048)]);
+        // Exactly one kept global load (the b pattern), unchanged.
+        let loads: Vec<_> = s
+            .mem_matching(|m| {
+                m.scope == MemScope::Global && m.direction == Direction::Load
+            })
+            .collect();
+        assert_eq!(loads.len(), 1);
+        let b = loads[0];
+        assert_eq!(b.tag.as_deref(), Some("mm_pf_b"));
+        assert_eq!(b.lstrides[0].eval(&e), Rat::int(1));
+        assert_eq!(b.gstrides[0].eval(&e), Rat::int(16));
+        // No on-chip work left.
+        assert!(s.ops.iter().all(|o| o.op == "add"), "{:?}", s.ops);
+        assert!(s
+            .mem_matching(|m| m.scope == MemScope::Local)
+            .next()
+            .is_none());
+    }
+
+    #[test]
+    fn dg_patterns_all_build() {
+        for pattern in [
+            "plain_u",
+            "plain_dm",
+            "upf_u",
+            "upf_dm",
+            "mpf_dm",
+            "mpf_u",
+            "t_u",
+            "res_store",
+            "t_res_store",
+        ] {
+            let mut args = VariantArgs::default();
+            args.map.insert("pattern".into(), pattern.into());
+            args.map.insert("nelements".into(), "65536".into());
+            let g = gen_gmem_from_dg(&args)
+                .unwrap_or_else(|e| panic!("{pattern}: {e}"));
+            g.kernel
+                .validate()
+                .unwrap_or_else(|e| panic!("{pattern}: {e}"));
+            crate::stats::gather(&g.kernel, 32)
+                .unwrap_or_else(|e| panic!("{pattern} stats: {e}"));
+        }
+    }
+
+    #[test]
+    fn axpy_counts() {
+        let k = build_axpy(DType::F32).unwrap();
+        let s = crate::stats::gather(&k, 32).unwrap();
+        let e = ienv(&[("n", 1048576)]);
+        assert_eq!(
+            s.op_count(DType::F32, "madd").eval(&e),
+            Rat::new(1048576, 32)
+        );
+        let stores: f64 = s
+            .mem_matching(|m| m.direction == Direction::Store)
+            .map(|m| m.count_at_granularity(32).eval_f64(&e))
+            .sum();
+        assert_eq!(stores, 1048576.0);
+    }
+
+    #[test]
+    fn matvec_has_uniform_x_loads() {
+        let k = build_matvec(DType::F32).unwrap();
+        let s = crate::stats::gather(&k, 32).unwrap();
+        let x = s
+            .mem_matching(|m| m.tag.as_deref() == Some("xLD"))
+            .next()
+            .unwrap();
+        assert_eq!(x.granularity, crate::stats::Granularity::SubGroup);
+        let a = s
+            .mem_matching(|m| m.tag.as_deref() == Some("aLD"))
+            .next()
+            .unwrap();
+        let e = ienv(&[("n", 2048)]);
+        assert_eq!(a.lstrides[0].eval(&e), Rat::int(2048));
+    }
+
+    #[test]
+    fn fdiff_microbench_keeps_halo_footprint() {
+        let mut args = VariantArgs::default();
+        args.map.insert("lsize".into(), "16".into());
+        args.map.insert("n".into(), "2016".into());
+        let g = gen_gmem_from_fdiff(&args).unwrap();
+        let s = crate::stats::gather(&g.kernel, 32).unwrap();
+        let loads: Vec<_> = s
+            .mem_matching(|m| {
+                m.scope == MemScope::Global
+                    && m.direction == Direction::Load
+                    && m.array == "u"
+            })
+            .collect();
+        assert_eq!(loads.len(), 1);
+        // One fetch per work-item: (n/14)^2 groups * 256 threads.
+        let e = ienv(&[("n", 2016)]);
+        assert_eq!(
+            loads[0].count_wi.eval(&e),
+            Rat::int((2016 / 14) * (2016 / 14) * 256)
+        );
+    }
+}

@@ -1,0 +1,331 @@
+//! UiPiCK — the parameterized collection of measurement-kernel
+//! generators (paper Section 7.1).
+//!
+//! Each [`Generator`] owns a set of *generator filter tags*, a set of
+//! per-argument allowable values, and a build function.  Users select
+//! generators with generator filter tags under one of four
+//! [`MatchCondition`]s, restrict argument domains with
+//! `argument:value[,value...]` variant filter tags, and receive one
+//! kernel per element of the Cartesian product of the remaining
+//! allowable values — exactly the paper's §7.1 interface:
+//!
+//! ```no_run
+//! use perflex::uipick::{KernelCollection, MatchCondition};
+//! let knls = KernelCollection::all()
+//!     .generate_kernels(&[
+//!         "matmul_sq", "dtype:float32", "prefetch:True",
+//!         "lsize_0:16", "lsize_1:16", "groups_fit:True",
+//!         "n:2048,2560",
+//!     ])
+//!     .unwrap();
+//! assert_eq!(knls.len(), 2); // one per n
+//! # let _ = MatchCondition::Superset;
+//! ```
+
+pub mod apps;
+pub mod derived;
+pub mod micro;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::ir::Kernel;
+
+/// Build-function argument set: `argument -> chosen value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VariantArgs {
+    pub map: BTreeMap<String, String>,
+}
+
+impl VariantArgs {
+    pub fn get(&self, key: &str) -> Result<&str, String> {
+        self.map
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| format!("missing argument '{key}'"))
+    }
+
+    pub fn get_i64(&self, key: &str) -> Result<i64, String> {
+        self.get(key)?
+            .parse()
+            .map_err(|_| format!("argument '{key}' is not an integer"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool, String> {
+        match self.get(key)? {
+            "True" | "true" | "1" => Ok(true),
+            "False" | "false" | "0" => Ok(false),
+            other => Err(format!("argument '{key}'={other} is not a boolean")),
+        }
+    }
+}
+
+/// A kernel produced by a generator, with the concrete problem sizes
+/// it should be measured/evaluated at.
+#[derive(Clone, Debug)]
+pub struct GeneratedKernel {
+    pub kernel: Kernel,
+    pub generator: String,
+    pub args: VariantArgs,
+    /// Values for the kernel's size parameters.
+    pub env: BTreeMap<String, i64>,
+}
+
+/// A kernel creation function with its tag/argument metadata.
+pub struct Generator {
+    pub name: &'static str,
+    /// Generator filter tags (single-value).
+    pub tags: &'static [&'static str],
+    /// Allowable values per argument (the Cartesian-product domains).
+    pub arg_domains: Vec<(&'static str, Vec<String>)>,
+    /// Build one variant.
+    pub build: fn(&VariantArgs) -> Result<GeneratedKernel, String>,
+}
+
+impl Generator {
+    fn tag_set(&self) -> BTreeSet<&str> {
+        self.tags.iter().copied().collect()
+    }
+}
+
+/// The paper's four generator match conditions (§7.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchCondition {
+    /// Generator's tag set identical to the user tags.
+    Identical,
+    /// Generator's tag set ⊆ user tags.
+    Subset,
+    /// Generator's tag set ⊇ user tags (default).
+    Superset,
+    /// Non-empty intersection.
+    Intersect,
+}
+
+/// A collection of generators with the tag-driven filtering interface.
+pub struct KernelCollection {
+    pub generators: Vec<Generator>,
+}
+
+impl KernelCollection {
+    /// All built-in generators (`uipick.ALL_GENERATORS`).
+    pub fn all() -> KernelCollection {
+        let mut generators = Vec::new();
+        generators.extend(apps::generators());
+        generators.extend(micro::generators());
+        generators.extend(derived::generators());
+        KernelCollection { generators }
+    }
+
+    pub fn generator_names(&self) -> Vec<&'static str> {
+        self.generators.iter().map(|g| g.name).collect()
+    }
+
+    /// Default match condition (3): superset.
+    pub fn generate_kernels(
+        &self,
+        filter_tags: &[&str],
+    ) -> Result<Vec<GeneratedKernel>, String> {
+        self.generate_kernels_cond(filter_tags, MatchCondition::Superset)
+    }
+
+    /// Split user tags into generator tags (no colon) and variant
+    /// restrictions (`argument:value[,value...]`), select matching
+    /// generators, and emit the Cartesian product of surviving
+    /// argument values.
+    pub fn generate_kernels_cond(
+        &self,
+        filter_tags: &[&str],
+        cond: MatchCondition,
+    ) -> Result<Vec<GeneratedKernel>, String> {
+        let mut gen_tags: BTreeSet<&str> = BTreeSet::new();
+        let mut restrictions: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+        for t in filter_tags {
+            match t.split_once(':') {
+                None => {
+                    gen_tags.insert(*t);
+                }
+                Some((arg, values)) => {
+                    restrictions.insert(arg, values.split(',').collect());
+                }
+            }
+        }
+
+        let mut out = Vec::new();
+        for g in &self.generators {
+            let gs = g.tag_set();
+            let selected = match cond {
+                MatchCondition::Identical => gs == gen_tags.clone(),
+                MatchCondition::Subset => gs.is_subset(&gen_tags),
+                MatchCondition::Superset => gs.is_superset(&gen_tags),
+                MatchCondition::Intersect => gs.intersection(&gen_tags).next().is_some(),
+            };
+            if !selected {
+                continue;
+            }
+
+            // Restrict argument domains.
+            let mut domains: Vec<(&str, Vec<String>)> = Vec::new();
+            let mut impossible = false;
+            for (arg, allowed) in &g.arg_domains {
+                let dom: Vec<String> = match restrictions.get(arg) {
+                    Some(vals) => {
+                        let keep: Vec<String> = allowed
+                            .iter()
+                            .filter(|a| vals.contains(&a.as_str()))
+                            .cloned()
+                            .collect();
+                        // Values outside the allowable set are ignored
+                        // (restriction to a subset, per the paper).
+                        keep
+                    }
+                    None => allowed.clone(),
+                };
+                if dom.is_empty() {
+                    impossible = true;
+                    break;
+                }
+                domains.push((arg, dom));
+            }
+            if impossible {
+                continue;
+            }
+
+            // Cartesian product.
+            let mut combos: Vec<VariantArgs> = vec![VariantArgs::default()];
+            for (arg, dom) in &domains {
+                let mut next = Vec::with_capacity(combos.len() * dom.len());
+                for c in &combos {
+                    for v in dom {
+                        let mut c2 = c.clone();
+                        c2.map.insert(arg.to_string(), v.clone());
+                        next.push(c2);
+                    }
+                }
+                combos = next;
+            }
+            for args in combos {
+                out.push((g.build)(&args)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Helper for arg domains: integer list.
+pub(crate) fn ints(vals: &[i64]) -> Vec<String> {
+    vals.iter().map(|v| v.to_string()).collect()
+}
+
+/// Helper for arg domains: string list.
+pub(crate) fn strs(vals: &[&str]) -> Vec<String> {
+    vals.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collection_has_at_least_20_generators() {
+        let c = KernelCollection::all();
+        assert!(
+            c.generators.len() >= 20,
+            "only {} generators: {:?}",
+            c.generators.len(),
+            c.generator_names()
+        );
+    }
+
+    #[test]
+    fn paper_example_produces_four_kernels() {
+        // §2.2: four values of n, everything else pinned -> 4 kernels.
+        let knls = KernelCollection::all()
+            .generate_kernels(&[
+                "matmul_sq",
+                "dtype:float32",
+                "prefetch:True",
+                "lsize_0:16",
+                "lsize_1:16",
+                "groups_fit:True",
+                "n:2048,2560,3072,3584",
+            ])
+            .unwrap();
+        assert_eq!(knls.len(), 4);
+        for k in &knls {
+            assert_eq!(k.generator, "matmul_sq");
+            assert!(k.env.contains_key("n"));
+            assert_eq!(k.kernel.work_group_size(), 256);
+        }
+    }
+
+    #[test]
+    fn omitting_prefetch_doubles_variants() {
+        // §7.1: omit prefetch:True -> one PF and one non-PF per size.
+        let knls = KernelCollection::all()
+            .generate_kernels(&[
+                "matmul_sq",
+                "dtype:float32",
+                "lsize_0:16",
+                "lsize_1:16",
+                "groups_fit:True",
+                "n:2048,2560,3072,3584",
+            ])
+            .unwrap();
+        assert_eq!(knls.len(), 8);
+    }
+
+    #[test]
+    fn conflicting_generator_tags_select_nothing_by_default() {
+        // §7.1: superset condition + two app tags -> no generator has
+        // both.
+        let knls = KernelCollection::all()
+            .generate_kernels(&["matmul_sq", "finite_diff", "n:2016"])
+            .unwrap();
+        assert!(knls.is_empty());
+    }
+
+    #[test]
+    fn intersect_condition_selects_both() {
+        let knls = KernelCollection::all()
+            .generate_kernels_cond(
+                &[
+                    "matmul_sq",
+                    "finite_diff",
+                    "n:2016,2048",
+                    "dtype:float32",
+                    "prefetch:True",
+                    "lsize_0:16",
+                    "lsize_1:16",
+                    "groups_fit:True",
+                    "lsize:16",
+                ],
+                MatchCondition::Intersect,
+            )
+            .unwrap();
+        let gens: BTreeSet<&str> =
+            knls.iter().map(|k| k.generator.as_str()).collect();
+        assert!(gens.contains("matmul_sq"), "{gens:?}");
+        assert!(gens.contains("fdiff_2d5pt"), "{gens:?}");
+    }
+
+    #[test]
+    fn all_generators_build_one_default_variant() {
+        // Every generator must produce a valid, schedulable kernel for
+        // its first allowable value of each argument.
+        let c = KernelCollection::all();
+        for g in &c.generators {
+            let mut args = VariantArgs::default();
+            for (arg, dom) in &g.arg_domains {
+                args.map.insert(arg.to_string(), dom[0].clone());
+            }
+            let k = (g.build)(&args)
+                .unwrap_or_else(|e| panic!("{} failed to build: {e}", g.name));
+            k.kernel
+                .validate()
+                .unwrap_or_else(|e| panic!("{} invalid: {e}", g.name));
+            crate::schedule::linearize(&k.kernel)
+                .unwrap_or_else(|e| panic!("{} unschedulable: {e}", g.name));
+            crate::stats::gather(&k.kernel, 32)
+                .unwrap_or_else(|e| panic!("{} stats failed: {e}", g.name));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: exact rational arithmetic, deterministic RNG,
+//! minimal JSON reader/writer, and a seeded property-testing helper.
+//!
+//! These exist because the offline crate set contains only the `xla`
+//! dependency closure (see Cargo.toml header note): no `serde`, no
+//! `rand`, no `proptest`.
+
+pub mod json;
+pub mod prop;
+pub mod rat;
+pub mod rng;
+
+pub use rat::Rat;
+pub use rng::Rng;

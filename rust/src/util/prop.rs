@@ -1,0 +1,81 @@
+//! Seeded property-testing helper (offline substitute for `proptest`).
+//!
+//! `check` runs a property over `cases` deterministically-seeded RNGs and
+//! reports the failing seed so a failure can be replayed as a unit test:
+//!
+//! ```no_run
+//! use perflex::util::prop;
+//! prop::check("add commutes", 64, |rng| {
+//!     let (a, b) = (rng.int_in(-100, 100), rng.int_in(-100, 100));
+//!     prop::ensure(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property outcome: `Ok(())` or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Helper for readable property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert approximate equality with relative tolerance.
+pub fn ensure_close(a: f64, b: f64, rtol: f64, what: &str) -> PropResult {
+    let scale = a.abs().max(b.abs()).max(1e-300);
+    if (a - b).abs() <= rtol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (rtol {rtol})"))
+    }
+}
+
+/// Run `body` for `cases` seeds; panic with the seed on first failure.
+pub fn check(name: &str, cases: u64, mut body: impl FnMut(&mut Rng) -> PropResult) {
+    for case in 0..cases {
+        // Mix the property name into the seed stream so distinct
+        // properties explore distinct inputs.
+        let seed = name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x100000001b3)
+            })
+            .wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivially true", 32, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 4, |_| ensure(false, "nope"));
+    }
+
+    #[test]
+    fn ensure_close_tolerance() {
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(ensure_close(1.0, 1.1, 1e-9, "x").is_err());
+    }
+}

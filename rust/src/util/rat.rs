@@ -1,0 +1,237 @@
+//! Exact rational arithmetic over `i128`.
+//!
+//! Quasi-polynomial coefficients (polyhedral point counts, Faulhaber
+//! summation) must be exact: counts like `n^3/16` arise from summing
+//! over split loops and any floating-point drift would corrupt the
+//! operation counts that performance models are built from.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// A rational number `num/den` in lowest terms with `den > 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rat {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Rat {
+    pub const ZERO: Rat = Rat { num: 0, den: 1 };
+    pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+    /// Create `num/den`, normalizing sign and common factors.
+    ///
+    /// Panics on `den == 0`.
+    pub fn new(num: i128, den: i128) -> Rat {
+        assert!(den != 0, "rational with zero denominator");
+        if num == 0 {
+            return Rat::ZERO;
+        }
+        let sign = if (num < 0) ^ (den < 0) { -1 } else { 1 };
+        let (num, den) = (num.abs(), den.abs());
+        let g = gcd(num, den);
+        Rat {
+            num: sign * (num / g),
+            den: den / g,
+        }
+    }
+
+    pub fn int(n: i128) -> Rat {
+        Rat { num: n, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// Exact integer value, if integral.
+    pub fn as_integer(&self) -> Option<i128> {
+        self.is_integer().then_some(self.num)
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// Floor to integer (round toward negative infinity).
+    pub fn floor(&self) -> i128 {
+        self.num.div_euclid(self.den)
+    }
+
+    pub fn abs(&self) -> Rat {
+        Rat {
+            num: self.num.abs(),
+            den: self.den,
+        }
+    }
+
+    pub fn pow(&self, k: u32) -> Rat {
+        let mut out = Rat::ONE;
+        for _ in 0..k {
+            out = out * *self;
+        }
+        out
+    }
+
+    pub fn recip(&self) -> Rat {
+        assert!(self.num != 0, "reciprocal of zero");
+        Rat::new(self.den, self.num)
+    }
+}
+
+impl Add for Rat {
+    type Output = Rat;
+    fn add(self, o: Rat) -> Rat {
+        // Reduce before multiplying to delay overflow.
+        let g = gcd(self.den, o.den);
+        let lhs_scale = o.den / g;
+        let rhs_scale = self.den / g;
+        Rat::new(
+            self.num * lhs_scale + o.num * rhs_scale,
+            self.den * lhs_scale,
+        )
+    }
+}
+
+impl AddAssign for Rat {
+    fn add_assign(&mut self, o: Rat) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Rat {
+    type Output = Rat;
+    fn sub(self, o: Rat) -> Rat {
+        self + (-o)
+    }
+}
+
+impl Neg for Rat {
+    type Output = Rat;
+    fn neg(self) -> Rat {
+        Rat {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+}
+
+impl Mul for Rat {
+    type Output = Rat;
+    fn mul(self, o: Rat) -> Rat {
+        // Cross-reduce first.
+        let g1 = gcd(self.num, o.den);
+        let g2 = gcd(o.num, self.den);
+        Rat::new(
+            (self.num / g1) * (o.num / g2),
+            (self.den / g2) * (o.den / g1),
+        )
+    }
+}
+
+impl Div for Rat {
+    type Output = Rat;
+    fn div(self, o: Rat) -> Rat {
+        self * o.recip()
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, o: &Rat) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, o: &Rat) -> Ordering {
+        (self.num * o.den).cmp(&(o.num * self.den))
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl From<i64> for Rat {
+    fn from(n: i64) -> Rat {
+        Rat::int(n as i128)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization() {
+        assert_eq!(Rat::new(2, 4), Rat::new(1, 2));
+        assert_eq!(Rat::new(-2, -4), Rat::new(1, 2));
+        assert_eq!(Rat::new(2, -4), Rat::new(-1, 2));
+        assert_eq!(Rat::new(0, 7), Rat::ZERO);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rat::new(1, 3);
+        let b = Rat::new(1, 6);
+        assert_eq!(a + b, Rat::new(1, 2));
+        assert_eq!(a - b, Rat::new(1, 6));
+        assert_eq!(a * b, Rat::new(1, 18));
+        assert_eq!(a / b, Rat::int(2));
+    }
+
+    #[test]
+    fn floor_behaves_like_euclid() {
+        assert_eq!(Rat::new(7, 2).floor(), 3);
+        assert_eq!(Rat::new(-7, 2).floor(), -4);
+        assert_eq!(Rat::int(5).floor(), 5);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rat::new(1, 3) < Rat::new(1, 2));
+        assert!(Rat::new(-1, 2) < Rat::ZERO);
+    }
+
+    #[test]
+    fn pow_and_recip() {
+        assert_eq!(Rat::new(2, 3).pow(3), Rat::new(8, 27));
+        assert_eq!(Rat::new(2, 3).recip(), Rat::new(3, 2));
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration test: the AOT JAX/Pallas calibration path must agree
+//! with the native Rust evaluator, and both must calibrate a real
+//! measurement set from the simulated fleet.
+//!
+//! Requires `make artifacts` (skips gracefully if not built).
+
+use perflex::calibrate::{
+    gather_feature_values, FeatureData, LmBackend, LmOptions,
+};
+use perflex::gpusim::device_by_id;
+use perflex::model::{CostGroup, CostModel};
+use perflex::runtime::{
+    artifacts_available, fit_cost_model_aot, fit_cost_model_native, AotBackend,
+    Artifacts,
+};
+use perflex::uipick::KernelCollection;
+use perflex::util::Rng;
+
+fn synthetic_cost_model() -> CostModel {
+    CostModel::new("titan_v", true)
+        .term("launch", "f_sync_kernel_launch", CostGroup::Overhead)
+        .term("gmem", "f_mem_access_tag:patLD", CostGroup::Gmem)
+        .term("madd", "f_op_float32_madd", CostGroup::OnChip)
+}
+
+fn synthetic_data(seed: u64, rows: usize) -> FeatureData {
+    let cm = synthetic_cost_model();
+    let mut rng = Rng::new(seed);
+    let mut data = FeatureData {
+        feature_ids: cm.feature_columns(),
+        ..Default::default()
+    };
+    for _ in 0..rows {
+        let f: Vec<f64> = (0..3).map(|_| rng.uniform_in(0.3, 3.0)).collect();
+        // Ground truth: overlap model (scale-invariant switch) with
+        // known params.
+        let (o, a, b) = (0.05 * f[0], 0.8 * f[1], 0.5 * f[2]);
+        let u: f64 = a - b;
+        let s1 = ((18.0 * u / (a + b + 1e-30)).tanh() + 1.0) / 2.0;
+        data.rows.push(f);
+        data.outputs.push(o + b + u * s1);
+        data.labels.push("syn".into());
+    }
+    data
+}
+
+#[test]
+fn aot_backend_matches_native_backend_stepwise() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let artifacts = Artifacts::load().expect("artifacts load");
+    let cm = synthetic_cost_model();
+    let data = synthetic_data(11, 40);
+
+    let model = cm.to_model();
+    let names = cm.param_names();
+    let mut native = perflex::calibrate::NativeBackend::with_params(
+        &model,
+        &data,
+        names.clone(),
+    );
+    let mut aot = AotBackend::new(&artifacts, &cm, &data).expect("aot backend");
+
+    let p = vec![0.1, 0.5, 0.9, 10.0]; // 3 params + p_edge
+    for lam in [1e-3, 1e-1, 10.0] {
+        let (d_native, c_native) = native.step(&p, lam).unwrap();
+        let (d_aot, c_aot) = aot.step(&p, lam).unwrap();
+        assert!(
+            (c_native - c_aot).abs() <= 1e-9 * c_native.abs().max(1.0),
+            "cost mismatch: {c_native} vs {c_aot}"
+        );
+        for (dn, da) in d_native.iter().zip(&d_aot) {
+            assert!(
+                (dn - da).abs() <= 1e-6 * dn.abs().max(1e-9),
+                "delta mismatch at lam={lam}: {d_native:?} vs {d_aot:?}"
+            );
+        }
+    }
+    // Cost evaluation parity.
+    let c1 = native.cost(&p).unwrap();
+    let c2 = aot.cost(&p).unwrap();
+    assert!((c1 - c2).abs() <= 1e-9 * c1.max(1.0));
+}
+
+#[test]
+fn aot_and_native_fits_converge_to_same_solution() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let artifacts = Artifacts::load().expect("artifacts load");
+    let cm = synthetic_cost_model();
+    let data = synthetic_data(23, 60);
+    let opts = LmOptions::default();
+
+    let fit_aot = fit_cost_model_aot(&artifacts, &cm, &data, &opts).unwrap();
+    let fit_native = fit_cost_model_native(&cm, &data, &opts).unwrap();
+
+    assert!(fit_aot.residual < 1e-10, "aot residual {}", fit_aot.residual);
+    assert!(
+        fit_native.residual < 1e-10,
+        "native residual {}",
+        fit_native.residual
+    );
+    // Ground truth recovery by both paths.
+    for fit in [&fit_aot, &fit_native] {
+        assert!((fit.param("p_launch").unwrap() - 0.05).abs() < 1e-3);
+        assert!((fit.param("p_gmem").unwrap() - 0.8).abs() < 1e-3);
+        assert!((fit.param("p_madd").unwrap() - 0.5).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn aot_calibrates_real_measurements_from_the_fleet() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let artifacts = Artifacts::load().expect("artifacts load");
+    let dev = device_by_id("gtx_titan_x").unwrap();
+    let cm = CostModel::new("gtx_titan_x", false)
+        .term("launch", "f_sync_kernel_launch", CostGroup::Overhead)
+        .term("wg", "f_thread_groups", CostGroup::Overhead)
+        .term("gmem", "f_mem_access_tag:patLD", CostGroup::Gmem)
+        .term("gst", "f_mem_access_tag:outST", CostGroup::Gmem);
+    let knls = KernelCollection::all()
+        .generate_kernels(&[
+            "gmem_pattern",
+            "dtype:float32",
+            "lid_stride_0:1",
+            "lid_stride_1:16",
+            "n_arrays:1,2",
+            "nelements:1048576,4194304,8388608",
+        ])
+        .unwrap();
+    assert_eq!(knls.len(), 6);
+    let model = cm.to_model();
+    let mut data = gather_feature_values(&model, &knls, &dev).unwrap();
+    data.scale_features_by_output();
+    let fit = fit_cost_model_aot(&artifacts, &cm, &data, &LmOptions::default())
+        .unwrap();
+    // Scaled outputs are 1; a good fit has tiny residual per row.
+    let mse = fit.residual / data.len() as f64;
+    assert!(mse < 0.05, "poor fit: mse={mse} {fit:?}");
+}
