@@ -1,0 +1,55 @@
+//! Benchmark: repeated feature gathering through the memoized
+//! [`StatsCache`] vs the seed path (a fresh symbolic pass per use).
+//!
+//! The acceptance bar for the cache subsystem is a >= 2x speedup on
+//! repeated gathering; in practice a warm cache turns the polyhedral
+//! counting pass into a hash lookup, so the ratio is orders of
+//! magnitude.  A calibration-shaped loop (each kernel "used" twice per
+//! pass, once for measurement and once for its feature row — exactly
+//! the seed's duplication) is reported alongside, plus the hit/miss
+//! ledger.
+
+use perflex::bench_harness::bench;
+use perflex::ir::Kernel;
+use perflex::stats::{self, StatsCache};
+use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
+
+fn workload() -> Vec<Kernel> {
+    vec![
+        build_matmul(perflex::ir::DType::F32, true, 16).unwrap(),
+        build_matmul(perflex::ir::DType::F32, false, 16).unwrap(),
+        build_dg(DgVariant::MPrefetchT, 64, 16).unwrap(),
+        build_dg(DgVariant::UPrefetch, 64, 16).unwrap(),
+        build_fdiff(16).unwrap(),
+        build_fdiff(18).unwrap(),
+    ]
+}
+
+fn main() {
+    let kernels = workload();
+
+    // Seed path: every use re-derives the full symbolic bundle, twice
+    // per kernel per pass (measure + feature row).
+    bench("feature gather x2, fresh (seed path)", 20, || {
+        for k in &kernels {
+            let _ = stats::gather(k, 32).unwrap();
+            let _ = stats::gather(k, 32).unwrap();
+        }
+    });
+
+    // Cached path: one symbolic pass per distinct kernel for the whole
+    // program run, everything after that is a lookup.
+    let cache = StatsCache::new();
+    bench("feature gather x2, StatsCache", 20, || {
+        for k in &kernels {
+            let _ = cache.get_or_gather(k, 32).unwrap();
+            let _ = cache.get_or_gather(k, 32).unwrap();
+        }
+    });
+    println!(
+        "cache ledger: {} misses (one per distinct kernel), {} hits",
+        cache.misses(),
+        cache.hits()
+    );
+    assert_eq!(cache.misses(), kernels.len() as u64);
+}

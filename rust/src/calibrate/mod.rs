@@ -2,7 +2,12 @@
 //!
 //! Feature values are gathered for a measurement-kernel set, optionally
 //! scaled by the output (the paper's `scale_features_by_output`), and
-//! the model is fitted by Levenberg-Marquardt.  The LM *loop* lives
+//! the model is fitted by Levenberg-Marquardt.  Gathering goes through
+//! a [`StatsCache`] (the `_cached` variants accept a shared one), so a
+//! kernel's symbolic statistics are derived once and reused by both its
+//! simulated measurement and its feature row; a measurement set whose
+//! kernels are *all* skipped as unlaunchable yields an error rather
+//! than a silent zero-row "fit".  The LM *loop* lives
 //! here in Rust; the residual/Jacobian/step evaluation is a pluggable
 //! [`LmBackend`]:
 //!
@@ -15,13 +20,13 @@
 use std::collections::BTreeMap;
 
 use crate::features::FeatureSpec;
-use crate::gpusim::{measure, DeviceProfile};
+use crate::gpusim::{measure_with_cache, DeviceProfile};
 use crate::model::{Model, ModelExpr};
-use crate::stats;
+use crate::stats::StatsCache;
 use crate::uipick::GeneratedKernel;
 
 /// Feature values for a measurement-kernel set.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct FeatureData {
     /// Input-feature identifiers (column order).
     pub feature_ids: Vec<String>,
@@ -71,10 +76,25 @@ pub fn gather_feature_values(
 
 /// Like [`gather_feature_values`] but with an explicit feature-column
 /// order (the AOT backend requires the cost model's term order).
+/// Uses a private one-shot [`StatsCache`], so even a standalone call
+/// pays one symbolic pass per kernel instead of two.
 pub fn gather_features_by_ids(
     ids: Vec<String>,
     kernels: &[GeneratedKernel],
     device: &DeviceProfile,
+) -> Result<FeatureData, String> {
+    gather_features_by_ids_cached(ids, kernels, device, &StatsCache::new())
+}
+
+/// [`gather_features_by_ids`] through a shared [`StatsCache`]: each
+/// distinct (kernel, sub-group size) is symbolically counted at most
+/// once across measurement, feature evaluation, and any other caller
+/// sharing the cache (e.g. a whole multi-device experiment).
+pub fn gather_features_by_ids_cached(
+    ids: Vec<String>,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+    cache: &StatsCache,
 ) -> Result<FeatureData, String> {
     let specs: Vec<FeatureSpec> = ids
         .iter()
@@ -85,7 +105,18 @@ pub fn gather_features_by_ids(
         ..Default::default()
     };
     for gk in kernels {
-        let st = stats::gather(&gk.kernel, device.sub_group_size)?;
+        // Measure first: kernels a device cannot launch (e.g. 18x18
+        // work-groups on the AMD R9 Fury) are skipped, exactly as the
+        // paper had to, and the launchability check precedes all
+        // symbolic work — so skipped kernels no longer pay a full
+        // feature-evaluation pass for nothing.  Their exclusive
+        // features stay at the bound of 0.
+        let t = match measure_with_cache(device, &gk.kernel, &gk.env, cache) {
+            Ok(t) => t,
+            Err(e) if e.contains("CL_INVALID_WORK_GROUP_SIZE") => continue,
+            Err(e) => return Err(e),
+        };
+        let st = cache.get_or_gather(&gk.kernel, device.sub_group_size)?;
         let env: BTreeMap<String, i128> = gk
             .env
             .iter()
@@ -95,14 +126,6 @@ pub fn gather_features_by_ids(
             .iter()
             .map(|s| s.eval(&st, &env))
             .collect::<Result<_, _>>()?;
-        // Kernels a device cannot launch (e.g. 18x18 work-groups on the
-        // AMD R9 Fury) are skipped, exactly as the paper had to; their
-        // exclusive features stay at the bound of 0.
-        let t = match measure(device, &gk.kernel, &gk.env) {
-            Ok(t) => t,
-            Err(e) if e.contains("CL_INVALID_WORK_GROUP_SIZE") => continue,
-            Err(e) => return Err(e),
-        };
         data.rows.push(row);
         data.outputs.push(t);
         data.labels.push(format!(
@@ -113,6 +136,17 @@ pub fn gather_features_by_ids(
                 .map(|(k, v)| format!("{k}={v}"))
                 .collect::<Vec<_>>()
                 .join(",")
+        ));
+    }
+    if data.is_empty() {
+        // Fitting zero rows would "succeed" on garbage parameters; make
+        // the failure mode explicit instead.
+        return Err(format!(
+            "calibration data for device '{}' is empty: all {} measurement \
+             kernels were skipped (CL_INVALID_WORK_GROUP_SIZE) or none were \
+             provided; refusing to fit a model to zero rows",
+            device.id,
+            kernels.len()
         ));
     }
     Ok(data)
@@ -433,7 +467,21 @@ pub fn eval_with_kernel(
     env: &BTreeMap<String, i64>,
     sub_group_size: u64,
 ) -> Result<f64, String> {
-    let st = stats::gather(kernel, sub_group_size)?;
+    eval_with_kernel_cached(model, fit, kernel, env, sub_group_size, &StatsCache::new())
+}
+
+/// [`eval_with_kernel`] through a shared [`StatsCache`]: predicting the
+/// same kernel at many sizes (or for many variants of a sweep) pays the
+/// symbolic pass once and a `QPoly` evaluation per size.
+pub fn eval_with_kernel_cached(
+    model: &Model,
+    fit: &FitResult,
+    kernel: &crate::ir::Kernel,
+    env: &BTreeMap<String, i64>,
+    sub_group_size: u64,
+    cache: &StatsCache,
+) -> Result<f64, String> {
+    let st = cache.get_or_gather(kernel, sub_group_size)?;
     let ienv: BTreeMap<String, i128> =
         env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
     let mut feats = BTreeMap::new();
@@ -453,7 +501,7 @@ pub fn eval_with_kernel(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpusim::device_by_id;
+    use crate::gpusim::{device_by_id, measure};
     use crate::model::{CostGroup, CostModel};
     use crate::uipick::KernelCollection;
     use crate::util::prop;

@@ -1,21 +1,33 @@
 //! One harness per paper table/figure (Section 8 and the §2/§7.4
 //! demonstrations).
+//!
+//! Every `run_experiment` invocation owns one [`StatsCache`], threaded
+//! through measurement, feature gathering and prediction, so each
+//! distinct (kernel, sub-group size) is symbolically counted exactly
+//! once per run.  The per-device fleet loops of the multi-device
+//! experiments are embarrassingly parallel and run on scoped threads
+//! sharing that cache; results are merged in fleet order, so the
+//! reports are byte-identical to a sequential pass.  Model fits stay on
+//! the dispatching thread: the optional AOT artifact wraps a PJRT
+//! client that is not assumed thread-safe, and the fits are cheap next
+//! to the symbolic and measurement work anyway.
 
 use std::collections::BTreeMap;
 
 use super::expsets::{self, EvalCase};
 use super::report::{fmt_time, geomean, ExperimentReport, Prediction};
 use crate::calibrate::{
-    eval_with_kernel, gather_features_by_ids, FitResult, LmOptions,
+    eval_with_kernel_cached, gather_features_by_ids_cached, FitResult, LmOptions,
 };
 use crate::features::FeatureSpec;
-use crate::gpusim::{fleet, measure, DeviceProfile};
+use crate::gpusim::{fleet, measure_with_cache, DeviceProfile};
 use crate::ir::Kernel;
 use crate::model::{CostGroup, CostModel};
 use crate::runtime::{
     artifacts_available, fit_cost_model_aot, fit_cost_model_native, Artifacts,
 };
 use crate::stats;
+use crate::stats::StatsCache;
 use crate::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
 use crate::uipick::KernelCollection;
 
@@ -25,30 +37,77 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "table2", "table3", "all",
 ];
 
-/// Dispatch.
+/// Dispatch.  Creates the run's shared statistics cache.
 pub fn run_experiment(id: &str, use_aot: bool) -> Result<ExperimentReport, String> {
     let aot = if use_aot && artifacts_available() {
         Some(Artifacts::load()?)
     } else {
         None
     };
+    let cache = StatsCache::new();
+    dispatch_experiment(id, aot.as_ref(), &cache)
+}
+
+fn dispatch_experiment(
+    id: &str,
+    aot: Option<&Artifacts>,
+    cache: &StatsCache,
+) -> Result<ExperimentReport, String> {
     match id {
-        "fig1" => fig1_fig2(false),
-        "fig2" => fig1_fig2(true),
+        "fig1" => fig1_fig2(false, cache),
+        "fig2" => fig1_fig2(true, cache),
         "fig4" => fig4(),
-        "fig5" => fig5(aot.as_ref()),
+        "fig5" => fig5(aot, cache),
         "fig6" => fig6(),
-        "fig7" => fig7(aot.as_ref()),
-        "fig8" => fig8(aot.as_ref()),
-        "fig9" => fig9(aot.as_ref()),
-        "table1" => table1(),
+        "fig7" => fig7(aot, cache),
+        "fig8" => fig8(aot, cache),
+        "fig9" => fig9(aot, cache),
+        "table1" => table1(cache),
         "table2" => table2(),
-        "table3" => table3(aot.as_ref()),
-        "all" => all_experiments(aot.as_ref()),
+        "table3" => table3(aot, cache),
+        "all" => all_experiments(aot, cache),
         other => Err(format!(
             "unknown experiment '{other}'; known: {EXPERIMENT_IDS:?}"
         )),
     }
+}
+
+/// Fan `f` out over scoped threads, one per item, preserving item order
+/// in the results — merged report fragments come back deterministic, so
+/// parallel fleet runs render byte-identical to sequential ones.
+fn parallel_map<I, T, F>(items: &[I], f: F) -> Result<Vec<T>, String>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> Result<T, String> + Sync,
+{
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .iter()
+            .map(|item| s.spawn(move || f(item)))
+            .collect();
+        // Join every handle before reporting: short-circuiting on the
+        // first error would leave a possibly-panicked worker unjoined,
+        // and `thread::scope` aborts on unhandled worker panics.  Keep
+        // the panic payload — it carries the diagnostic (e.g. a Rat
+        // overflow message naming the offending arithmetic).
+        let joined: Vec<Result<T, String>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(res) => res,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| payload.downcast_ref::<&str>().copied())
+                        .unwrap_or("opaque panic payload");
+                    Err(format!("fleet worker thread panicked: {msg}"))
+                }
+            })
+            .collect();
+        joined.into_iter().collect()
+    })
 }
 
 /// Gather (and output-scale) a case's measurement data for one device.
@@ -57,10 +116,12 @@ pub fn run_experiment(id: &str, use_aot: bool) -> Result<ExperimentReport, Strin
 pub fn gather_case_data(
     case: &EvalCase,
     device: &DeviceProfile,
+    cache: &StatsCache,
 ) -> Result<crate::calibrate::FeatureData, String> {
     let cm = (case.model)(device.id, true);
     let kernels = expsets::generate_measurement_kernels(&(case.measurement_sets)())?;
-    let mut data = gather_features_by_ids(cm.feature_columns(), &kernels, device)?;
+    let mut data =
+        gather_features_by_ids_cached(cm.feature_columns(), &kernels, device, cache)?;
     data.scale_features_by_output();
     Ok(data)
 }
@@ -88,8 +149,9 @@ pub fn calibrate_case(
     device: &DeviceProfile,
     nonlinear: bool,
     aot: Option<&Artifacts>,
+    cache: &StatsCache,
 ) -> Result<(CostModel, FitResult), String> {
-    let data = gather_case_data(case, device)?;
+    let data = gather_case_data(case, device, cache)?;
     fit_case(case, device, &data, nonlinear, aot)
 }
 
@@ -99,8 +161,16 @@ fn predict(
     kernel: &Kernel,
     env: &BTreeMap<String, i64>,
     device: &DeviceProfile,
+    cache: &StatsCache,
 ) -> Result<f64, String> {
-    eval_with_kernel(&cm.to_model(), fit, kernel, env, device.sub_group_size)
+    eval_with_kernel_cached(
+        &cm.to_model(),
+        fit,
+        kernel,
+        env,
+        device.sub_group_size,
+        cache,
+    )
 }
 
 fn env1(k: &str, v: i64) -> BTreeMap<String, i64> {
@@ -110,7 +180,7 @@ fn env1(k: &str, v: i64) -> BTreeMap<String, i64> {
 // ----------------------------------------------------------------------
 // Figures 1 & 2 — the §2 illustrative example on the "GTX Titan X".
 // ----------------------------------------------------------------------
-fn fig1_fig2(madd_component: bool) -> Result<ExperimentReport, String> {
+fn fig1_fig2(madd_component: bool, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let (id, title) = if madd_component {
         ("fig2", "madd-component model for tiled matmul (§2.2, Figure 2)")
     } else {
@@ -147,10 +217,11 @@ fn fig1_fig2(madd_component: bool) -> Result<ExperimentReport, String> {
     };
     let m_knls = KernelCollection::all().generate_kernels(&tags)?;
     rep.line(format!("measurement kernels: {}", m_knls.len()));
-    let mut data = gather_features_by_ids(
+    let mut data = gather_features_by_ids_cached(
         model.input_features(),
         &m_knls,
         &device,
+        cache,
     )?;
     data.scale_features_by_output();
     let fit = crate::calibrate::fit_model(&model, &data, &LmOptions::default())?;
@@ -164,8 +235,15 @@ fn fig1_fig2(madd_component: bool) -> Result<ExperimentReport, String> {
     rep.line(format!("{:>6} {:>12} {:>12} {:>8}", "n", "measured", "modeled", "err"));
     for n in [1024i64, 1536, 2048, 2560, 3072, 3584] {
         let env = env1("n", n);
-        let measured = measure(&device, &test, &env)?;
-        let predicted = eval_with_kernel(&model, &fit, &test, &env, 32)?;
+        let measured = measure_with_cache(&device, &test, &env, cache)?;
+        let predicted = eval_with_kernel_cached(
+            &model,
+            &fit,
+            &test,
+            &env,
+            device.sub_group_size,
+            cache,
+        )?;
         rep.predictions.push(Prediction {
             device: device.id.into(),
             variant: "matmul_pf".into(),
@@ -218,13 +296,16 @@ fn fig4() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Figure 5 — overlap of local and global memory transactions.
 // ----------------------------------------------------------------------
-fn fig5(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn fig5(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "fig5",
         "modeling overlap of local/global memory transactions (Figure 5)",
     );
     let ms: Vec<i64> = vec![0, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64];
-    for device in fleet() {
+    let devices = fleet();
+
+    // Phase 1 (parallel over devices): generate and measure the sweep.
+    let gathered = parallel_map(&devices, |device| {
         let cm = CostModel::new(device.id, true)
             .term("launch_kernel", "f_sync_kernel_launch", CostGroup::Overhead)
             .term("launch_group", "f_thread_groups", CostGroup::Overhead)
@@ -249,21 +330,41 @@ fn fig5(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
         ];
         let refs: Vec<&str> = filter.iter().map(|s| s.as_str()).collect();
         let knls = KernelCollection::all().generate_kernels(&refs)?;
-        let mut data = gather_features_by_ids(cm.feature_columns(), &knls, &device)?;
+        let mut data =
+            gather_features_by_ids_cached(cm.feature_columns(), &knls, device, cache)?;
         data.scale_features_by_output();
-        let fit = match aot {
-            Some(a) => fit_cost_model_aot(a, &cm, &data, &LmOptions::default())?,
-            None => fit_cost_model_native(&cm, &data, &LmOptions::default())?,
-        };
-        // Predict the sweep back (the paper fits and displays the same
-        // data) and find the hiding crossover.
+        Ok((cm, knls, data))
+    })?;
+
+    // Phase 2 (sequential): fits stay on this thread (AOT path).
+    let mut fits = Vec::with_capacity(devices.len());
+    for (cm, _, data) in &gathered {
+        fits.push(match aot {
+            Some(a) => fit_cost_model_aot(a, cm, data, &LmOptions::default())?,
+            None => fit_cost_model_native(cm, data, &LmOptions::default())?,
+        });
+    }
+
+    // Phase 3 (parallel over devices): predict the sweep back (the
+    // paper fits and displays the same data) and find the hiding
+    // crossover.
+    struct Fig5Part {
+        line: String,
+        summary: (String, f64),
+        preds: Vec<Prediction>,
+    }
+    let jobs: Vec<(usize, &DeviceProfile)> = devices.iter().enumerate().collect();
+    let parts = parallel_map(&jobs, |&(i, device)| {
+        let (cm, knls, _) = &gathered[i];
+        let fit = &fits[i];
         let mut t0 = 0.0;
         let mut hidden_up_to = 0i64;
         let mut errs = Vec::new();
-        for gk in &knls {
+        let mut preds = Vec::new();
+        for gk in knls {
             let m = gk.env.get("m").copied().unwrap_or(0);
-            let measured = measure(&device, &gk.kernel, &gk.env)?;
-            let predicted = predict(&cm, &fit, &gk.kernel, &gk.env, &device)?;
+            let measured = measure_with_cache(device, &gk.kernel, &gk.env, cache)?;
+            let predicted = predict(cm, fit, &gk.kernel, &gk.env, device, cache)?;
             if m == 0 {
                 t0 = measured;
             }
@@ -271,7 +372,7 @@ fn fig5(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
                 hidden_up_to = hidden_up_to.max(m);
             }
             errs.push((predicted - measured).abs() / measured);
-            rep.predictions.push(Prediction {
+            preds.push(Prediction {
                 device: device.id.into(),
                 variant: format!("m={m}"),
                 sizes: gk.env.clone(),
@@ -279,14 +380,22 @@ fn fig5(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
                 predicted,
             });
         }
-        rep.line(format!(
-            "{:<14} geomean err {:>5.1}%  local accesses hidden up to m ~ {}",
-            device.id,
-            100.0 * geomean(&errs),
-            hidden_up_to
-        ));
-        rep.summary
-            .insert(format!("hidden_m_{}", device.id), hidden_up_to as f64);
+        Ok(Fig5Part {
+            line: format!(
+                "{:<14} geomean err {:>5.1}%  local accesses hidden up to m ~ {}",
+                device.id,
+                100.0 * geomean(&errs),
+                hidden_up_to
+            ),
+            summary: (format!("hidden_m_{}", device.id), hidden_up_to as f64),
+            preds,
+        })
+    })?;
+    for part in parts {
+        rep.predictions.extend(part.preds);
+        rep.line(part.line);
+        let (k, v) = part.summary;
+        rep.summary.insert(k, v);
     }
     rep.summary
         .insert("geomean_rel_err".into(), rep.overall_geomean());
@@ -323,13 +432,16 @@ fn fig6() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Table 1 — the two global load patterns of the prefetching matmul.
 // ----------------------------------------------------------------------
-fn table1() -> Result<ExperimentReport, String> {
+fn table1(cache: &StatsCache) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "table1",
         "global load patterns in tiled matmul with prefetching (Table 1)",
     );
+    // The §6.1.1 microbenchmark device (its sub-group size also sets
+    // the symbolic counting granularity below).
+    let device = crate::gpusim::device_by_id("gtx_titan_x").unwrap();
     let k = build_matmul(crate::ir::DType::F32, true, 16)?;
-    let st = stats::gather(&k, 32)?;
+    let st = cache.get_or_gather(&k, device.sub_group_size)?;
     let e: BTreeMap<String, i128> = [("n".to_string(), 2048i128)].into_iter().collect();
     rep.line(format!(
         "{:>6} {:>8} {:>16} {:>18} {:>12}",
@@ -361,20 +473,22 @@ fn table1() -> Result<ExperimentReport, String> {
             .insert(format!("afr_{arr}_n2048"), m.afr(&e));
     }
     // The §6.1.1 observation: the isolated b-pattern microbenchmark is
-    // several times costlier per load than the a pattern.
-    let device = crate::gpusim::device_by_id("gtx_titan_x").unwrap();
+    // several times costlier per load than the a pattern.  The sizes
+    // are independent measurements; sweep them on scoped threads (the
+    // two pattern kernels are size-invariant, so the cache reduces this
+    // to two symbolic passes plus cheap per-size evaluation).
     let mk = |variant: &str, n: i64| -> Result<f64, String> {
         let knls = KernelCollection::all().generate_kernels(&[
             "gmem_from_matmul",
             &format!("variant:{variant}"),
             &format!("n:{n}"),
         ])?;
-        measure(&device, &knls[0].kernel, &knls[0].env)
+        measure_with_cache(&device, &knls[0].kernel, &knls[0].env, cache)
     };
+    let ns = [2048i64, 2560, 3072, 3584];
+    let times = parallel_map(&ns, |&n| Ok((mk("pf_a", n)?, mk("pf_b", n)?)))?;
     let mut ratios = Vec::new();
-    for n in [2048i64, 2560, 3072, 3584] {
-        let ta = mk("pf_a", n)?;
-        let tb = mk("pf_b", n)?;
+    for (n, (ta, tb)) in ns.iter().zip(times) {
         ratios.push(tb / ta);
         rep.line(format!(
             "isolated pattern cost (n={n}): a={}, b={}  (b/a = {:.2})",
@@ -410,18 +524,18 @@ fn table2() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Table 3 — matmul model parameters on the Titan V.
 // ----------------------------------------------------------------------
-fn table3(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn table3(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "table3",
         "matmul model parameter values on the Titan V (Table 3)",
     );
     let device = crate::gpusim::device_by_id("titan_v").unwrap();
     let case = &expsets::eval_cases()[0];
-    let (cm, fit) = calibrate_case(case, &device, true, aot)?;
+    let (cm, fit) = calibrate_case(case, &device, true, aot, cache)?;
 
     // Modeled cost granularity + implied throughput per feature.
     let app = build_matmul(crate::ir::DType::F32, true, 16)?;
-    let app_stats = stats::gather(&app, 32)?;
+    let app_stats = cache.get_or_gather(&app, device.sub_group_size)?;
     rep.line(format!(
         "{:<42} {:>12} {:>5} {:>14}",
         "feature", "param (s)", "MCG", "rate"
@@ -520,14 +634,15 @@ fn onchip_cost_is_hidden(
     kernel: &Kernel,
     env: &BTreeMap<String, i64>,
     device: &DeviceProfile,
+    cache: &StatsCache,
 ) -> Result<bool, String> {
-    let t_total = measure(device, kernel, env)?;
+    let t_total = measure_with_cache(device, kernel, env, cache)?;
     let rm = crate::transform::remove_work(
         kernel,
         &crate::transform::remove_work::RemoveSpec::default(),
     )?;
-    let t_gmem_only = measure(device, &rm, env)?;
-    let st = stats::gather(kernel, device.sub_group_size)?;
+    let t_gmem_only = measure_with_cache(device, &rm, env, cache)?;
+    let st = cache.get_or_gather(kernel, device.sub_group_size)?;
     let envi: BTreeMap<String, i128> =
         env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
     let mut onchip_est = 0.0;
@@ -551,19 +666,47 @@ fn accuracy_experiment(
     case_idx: usize,
     variants: Vec<VariantSpec>,
     aot: Option<&Artifacts>,
+    cache: &StatsCache,
 ) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(id, title);
     let cases = expsets::eval_cases();
     let case = &cases[case_idx];
-    for device in fleet() {
-        // One measurement-gathering pass serves both model forms.
-        let data = gather_case_data(case, &device)?;
-        let (cm_nl, fit_nl) = fit_case(case, &device, &data, true, aot)?;
-        let (cm_lin, fit_lin) = fit_case(case, &device, &data, false, aot)?;
+    let devices = fleet();
+
+    // Phase 1 (parallel over devices): one measurement-gathering pass
+    // per device serves both model forms.  Devices sharing a sub-group
+    // size also share the cache's symbolic entries.
+    let datas = parallel_map(&devices, |device| gather_case_data(case, device, cache))?;
+
+    // Phase 2 (sequential): both fits per device on this thread.
+    let mut fits = Vec::with_capacity(devices.len());
+    for (device, data) in devices.iter().zip(&datas) {
+        let nl = fit_case(case, device, data, true, aot)?;
+        let lin = fit_case(case, device, data, false, aot)?;
+        fits.push((nl, lin));
+    }
+
+    // Phase 3 (parallel over devices): model-form selection and the
+    // prediction sweeps.
+    struct DevPart {
+        lines: Vec<String>,
+        preds: Vec<Prediction>,
+        summary: Vec<(String, f64)>,
+    }
+    let jobs: Vec<_> = devices.iter().zip(&fits).collect();
+    let variants = &variants;
+    let parts = parallel_map(&jobs, |job| {
+        let &(device, fits2) = job;
+        let ((cm_nl, fit_nl), (cm_lin, fit_lin)) = fits2;
+        let mut part = DevPart {
+            lines: Vec::new(),
+            preds: Vec::new(),
+            summary: Vec::new(),
+        };
         let mut dev_errs = Vec::new();
-        for v in &variants {
+        for v in variants {
             if v.kernel.work_group_size() > device.max_wg_size {
-                rep.line(format!(
+                part.lines.push(format!(
                     "{:<14} {:<14} SKIP (work-group too large)",
                     device.id, v.label
                 ));
@@ -573,19 +716,19 @@ fn accuracy_experiment(
             // overlap analysis at a representative size.
             let probe = &v.envs[v.envs.len() / 2];
             let nonlinear =
-                onchip_cost_is_hidden(&cm_lin, &fit_lin, &v.kernel, probe, &device)?;
+                onchip_cost_is_hidden(cm_lin, fit_lin, &v.kernel, probe, device, cache)?;
             let linear = !nonlinear;
             let (cm, fit) = if linear {
-                (&cm_lin, &fit_lin)
+                (cm_lin, fit_lin)
             } else {
-                (&cm_nl, &fit_nl)
+                (cm_nl, fit_nl)
             };
             let mut v_errs = Vec::new();
             for env in &v.envs {
-                let measured = measure(&device, &v.kernel, env)?;
-                let predicted = predict(cm, fit, &v.kernel, env, &device)?;
+                let measured = measure_with_cache(device, &v.kernel, env, cache)?;
+                let predicted = predict(cm, fit, &v.kernel, env, device, cache)?;
                 v_errs.push((predicted - measured).abs() / measured);
-                rep.predictions.push(Prediction {
+                part.preds.push(Prediction {
                     device: device.id.into(),
                     variant: v.label.clone(),
                     sizes: env.clone(),
@@ -595,18 +738,26 @@ fn accuracy_experiment(
             }
             let g = geomean(&v_errs);
             dev_errs.extend(v_errs);
-            rep.line(format!(
+            part.lines.push(format!(
                 "{:<14} {:<14}{} geomean err {:>5.1}%",
                 device.id,
                 v.label,
                 if linear { " (L)" } else { "    " },
                 100.0 * g
             ));
-            rep.summary
-                .insert(format!("err_{}_{}", device.id, v.label), g);
+            part.summary
+                .push((format!("err_{}_{}", device.id, v.label), g));
         }
-        rep.summary
-            .insert(format!("err_{}", device.id), geomean(&dev_errs));
+        part.summary
+            .push((format!("err_{}", device.id), geomean(&dev_errs)));
+        Ok(part)
+    })?;
+    for part in parts {
+        rep.lines.extend(part.lines);
+        rep.predictions.extend(part.preds);
+        for (k, v) in part.summary {
+            rep.summary.insert(k, v);
+        }
     }
     let overall = rep.overall_geomean();
     rep.line(format!("overall geomean rel err: {:.1}%", 100.0 * overall));
@@ -652,7 +803,7 @@ fn accuracy_experiment(
     Ok(rep)
 }
 
-fn fig7(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn fig7(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let ns = [1024i64, 1536, 2048, 2560, 3072, 3584];
     let envs: Vec<_> = ns.iter().map(|&n| env1("n", n)).collect();
     let variants = vec![
@@ -673,10 +824,11 @@ fn fig7(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
         0,
         variants,
         aot,
+        cache,
     )
 }
 
-fn fig8(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn fig8(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let nels = [65536i64, 131072, 262144];
     let envs: Vec<_> = nels
         .iter()
@@ -709,10 +861,11 @@ fn fig8(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
         1,
         variants,
         aot,
+        cache,
     )
 }
 
-fn fig9(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn fig9(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let ns = [2016i64, 4032, 6048, 8064];
     let envs: Vec<_> = ns.iter().map(|&n| env1("n", n)).collect();
     let variants = vec![
@@ -733,17 +886,18 @@ fn fig9(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
         2,
         variants,
         aot,
+        cache,
     )
 }
 
-fn all_experiments(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> {
+fn all_experiments(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "all",
         "overall accuracy across all three computations (paper §10: ~6.4%)",
     );
     let mut all_errs = Vec::new();
     for id in ["fig7", "fig8", "fig9"] {
-        let sub = run_experiment(id, aot.is_some())?;
+        let sub = dispatch_experiment(id, aot, cache)?;
         let g = sub.overall_geomean();
         rep.line(format!("{id}: geomean rel err {:.1}%", 100.0 * g));
         all_errs.extend(sub.predictions.iter().map(Prediction::rel_err));
@@ -759,4 +913,170 @@ fn all_experiments(aot: Option<&Artifacts>) -> Result<ExperimentReport, String> 
     ));
     rep.summary.insert("geomean_rel_err".into(), overall);
     Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::{
+        fit_model, gather_features_by_ids, FeatureData,
+    };
+    use crate::gpusim::device_by_id;
+
+    /// The silent empty-fit bug: a device that can launch none of the
+    /// measurement kernels must yield a descriptive error, not a
+    /// zero-row "fit".
+    #[test]
+    fn all_skipped_kernels_error_instead_of_empty_fit() {
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        // 18x18 work-groups (324 work-items) exceed the Fury's limit.
+        let knls = KernelCollection::all()
+            .generate_kernels(&["gmem_from_fdiff", "lsize:18", "n:2016"])
+            .unwrap();
+        assert!(!knls.is_empty());
+        let err = gather_features_by_ids(
+            vec!["f_thread_groups".into()],
+            &knls,
+            &amd,
+        )
+        .unwrap_err();
+        assert!(err.contains("skipped"), "{err}");
+        assert!(err.contains("amd_r9_fury"), "{err}");
+    }
+
+    /// Tentpole invariant: cached gathering produces FeatureData
+    /// identical to the seed's fresh per-row symbolic passes, across a
+    /// whole measurement-kernel collection.
+    #[test]
+    fn cached_feature_data_matches_fresh_across_collection() {
+        let dev = device_by_id("titan_v").unwrap();
+        let case = &expsets::eval_cases()[0];
+        let kernels =
+            expsets::generate_measurement_kernels(&(case.measurement_sets)()).unwrap();
+        let ids = (case.model)(dev.id, true).feature_columns();
+        // Fresh path: one full symbolic pass per feature row plus one
+        // per measurement, exactly what the seed did.
+        let specs: Vec<FeatureSpec> = ids
+            .iter()
+            .map(|id| FeatureSpec::parse(id).unwrap())
+            .collect();
+        let mut fresh = FeatureData {
+            feature_ids: ids.clone(),
+            ..Default::default()
+        };
+        for gk in &kernels {
+            let st = crate::stats::gather(&gk.kernel, dev.sub_group_size).unwrap();
+            let env: BTreeMap<String, i128> = gk
+                .env
+                .iter()
+                .map(|(k, v)| (k.clone(), *v as i128))
+                .collect();
+            fresh
+                .rows
+                .push(specs.iter().map(|s| s.eval(&st, &env).unwrap()).collect());
+            fresh
+                .outputs
+                .push(crate::gpusim::measure(&dev, &gk.kernel, &gk.env).unwrap());
+        }
+        let cache = StatsCache::new();
+        let cached =
+            gather_features_by_ids_cached(ids, &kernels, &dev, &cache).unwrap();
+        assert_eq!(fresh.rows, cached.rows);
+        assert_eq!(fresh.outputs, cached.outputs);
+        assert!(cache.hits() > 0, "measurement must reuse gathered stats");
+    }
+
+    /// Acceptance criterion: within one run, the symbolic pass executes
+    /// at most once per distinct (kernel, sub-group size).
+    #[test]
+    fn fig7_style_gathering_counts_each_distinct_kernel_once() {
+        let dev = device_by_id("titan_v").unwrap();
+        let case = &expsets::eval_cases()[0];
+        let kernels =
+            expsets::generate_measurement_kernels(&(case.measurement_sets)()).unwrap();
+        let distinct: std::collections::HashSet<u128> = kernels
+            .iter()
+            .map(|gk| gk.kernel.fingerprint())
+            .collect();
+        let cache = StatsCache::new();
+        let data = gather_case_data(case, &dev, &cache).unwrap();
+        assert_eq!(data.len(), kernels.len());
+        assert_eq!(cache.misses(), distinct.len() as u64);
+        // A second full gathering is served entirely from the cache.
+        let misses_before = cache.misses();
+        let again = gather_case_data(case, &dev, &cache).unwrap();
+        assert_eq!(cache.misses(), misses_before);
+        assert_eq!(data.rows, again.rows);
+        assert_eq!(data.outputs, again.outputs);
+    }
+
+    /// Concurrency smoke test: two devices calibrated in parallel with
+    /// a shared cache reproduce the sequential fits bit-for-bit.
+    #[test]
+    fn parallel_two_device_calibration_matches_sequential() {
+        let model = crate::model::Model::new(
+            "f_cl_wall_time_titan_v",
+            "p_f32madd * f_op_float32_madd + p_launch * f_sync_kernel_launch",
+        )
+        .unwrap();
+        let kernels = KernelCollection::all()
+            .generate_kernels(&[
+                "flops_madd_pattern",
+                "dtype:float32",
+                "nelements:524288,1048576",
+                "m:1024,1408",
+            ])
+            .unwrap();
+        let devices = [
+            device_by_id("titan_v").unwrap(),
+            device_by_id("amd_r9_fury").unwrap(),
+        ];
+        let sequential: Vec<FitResult> = devices
+            .iter()
+            .map(|d| {
+                let mut data =
+                    gather_features_by_ids(model.input_features(), &kernels, d)
+                        .unwrap();
+                data.scale_features_by_output();
+                fit_model(&model, &data, &LmOptions::default()).unwrap()
+            })
+            .collect();
+        let cache = StatsCache::new();
+        let parallel: Vec<FitResult> = std::thread::scope(|s| {
+            let handles: Vec<_> = devices
+                .iter()
+                .map(|d| {
+                    let model = &model;
+                    let kernels = &kernels;
+                    let cache = &cache;
+                    s.spawn(move || {
+                        let mut data = gather_features_by_ids_cached(
+                            model.input_features(),
+                            kernels,
+                            d,
+                            cache,
+                        )
+                        .unwrap();
+                        data.scale_features_by_output();
+                        fit_model(model, &data, &LmOptions::default()).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (seq, par) in sequential.iter().zip(&parallel) {
+            assert_eq!(seq.params, par.params);
+            assert_eq!(seq.residual, par.residual);
+            assert_eq!(seq.iterations, par.iterations);
+        }
+        // The two sub-group sizes (warp 32, wavefront 64) are distinct
+        // cache keys; within each, every structurally distinct kernel
+        // was gathered once (the madd microbenchmark reuses one kernel
+        // across its problem sizes).
+        let distinct: std::collections::HashSet<u128> = kernels
+            .iter()
+            .map(|gk| gk.kernel.fingerprint())
+            .collect();
+        assert_eq!(cache.misses(), 2 * distinct.len() as u64);
+    }
 }

@@ -258,26 +258,36 @@ mod tests {
                 .collect();
             let knls =
                 generate_measurement_kernels(&(case.measurement_sets)()).unwrap();
+            // Closure must hold at every sub-group size in the fleet
+            // (warp 32 on the NVIDIA parts, wavefront 64 on GCN3).
+            let mut sgs: Vec<u64> = crate::gpusim::fleet()
+                .iter()
+                .map(|d| d.sub_group_size)
+                .collect();
+            sgs.sort_unstable();
+            sgs.dedup();
             for gk in &knls {
-                let st = crate::stats::gather(&gk.kernel, 32).unwrap();
-                let env: std::collections::BTreeMap<String, i128> = gk
-                    .env
-                    .iter()
-                    .map(|(k, v)| (k.clone(), *v as i128))
-                    .collect();
-                // Global accesses must be covered.
-                for m in st.mem.iter().filter(|m| {
-                    m.scope == crate::ir::MemScope::Global
-                }) {
-                    let covered = specs.iter().any(|s| match s {
-                        FeatureSpec::MemAccess(f) => f.matches(m, &env),
-                        _ => false,
-                    });
-                    assert!(
-                        covered,
-                        "{}: kernel {} access {:?}/{:?} uncovered",
-                        case.id, gk.kernel.name, m.array, m.tag
-                    );
+                for &sg in &sgs {
+                    let st = crate::stats::gather(&gk.kernel, sg).unwrap();
+                    let env: std::collections::BTreeMap<String, i128> = gk
+                        .env
+                        .iter()
+                        .map(|(k, v)| (k.clone(), *v as i128))
+                        .collect();
+                    // Global accesses must be covered.
+                    for m in st.mem.iter().filter(|m| {
+                        m.scope == crate::ir::MemScope::Global
+                    }) {
+                        let covered = specs.iter().any(|s| match s {
+                            FeatureSpec::MemAccess(f) => f.matches(m, &env),
+                            _ => false,
+                        });
+                        assert!(
+                            covered,
+                            "{}: kernel {} (sg {sg}) access {:?}/{:?} uncovered",
+                            case.id, gk.kernel.name, m.array, m.tag
+                        );
+                    }
                 }
             }
         }

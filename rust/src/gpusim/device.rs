@@ -5,6 +5,13 @@
 //! derate, launch costs, noise) are plausible stand-ins chosen to
 //! reproduce the qualitative behaviors the paper reports per device.
 
+/// The NVIDIA warp width — the sub-group size of every non-AMD fleet
+/// device, and the counting granularity used by device-independent
+/// symbolic tests.  Per-device code must use
+/// [`DeviceProfile::sub_group_size`] instead: the GCN3 part runs
+/// 64-wide wavefronts.
+pub const DEFAULT_SUB_GROUP_SIZE: u64 = 32;
+
 /// One simulated GPU.
 #[derive(Clone, Debug)]
 pub struct DeviceProfile {
@@ -200,7 +207,10 @@ pub fn fleet() -> Vec<DeviceProfile> {
             name: "AMD Radeon R9 Fury (GCN 3)",
             opencl_info: "OpenCL/ROCm 1.2.0-2019020110 [simulated]",
             vendor: "amd",
-            sub_group_size: 32,
+            // GCN3 executes 64-wide wavefronts, not 32-wide warps: the
+            // one per-device hardware statistic the paper's counting
+            // granularity actually consumes.
+            sub_group_size: 64,
             sm_count: 56,
             clock_ghz: 1.0,
             // The paper could not run the 18x18 stencil variant here.
@@ -246,9 +256,17 @@ mod tests {
             ids,
             vec!["titan_v", "gtx_titan_x", "tesla_k40c", "tesla_c2070", "amd_r9_fury"]
         );
-        // Sub-group size 32 on all devices — the only hardware statistic
-        // the paper's models require.
-        assert!(f.iter().all(|d| d.sub_group_size == 32));
+        // Sub-group size is the only hardware statistic the paper's
+        // models require: warp 32 on the NVIDIA parts, wavefront 64 on
+        // the GCN3 part.
+        for d in &f {
+            let expect = if d.vendor == "amd" {
+                64
+            } else {
+                DEFAULT_SUB_GROUP_SIZE
+            };
+            assert_eq!(d.sub_group_size, expect, "{}", d.id);
+        }
     }
 
     #[test]

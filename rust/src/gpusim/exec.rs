@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 
 use super::device::DeviceProfile;
 use crate::ir::{DType, Kernel, MemScope};
-use crate::stats::{self, Granularity, KernelStats, MemAccessStat};
+use crate::stats::{self, Granularity, KernelStats, MemAccessStat, StatsCache};
 use crate::util::Rng;
 
 /// Per-component cost breakdown of one simulated execution (useful for
@@ -74,12 +74,9 @@ fn innermost_seq_stride_bytes(m: &MemAccessStat, e: &BTreeMap<String, i128>) -> 
         .find(|s| *s != 0)
 }
 
-/// Deterministic execution-time estimate (no noise), with breakdown.
-pub fn simulate_breakdown(
-    dev: &DeviceProfile,
-    knl: &Kernel,
-    env: &BTreeMap<String, i64>,
-) -> Result<CostBreakdown, String> {
+/// Launchability check: runs before any symbolic work so that kernels
+/// a device must reject pay nothing.
+fn check_launchable(dev: &DeviceProfile, knl: &Kernel) -> Result<(), String> {
     let wg_size = knl.work_group_size();
     if wg_size > dev.max_wg_size {
         return Err(format!(
@@ -88,7 +85,30 @@ pub fn simulate_breakdown(
             knl.name, dev.id, dev.max_wg_size
         ));
     }
+    Ok(())
+}
+
+/// Deterministic execution-time estimate (no noise), with breakdown.
+pub fn simulate_breakdown(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+) -> Result<CostBreakdown, String> {
+    check_launchable(dev, knl)?;
     let stats = stats::gather(knl, dev.sub_group_size)?;
+    Ok(breakdown_from_stats(dev, knl, &stats, env))
+}
+
+/// [`simulate_breakdown`] through a shared [`StatsCache`]: the symbolic
+/// pass runs at most once per distinct (kernel, sub-group size).
+pub fn simulate_breakdown_with_cache(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+    cache: &StatsCache,
+) -> Result<CostBreakdown, String> {
+    check_launchable(dev, knl)?;
+    let stats = cache.get_or_gather(knl, dev.sub_group_size)?;
     Ok(breakdown_from_stats(dev, knl, &stats, env))
 }
 
@@ -301,6 +321,16 @@ pub fn simulate_time(
     simulate_breakdown(dev, knl, env).map(|b| b.total)
 }
 
+/// [`simulate_time`] through a shared [`StatsCache`].
+pub fn simulate_time_with_cache(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+    cache: &StatsCache,
+) -> Result<f64, String> {
+    simulate_breakdown_with_cache(dev, knl, env, cache).map(|b| b.total)
+}
+
 /// The paper's measurement procedure: 60 timing trials, average, with
 /// anomalous events (AMD) excluded as the paper does.  Deterministic
 /// given (device, kernel name, sizes).
@@ -310,6 +340,29 @@ pub fn measure(
     env: &BTreeMap<String, i64>,
 ) -> Result<f64, String> {
     let base = simulate_time(dev, knl, env)?;
+    Ok(noisy_trials(dev, knl, env, base))
+}
+
+/// [`measure`] through a shared [`StatsCache`]: byte-identical results
+/// (the noise seed depends only on device, kernel name and sizes), but
+/// the symbolic pass is skipped whenever the cache already holds the
+/// kernel's statistics.
+pub fn measure_with_cache(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+    cache: &StatsCache,
+) -> Result<f64, String> {
+    let base = simulate_time_with_cache(dev, knl, env, cache)?;
+    Ok(noisy_trials(dev, knl, env, base))
+}
+
+fn noisy_trials(
+    dev: &DeviceProfile,
+    knl: &Kernel,
+    env: &BTreeMap<String, i64>,
+    base: f64,
+) -> f64 {
     // Reproducible seed from device, kernel and sizes.
     let mut h = 0xcbf29ce484222325u64;
     for b in dev.id.bytes().chain(knl.name.bytes()) {
@@ -335,7 +388,7 @@ pub fn measure(
     trials.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = trials[trials.len() / 2];
     let kept: Vec<f64> = trials.into_iter().filter(|t| *t <= 8.0 * median).collect();
-    Ok(kept.iter().sum::<f64>() / kept.len() as f64)
+    kept.iter().sum::<f64>() / kept.len() as f64
 }
 
 #[cfg(test)]
@@ -530,6 +583,21 @@ mod tests {
         assert_eq!(t1, t2);
         let truth = simulate_time(&d, &pf, &env(1024)).unwrap();
         assert!((t1 - truth).abs() / truth < 0.05, "{t1} vs {truth}");
+    }
+
+    #[test]
+    fn measure_with_cache_is_byte_identical_to_measure() {
+        let pf = matmul(true);
+        let cache = StatsCache::new();
+        for d in fleet() {
+            let fresh = measure(&d, &pf, &env(1024)).unwrap();
+            let cached = measure_with_cache(&d, &pf, &env(1024), &cache).unwrap();
+            assert_eq!(fresh, cached, "{}", d.id);
+        }
+        // One symbolic pass per distinct sub-group size in the fleet
+        // (warp 32 on the NVIDIA parts, wavefront 64 on GCN3).
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 3);
     }
 
     #[test]

@@ -18,5 +18,8 @@
 pub mod device;
 pub mod exec;
 
-pub use device::{device_by_id, fleet, DeviceProfile};
-pub use exec::{measure, simulate_time, CostBreakdown};
+pub use device::{device_by_id, fleet, DeviceProfile, DEFAULT_SUB_GROUP_SIZE};
+pub use exec::{
+    measure, measure_with_cache, simulate_time, simulate_time_with_cache,
+    CostBreakdown,
+};

@@ -449,6 +449,29 @@ impl Kernel {
         Ok(())
     }
 
+    /// Cheap structural fingerprint: 128 bits of FNV-1a over the
+    /// canonical `Debug` rendering (which covers the domain, tags,
+    /// arrays, temps, statements, assumptions and loop priority).
+    ///
+    /// [`crate::stats::StatsCache`] keys memoized statistics by
+    /// (fingerprint, sub-group size); two kernels with equal
+    /// fingerprints are treated as identical.  The rendering pass is
+    /// orders of magnitude cheaper than the polyhedral counting pass it
+    /// lets us skip, and 128 bits keep accidental collisions negligible
+    /// for any realistic kernel population.
+    pub fn fingerprint(&self) -> u128 {
+        const PRIME: u64 = 0x100000001b3;
+        let s = format!("{self:?}");
+        let mut lo = 0xcbf29ce484222325u64;
+        let mut hi = 0x9e3779b97f4a7c15u64;
+        for byte in s.bytes() {
+            lo = (lo ^ byte as u64).wrapping_mul(PRIME);
+            hi = (hi ^ byte as u64).wrapping_mul(PRIME).rotate_left(29);
+        }
+        lo = lo.wrapping_add(s.len() as u64);
+        ((hi as u128) << 64) | lo as u128
+    }
+
     /// Human-readable pseudo-OpenCL listing (inspection/debugging).
     pub fn pseudocode(&self) -> String {
         let mut out = String::new();
@@ -625,6 +648,23 @@ mod tests {
             &["i_in", "i_out"], // wrong order
         ));
         assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_structural() {
+        let a = tiled_matmul_fragment();
+        let b = tiled_matmul_fragment();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Any structural change — name, tags, statements — must move it.
+        let mut c = tiled_matmul_fragment();
+        c.name = "mm_other".into();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = tiled_matmul_fragment();
+        d.iname_tags.insert("k_out".into(), IndexTag::Unroll);
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        let mut e = tiled_matmul_fragment();
+        e.stmts[0].id = "fetch_a2".into();
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 
     #[test]

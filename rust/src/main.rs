@@ -130,7 +130,10 @@ fn dispatch(args: &[String]) -> Result<(), String> {
             } else {
                 None
             };
-            let (cm, fit) = calibrate_case(case, &device, true, aot.as_ref())?;
+            // One stats cache per CLI invocation: calibration and the
+            // optional prediction below share symbolic passes.
+            let cache = perflex::stats::StatsCache::new();
+            let (cm, fit) = calibrate_case(case, &device, true, aot.as_ref(), &cache)?;
             println!(
                 "calibrated {} on {} ({} params, residual {:.3e}, {} LM iters{})",
                 case.id,
@@ -157,14 +160,16 @@ fn dispatch(args: &[String]) -> Result<(), String> {
                     env.insert(k.into(), v.parse().map_err(|_| "bad int")?);
                 }
                 let kernel = build_variant(case_id, variant)?;
-                let predicted = perflex::calibrate::eval_with_kernel(
+                let predicted = perflex::calibrate::eval_with_kernel_cached(
                     &cm.to_model(),
                     &fit,
                     &kernel,
                     &env,
                     device.sub_group_size,
+                    &cache,
                 )?;
-                let measured = measure(&device, &kernel, &env)?;
+                let measured =
+                    perflex::gpusim::measure_with_cache(&device, &kernel, &env, &cache)?;
                 println!(
                     "predicted {} / measured {} (err {:.1}%)",
                     perflex::coordinator::report::fmt_time(predicted),

@@ -12,6 +12,12 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+// The external `xla` crate is not in the offline crate set; a local
+// module of the same name shadows it with a cleanly-erroring stub (see
+// xla_stub.rs for how to re-enable the real runtime).
+#[path = "xla_stub.rs"]
+mod xla;
+
 use crate::calibrate::{FeatureData, LmBackend};
 use crate::model::CostModel;
 use crate::util::json::Json;

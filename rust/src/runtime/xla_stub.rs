@@ -1,0 +1,131 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The AOT calibration path executes HLO artifacts on a PJRT CPU
+//! client through the external `xla` crate, which is not part of the
+//! offline crate set this repository must build against.  This module
+//! mirrors exactly the API surface `runtime` consumes; every operation
+//! that would need the real runtime returns a descriptive error from
+//! [`PjRtClient::cpu`] / [`HloModuleProto::from_text_file`], so
+//! [`super::Artifacts::load`] fails cleanly and callers fall back to
+//! the native symbolic backend ([`super::fit_cost_model_native`]).
+//! `artifacts_available()` is file-based and artifacts are not shipped,
+//! so in practice this path is never reached in offline builds.
+//!
+//! To enable the real AOT path, add the `xla` dependency to Cargo.toml
+//! and delete the `mod xla` declaration in `runtime/mod.rs` (the
+//! extern crate then resolves the same paths).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the external crate's (only `Display` is used).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "XLA/PJRT runtime not available in this build (stubbed '{what}'); \
+             the AOT path requires the external `xla` crate"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Host-side tensor handle.  Constructors succeed (they carry no data
+/// in the stub); anything that would read results back errors.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn scalar(_v: f64) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}

@@ -1,0 +1,165 @@
+//! Memoized symbolic-statistics cache — making the Section 5
+//! amortization claim real.
+//!
+//! [`gather`] derives a kernel's statistics bundle with a polyhedral
+//! counting pass that is far more expensive than the per-problem-size
+//! [`QPoly`](crate::polyhedral::QPoly) evaluations it enables.  The
+//! seed code nevertheless re-ran the full pass on every call: once
+//! inside every simulated `measure()` and once more per feature row,
+//! paying roughly two passes per measurement kernel per calibration.
+//!
+//! [`StatsCache`] memoizes [`KernelStats`] behind interior mutability,
+//! keyed by ([`Kernel::fingerprint`](crate::ir::Kernel::fingerprint),
+//! sub-group size).  One shared cache is threaded through simulated
+//! measurement, feature gathering, prediction and the experiment
+//! coordinator — including across the scoped threads of parallel fleet
+//! calibration — so each distinct kernel is symbolically counted
+//! exactly once per run and only cheap `QPoly` evaluation remains per
+//! problem size.  Devices that share a sub-group size share entries.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{gather, KernelStats};
+use crate::ir::Kernel;
+
+/// One memoization slot.  The map entry is created under the map lock,
+/// but the expensive gather runs inside the slot's own [`OnceLock`], so
+/// concurrent misses on *different* kernels proceed in parallel while
+/// concurrent misses on the *same* kernel still gather only once.
+type Slot = Arc<OnceLock<Result<Arc<KernelStats>, String>>>;
+
+/// Cache key: structural kernel fingerprint + counting sub-group size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StatsKey {
+    pub fingerprint: u128,
+    pub sub_group_size: u64,
+}
+
+impl StatsKey {
+    pub fn of(knl: &Kernel, sub_group_size: u64) -> StatsKey {
+        StatsKey {
+            fingerprint: knl.fingerprint(),
+            sub_group_size,
+        }
+    }
+}
+
+/// Shared, interior-mutable memoization of [`gather`] results.
+#[derive(Default)]
+pub struct StatsCache {
+    slots: Mutex<HashMap<StatsKey, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl StatsCache {
+    pub fn new() -> StatsCache {
+        StatsCache::default()
+    }
+
+    /// Cached [`gather`]: runs the symbolic counting pass at most once
+    /// per distinct (kernel fingerprint, sub-group size), even under
+    /// concurrent lookups (losers of the insertion race block on the
+    /// winner's slot instead of re-deriving).  Gather errors are cached
+    /// and replayed too, keeping cached and fresh behavior identical.
+    pub fn get_or_gather(
+        &self,
+        knl: &Kernel,
+        sub_group_size: u64,
+    ) -> Result<Arc<KernelStats>, String> {
+        let key = StatsKey::of(knl, sub_group_size);
+        let slot: Slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.entry(key).or_default().clone()
+        };
+        let mut fresh = false;
+        let res = slot.get_or_init(|| {
+            fresh = true;
+            gather(knl, sub_group_size).map(Arc::new)
+        });
+        if fresh {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        res.clone()
+    }
+
+    /// Lookups served from memory.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that ran the full symbolic pass.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct (kernel, sub-group size) entries resident.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::uipick::derived::{build_axpy, build_matvec};
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let cache = StatsCache::new();
+        let k = build_axpy(DType::F32).unwrap();
+        let a = cache.get_or_gather(&k, 32).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (1, 0));
+        let b = cache.get_or_gather(&k, 32).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached bundle");
+        // A different sub-group size is a distinct entry...
+        cache.get_or_gather(&k, 64).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (2, 1));
+        // ... and so is a structurally different kernel.
+        let m = build_matvec(DType::F32).unwrap();
+        cache.get_or_gather(&m, 32).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (3, 1));
+        assert_eq!(cache.len(), 3);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn cached_stats_match_fresh_gather() {
+        let cache = StatsCache::new();
+        let k = build_axpy(DType::F32).unwrap();
+        let cached = cache.get_or_gather(&k, 32).unwrap();
+        let fresh = gather(&k, 32).unwrap();
+        let env: std::collections::BTreeMap<String, i128> =
+            [("n".to_string(), 1048576i128)].into_iter().collect();
+        assert_eq!(
+            cached.op_count(DType::F32, "madd").eval(&env),
+            fresh.op_count(DType::F32, "madd").eval(&env)
+        );
+        assert_eq!(cached.mem.len(), fresh.mem.len());
+        assert_eq!(cached.work_group_size, fresh.work_group_size);
+        assert_eq!(cached.sub_group_size, fresh.sub_group_size);
+    }
+
+    #[test]
+    fn concurrent_lookups_gather_once_per_key() {
+        let cache = StatsCache::new();
+        let k = build_axpy(DType::F32).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| cache.get_or_gather(&k, 32).unwrap());
+            }
+        });
+        assert_eq!(cache.misses(), 1, "the symbolic pass must run once");
+        assert_eq!(cache.hits(), 7);
+    }
+}

@@ -14,8 +14,21 @@
 //!
 //! All counts are [`QPoly`]s: computed once per kernel, cheaply
 //! re-evaluated for new problem sizes (the paper's amortization).
+//!
+//! The amortization is enforced, not just enabled: [`StatsCache`]
+//! (see [`cache`]) memoizes [`gather`] results by (structural kernel
+//! fingerprint, sub-group size) behind interior mutability.  Simulated
+//! measurement, feature gathering, prediction and the experiment
+//! coordinator all share one cache per run — including across the
+//! scoped threads of parallel fleet calibration — so each distinct
+//! kernel pays the polyhedral counting pass exactly once and every
+//! further use is a cheap `QPoly` re-evaluation.
 
 use std::collections::BTreeMap;
+
+pub mod cache;
+
+pub use cache::{StatsCache, StatsKey};
 
 use crate::ir::{Access, DType, IndexTag, Kernel, LhsRef, MemScope, Stmt};
 use crate::polyhedral::QPoly;

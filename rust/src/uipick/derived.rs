@@ -341,6 +341,7 @@ pub fn generators() -> Vec<Generator> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpusim::DEFAULT_SUB_GROUP_SIZE as SG;
     use crate::ir::MemScope;
     use crate::stats::Direction;
     use crate::util::Rat;
@@ -355,7 +356,7 @@ mod tests {
         args.map.insert("variant".into(), "pf_b".into());
         args.map.insert("n".into(), "2048".into());
         let g = gen_gmem_from_matmul(&args).unwrap();
-        let s = crate::stats::gather(&g.kernel, 32).unwrap();
+        let s = crate::stats::gather(&g.kernel, SG).unwrap();
         let e = ienv(&[("n", 2048)]);
         // Exactly one kept global load (the b pattern), unchanged.
         let loads: Vec<_> = s
@@ -397,7 +398,7 @@ mod tests {
             g.kernel
                 .validate()
                 .unwrap_or_else(|e| panic!("{pattern}: {e}"));
-            crate::stats::gather(&g.kernel, 32)
+            crate::stats::gather(&g.kernel, SG)
                 .unwrap_or_else(|e| panic!("{pattern} stats: {e}"));
         }
     }
@@ -405,15 +406,15 @@ mod tests {
     #[test]
     fn axpy_counts() {
         let k = build_axpy(DType::F32).unwrap();
-        let s = crate::stats::gather(&k, 32).unwrap();
+        let s = crate::stats::gather(&k, SG).unwrap();
         let e = ienv(&[("n", 1048576)]);
         assert_eq!(
             s.op_count(DType::F32, "madd").eval(&e),
-            Rat::new(1048576, 32)
+            Rat::new(1048576, SG as i128)
         );
         let stores: f64 = s
             .mem_matching(|m| m.direction == Direction::Store)
-            .map(|m| m.count_at_granularity(32).eval_f64(&e))
+            .map(|m| m.count_at_granularity(SG).eval_f64(&e))
             .sum();
         assert_eq!(stores, 1048576.0);
     }
@@ -421,7 +422,7 @@ mod tests {
     #[test]
     fn matvec_has_uniform_x_loads() {
         let k = build_matvec(DType::F32).unwrap();
-        let s = crate::stats::gather(&k, 32).unwrap();
+        let s = crate::stats::gather(&k, SG).unwrap();
         let x = s
             .mem_matching(|m| m.tag.as_deref() == Some("xLD"))
             .next()
@@ -441,7 +442,7 @@ mod tests {
         args.map.insert("lsize".into(), "16".into());
         args.map.insert("n".into(), "2016".into());
         let g = gen_gmem_from_fdiff(&args).unwrap();
-        let s = crate::stats::gather(&g.kernel, 32).unwrap();
+        let s = crate::stats::gather(&g.kernel, SG).unwrap();
         let loads: Vec<_> = s
             .mem_matching(|m| {
                 m.scope == MemScope::Global

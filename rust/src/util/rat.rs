@@ -4,6 +4,11 @@
 //! summation) must be exact: counts like `n^3/16` arise from summing
 //! over split loops and any floating-point drift would corrupt the
 //! operation counts that performance models are built from.
+//!
+//! For the same reason, `Add`/`Mul` (and therefore `pow`) refuse to
+//! wrap: operands are reduced by gcd first to delay overflow, and a
+//! product or sum that still does not fit `i128` panics with a clear
+//! message instead of silently corrupting counts in release builds.
 
 use std::cmp::Ordering;
 use std::fmt;
@@ -27,25 +32,55 @@ fn gcd(mut a: i128, mut b: i128) -> i128 {
     a
 }
 
+fn gcd_u(mut a: u128, mut b: u128) -> u128 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
 impl Rat {
     pub const ZERO: Rat = Rat { num: 0, den: 1 };
     pub const ONE: Rat = Rat { num: 1, den: 1 };
 
     /// Create `num/den`, normalizing sign and common factors.
     ///
-    /// Panics on `den == 0`.
+    /// Panics on `den == 0`, and on a magnitude that still exceeds
+    /// `i128` after reduction (only reachable via `i128::MIN`, whose
+    /// absolute value has no `i128` representation — normalizing
+    /// through `u128` keeps e.g. `MIN/2` exact instead of wrapping).
     pub fn new(num: i128, den: i128) -> Rat {
         assert!(den != 0, "rational with zero denominator");
         if num == 0 {
             return Rat::ZERO;
         }
-        let sign = if (num < 0) ^ (den < 0) { -1 } else { 1 };
-        let (num, den) = (num.abs(), den.abs());
-        let g = gcd(num, den);
-        Rat {
-            num: sign * (num / g),
-            den: den / g,
+        let negative = (num < 0) ^ (den < 0);
+        Rat::from_sign_mag(negative, num.unsigned_abs(), den.unsigned_abs())
+            .unwrap_or_else(|| {
+                panic!("Rat overflow: {num}/{den} does not fit i128 after reduction")
+            })
+    }
+
+    /// Build from a sign and u128 magnitudes, reducing to lowest terms;
+    /// `None` if a reduced magnitude still exceeds `i128`.  The single
+    /// home for the overflow-edge arithmetic shared by [`Rat::new`] and
+    /// the widening branch of `Add`.
+    fn from_sign_mag(negative: bool, num_u: u128, den_u: u128) -> Option<Rat> {
+        let g = gcd_u(num_u, den_u);
+        let (num_r, den_r) = (num_u / g, den_u / g);
+        if num_r > i128::MAX as u128 || den_r > i128::MAX as u128 {
+            return None;
         }
+        Some(Rat {
+            num: if negative {
+                -(num_r as i128)
+            } else {
+                num_r as i128
+            },
+            den: den_r as i128,
+        })
     }
 
     pub fn int(n: i128) -> Rat {
@@ -89,6 +124,8 @@ impl Rat {
         }
     }
 
+    /// `k`-th power by repeated (overflow-checked) multiplication;
+    /// panics like [`Mul`] if the result does not fit `i128`.
     pub fn pow(&self, k: u32) -> Rat {
         let mut out = Rat::ONE;
         for _ in 0..k {
@@ -103,6 +140,13 @@ impl Rat {
     }
 }
 
+/// Abort with a diagnostic on `i128` overflow: wrapping would silently
+/// corrupt the exact operation counts models are built from.
+#[cold]
+fn overflow(op: &str, a: Rat, b: Rat) -> ! {
+    panic!("Rat overflow: intermediate i128 overflow computing ({a}) {op} ({b})");
+}
+
 impl Add for Rat {
     type Output = Rat;
     fn add(self, o: Rat) -> Rat {
@@ -110,10 +154,24 @@ impl Add for Rat {
         let g = gcd(self.den, o.den);
         let lhs_scale = o.den / g;
         let rhs_scale = self.den / g;
-        Rat::new(
-            self.num * lhs_scale + o.num * rhs_scale,
-            self.den * lhs_scale,
-        )
+        let p1 = self.num.checked_mul(lhs_scale);
+        let p2 = o.num.checked_mul(rhs_scale);
+        let den = self.den.checked_mul(lhs_scale);
+        match (p1, p2, den) {
+            (Some(a), Some(b), Some(den)) => match a.checked_add(b) {
+                Some(num) => Rat::new(num, den),
+                // The addends share a sign (opposite signs cannot
+                // overflow), so their magnitude sum fits u128 — and the
+                // exact result may still fit i128 once reduced against
+                // the denominator (e.g. MAX/2 + MAX/2 = MAX).
+                None => {
+                    let mag = a.unsigned_abs() + b.unsigned_abs();
+                    Rat::from_sign_mag(a < 0, mag, den.unsigned_abs())
+                        .unwrap_or_else(|| overflow("+", self, o))
+                }
+            },
+            _ => overflow("+", self, o),
+        }
     }
 }
 
@@ -146,10 +204,12 @@ impl Mul for Rat {
         // Cross-reduce first.
         let g1 = gcd(self.num, o.den);
         let g2 = gcd(o.num, self.den);
-        Rat::new(
-            (self.num / g1) * (o.num / g2),
-            (self.den / g2) * (o.den / g1),
-        )
+        let num = (self.num / g1).checked_mul(o.num / g2);
+        let den = (self.den / g2).checked_mul(o.den / g1);
+        match (num, den) {
+            (Some(num), Some(den)) => Rat::new(num, den),
+            _ => overflow("*", self, o),
+        }
     }
 }
 
@@ -233,5 +293,63 @@ mod tests {
     fn pow_and_recip() {
         assert_eq!(Rat::new(2, 3).pow(3), Rat::new(8, 27));
         assert_eq!(Rat::new(2, 3).recip(), Rat::new(3, 2));
+    }
+
+    #[test]
+    fn near_max_coefficients_stay_exact() {
+        // 2^127 - 1 is a Mersenne prime, so nothing cross-reduces: the
+        // checked product must still be exact right at the edge.
+        assert_eq!(
+            Rat::new(i128::MAX, 2) * Rat::new(2, 3),
+            Rat::new(i128::MAX, 3)
+        );
+        assert_eq!(Rat::int(i128::MAX - 1) + Rat::ONE, Rat::int(i128::MAX));
+        // Denominator gcd reduction: the naive common denominator 2^200
+        // would overflow, the reduced one must not.
+        let tiny = Rat::new(1, 1i128 << 100);
+        assert_eq!(tiny + tiny, Rat::new(1, 1i128 << 99));
+        // A sum whose intermediate numerator overflows i128 but whose
+        // exact value is representable must survive via the widening
+        // path, not panic.
+        assert_eq!(
+            Rat::new(i128::MAX, 2) + Rat::new(i128::MAX, 2),
+            Rat::int(i128::MAX)
+        );
+    }
+
+    #[test]
+    fn i128_min_magnitude_normalizes_exactly() {
+        // |i128::MIN| has no i128 representation; normalization must go
+        // through u128 instead of wrapping (or panicking) in abs().
+        assert_eq!(Rat::new(i128::MIN, 2), Rat::new(-(1i128 << 126), 1));
+        assert_eq!(Rat::new(i128::MIN, i128::MIN), Rat::ONE);
+        // A checked sum landing exactly on i128::MIN stays exact.
+        let a = Rat::new(-((1i128 << 126) + 1), 2);
+        let b = Rat::new(-((1i128 << 126) - 1), 2);
+        assert_eq!(a + b, Rat::new(-(1i128 << 126), 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat overflow")]
+    fn i128_min_over_one_panics_instead_of_wrapping() {
+        let _ = Rat::new(i128::MIN, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat overflow")]
+    fn add_overflow_panics_instead_of_wrapping() {
+        let _ = Rat::int(i128::MAX) + Rat::int(i128::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat overflow")]
+    fn mul_overflow_panics_instead_of_wrapping() {
+        let _ = Rat::int(i128::MAX) * Rat::int(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rat overflow")]
+    fn pow_overflow_panics_instead_of_wrapping() {
+        let _ = Rat::int(2).pow(127);
     }
 }
