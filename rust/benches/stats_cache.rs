@@ -1,5 +1,6 @@
 //! Benchmark: repeated feature gathering through the memoized
-//! [`StatsCache`] vs the seed path (a fresh symbolic pass per use).
+//! [`StatsCache`] vs the seed path (a fresh symbolic pass per use),
+//! plus the disk-warm start a persistent artifact store enables.
 //!
 //! The acceptance bar for the cache subsystem is a >= 2x speedup on
 //! repeated gathering; in practice a warm cache turns the polyhedral
@@ -7,21 +8,26 @@
 //! magnitude.  A calibration-shaped loop (each kernel "used" twice per
 //! pass, once for measurement and once for its feature row — exactly
 //! the seed's duplication) is reported alongside, plus the hit/miss
-//! ledger.
+//! ledger.  The disk-warm variant simulates a fresh process against a
+//! store populated by an earlier run: cold memory, warm disk — the
+//! counting pass is replaced by JSON decoding.
+
+use std::sync::Arc;
 
 use perflex::bench_harness::bench;
-use perflex::ir::Kernel;
+use perflex::ir::FrozenKernel;
+use perflex::session::ArtifactStore;
 use perflex::stats::{self, StatsCache};
 use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
 
-fn workload() -> Vec<Kernel> {
+fn workload() -> Vec<FrozenKernel> {
     vec![
-        build_matmul(perflex::ir::DType::F32, true, 16).unwrap(),
-        build_matmul(perflex::ir::DType::F32, false, 16).unwrap(),
-        build_dg(DgVariant::MPrefetchT, 64, 16).unwrap(),
-        build_dg(DgVariant::UPrefetch, 64, 16).unwrap(),
-        build_fdiff(16).unwrap(),
-        build_fdiff(18).unwrap(),
+        build_matmul(perflex::ir::DType::F32, true, 16).unwrap().freeze(),
+        build_matmul(perflex::ir::DType::F32, false, 16).unwrap().freeze(),
+        build_dg(DgVariant::MPrefetchT, 64, 16).unwrap().freeze(),
+        build_dg(DgVariant::UPrefetch, 64, 16).unwrap().freeze(),
+        build_fdiff(16).unwrap().freeze(),
+        build_fdiff(18).unwrap().freeze(),
     ]
 }
 
@@ -38,7 +44,8 @@ fn main() {
     });
 
     // Cached path: one symbolic pass per distinct kernel for the whole
-    // program run, everything after that is a lookup.
+    // program run, everything after that is a lookup keyed by the
+    // frozen fingerprint.
     let cache = StatsCache::new();
     bench("feature gather x2, StatsCache", 20, || {
         for k in &kernels {
@@ -52,4 +59,36 @@ fn main() {
         cache.hits()
     );
     assert_eq!(cache.misses(), kernels.len() as u64);
+
+    // Disk-warm start: a prior run populated the store; each iteration
+    // plays a fresh process (empty in-memory cache) that loads every
+    // bundle from disk instead of re-counting.
+    let dir = std::env::temp_dir().join(format!(
+        "perflex-bench-store-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    {
+        let seed = StatsCache::with_backing(store.clone());
+        for k in &kernels {
+            let _ = seed.get_or_gather(k, 32).unwrap();
+        }
+        assert_eq!(seed.misses(), kernels.len() as u64);
+    }
+    let mut last_disk_hits = 0;
+    bench("feature gather x2, disk-warm StatsCache", 20, || {
+        let fresh = StatsCache::with_backing(store.clone());
+        for k in &kernels {
+            let _ = fresh.get_or_gather(k, 32).unwrap();
+            let _ = fresh.get_or_gather(k, 32).unwrap();
+        }
+        last_disk_hits = fresh.disk_hits();
+    });
+    println!(
+        "disk-warm ledger: {} disk hits per pass, 0 symbolic passes",
+        last_disk_hits
+    );
+    assert_eq!(last_disk_hits, kernels.len() as u64);
+    let _ = std::fs::remove_dir_all(&dir);
 }

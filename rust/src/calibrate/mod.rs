@@ -17,12 +17,14 @@
 //!   three-component family, executing the AOT-compiled JAX/Pallas
 //!   `lm_step` artifact on the PJRT CPU client.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
-use crate::features::FeatureSpec;
+use crate::features::{BoundFeature, FeatureSpec};
 use crate::gpusim::{measure_with_cache, DeviceProfile};
+use crate::ir::KernelRef;
 use crate::model::{Model, ModelExpr};
-use crate::stats::StatsCache;
+use crate::stats::{KernelStats, StatsCache};
 use crate::uipick::GeneratedKernel;
 
 /// Feature values for a measurement-kernel set.
@@ -90,6 +92,14 @@ pub fn gather_features_by_ids(
 /// distinct (kernel, sub-group size) is symbolically counted at most
 /// once across measurement, feature evaluation, and any other caller
 /// sharing the cache (e.g. a whole multi-device experiment).
+///
+/// Feature evaluation is batched across problem sizes: a measurement
+/// set typically reuses one structural kernel at many sizes, so the
+/// feature columns are [bound](FeatureSpec::bind) once per distinct
+/// kernel (access matching, count scaling, op summation hoisted out)
+/// and each size pays only cheap `QPoly` evaluations.  Kernels arrive
+/// pre-frozen from UiPiCK, so cache keys reuse the fingerprint minted
+/// at generation time instead of re-rendering the IR per lookup.
 pub fn gather_features_by_ids_cached(
     ids: Vec<String>,
     kernels: &[GeneratedKernel],
@@ -104,6 +114,10 @@ pub fn gather_features_by_ids_cached(
         feature_ids: ids,
         ..Default::default()
     };
+    // Per-distinct-kernel bound feature columns (keyed by the frozen
+    // fingerprint; the sub-group size is fixed by `device` here).
+    let mut bound: HashMap<u128, (Arc<KernelStats>, Vec<BoundFeature>)> =
+        HashMap::new();
     for gk in kernels {
         // Measure first: kernels a device cannot launch (e.g. 18x18
         // work-groups on the AMD R9 Fury) are skipped, exactly as the
@@ -116,16 +130,24 @@ pub fn gather_features_by_ids_cached(
             Err(e) if e.contains("CL_INVALID_WORK_GROUP_SIZE") => continue,
             Err(e) => return Err(e),
         };
-        let st = cache.get_or_gather(&gk.kernel, device.sub_group_size)?;
+        let entry = match bound.entry(gk.kernel.fingerprint()) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let st = cache.get_or_gather(&gk.kernel, device.sub_group_size)?;
+                let feats = specs
+                    .iter()
+                    .map(|s| s.bind(&st))
+                    .collect::<Result<Vec<_>, String>>()?;
+                v.insert((st, feats))
+            }
+        };
+        let (st, feats) = (&entry.0, &entry.1);
         let env: BTreeMap<String, i128> = gk
             .env
             .iter()
             .map(|(k, v)| (k.clone(), *v as i128))
             .collect();
-        let row: Vec<f64> = specs
-            .iter()
-            .map(|s| s.eval(&st, &env))
-            .collect::<Result<_, _>>()?;
+        let row: Vec<f64> = feats.iter().map(|b| b.eval(st, &env)).collect();
         data.rows.push(row);
         data.outputs.push(t);
         data.labels.push(format!(
@@ -472,11 +494,13 @@ pub fn eval_with_kernel(
 
 /// [`eval_with_kernel`] through a shared [`StatsCache`]: predicting the
 /// same kernel at many sizes (or for many variants of a sweep) pays the
-/// symbolic pass once and a `QPoly` evaluation per size.
-pub fn eval_with_kernel_cached(
+/// symbolic pass once and a `QPoly` evaluation per size.  Accepts any
+/// [`KernelRef`]; a [`crate::ir::FrozenKernel`] skips the per-lookup
+/// IR rendering of the cache key.
+pub fn eval_with_kernel_cached<K: KernelRef>(
     model: &Model,
     fit: &FitResult,
-    kernel: &crate::ir::Kernel,
+    kernel: &K,
     env: &BTreeMap<String, i64>,
     sub_group_size: u64,
     cache: &StatsCache,

@@ -1,33 +1,37 @@
 //! One harness per paper table/figure (Section 8 and the §2/§7.4
 //! demonstrations).
 //!
-//! Every `run_experiment` invocation owns one [`StatsCache`], threaded
-//! through measurement, feature gathering and prediction, so each
-//! distinct (kernel, sub-group size) is symbolically counted exactly
-//! once per run.  The per-device fleet loops of the multi-device
-//! experiments are embarrassingly parallel and run on scoped threads
-//! sharing that cache; results are merged in fleet order, so the
-//! reports are byte-identical to a sequential pass.  Model fits stay on
-//! the dispatching thread: the optional AOT artifact wraps a PJRT
-//! client that is not assumed thread-safe, and the fits are cheap next
-//! to the symbolic and measurement work anyway.
+//! Every `run_experiment` invocation runs inside one
+//! [`Session`](crate::session::Session) — the shared pipeline engine —
+//! whose [`StatsCache`](crate::stats::StatsCache) is threaded through
+//! measurement, feature gathering and prediction, so each distinct
+//! (kernel, sub-group size) is symbolically counted exactly once per
+//! run; with a `--store`-backed session, repeat runs load those counts
+//! from disk and skip the pass entirely.  The per-device fleet loops of
+//! the multi-device experiments are embarrassingly parallel and run on
+//! scoped threads sharing that session; results are merged in fleet
+//! order, so the reports are byte-identical to a sequential pass (and
+//! to a warm re-run).  Model fits stay on the dispatching thread: the
+//! optional AOT artifact wraps a PJRT client that is not assumed
+//! thread-safe, and the fits are cheap next to the symbolic and
+//! measurement work anyway.
 
 use std::collections::BTreeMap;
 
-use super::expsets::{self, EvalCase};
+use super::expsets;
 use super::report::{fmt_time, geomean, ExperimentReport, Prediction};
 use crate::calibrate::{
     eval_with_kernel_cached, gather_features_by_ids_cached, FitResult, LmOptions,
 };
 use crate::features::FeatureSpec;
 use crate::gpusim::{fleet, measure_with_cache, DeviceProfile};
-use crate::ir::Kernel;
+use crate::ir::{FrozenKernel, KernelRef};
 use crate::model::{CostGroup, CostModel};
 use crate::runtime::{
     artifacts_available, fit_cost_model_aot, fit_cost_model_native, Artifacts,
 };
+use crate::session::Session;
 use crate::stats;
-use crate::stats::StatsCache;
 use crate::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
 use crate::uipick::KernelCollection;
 
@@ -37,35 +41,44 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "table2", "table3", "all",
 ];
 
-/// Dispatch.  Creates the run's shared statistics cache.
+/// Dispatch with a fresh in-memory session.
 pub fn run_experiment(id: &str, use_aot: bool) -> Result<ExperimentReport, String> {
+    run_experiment_in_session(id, use_aot, &Session::new())
+}
+
+/// Dispatch inside a caller-provided session (the CLI passes a
+/// `--store`-backed one so experiments warm-start across invocations).
+pub fn run_experiment_in_session(
+    id: &str,
+    use_aot: bool,
+    session: &Session,
+) -> Result<ExperimentReport, String> {
     let aot = if use_aot && artifacts_available() {
         Some(Artifacts::load()?)
     } else {
         None
     };
-    let cache = StatsCache::new();
-    dispatch_experiment(id, aot.as_ref(), &cache)
+    dispatch_experiment(id, aot.as_ref(), session)
 }
 
 fn dispatch_experiment(
     id: &str,
     aot: Option<&Artifacts>,
-    cache: &StatsCache,
+    session: &Session,
 ) -> Result<ExperimentReport, String> {
     match id {
-        "fig1" => fig1_fig2(false, cache),
-        "fig2" => fig1_fig2(true, cache),
+        "fig1" => fig1_fig2(false, session),
+        "fig2" => fig1_fig2(true, session),
         "fig4" => fig4(),
-        "fig5" => fig5(aot, cache),
+        "fig5" => fig5(aot, session),
         "fig6" => fig6(),
-        "fig7" => fig7(aot, cache),
-        "fig8" => fig8(aot, cache),
-        "fig9" => fig9(aot, cache),
-        "table1" => table1(cache),
+        "fig7" => fig7(aot, session),
+        "fig8" => fig8(aot, session),
+        "fig9" => fig9(aot, session),
+        "table1" => table1(session),
         "table2" => table2(),
-        "table3" => table3(aot, cache),
-        "all" => all_experiments(aot, cache),
+        "table3" => table3(aot, session),
+        "all" => all_experiments(aot, session),
         other => Err(format!(
             "unknown experiment '{other}'; known: {EXPERIMENT_IDS:?}"
         )),
@@ -110,67 +123,15 @@ where
     })
 }
 
-/// Gather (and output-scale) a case's measurement data for one device.
-/// The feature columns are shared by the linear and nonlinear forms,
-/// so one gathering serves both fits.
-pub fn gather_case_data(
-    case: &EvalCase,
-    device: &DeviceProfile,
-    cache: &StatsCache,
-) -> Result<crate::calibrate::FeatureData, String> {
-    let cm = (case.model)(device.id, true);
-    let kernels = expsets::generate_measurement_kernels(&(case.measurement_sets)())?;
-    let mut data =
-        gather_features_by_ids_cached(cm.feature_columns(), &kernels, device, cache)?;
-    data.scale_features_by_output();
-    Ok(data)
-}
-
-/// Fit one model form from already-gathered data.
-pub fn fit_case(
-    case: &EvalCase,
-    device: &DeviceProfile,
-    data: &crate::calibrate::FeatureData,
-    nonlinear: bool,
-    aot: Option<&Artifacts>,
-) -> Result<(CostModel, FitResult), String> {
-    let cm = (case.model)(device.id, nonlinear);
-    let opts = LmOptions::default();
-    let fit = match aot {
-        Some(a) => fit_cost_model_aot(a, &cm, data, &opts)?,
-        None => fit_cost_model_native(&cm, data, &opts)?,
-    };
-    Ok((cm, fit))
-}
-
-/// Calibrate an evaluation case for one device (gathers then fits).
-pub fn calibrate_case(
-    case: &EvalCase,
-    device: &DeviceProfile,
-    nonlinear: bool,
-    aot: Option<&Artifacts>,
-    cache: &StatsCache,
-) -> Result<(CostModel, FitResult), String> {
-    let data = gather_case_data(case, device, cache)?;
-    fit_case(case, device, &data, nonlinear, aot)
-}
-
-fn predict(
+fn predict<K: KernelRef>(
     cm: &CostModel,
     fit: &FitResult,
-    kernel: &Kernel,
+    kernel: &K,
     env: &BTreeMap<String, i64>,
     device: &DeviceProfile,
-    cache: &StatsCache,
+    session: &Session,
 ) -> Result<f64, String> {
-    eval_with_kernel_cached(
-        &cm.to_model(),
-        fit,
-        kernel,
-        env,
-        device.sub_group_size,
-        cache,
-    )
+    session.predict(cm, fit, kernel, env, device)
 }
 
 fn env1(k: &str, v: i64) -> BTreeMap<String, i64> {
@@ -180,7 +141,11 @@ fn env1(k: &str, v: i64) -> BTreeMap<String, i64> {
 // ----------------------------------------------------------------------
 // Figures 1 & 2 — the §2 illustrative example on the "GTX Titan X".
 // ----------------------------------------------------------------------
-fn fig1_fig2(madd_component: bool, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn fig1_fig2(
+    madd_component: bool,
+    session: &Session,
+) -> Result<ExperimentReport, String> {
+    let cache = session.cache();
     let (id, title) = if madd_component {
         ("fig2", "madd-component model for tiled matmul (§2.2, Figure 2)")
     } else {
@@ -231,7 +196,7 @@ fn fig1_fig2(madd_component: bool, cache: &StatsCache) -> Result<ExperimentRepor
         fit.residual
     ));
 
-    let test = build_matmul(crate::ir::DType::F32, true, 16)?;
+    let test = build_matmul(crate::ir::DType::F32, true, 16)?.freeze();
     rep.line(format!("{:>6} {:>12} {:>12} {:>8}", "n", "measured", "modeled", "err"));
     for n in [1024i64, 1536, 2048, 2560, 3072, 3584] {
         let env = env1("n", n);
@@ -296,7 +261,8 @@ fn fig4() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Figure 5 — overlap of local and global memory transactions.
 // ----------------------------------------------------------------------
-fn fig5(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
+    let cache = session.cache();
     let mut rep = ExperimentReport::new(
         "fig5",
         "modeling overlap of local/global memory transactions (Figure 5)",
@@ -364,7 +330,7 @@ fn fig5(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport,
         for gk in knls {
             let m = gk.env.get("m").copied().unwrap_or(0);
             let measured = measure_with_cache(device, &gk.kernel, &gk.env, cache)?;
-            let predicted = predict(cm, fit, &gk.kernel, &gk.env, device, cache)?;
+            let predicted = predict(cm, fit, &gk.kernel, &gk.env, device, session)?;
             if m == 0 {
                 t0 = measured;
             }
@@ -432,7 +398,8 @@ fn fig6() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Table 1 — the two global load patterns of the prefetching matmul.
 // ----------------------------------------------------------------------
-fn table1(cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn table1(session: &Session) -> Result<ExperimentReport, String> {
+    let cache = session.cache();
     let mut rep = ExperimentReport::new(
         "table1",
         "global load patterns in tiled matmul with prefetching (Table 1)",
@@ -440,7 +407,7 @@ fn table1(cache: &StatsCache) -> Result<ExperimentReport, String> {
     // The §6.1.1 microbenchmark device (its sub-group size also sets
     // the symbolic counting granularity below).
     let device = crate::gpusim::device_by_id("gtx_titan_x").unwrap();
-    let k = build_matmul(crate::ir::DType::F32, true, 16)?;
+    let k = build_matmul(crate::ir::DType::F32, true, 16)?.freeze();
     let st = cache.get_or_gather(&k, device.sub_group_size)?;
     let e: BTreeMap<String, i128> = [("n".to_string(), 2048i128)].into_iter().collect();
     rep.line(format!(
@@ -524,18 +491,19 @@ fn table2() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Table 3 — matmul model parameters on the Titan V.
 // ----------------------------------------------------------------------
-fn table3(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn table3(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "table3",
         "matmul model parameter values on the Titan V (Table 3)",
     );
     let device = crate::gpusim::device_by_id("titan_v").unwrap();
     let case = &expsets::eval_cases()[0];
-    let (cm, fit) = calibrate_case(case, &device, true, aot, cache)?;
+    let cal = session.calibrate_case(case, &device, true, aot)?;
+    let (cm, fit) = (cal.cm, cal.fit);
 
     // Modeled cost granularity + implied throughput per feature.
-    let app = build_matmul(crate::ir::DType::F32, true, 16)?;
-    let app_stats = cache.get_or_gather(&app, device.sub_group_size)?;
+    let app = build_matmul(crate::ir::DType::F32, true, 16)?.freeze();
+    let app_stats = session.cache().get_or_gather(&app, device.sub_group_size)?;
     rep.line(format!(
         "{:<42} {:>12} {:>5} {:>14}",
         "feature", "param (s)", "MCG", "rate"
@@ -617,7 +585,7 @@ fn granularity_and_rate(
 
 struct VariantSpec {
     label: String,
-    kernel: Kernel,
+    kernel: FrozenKernel,
     envs: Vec<BTreeMap<String, i64>>,
 }
 
@@ -631,16 +599,18 @@ struct VariantSpec {
 fn onchip_cost_is_hidden(
     cm_lin: &CostModel,
     fit_lin: &FitResult,
-    kernel: &Kernel,
+    kernel: &FrozenKernel,
     env: &BTreeMap<String, i64>,
     device: &DeviceProfile,
-    cache: &StatsCache,
+    session: &Session,
 ) -> Result<bool, String> {
+    let cache = session.cache();
     let t_total = measure_with_cache(device, kernel, env, cache)?;
     let rm = crate::transform::remove_work(
         kernel,
         &crate::transform::remove_work::RemoveSpec::default(),
-    )?;
+    )?
+    .freeze();
     let t_gmem_only = measure_with_cache(device, &rm, env, cache)?;
     let st = cache.get_or_gather(kernel, device.sub_group_size)?;
     let envi: BTreeMap<String, i128> =
@@ -666,7 +636,7 @@ fn accuracy_experiment(
     case_idx: usize,
     variants: Vec<VariantSpec>,
     aot: Option<&Artifacts>,
-    cache: &StatsCache,
+    session: &Session,
 ) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(id, title);
     let cases = expsets::eval_cases();
@@ -675,14 +645,14 @@ fn accuracy_experiment(
 
     // Phase 1 (parallel over devices): one measurement-gathering pass
     // per device serves both model forms.  Devices sharing a sub-group
-    // size also share the cache's symbolic entries.
-    let datas = parallel_map(&devices, |device| gather_case_data(case, device, cache))?;
+    // size also share the session cache's symbolic entries.
+    let datas = parallel_map(&devices, |device| session.gather_case_data(case, device))?;
 
     // Phase 2 (sequential): both fits per device on this thread.
     let mut fits = Vec::with_capacity(devices.len());
     for (device, data) in devices.iter().zip(&datas) {
-        let nl = fit_case(case, device, data, true, aot)?;
-        let lin = fit_case(case, device, data, false, aot)?;
+        let nl = session.fit_case(case, device, data, true, aot)?;
+        let lin = session.fit_case(case, device, data, false, aot)?;
         fits.push((nl, lin));
     }
 
@@ -716,7 +686,7 @@ fn accuracy_experiment(
             // overlap analysis at a representative size.
             let probe = &v.envs[v.envs.len() / 2];
             let nonlinear =
-                onchip_cost_is_hidden(cm_lin, fit_lin, &v.kernel, probe, device, cache)?;
+                onchip_cost_is_hidden(cm_lin, fit_lin, &v.kernel, probe, device, session)?;
             let linear = !nonlinear;
             let (cm, fit) = if linear {
                 (cm_lin, fit_lin)
@@ -725,8 +695,8 @@ fn accuracy_experiment(
             };
             let mut v_errs = Vec::new();
             for env in &v.envs {
-                let measured = measure_with_cache(device, &v.kernel, env, cache)?;
-                let predicted = predict(cm, fit, &v.kernel, env, device, cache)?;
+                let measured = measure_with_cache(device, &v.kernel, env, session.cache())?;
+                let predicted = predict(cm, fit, &v.kernel, env, device, session)?;
                 v_errs.push((predicted - measured).abs() / measured);
                 part.preds.push(Prediction {
                     device: device.id.into(),
@@ -803,18 +773,18 @@ fn accuracy_experiment(
     Ok(rep)
 }
 
-fn fig7(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn fig7(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
     let ns = [1024i64, 1536, 2048, 2560, 3072, 3584];
     let envs: Vec<_> = ns.iter().map(|&n| env1("n", n)).collect();
     let variants = vec![
         VariantSpec {
             label: "prefetch".into(),
-            kernel: build_matmul(crate::ir::DType::F32, true, 16)?,
+            kernel: build_matmul(crate::ir::DType::F32, true, 16)?.freeze(),
             envs: envs.clone(),
         },
         VariantSpec {
             label: "no_prefetch".into(),
-            kernel: build_matmul(crate::ir::DType::F32, false, 16)?,
+            kernel: build_matmul(crate::ir::DType::F32, false, 16)?.freeze(),
             envs,
         },
     ];
@@ -824,11 +794,11 @@ fn fig7(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport,
         0,
         variants,
         aot,
-        cache,
+        session,
     )
 }
 
-fn fig8(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn fig8(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
     let nels = [65536i64, 131072, 262144];
     let envs: Vec<_> = nels
         .iter()
@@ -851,7 +821,7 @@ fn fig8(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport,
     ] {
         variants.push(VariantSpec {
             label: v.label().into(),
-            kernel: build_dg(v, 64, 16)?,
+            kernel: build_dg(v, 64, 16)?.freeze(),
             envs: envs.clone(),
         });
     }
@@ -861,22 +831,22 @@ fn fig8(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport,
         1,
         variants,
         aot,
-        cache,
+        session,
     )
 }
 
-fn fig9(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn fig9(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
     let ns = [2016i64, 4032, 6048, 8064];
     let envs: Vec<_> = ns.iter().map(|&n| env1("n", n)).collect();
     let variants = vec![
         VariantSpec {
             label: "16x16".into(),
-            kernel: build_fdiff(16)?,
+            kernel: build_fdiff(16)?.freeze(),
             envs: envs.clone(),
         },
         VariantSpec {
             label: "18x18".into(),
-            kernel: build_fdiff(18)?,
+            kernel: build_fdiff(18)?.freeze(),
             envs,
         },
     ];
@@ -886,18 +856,21 @@ fn fig9(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport,
         2,
         variants,
         aot,
-        cache,
+        session,
     )
 }
 
-fn all_experiments(aot: Option<&Artifacts>, cache: &StatsCache) -> Result<ExperimentReport, String> {
+fn all_experiments(
+    aot: Option<&Artifacts>,
+    session: &Session,
+) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "all",
         "overall accuracy across all three computations (paper §10: ~6.4%)",
     );
     let mut all_errs = Vec::new();
     for id in ["fig7", "fig8", "fig9"] {
-        let sub = dispatch_experiment(id, aot, cache)?;
+        let sub = dispatch_experiment(id, aot, session)?;
         let g = sub.overall_geomean();
         rep.line(format!("{id}: geomean rel err {:.1}%", 100.0 * g));
         all_errs.extend(sub.predictions.iter().map(Prediction::rel_err));
@@ -922,6 +895,7 @@ mod tests {
         fit_model, gather_features_by_ids, FeatureData,
     };
     use crate::gpusim::device_by_id;
+    use crate::stats::StatsCache;
 
     /// The silent empty-fit bug: a device that can launch none of the
     /// measurement kernels must yield a descriptive error, not a
@@ -998,14 +972,14 @@ mod tests {
             .iter()
             .map(|gk| gk.kernel.fingerprint())
             .collect();
-        let cache = StatsCache::new();
-        let data = gather_case_data(case, &dev, &cache).unwrap();
+        let session = Session::new();
+        let data = session.gather_case_data(case, &dev).unwrap();
         assert_eq!(data.len(), kernels.len());
-        assert_eq!(cache.misses(), distinct.len() as u64);
+        assert_eq!(session.cache().misses(), distinct.len() as u64);
         // A second full gathering is served entirely from the cache.
-        let misses_before = cache.misses();
-        let again = gather_case_data(case, &dev, &cache).unwrap();
-        assert_eq!(cache.misses(), misses_before);
+        let misses_before = session.cache().misses();
+        let again = session.gather_case_data(case, &dev).unwrap();
+        assert_eq!(session.cache().misses(), misses_before);
         assert_eq!(data.rows, again.rows);
         assert_eq!(data.outputs, again.outputs);
     }

@@ -65,6 +65,7 @@ fn common_sets(flops: &[&'static str]) -> Vec<Vec<String>> {
 }
 
 /// One evaluation case (§8.3-8.5).
+#[derive(Clone, Copy)]
 pub struct EvalCase {
     pub id: &'static str,
     /// Cost-model terms (device-independent; the output feature binds
@@ -199,6 +200,11 @@ pub fn eval_cases() -> Vec<EvalCase> {
             measurement_sets: fdiff_measurement_sets,
         },
     ]
+}
+
+/// Look one evaluation case up by id (the CLI's `<case>` argument).
+pub fn eval_case(id: &str) -> Option<EvalCase> {
+    eval_cases().into_iter().find(|c| c.id == id)
 }
 
 /// Generate the union of a case's measurement kernels.

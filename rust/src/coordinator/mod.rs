@@ -12,5 +12,5 @@ pub mod experiments;
 pub mod expsets;
 pub mod report;
 
-pub use experiments::{run_experiment, EXPERIMENT_IDS};
+pub use experiments::{run_experiment, run_experiment_in_session, EXPERIMENT_IDS};
 pub use report::ExperimentReport;

@@ -23,6 +23,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::ir::{DType, MemScope};
+use crate::polyhedral::QPoly;
 use crate::stats::{Direction, KernelStats, MemAccessStat};
 
 /// A constraint on an integer quantity (stride or AFR).
@@ -122,6 +123,132 @@ impl MemAccessFilter {
         }
         true
     }
+
+    /// Decide membership without problem sizes where possible.
+    ///
+    /// `Some(b)` means [`MemAccessFilter::matches`] returns `b` for
+    /// *every* env: the tag/scope/dtype/direction fields never depend
+    /// on sizes, and a stride constraint against a constant stride
+    /// polynomial evaluates the same everywhere.  `None` means the
+    /// decision genuinely depends on the problem size (a constrained
+    /// stride is parametric, or an AFR constraint is present) and must
+    /// be re-checked per env.
+    pub fn matches_static(&self, m: &MemAccessStat) -> Option<bool> {
+        if let Some(t) = &self.tag {
+            if m.tag.as_deref() != Some(t.as_str()) {
+                return Some(false);
+            }
+        }
+        if let Some(s) = self.scope {
+            if m.scope != s {
+                return Some(false);
+            }
+        }
+        if let Some(d) = self.dtype {
+            if m.dtype != d {
+                return Some(false);
+            }
+        }
+        if let Some(dir) = self.direction {
+            if m.direction != dir {
+                return Some(false);
+            }
+        }
+        let mut decided = true;
+        for (axis, c) in &self.lstrides {
+            match m.lstrides[*axis as usize].as_constant() {
+                Some(v) if !c.matches(v.to_f64()) => return Some(false),
+                Some(_) => {}
+                None => decided = false,
+            }
+        }
+        for (axis, c) in &self.gstrides {
+            match m.gstrides[*axis as usize].as_constant() {
+                Some(v) if !c.matches(v.to_f64()) => return Some(false),
+                Some(_) => {}
+                None => decided = false,
+            }
+        }
+        if self.afr.is_some() {
+            decided = false;
+        }
+        if decided {
+            Some(true)
+        } else {
+            None
+        }
+    }
+}
+
+/// One memory-access contribution of a bound feature.
+#[derive(Clone, Debug)]
+struct MemTerm {
+    /// Index into `KernelStats::mem`.
+    index: usize,
+    /// Precomputed `count_at_granularity` polynomial for that access.
+    count: QPoly,
+    /// Whether the filter must be re-checked per problem size.
+    needs_check: bool,
+}
+
+#[derive(Clone, Debug)]
+enum BoundKind {
+    Const(f64),
+    Poly(QPoly),
+    /// Two factors evaluated separately and multiplied as `f64`s,
+    /// reproducing [`FeatureSpec::eval`]'s rounding exactly.
+    PolyProduct(QPoly, QPoly),
+    Mem {
+        terms: Vec<MemTerm>,
+        filter: MemAccessFilter,
+    },
+}
+
+/// A [`FeatureSpec`] pre-bound to one kernel's [`KernelStats`]: the
+/// spec parsing, access matching and per-access `count_at_granularity`
+/// scaling are done once, leaving only cheap `QPoly` evaluations per
+/// problem size.  This is the batched-evaluation engine behind
+/// [`crate::calibrate::gather_features_by_ids_cached`]: a measurement
+/// kernel reused across many sizes binds its features once.
+///
+/// Evaluation is bit-identical to [`FeatureSpec::eval`] on the same
+/// statistics: per-access contributions are summed in the same order
+/// with the same `f64` roundings, and accesses whose filter membership
+/// depends on the problem size are re-checked per env.
+#[derive(Clone, Debug)]
+pub struct BoundFeature {
+    kind: BoundKind,
+}
+
+impl BoundFeature {
+    /// True when nothing remains to re-check per problem size (every
+    /// access was statically classified).
+    pub fn is_fully_batched(&self) -> bool {
+        match &self.kind {
+            BoundKind::Mem { terms, .. } => terms.iter().all(|t| !t.needs_check),
+            _ => true,
+        }
+    }
+
+    /// Evaluate at concrete sizes; `stats` must be the bundle this
+    /// feature was bound against.
+    pub fn eval(&self, stats: &KernelStats, env: &BTreeMap<String, i128>) -> f64 {
+        match &self.kind {
+            BoundKind::Const(c) => *c,
+            BoundKind::Poly(p) => p.eval_f64(env),
+            BoundKind::PolyProduct(a, b) => a.eval_f64(env) * b.eval_f64(env),
+            BoundKind::Mem { terms, filter } => {
+                let mut acc = 0.0;
+                for t in terms {
+                    if t.needs_check && !filter.matches(&stats.mem[t.index], env) {
+                        continue;
+                    }
+                    acc += t.count.eval_f64(env);
+                }
+                acc
+            }
+        }
+    }
 }
 
 /// A parsed feature identifier.
@@ -211,6 +338,53 @@ impl FeatureSpec {
 
     pub fn is_wall_time(&self) -> bool {
         matches!(self, FeatureSpec::WallTime { .. })
+    }
+
+    /// Bind this feature to one kernel's statistics, hoisting all the
+    /// size-independent work (access matching, count scaling, op
+    /// summation) out of the per-problem-size loop.  See
+    /// [`BoundFeature`] for the equivalence guarantee.
+    pub fn bind(&self, stats: &KernelStats) -> Result<BoundFeature, String> {
+        let kind = match self {
+            FeatureSpec::Op { dtype, op } => {
+                BoundKind::Poly(stats.op_count(*dtype, op))
+            }
+            FeatureSpec::MemAccess(f) => {
+                let sg = stats.sub_group_size;
+                let mut terms = Vec::new();
+                for (index, m) in stats.mem.iter().enumerate() {
+                    match f.matches_static(m) {
+                        Some(false) => {}
+                        Some(true) => terms.push(MemTerm {
+                            index,
+                            count: m.count_at_granularity(sg),
+                            needs_check: false,
+                        }),
+                        None => terms.push(MemTerm {
+                            index,
+                            count: m.count_at_granularity(sg),
+                            needs_check: true,
+                        }),
+                    }
+                }
+                BoundKind::Mem {
+                    terms,
+                    filter: f.clone(),
+                }
+            }
+            FeatureSpec::SyncBarrierPerWg => BoundKind::PolyProduct(
+                stats.barriers_per_wi.clone(),
+                stats.num_groups.clone(),
+            ),
+            FeatureSpec::SyncKernelLaunch => BoundKind::Const(1.0),
+            FeatureSpec::ThreadGroups => BoundKind::Poly(stats.num_groups.clone()),
+            FeatureSpec::WallTime { device } => {
+                return Err(format!(
+                    "f_cl_wall_time_{device} is an output feature; measure it on a device"
+                ))
+            }
+        };
+        Ok(BoundFeature { kind })
     }
 }
 
@@ -461,6 +635,81 @@ mod tests {
         assert!(Constraint::Gt(16).matches(17.0));
         assert!(!Constraint::Gt(16).matches(16.0));
         assert!(Constraint::Lt(4).matches(3.0));
+    }
+
+    #[test]
+    fn bound_features_match_direct_eval_bit_for_bit() {
+        // Bind every style of feature against a real app kernel and
+        // check the batched path reproduces FeatureSpec::eval exactly
+        // across problem sizes (including parametric-stride filters
+        // that need per-env re-checks).
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        let ids = [
+            "f_op_float32_madd",
+            "f_mem_access_tag:mm_pf_a",
+            "f_mem_access_global_float32_store",
+            "f_mem_access_local_float32",
+            "f_mem_access_local_float32_lstrides:{0:<2}",
+            "f_mem_access_global_float32_load_lstrides:{1:>16}",
+            "f_sync_local_barrier_per_wg",
+            "f_sync_kernel_launch",
+            "f_thread_groups",
+        ];
+        for id in ids {
+            let spec = FeatureSpec::parse(id).unwrap();
+            let bound = spec.bind(&stats).unwrap();
+            for n in [1024i128, 2048, 3584] {
+                let env: BTreeMap<String, i128> =
+                    [("n".to_string(), n)].into_iter().collect();
+                let direct = spec.eval(&stats, &env).unwrap();
+                let batched = bound.eval(&stats, &env);
+                assert_eq!(direct, batched, "{id} at n={n}");
+            }
+        }
+        // Constant-stride filters fold completely at bind time.
+        let b = FeatureSpec::parse("f_mem_access_local_float32_lstrides:{0:<2}")
+            .unwrap()
+            .bind(&stats)
+            .unwrap();
+        assert!(b.is_fully_batched());
+        // Wall time cannot be bound.
+        assert!(FeatureSpec::parse("f_cl_wall_time_titan_v")
+            .unwrap()
+            .bind(&stats)
+            .is_err());
+    }
+
+    #[test]
+    fn matches_static_agrees_with_matches() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        let specs = [
+            "f_mem_access_tag:mm_pf_b",
+            "f_mem_access_global_float32_load",
+            "f_mem_access_global_float32_load_lstrides:{0:1}",
+            "f_mem_access_global_float32_load_gstrides:{1:>0}",
+            "f_mem_access_global_float32_load_afr:>1",
+        ];
+        let env: BTreeMap<String, i128> =
+            [("n".to_string(), 2048i128)].into_iter().collect();
+        for id in specs {
+            let f = match FeatureSpec::parse(id).unwrap() {
+                FeatureSpec::MemAccess(f) => f,
+                other => panic!("{other:?}"),
+            };
+            for m in &stats.mem {
+                if let Some(decided) = f.matches_static(m) {
+                    assert_eq!(
+                        decided,
+                        f.matches(m, &env),
+                        "{id} static decision wrong for {:?}/{:?}",
+                        m.array,
+                        m.tag
+                    );
+                }
+            }
+        }
     }
 
     #[test]

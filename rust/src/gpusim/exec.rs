@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 
 use super::device::DeviceProfile;
-use crate::ir::{DType, Kernel, MemScope};
+use crate::ir::{DType, Kernel, KernelRef, MemScope};
 use crate::stats::{self, Granularity, KernelStats, MemAccessStat, StatsCache};
 use crate::util::Rng;
 
@@ -101,15 +101,17 @@ pub fn simulate_breakdown(
 
 /// [`simulate_breakdown`] through a shared [`StatsCache`]: the symbolic
 /// pass runs at most once per distinct (kernel, sub-group size).
-pub fn simulate_breakdown_with_cache(
+/// Accepts any [`KernelRef`]; a [`crate::ir::FrozenKernel`] avoids the
+/// per-lookup IR rendering of the cache key.
+pub fn simulate_breakdown_with_cache<K: KernelRef>(
     dev: &DeviceProfile,
-    knl: &Kernel,
+    knl: &K,
     env: &BTreeMap<String, i64>,
     cache: &StatsCache,
 ) -> Result<CostBreakdown, String> {
-    check_launchable(dev, knl)?;
+    check_launchable(dev, knl.as_kernel())?;
     let stats = cache.get_or_gather(knl, dev.sub_group_size)?;
-    Ok(breakdown_from_stats(dev, knl, &stats, env))
+    Ok(breakdown_from_stats(dev, knl.as_kernel(), &stats, env))
 }
 
 /// Core cost model over gathered statistics.
@@ -322,9 +324,9 @@ pub fn simulate_time(
 }
 
 /// [`simulate_time`] through a shared [`StatsCache`].
-pub fn simulate_time_with_cache(
+pub fn simulate_time_with_cache<K: KernelRef>(
     dev: &DeviceProfile,
-    knl: &Kernel,
+    knl: &K,
     env: &BTreeMap<String, i64>,
     cache: &StatsCache,
 ) -> Result<f64, String> {
@@ -347,14 +349,14 @@ pub fn measure(
 /// (the noise seed depends only on device, kernel name and sizes), but
 /// the symbolic pass is skipped whenever the cache already holds the
 /// kernel's statistics.
-pub fn measure_with_cache(
+pub fn measure_with_cache<K: KernelRef>(
     dev: &DeviceProfile,
-    knl: &Kernel,
+    knl: &K,
     env: &BTreeMap<String, i64>,
     cache: &StatsCache,
 ) -> Result<f64, String> {
     let base = simulate_time_with_cache(dev, knl, env, cache)?;
-    Ok(noisy_trials(dev, knl, env, base))
+    Ok(noisy_trials(dev, knl.as_kernel(), env, base))
 }
 
 fn noisy_trials(

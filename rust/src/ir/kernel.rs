@@ -2,6 +2,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::dtype::DType;
 use super::expr::{Access, AffExpr, Expr};
@@ -459,17 +460,17 @@ impl Kernel {
     /// orders of magnitude cheaper than the polyhedral counting pass it
     /// lets us skip, and 128 bits keep accidental collisions negligible
     /// for any realistic kernel population.
+    ///
+    /// Every call renders the whole IR (and bumps [`ir_render_count`]).
+    /// Hot paths should not call this repeatedly: [`Kernel::freeze`]
+    /// mints a [`FrozenKernel`] whose key is computed exactly once.
     pub fn fingerprint(&self) -> u128 {
-        const PRIME: u64 = 0x100000001b3;
+        IR_RENDERS.fetch_add(1, Ordering::Relaxed);
         let s = format!("{self:?}");
-        let mut lo = 0xcbf29ce484222325u64;
-        let mut hi = 0x9e3779b97f4a7c15u64;
-        for byte in s.bytes() {
-            lo = (lo ^ byte as u64).wrapping_mul(PRIME);
-            hi = (hi ^ byte as u64).wrapping_mul(PRIME).rotate_left(29);
-        }
-        lo = lo.wrapping_add(s.len() as u64);
-        ((hi as u128) << 64) | lo as u128
+        let mut h = crate::util::Fnv128::new();
+        h.write(s.as_bytes());
+        h.write(&(s.len() as u64).to_le_bytes());
+        h.finish()
     }
 
     /// Human-readable pseudo-OpenCL listing (inspection/debugging).
@@ -495,6 +496,109 @@ impl Kernel {
             ));
         }
         out
+    }
+
+    /// Seal this kernel with its precomputed structural fingerprint.
+    ///
+    /// `Kernel` fields are `pub` and freely mutable, so a fingerprint
+    /// memoized *inside* `Kernel` could silently go stale.  Freezing
+    /// sidesteps the problem by construction: the key is minted once
+    /// here, and [`FrozenKernel`] hands out only shared references —
+    /// mutating requires [`FrozenKernel::thaw`], which discards the
+    /// key.  Hot loops (the stats cache, measurement, feature
+    /// gathering, prediction) accept any [`KernelRef`] and use the
+    /// frozen key when present instead of re-rendering the IR.
+    pub fn freeze(self) -> FrozenKernel {
+        let fingerprint = self.fingerprint();
+        FrozenKernel {
+            kernel: self,
+            fingerprint,
+        }
+    }
+}
+
+static IR_RENDERS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of full IR renderings performed by
+/// [`Kernel::fingerprint`].  Observability hook for the "render at most
+/// once per kernel" invariant: a pipeline operating on frozen kernels
+/// must leave this counter unchanged.
+pub fn ir_render_count() -> u64 {
+    IR_RENDERS.load(Ordering::Relaxed)
+}
+
+/// A [`Kernel`] paired with its fingerprint, computed exactly once at
+/// [`Kernel::freeze`] time.
+///
+/// Immutable by construction (`Deref` but no `DerefMut`): the cached
+/// key cannot go stale because the underlying kernel cannot change
+/// while frozen.  Call [`FrozenKernel::thaw`] to get the kernel back
+/// for mutation; re-freeze afterwards to mint a fresh key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrozenKernel {
+    kernel: Kernel,
+    fingerprint: u128,
+}
+
+impl FrozenKernel {
+    /// The fingerprint minted at freeze time (no IR rendering).
+    pub fn fingerprint(&self) -> u128 {
+        self.fingerprint
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Give up the key and recover the mutable kernel.
+    pub fn thaw(self) -> Kernel {
+        self.kernel
+    }
+}
+
+impl std::ops::Deref for FrozenKernel {
+    type Target = Kernel;
+    fn deref(&self) -> &Kernel {
+        &self.kernel
+    }
+}
+
+/// Anything that can stand in for a kernel on the cached hot paths: a
+/// borrowed view of the IR plus a structural fingerprint.  For plain
+/// [`Kernel`]s the fingerprint re-renders the IR on every call; for
+/// [`FrozenKernel`]s it is the memoized key.
+pub trait KernelRef {
+    fn as_kernel(&self) -> &Kernel;
+    fn fingerprint(&self) -> u128;
+}
+
+impl KernelRef for Kernel {
+    fn as_kernel(&self) -> &Kernel {
+        self
+    }
+
+    fn fingerprint(&self) -> u128 {
+        Kernel::fingerprint(self)
+    }
+}
+
+impl KernelRef for FrozenKernel {
+    fn as_kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    fn fingerprint(&self) -> u128 {
+        self.fingerprint
+    }
+}
+
+impl<K: KernelRef> KernelRef for &K {
+    fn as_kernel(&self) -> &Kernel {
+        (**self).as_kernel()
+    }
+
+    fn fingerprint(&self) -> u128 {
+        (**self).fingerprint()
     }
 }
 
@@ -665,6 +769,24 @@ mod tests {
         let mut e = tiled_matmul_fragment();
         e.stmts[0].id = "fetch_a2".into();
         assert_ne!(a.fingerprint(), e.fingerprint());
+    }
+
+    #[test]
+    fn freeze_memoizes_fingerprint() {
+        // (The zero-render property is asserted in the dedicated
+        // tests/fingerprint_render.rs binary — the render counter is
+        // process-global and sibling unit tests would perturb it.)
+        let k = tiled_matmul_fragment();
+        let slow = k.fingerprint();
+        let frozen = k.freeze();
+        // The frozen key equals the rendered one, via both paths.
+        assert_eq!(KernelRef::fingerprint(&frozen), slow);
+        assert_eq!(frozen.fingerprint(), slow);
+        // Deref exposes the kernel; thaw + mutate + refreeze moves the key.
+        assert_eq!(frozen.name, "mm");
+        let mut thawed = frozen.thaw();
+        thawed.name = "mm2".into();
+        assert_ne!(thawed.freeze().fingerprint(), slow);
     }
 
     #[test]

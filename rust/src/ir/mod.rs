@@ -19,5 +19,6 @@ pub mod kernel;
 pub use dtype::DType;
 pub use expr::{Access, AffExpr, BinOp, Expr, OpCounts};
 pub use kernel::{
-    ArrayDecl, IndexTag, Kernel, LhsRef, MemScope, Stmt, TempDecl,
+    ir_render_count, ArrayDecl, FrozenKernel, IndexTag, Kernel, KernelRef,
+    LhsRef, MemScope, Stmt, TempDecl,
 };

@@ -15,15 +15,24 @@
 //!
 //! The paper's Section 5 amortization — "symbolic counts are computed
 //! once per kernel, cheaply re-evaluated for new problem sizes" — is
-//! enforced by [`stats::StatsCache`]: a shared, interior-mutable
-//! memoization of [`stats::gather`] keyed by (structural kernel
-//! fingerprint, sub-group size).  Simulated measurement
-//! ([`gpusim::measure_with_cache`]), feature gathering
-//! ([`calibrate::gather_features_by_ids_cached`]), prediction
-//! ([`calibrate::eval_with_kernel_cached`]) and the coordinator all
-//! share one cache per run, and the coordinator's per-device fleet
-//! loops run on scoped threads over that cache — producing reports
-//! byte-identical to a sequential pass in a fraction of the time.
+//! enforced at three scopes:
+//!
+//! * **per process** by [`stats::StatsCache`], a shared memoization of
+//!   [`stats::gather`] keyed by (structural kernel fingerprint,
+//!   sub-group size) that measurement, feature gathering, prediction
+//!   and the coordinator's parallel fleet loops all share;
+//! * **per kernel** by [`ir::FrozenKernel`]: UiPiCK freezes every
+//!   generated kernel, minting its fingerprint exactly once, so cache
+//!   lookups never re-render the IR — and feature columns are
+//!   [bound](features::FeatureSpec::bind) once per kernel and batched
+//!   across problem sizes;
+//! * **across processes** by [`session::Session`]: the pipeline engine
+//!   (measure → gather features → fit → predict) both the CLI and
+//!   [`coordinator::run_experiment`] consume, with an optional
+//!   disk-backed [`session::ArtifactStore`] (`perflex --store <dir>`)
+//!   that persists symbolic statistics and calibration fits — repeat
+//!   runs start warm and `predict` skips refitting entirely.
+//!
 //! * **L2/L1 (python/compile, build-time only)** — the batched model
 //!   evaluation + Jacobian + LM step, with the hot block written as a
 //!   Pallas kernel, AOT-lowered to HLO text and executed from Rust via
@@ -42,6 +51,7 @@ pub mod model;
 pub mod polyhedral;
 pub mod runtime;
 pub mod schedule;
+pub mod session;
 pub mod stats;
 pub mod transform;
 pub mod uipick;

@@ -9,22 +9,28 @@
 //! perflex list-devices                    the simulated fleet (Table 2)
 //! perflex gen <tag>...                    generate measurement kernels
 //! perflex show <tag>...                   print kernel schedule listings
-//! perflex measure <device> <tag>...       measure kernels on a device
-//! perflex calibrate <case> <device>       calibrate an evaluation model
-//! perflex predict <case> <device> <variant> <k=v>...
-//! perflex experiment <id>|all [--no-aot] [--json <dir>]
+//! perflex measure <device> <tag>... [--store <dir>]
+//! perflex calibrate <case> <device> [--store <dir>]
+//! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
+//! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
 //! ```
+//!
+//! `--store <dir>` opens a persistent artifact store (see
+//! `perflex::session`): symbolic kernel statistics and calibration
+//! fits are written there, and later invocations start warm — a
+//! `predict` against a fresh store runs zero LM iterations and zero
+//! symbolic counting passes.
 
 use std::collections::BTreeMap;
 
-use perflex::coordinator::experiments::calibrate_case;
-use perflex::coordinator::{run_experiment, EXPERIMENT_IDS};
-use perflex::gpusim::{device_by_id, fleet, measure};
+use perflex::coordinator::{run_experiment_in_session, EXPERIMENT_IDS};
+use perflex::gpusim::{device_by_id, fleet};
+use perflex::session::Session;
 use perflex::uipick::KernelCollection;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let code = match dispatch(&args) {
+    let code = match dispatch(args) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
@@ -38,13 +44,39 @@ fn usage() -> String {
     "usage: perflex <command> [...]\n\
      commands: list-generators | list-devices | gen | show | measure | \
      calibrate | predict | experiment\n\
+     global flag: --store <dir> persists calibration artifacts across runs\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
         .to_string()
 }
 
-fn dispatch(args: &[String]) -> Result<(), String> {
-    let cmd = args.first().ok_or_else(usage)?;
-    let rest = &args[1..];
+/// Remove `flag <value>` from `args`, returning the value if present.
+fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Result<Option<String>, String> {
+    match args.iter().position(|a| a == flag) {
+        Some(i) if i + 1 < args.len() => {
+            let v = args.remove(i + 1);
+            args.remove(i);
+            Ok(Some(v))
+        }
+        Some(_) => Err(format!("{flag} needs a value")),
+        None => Ok(None),
+    }
+}
+
+/// Remove a boolean `flag` from `args`, returning whether it was given.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
+fn dispatch(mut args: Vec<String>) -> Result<(), String> {
+    let store_dir = take_flag_value(&mut args, "--store")?;
+    let cmd = args.first().cloned().ok_or_else(usage)?;
+    let mut rest: Vec<String> = args[1..].to_vec();
     match cmd.as_str() {
         "list-generators" => {
             let c = KernelCollection::all();
@@ -98,8 +130,12 @@ fn dispatch(args: &[String]) -> Result<(), String> {
                 .ok_or_else(|| format!("unknown device '{dev_id}'"))?;
             let tags: Vec<&str> = rest[1..].iter().map(|s| s.as_str()).collect();
             let knls = KernelCollection::all().generate_kernels(&tags)?;
+            // One session for the whole sweep: kernels repeated across
+            // problem sizes are symbolically counted once (and served
+            // from the artifact store when one is given).
+            let session = Session::from_store_arg(store_dir.as_deref())?;
             for k in &knls {
-                match measure(&device, &k.kernel, &k.env) {
+                match session.measure(&device, &k.kernel, &k.env) {
                     Ok(t) => println!(
                         "{:<28} {:?} -> {}",
                         k.kernel.name,
@@ -120,34 +156,43 @@ fn dispatch(args: &[String]) -> Result<(), String> {
             let dev_id = rest.get(1).ok_or("missing device")?;
             let device = device_by_id(dev_id)
                 .ok_or_else(|| format!("unknown device '{dev_id}'"))?;
-            let cases = perflex::coordinator::expsets::eval_cases();
-            let case = cases
-                .iter()
-                .find(|c| c.id == case_id.as_str())
+            let case = perflex::coordinator::expsets::eval_case(case_id)
                 .ok_or_else(|| format!("unknown case '{case_id}' (matmul|dg|fdiff)"))?;
             let aot = if perflex::runtime::artifacts_available() {
                 Some(perflex::runtime::Artifacts::load()?)
             } else {
                 None
             };
-            // One stats cache per CLI invocation: calibration and the
-            // optional prediction below share symbolic passes.
-            let cache = perflex::stats::StatsCache::new();
-            let (cm, fit) = calibrate_case(case, &device, true, aot.as_ref(), &cache)?;
-            println!(
-                "calibrated {} on {} ({} params, residual {:.3e}, {} LM iters{})",
-                case.id,
-                device.id,
-                fit.params.len(),
-                fit.residual,
-                fit.iterations,
-                if aot.is_some() {
-                    ", AOT path"
-                } else {
-                    ", native path"
-                }
-            );
-            for (n, v) in fit.param_names.iter().zip(&fit.params) {
+            // One session per CLI invocation: calibration and the
+            // optional prediction below share symbolic passes, and a
+            // `--store` session persists them for the next run.
+            let session = Session::from_store_arg(store_dir.as_deref())?;
+            let cal = session.calibrate_case(&case, &device, true, aot.as_ref())?;
+            if cal.from_store {
+                println!(
+                    "calibration for {} on {} loaded from artifact store \
+                     ({} params, residual {:.3e}; 0 LM iterations this run)",
+                    case.id,
+                    device.id,
+                    cal.fit.params.len(),
+                    cal.fit.residual,
+                );
+            } else {
+                println!(
+                    "calibrated {} on {} ({} params, residual {:.3e}, {} LM iters{})",
+                    case.id,
+                    device.id,
+                    cal.fit.params.len(),
+                    cal.fit.residual,
+                    cal.fit.iterations,
+                    if aot.is_some() {
+                        ", AOT path"
+                    } else {
+                        ", native path"
+                    }
+                );
+            }
+            for (n, v) in cal.fit.param_names.iter().zip(&cal.fit.params) {
                 println!("    {n:<40} = {v:.4e}");
             }
             if cmd == "predict" {
@@ -159,17 +204,10 @@ fn dispatch(args: &[String]) -> Result<(), String> {
                         .ok_or_else(|| format!("expected k=v, got '{kv}'"))?;
                     env.insert(k.into(), v.parse().map_err(|_| "bad int")?);
                 }
-                let kernel = build_variant(case_id, variant)?;
-                let predicted = perflex::calibrate::eval_with_kernel_cached(
-                    &cm.to_model(),
-                    &fit,
-                    &kernel,
-                    &env,
-                    device.sub_group_size,
-                    &cache,
-                )?;
-                let measured =
-                    perflex::gpusim::measure_with_cache(&device, &kernel, &env, &cache)?;
+                let kernel = build_variant(case_id, variant)?.freeze();
+                let predicted =
+                    session.predict(&cal.cm, &cal.fit, &kernel, &env, &device)?;
+                let measured = session.measure(&device, &kernel, &env)?;
                 println!(
                     "predicted {} / measured {} (err {:.1}%)",
                     perflex::coordinator::report::fmt_time(predicted),
@@ -180,16 +218,19 @@ fn dispatch(args: &[String]) -> Result<(), String> {
             Ok(())
         }
         "experiment" => {
+            let use_aot = !take_flag(&mut rest, "--no-aot");
+            let json_dir = take_flag_value(&mut rest, "--json")?
+                .map(std::path::PathBuf::from);
             let id = rest
                 .first()
                 .ok_or_else(|| format!("experiment <id>; known: {EXPERIMENT_IDS:?}"))?;
-            let use_aot = !rest.iter().any(|a| a == "--no-aot");
-            let json_dir = rest
-                .iter()
-                .position(|a| a == "--json")
-                .and_then(|i| rest.get(i + 1))
-                .map(std::path::PathBuf::from);
-            let rep = run_experiment(id, use_aot)?;
+            // Fail on an unusable --json directory *before* the run,
+            // not after minutes of fleet calibration.
+            if let Some(dir) = &json_dir {
+                perflex::util::ensure_writable_dir(dir, "--json directory")?;
+            }
+            let session = Session::from_store_arg(store_dir.as_deref())?;
+            let rep = run_experiment_in_session(id, use_aot, &session)?;
             print!("{}", rep.render());
             if let Some(dir) = json_dir {
                 rep.write_json(&dir)?;

@@ -1,0 +1,513 @@
+//! Exact JSON codecs for the persisted artifact types.
+//!
+//! Everything the [`super::ArtifactStore`] writes must round-trip
+//! *exactly*: a warm run replays cached statistics and fitted
+//! parameters through the same arithmetic as a cold run, and the
+//! acceptance bar is byte-identical reports.  Two representation rules
+//! make that hold:
+//!
+//! * rational coefficients serialize their `i128` numerator and
+//!   denominator as **strings** (JSON numbers are `f64` and would
+//!   silently truncate beyond 2^53);
+//! * `f64`s rely on [`crate::util::json::Json`]'s `Display`, which is
+//!   Rust's shortest-roundtrip float formatting — parsing the text
+//!   recovers the exact bit pattern.
+//!
+//! Quasi-polynomials are encoded structurally (terms of monomials of
+//! atoms, with `floor` atoms recursing) and rebuilt through the public
+//! [`QPoly`] algebra, which reproduces the canonical internal form:
+//! serialize → parse → serialize is byte-stable.
+
+use crate::calibrate::FitResult;
+use crate::ir::{DType, MemScope};
+use crate::polyhedral::{Atom, QPoly};
+use crate::stats::{Direction, Granularity, KernelStats, MemAccessStat, OpStat};
+use crate::util::json::Json;
+use crate::util::Rat;
+
+/// Largest monomial exponent the decoder accepts.  Real count
+/// polynomials are low-degree (trip counts over a handful of nested
+/// loops); anything bigger is a corrupt or adversarial artifact.
+const MAX_EXPONENT: f64 = 64.0;
+
+fn err(what: &str) -> String {
+    format!("artifact codec: malformed {what}")
+}
+
+fn get<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| err(what))
+}
+
+fn get_str(j: &Json, key: &str, what: &str) -> Result<String, String> {
+    get(j, key, what)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| err(what))
+}
+
+fn get_u64(j: &Json, key: &str, what: &str) -> Result<u64, String> {
+    get(j, key, what)?
+        .as_f64()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| err(what))
+}
+
+fn i128_from(j: &Json, what: &str) -> Result<i128, String> {
+    j.as_str()
+        .and_then(|s| s.parse::<i128>().ok())
+        .ok_or_else(|| err(what))
+}
+
+// ---------------------------------------------------------------------
+// Rat / QPoly
+// ---------------------------------------------------------------------
+
+pub fn rat_to_json(r: &Rat) -> Json {
+    Json::obj(vec![
+        ("n", r.num().to_string().into()),
+        ("d", r.den().to_string().into()),
+    ])
+}
+
+pub fn rat_from_json(j: &Json) -> Result<Rat, String> {
+    let num = i128_from(get(j, "n", "rational")?, "rational numerator")?;
+    let den = i128_from(get(j, "d", "rational")?, "rational denominator")?;
+    if den == 0 {
+        return Err(err("rational (zero denominator)"));
+    }
+    Ok(Rat::new(num, den))
+}
+
+fn atom_to_json(a: &Atom) -> Json {
+    match a {
+        Atom::Var(v) => Json::obj(vec![("var", v.as_str().into())]),
+        Atom::Floor { num, den } => Json::obj(vec![(
+            "floor",
+            Json::obj(vec![
+                ("num", qpoly_to_json(num)),
+                ("den", den.to_string().into()),
+            ]),
+        )]),
+    }
+}
+
+/// A quasi-polynomial as `[[monomial, coeff], ...]` with `monomial =
+/// [[atom, exponent], ...]`.  Term order is the canonical internal
+/// order, so re-serializing a decoded polynomial is byte-stable.
+pub fn qpoly_to_json(p: &QPoly) -> Json {
+    Json::Arr(
+        p.terms()
+            .map(|(m, c)| {
+                let mono = Json::Arr(
+                    m.0.iter()
+                        .map(|(a, e)| {
+                            Json::Arr(vec![atom_to_json(a), Json::from(*e as i64)])
+                        })
+                        .collect(),
+                );
+                Json::Arr(vec![mono, rat_to_json(c)])
+            })
+            .collect(),
+    )
+}
+
+fn atom_poly_from_json(j: &Json) -> Result<QPoly, String> {
+    if let Some(v) = j.get("var").and_then(Json::as_str) {
+        return Ok(QPoly::var(v));
+    }
+    if let Some(fl) = j.get("floor") {
+        let num = qpoly_from_json(get(fl, "num", "floor atom")?)?;
+        let den = i128_from(get(fl, "den", "floor atom")?, "floor denominator")?;
+        if den <= 0 {
+            return Err(err("floor atom (non-positive denominator)"));
+        }
+        return Ok(num.floor_div(den));
+    }
+    Err(err("atom"))
+}
+
+pub fn qpoly_from_json(j: &Json) -> Result<QPoly, String> {
+    let terms = j.as_arr().ok_or_else(|| err("polynomial"))?;
+    let mut out = QPoly::zero();
+    for t in terms {
+        let pair = t.as_arr().filter(|p| p.len() == 2).ok_or_else(|| err("term"))?;
+        let coeff = rat_from_json(&pair[1])?;
+        let mut term = QPoly::constant(coeff);
+        for factor in pair[0].as_arr().ok_or_else(|| err("monomial"))? {
+            let fp = factor
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| err("monomial factor"))?;
+            // Exponents far beyond any real count polynomial are
+            // rejected rather than decoded: `QPoly::pow` is O(k)
+            // multiplications, so an adversarially large exponent in a
+            // hand-edited artifact would otherwise hang the load (the
+            // store contract is "corrupt artifact -> cold start").
+            let exp = fp[1]
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXPONENT)
+                .map(|x| x as u32)
+                .ok_or_else(|| err("exponent"))?;
+            term = &term * &atom_poly_from_json(&fp[0])?.pow(exp);
+        }
+        out = &out + &term;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// KernelStats
+// ---------------------------------------------------------------------
+
+fn scope_name(s: MemScope) -> &'static str {
+    match s {
+        MemScope::Global => "global",
+        MemScope::Local => "local",
+        MemScope::Private => "private",
+    }
+}
+
+fn scope_from(s: &str) -> Result<MemScope, String> {
+    match s {
+        "global" => Ok(MemScope::Global),
+        "local" => Ok(MemScope::Local),
+        "private" => Ok(MemScope::Private),
+        _ => Err(err("memory scope")),
+    }
+}
+
+fn direction_from(s: &str) -> Result<Direction, String> {
+    match s {
+        "load" => Ok(Direction::Load),
+        "store" => Ok(Direction::Store),
+        _ => Err(err("direction")),
+    }
+}
+
+fn granularity_name(g: Granularity) -> &'static str {
+    match g {
+        Granularity::WorkItem => "wi",
+        Granularity::SubGroup => "sg",
+    }
+}
+
+fn granularity_from(s: &str) -> Result<Granularity, String> {
+    match s {
+        "wi" => Ok(Granularity::WorkItem),
+        "sg" => Ok(Granularity::SubGroup),
+        _ => Err(err("granularity")),
+    }
+}
+
+fn dtype_from(s: &str) -> Result<DType, String> {
+    DType::parse(s).ok_or_else(|| err("dtype"))
+}
+
+fn mem_to_json(m: &MemAccessStat) -> Json {
+    let polys = |ps: &[QPoly; 3]| Json::Arr(ps.iter().map(qpoly_to_json).collect());
+    Json::obj(vec![
+        ("stmt_id", m.stmt_id.as_str().into()),
+        ("array", m.array.as_str().into()),
+        (
+            "tag",
+            match &m.tag {
+                Some(t) => t.as_str().into(),
+                None => Json::Null,
+            },
+        ),
+        ("scope", scope_name(m.scope).into()),
+        ("direction", m.direction.feature_name().into()),
+        ("dtype", m.dtype.feature_name().into()),
+        ("lstrides", polys(&m.lstrides)),
+        ("gstrides", polys(&m.gstrides)),
+        ("count_wi", qpoly_to_json(&m.count_wi)),
+        ("footprint", qpoly_to_json(&m.footprint)),
+        ("footprint_per_wg", qpoly_to_json(&m.footprint_per_wg)),
+        ("granularity", granularity_name(m.granularity).into()),
+        (
+            "loop_strides",
+            Json::Arr(
+                m.loop_strides
+                    .iter()
+                    .map(|(iname, s)| {
+                        Json::Arr(vec![iname.as_str().into(), qpoly_to_json(s)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn polys3_from(j: &Json, what: &str) -> Result<[QPoly; 3], String> {
+    let arr = j.as_arr().filter(|a| a.len() == 3).ok_or_else(|| err(what))?;
+    Ok([
+        qpoly_from_json(&arr[0])?,
+        qpoly_from_json(&arr[1])?,
+        qpoly_from_json(&arr[2])?,
+    ])
+}
+
+fn mem_from_json(j: &Json) -> Result<MemAccessStat, String> {
+    let tag = match get(j, "tag", "mem access")? {
+        Json::Null => None,
+        t => Some(t.as_str().ok_or_else(|| err("mem access tag"))?.to_string()),
+    };
+    let loop_strides = get(j, "loop_strides", "mem access")?
+        .as_arr()
+        .ok_or_else(|| err("loop strides"))?
+        .iter()
+        .map(|p| {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| err("loop stride"))?;
+            let iname = pair[0]
+                .as_str()
+                .ok_or_else(|| err("loop stride iname"))?
+                .to_string();
+            Ok((iname, qpoly_from_json(&pair[1])?))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(MemAccessStat {
+        stmt_id: get_str(j, "stmt_id", "mem access")?,
+        array: get_str(j, "array", "mem access")?,
+        tag,
+        scope: scope_from(&get_str(j, "scope", "mem access")?)?,
+        direction: direction_from(&get_str(j, "direction", "mem access")?)?,
+        dtype: dtype_from(&get_str(j, "dtype", "mem access")?)?,
+        lstrides: polys3_from(get(j, "lstrides", "mem access")?, "lstrides")?,
+        gstrides: polys3_from(get(j, "gstrides", "mem access")?, "gstrides")?,
+        count_wi: qpoly_from_json(get(j, "count_wi", "mem access")?)?,
+        footprint: qpoly_from_json(get(j, "footprint", "mem access")?)?,
+        footprint_per_wg: qpoly_from_json(get(j, "footprint_per_wg", "mem access")?)?,
+        granularity: granularity_from(&get_str(j, "granularity", "mem access")?)?,
+        loop_strides,
+    })
+}
+
+pub fn stats_to_json(st: &KernelStats) -> Json {
+    Json::obj(vec![
+        ("kernel_name", st.kernel_name.as_str().into()),
+        (
+            "ops",
+            Json::Arr(
+                st.ops
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("dtype", o.dtype.feature_name().into()),
+                            ("op", o.op.as_str().into()),
+                            ("count_sg", qpoly_to_json(&o.count_sg)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("mem", Json::Arr(st.mem.iter().map(mem_to_json).collect())),
+        ("barriers_per_wi", qpoly_to_json(&st.barriers_per_wi)),
+        ("num_groups", qpoly_to_json(&st.num_groups)),
+        ("work_group_size", (st.work_group_size as i64).into()),
+        ("sub_group_size", (st.sub_group_size as i64).into()),
+    ])
+}
+
+pub fn stats_from_json(j: &Json) -> Result<KernelStats, String> {
+    let ops = get(j, "ops", "kernel stats")?
+        .as_arr()
+        .ok_or_else(|| err("op stats"))?
+        .iter()
+        .map(|o| {
+            Ok(OpStat {
+                dtype: dtype_from(&get_str(o, "dtype", "op stat")?)?,
+                op: get_str(o, "op", "op stat")?,
+                count_sg: qpoly_from_json(get(o, "count_sg", "op stat")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let mem = get(j, "mem", "kernel stats")?
+        .as_arr()
+        .ok_or_else(|| err("mem stats"))?
+        .iter()
+        .map(mem_from_json)
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(KernelStats {
+        kernel_name: get_str(j, "kernel_name", "kernel stats")?,
+        ops,
+        mem,
+        barriers_per_wi: qpoly_from_json(get(j, "barriers_per_wi", "kernel stats")?)?,
+        num_groups: qpoly_from_json(get(j, "num_groups", "kernel stats")?)?,
+        work_group_size: get_u64(j, "work_group_size", "kernel stats")?,
+        sub_group_size: get_u64(j, "sub_group_size", "kernel stats")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// FitResult
+// ---------------------------------------------------------------------
+
+pub fn fit_to_json(fit: &FitResult) -> Json {
+    Json::obj(vec![
+        (
+            "param_names",
+            Json::Arr(fit.param_names.iter().map(|n| n.as_str().into()).collect()),
+        ),
+        (
+            "params",
+            Json::Arr(fit.params.iter().map(|p| Json::Num(*p)).collect()),
+        ),
+        ("residual", Json::Num(fit.residual)),
+        ("iterations", fit.iterations.into()),
+    ])
+}
+
+pub fn fit_from_json(j: &Json) -> Result<FitResult, String> {
+    let param_names = get(j, "param_names", "fit")?
+        .as_arr()
+        .ok_or_else(|| err("fit param names"))?
+        .iter()
+        .map(|n| n.as_str().map(str::to_string).ok_or_else(|| err("param name")))
+        .collect::<Result<Vec<_>, String>>()?;
+    let params = get(j, "params", "fit")?
+        .as_arr()
+        .ok_or_else(|| err("fit params"))?
+        .iter()
+        .map(|p| p.as_f64().ok_or_else(|| err("param value")))
+        .collect::<Result<Vec<_>, String>>()?;
+    if param_names.len() != params.len() {
+        return Err(err("fit (name/value length mismatch)"));
+    }
+    let residual = get(j, "residual", "fit")?
+        .as_f64()
+        .ok_or_else(|| err("fit residual"))?;
+    let iterations = get_u64(j, "iterations", "fit")? as usize;
+    Ok(FitResult {
+        param_names,
+        params,
+        residual,
+        iterations,
+    })
+}
+
+/// Evaluate a decoded stats bundle against the original across sizes —
+/// shared by the round-trip tests.
+#[cfg(test)]
+fn assert_stats_equivalent(a: &KernelStats, b: &KernelStats, envs: &[i128]) {
+    use std::collections::BTreeMap;
+    assert_eq!(a.kernel_name, b.kernel_name);
+    assert_eq!(a.work_group_size, b.work_group_size);
+    assert_eq!(a.sub_group_size, b.sub_group_size);
+    assert_eq!(a.ops.len(), b.ops.len());
+    assert_eq!(a.mem.len(), b.mem.len());
+    for &n in envs {
+        let env: BTreeMap<String, i128> = [
+            ("n".to_string(), n),
+            ("nelements".to_string(), n),
+            ("nmatrices".to_string(), 3),
+            ("m".to_string(), 64),
+        ]
+        .into_iter()
+        .collect();
+        assert_eq!(a.barriers_per_wi.eval(&env), b.barriers_per_wi.eval(&env));
+        assert_eq!(a.num_groups.eval(&env), b.num_groups.eval(&env));
+        for (oa, ob) in a.ops.iter().zip(&b.ops) {
+            assert_eq!(oa.dtype, ob.dtype);
+            assert_eq!(oa.op, ob.op);
+            assert_eq!(oa.count_sg.eval(&env), ob.count_sg.eval(&env));
+        }
+        for (ma, mb) in a.mem.iter().zip(&b.mem) {
+            assert_eq!(ma.stmt_id, mb.stmt_id);
+            assert_eq!(ma.tag, mb.tag);
+            assert_eq!(ma.granularity, mb.granularity);
+            assert_eq!(ma.count_wi.eval(&env), mb.count_wi.eval(&env));
+            assert_eq!(ma.footprint.eval(&env), mb.footprint.eval(&env));
+            for ax in 0..3 {
+                assert_eq!(ma.lstrides[ax].eval(&env), mb.lstrides[ax].eval(&env));
+                assert_eq!(ma.gstrides[ax].eval(&env), mb.gstrides[ax].eval(&env));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    #[test]
+    fn qpoly_roundtrip_is_byte_stable() {
+        // Exercise vars, floor atoms (nested), big exact coefficients
+        // and rational coefficients.
+        let n = QPoly::var("n");
+        let nd16 = (&n - &QPoly::int(16)).floor_div(16);
+        let p = &(&n.pow(3).scale(Rat::new(1, 32)) + &nd16.pow(2).scale(Rat::int(7)))
+            + &(&nd16.floor_div(4) * &QPoly::var("m")).scale(Rat::new(-3, 5));
+        let j1 = qpoly_to_json(&p);
+        let text = j1.to_string();
+        let back = qpoly_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p, "structural equality after round trip");
+        assert_eq!(qpoly_to_json(&back).to_string(), text, "byte stability");
+        // Coefficients beyond f64's 2^53 integer range stay exact.
+        let big = QPoly::constant(Rat::new(1_234_567_890_123_456_789_012_345_671, 7));
+        let back = qpoly_from_json(&Json::parse(&qpoly_to_json(&big).to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, big);
+    }
+
+    #[test]
+    fn kernel_stats_roundtrip_preserves_every_count() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let st = crate::stats::gather(&k, 32).unwrap();
+        let j = stats_to_json(&st);
+        let text = j.to_string();
+        let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_stats_equivalent(&st, &back, &[1024, 2048, 3584]);
+        assert_eq!(
+            stats_to_json(&back).to_string(),
+            text,
+            "stats serialization must be byte-stable"
+        );
+    }
+
+    #[test]
+    fn fit_roundtrip_is_byte_stable() {
+        let fit = FitResult {
+            param_names: vec!["p_a".into(), "p_b".into(), "p_edge".into()],
+            params: vec![1.5e-9, 0.1 + 0.2, 25.0],
+            residual: 3.86e-17,
+            iterations: 42,
+        };
+        let text = fit_to_json(&fit).to_string();
+        let back = fit_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.param_names, fit.param_names);
+        assert_eq!(back.params, fit.params, "f64s must round-trip exactly");
+        assert_eq!(back.residual, fit.residual);
+        assert_eq!(back.iterations, fit.iterations);
+        assert_eq!(fit_to_json(&back).to_string(), text);
+    }
+
+    #[test]
+    fn malformed_artifacts_are_rejected() {
+        assert!(qpoly_from_json(&Json::parse("{}").unwrap()).is_err());
+        // Oversized exponents are rejected up front (QPoly::pow is O(k),
+        // so decoding one would hang the load), while sane ones decode.
+        let term = |e: &str| {
+            format!("[[[[{{\"var\":\"n\"}},{e}]],{{\"n\":\"1\",\"d\":\"1\"}}]]")
+        };
+        let huge = Json::parse(&term("4294967295")).unwrap();
+        assert!(qpoly_from_json(&huge).is_err());
+        let sane = Json::parse(&term("3")).unwrap();
+        assert_eq!(
+            qpoly_from_json(&sane).unwrap(),
+            QPoly::var("n").pow(3)
+        );
+        assert!(fit_from_json(&Json::parse("{\"params\":[1]}").unwrap()).is_err());
+        assert!(stats_from_json(&Json::parse("{\"ops\":[]}").unwrap()).is_err());
+        // Length mismatch between names and values.
+        let j = Json::parse(
+            "{\"param_names\":[\"a\"],\"params\":[1,2],\"residual\":0,\"iterations\":1}",
+        )
+        .unwrap();
+        assert!(fit_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! Persistent calibration sessions: the reusable measure →
+//! gather-features → fit → predict pipeline engine.
+//!
+//! The paper's promise is *calibrate once per GPU, predict at near-zero
+//! cost*.  A [`Session`] makes that durable across process boundaries:
+//! it owns the run's [`StatsCache`] and (optionally) a disk-backed
+//! [`ArtifactStore`], and exposes the pipeline stages that both the
+//! `perflex` CLI and the experiment coordinator consume — one
+//! implementation of the flow instead of the two copies the CLI and
+//! `coordinator::experiments` used to carry.
+//!
+//! # Key scheme
+//!
+//! Two artifact families are persisted, each fully keyed:
+//!
+//! * **Symbolic statistics** — keyed by
+//!   ([`Kernel::fingerprint`](crate::ir::Kernel::fingerprint),
+//!   sub-group size), exactly the in-memory [`StatsCache`] key.  The
+//!   fingerprint covers the entire kernel IR, so any structural change
+//!   mints a new key; devices sharing a sub-group size share entries.
+//! * **Calibration fits** — keyed by [`FitKey`]: (case id, device id,
+//!   model form) name the file, and an embedded `model_fingerprint`
+//!   (hash of the model's feature columns, the measurement-set filter
+//!   tags, the device's sub-group size, and the store format version)
+//!   guards its content.
+//!
+//! # Invalidation rules
+//!
+//! Artifacts are *rejected, never migrated*: a loader returns `None`
+//! — and the session falls back to a cold gather/fit — whenever
+//!
+//! * the artifact's `format_version` differs from
+//!   [`STORE_FORMAT_VERSION`] (bump it when any persisted semantics
+//!   change, e.g. the counting rules or the LM schedule);
+//! * the embedded key (kernel fingerprint / model fingerprint) does
+//!   not match the requested one — covering edited models, changed
+//!   measurement sets, and a changed sub-group size;
+//! * the payload fails to parse or validate.
+//!
+//! Kernel fingerprints are minted once per kernel by
+//! [`Kernel::freeze`](crate::ir::Kernel::freeze) (UiPiCK freezes every
+//! generated kernel), so the hot paths never re-render IR; a frozen
+//! kernel cannot be mutated without [`thawing`](
+//! crate::ir::FrozenKernel::thaw) it, which discards the key.
+
+pub mod codec;
+mod store;
+
+pub use store::{ArtifactStore, FitKey, STORE_FORMAT_VERSION};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::calibrate::{
+    eval_with_kernel_cached, gather_features_by_ids_cached, FeatureData, FitResult,
+    LmOptions,
+};
+use crate::coordinator::expsets::{self, EvalCase};
+use crate::gpusim::{measure_with_cache, DeviceProfile};
+use crate::ir::KernelRef;
+use crate::model::CostModel;
+use crate::runtime::{fit_cost_model_aot, fit_cost_model_native, Artifacts};
+use crate::stats::StatsCache;
+use crate::util::Fnv128;
+
+/// A calibration produced by [`Session::calibrate_case`].
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub cm: CostModel,
+    pub fit: FitResult,
+    /// True when the fit was loaded from the artifact store: this
+    /// process ran zero LM iterations (and, unless something else
+    /// missed, zero symbolic counting passes) to produce it.
+    pub from_store: bool,
+}
+
+/// One calibration/prediction session: a shared statistics cache plus
+/// an optional persistent artifact store behind it.
+#[derive(Default)]
+pub struct Session {
+    cache: StatsCache,
+    store: Option<Arc<ArtifactStore>>,
+}
+
+impl Session {
+    /// An in-memory session (no persistence) — what one-shot library
+    /// callers and store-less CLI invocations use.
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// A session whose stats cache and calibrations persist under
+    /// `dir`.  Fails fast if the directory cannot be created or
+    /// written.
+    pub fn with_store(dir: impl AsRef<Path>) -> Result<Session, String> {
+        let store = Arc::new(ArtifactStore::open(dir.as_ref())?);
+        Ok(Session {
+            cache: StatsCache::with_backing(store.clone()),
+            store: Some(store),
+        })
+    }
+
+    /// Build from an optional `--store` argument.
+    pub fn from_store_arg(dir: Option<&str>) -> Result<Session, String> {
+        match dir {
+            Some(d) => Session::with_store(d),
+            None => Ok(Session::new()),
+        }
+    }
+
+    pub fn cache(&self) -> &StatsCache {
+        &self.cache
+    }
+
+    pub fn store(&self) -> Option<&ArtifactStore> {
+        self.store.as_deref()
+    }
+
+    /// Pipeline stage 1: measure a kernel on a device (through the
+    /// session cache, so its symbolic statistics are derived or loaded
+    /// at most once per process).
+    pub fn measure<K: KernelRef>(
+        &self,
+        device: &DeviceProfile,
+        knl: &K,
+        env: &std::collections::BTreeMap<String, i64>,
+    ) -> Result<f64, String> {
+        measure_with_cache(device, knl, env, &self.cache)
+    }
+
+    /// Pipeline stage 2: measure + gather (and output-scale) a case's
+    /// feature data for one device.  The feature columns are shared by
+    /// the linear and nonlinear model forms, so one gathering serves
+    /// both fits; evaluation is batched across problem sizes (see
+    /// [`gather_features_by_ids_cached`]).
+    pub fn gather_case_data(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+    ) -> Result<FeatureData, String> {
+        let cm = (case.model)(device.id, true);
+        let kernels =
+            expsets::generate_measurement_kernels(&(case.measurement_sets)())?;
+        let mut data = gather_features_by_ids_cached(
+            cm.feature_columns(),
+            &kernels,
+            device,
+            &self.cache,
+        )?;
+        data.scale_features_by_output();
+        Ok(data)
+    }
+
+    /// Pipeline stage 3: fit one model form from already-gathered data.
+    pub fn fit_case(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        data: &FeatureData,
+        nonlinear: bool,
+        aot: Option<&Artifacts>,
+    ) -> Result<(CostModel, FitResult), String> {
+        let cm = (case.model)(device.id, nonlinear);
+        let opts = LmOptions::default();
+        let fit = match aot {
+            Some(a) => fit_cost_model_aot(a, &cm, data, &opts)?,
+            None => fit_cost_model_native(&cm, data, &opts)?,
+        };
+        Ok((cm, fit))
+    }
+
+    /// Stages 2+3 with artifact reuse: return a stored calibration when
+    /// a fresh one exists (zero LM iterations, zero measurement and
+    /// counting work this process), otherwise gather, fit and persist.
+    pub fn calibrate_case(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        nonlinear: bool,
+        aot: Option<&Artifacts>,
+    ) -> Result<Calibration, String> {
+        let key = fit_key(case, device, nonlinear);
+        if let Some(store) = &self.store {
+            if let Some(fit) = store.load_fit(&key) {
+                return Ok(Calibration {
+                    cm: (case.model)(device.id, nonlinear),
+                    fit,
+                    from_store: true,
+                });
+            }
+        }
+        let data = self.gather_case_data(case, device)?;
+        let (cm, fit) = self.fit_case(case, device, &data, nonlinear, aot)?;
+        if let Some(store) = &self.store {
+            store.save_fit(&key, &fit)?;
+        }
+        Ok(Calibration {
+            cm,
+            fit,
+            from_store: false,
+        })
+    }
+
+    /// Pipeline stage 4: predict a kernel's wall time from a
+    /// calibration (§7.3), through the session cache.
+    pub fn predict<K: KernelRef>(
+        &self,
+        cm: &CostModel,
+        fit: &FitResult,
+        knl: &K,
+        env: &std::collections::BTreeMap<String, i64>,
+        device: &DeviceProfile,
+    ) -> Result<f64, String> {
+        eval_with_kernel_cached(
+            &cm.to_model(),
+            fit,
+            knl,
+            env,
+            device.sub_group_size,
+            &self.cache,
+        )
+    }
+}
+
+/// The full identity of a case's calibration on a device; see the
+/// module docs for what it covers (and therefore what invalidates it).
+pub fn fit_key(case: &EvalCase, device: &DeviceProfile, nonlinear: bool) -> FitKey {
+    let cm = (case.model)(device.id, nonlinear);
+    let mut h = Fnv128::new();
+    h.update(b"perflex-fit-v");
+    h.update(STORE_FORMAT_VERSION.to_string().as_bytes());
+    h.update(case.id.as_bytes());
+    h.update(device.id.as_bytes());
+    h.update(device.sub_group_size.to_string().as_bytes());
+    h.update(if nonlinear { b"overlap" } else { b"linear" });
+    for col in cm.feature_columns() {
+        h.update(col.as_bytes());
+    }
+    for name in cm.param_names() {
+        h.update(name.as_bytes());
+    }
+    for set in (case.measurement_sets)() {
+        for tag in set {
+            h.update(tag.as_bytes());
+        }
+        h.update(b"|");
+    }
+    FitKey {
+        case: case.id.to_string(),
+        device: device.id.to_string(),
+        nonlinear,
+        model_fingerprint: h.finish(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_id;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "perflex-session-test-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fit_keys_separate_forms_devices_and_models() {
+        let cases = expsets::eval_cases();
+        let dev = device_by_id("titan_v").unwrap();
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        let a = fit_key(&cases[0], &dev, true);
+        assert_eq!(a, fit_key(&cases[0], &dev, true), "keys are deterministic");
+        assert_ne!(
+            a.model_fingerprint,
+            fit_key(&cases[0], &dev, false).model_fingerprint
+        );
+        assert_ne!(
+            a.model_fingerprint,
+            fit_key(&cases[0], &amd, true).model_fingerprint
+        );
+        assert_ne!(
+            a.model_fingerprint,
+            fit_key(&cases[1], &dev, true).model_fingerprint
+        );
+    }
+
+    #[test]
+    fn storeless_session_calibrates_cold_every_time() {
+        let session = Session::new();
+        let cases = expsets::eval_cases();
+        let dev = device_by_id("titan_v").unwrap();
+        let cal = session
+            .calibrate_case(&cases[0], &dev, true, None)
+            .unwrap();
+        assert!(!cal.from_store);
+        assert!(cal.fit.iterations > 0);
+        assert!(session.cache.misses() > 0);
+    }
+
+    #[test]
+    fn warm_session_skips_fit_and_symbolic_passes_entirely() {
+        let dir = tmp_dir("warm");
+        let cases = expsets::eval_cases();
+        let case = &cases[0];
+        let dev = device_by_id("titan_v").unwrap();
+
+        // Cold run: gathers, fits, persists.
+        let cold = Session::with_store(&dir).unwrap();
+        let cal_cold = cold.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(!cal_cold.from_store);
+        assert!(cold.cache().misses() > 0);
+
+        // Warm run in a "new process": the fit loads from disk (zero LM
+        // iterations run here) and prediction's statistics come from
+        // the store (zero symbolic counting passes).
+        let warm = Session::with_store(&dir).unwrap();
+        let cal_warm = warm.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(cal_warm.from_store, "fresh artifact must be reused");
+        assert_eq!(cal_cold.fit.param_names, cal_warm.fit.param_names);
+        assert_eq!(cal_cold.fit.params, cal_warm.fit.params);
+        assert_eq!(cal_cold.fit.residual, cal_warm.fit.residual);
+        assert_eq!(warm.cache().misses(), 0);
+
+        let kernel = crate::uipick::apps::build_matmul(crate::ir::DType::F32, true, 16)
+            .unwrap()
+            .freeze();
+        let env: std::collections::BTreeMap<String, i64> =
+            [("n".to_string(), 2048i64)].into_iter().collect();
+        let p_cold = cold
+            .predict(&cal_cold.cm, &cal_cold.fit, &kernel, &env, &dev)
+            .unwrap();
+        let p_warm = warm
+            .predict(&cal_warm.cm, &cal_warm.fit, &kernel, &env, &dev)
+            .unwrap();
+        assert_eq!(p_cold, p_warm, "warm prediction must match cold exactly");
+        assert_eq!(
+            warm.cache().misses(),
+            0,
+            "warm predict must not run the symbolic pass"
+        );
+        assert!(warm.cache().disk_hits() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

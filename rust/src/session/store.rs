@@ -1,0 +1,294 @@
+//! Disk-backed artifact store: persisted symbolic statistics and
+//! calibration fits.
+//!
+//! Layout under the store root (the CLI's `--store <dir>`):
+//!
+//! ```text
+//! <root>/stats/<fingerprint:032x>-sg<sub_group_size>.json
+//! <root>/fits/<case>-<device>-<linear|overlap>.json
+//! ```
+//!
+//! Every artifact embeds [`STORE_FORMAT_VERSION`] plus the key it was
+//! written under; [`ArtifactStore::load_stats`] / `load_fit` return
+//! `None` — forcing a fresh gather or refit — whenever the version,
+//! the embedded key, or the payload fails to validate.  A stale or
+//! corrupt store therefore degrades to a cold start, never to garbage
+//! predictions.
+//!
+//! Writes go through a temp file + rename, so a crashed or concurrent
+//! writer can leave behind at worst a stale temp file, never a torn
+//! artifact.  The store implements [`StatsBacking`], which is how a
+//! [`StatsCache`](crate::stats::StatsCache) built with
+//! `with_backing` transparently persists the counting pass across
+//! processes.
+
+use std::path::{Path, PathBuf};
+
+use super::codec;
+use crate::calibrate::FitResult;
+use crate::stats::{KernelStats, StatsBacking, StatsKey};
+use crate::util::json::Json;
+
+/// Bump when any persisted representation (or its semantics) changes;
+/// all artifacts written under other versions are ignored.
+pub const STORE_FORMAT_VERSION: u64 = 1;
+
+/// Identity of one calibration artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FitKey {
+    pub case: String,
+    pub device: String,
+    pub nonlinear: bool,
+    /// Hash over the model's feature columns, the measurement-set
+    /// filter tags, the device's sub-group size and the store format
+    /// version — so a fit is reused only while everything that shaped
+    /// it is unchanged.
+    pub model_fingerprint: u128,
+}
+
+/// Disk-backed persistence for session artifacts.
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if necessary) a store rooted at `root`, and
+    /// verify up front that both artifact directories are writable —
+    /// so a bad `--store` argument fails before any expensive work,
+    /// not after.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore, String> {
+        let root = root.into();
+        for sub in ["stats", "fits"] {
+            crate::util::ensure_writable_dir(
+                &root.join(sub),
+                "artifact store directory",
+            )?;
+        }
+        Ok(ArtifactStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn stats_path(&self, key: &StatsKey) -> PathBuf {
+        self.root.join("stats").join(format!(
+            "{:032x}-sg{}.json",
+            key.fingerprint, key.sub_group_size
+        ))
+    }
+
+    fn fit_path(&self, key: &FitKey) -> PathBuf {
+        let form = if key.nonlinear { "overlap" } else { "linear" };
+        self.root
+            .join("fits")
+            .join(format!("{}-{}-{form}.json", key.case, key.device))
+    }
+
+    /// Atomic-enough write: temp file in the target directory + rename.
+    fn write_atomic(&self, path: &Path, text: &str) -> Result<(), String> {
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, text)
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("publishing {}: {e}", path.display()))
+    }
+
+    fn read_versioned(&self, path: &Path, kind: &str) -> Option<Json> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let version = j.get("format_version")?.as_f64()?;
+        if version != STORE_FORMAT_VERSION as f64 {
+            return None;
+        }
+        if j.get("kind")?.as_str()? != kind {
+            return None;
+        }
+        Some(j)
+    }
+
+    /// Run an artifact loader with panic containment: the store's
+    /// contract is that a corrupt artifact degrades to a cold start,
+    /// and decoded values flow into checked arithmetic (e.g. `Rat`
+    /// deliberately panics on overflow) that hand-edited JSON could
+    /// otherwise trip.
+    fn contained<T>(f: impl FnOnce() -> Option<T>) -> Option<T> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .ok()
+            .flatten()
+    }
+
+    /// Load a persisted stats bundle; `None` on miss, version skew,
+    /// key mismatch or parse failure.
+    pub fn load_stats(&self, key: &StatsKey) -> Option<KernelStats> {
+        Self::contained(|| {
+            let j = self.read_versioned(&self.stats_path(key), "kernel-stats")?;
+            if j.get("fingerprint")?.as_str()? != format!("{:032x}", key.fingerprint) {
+                return None;
+            }
+            if j.get("sub_group_size")?.as_f64()? != key.sub_group_size as f64 {
+                return None;
+            }
+            let st = codec::stats_from_json(j.get("stats")?).ok()?;
+            (st.sub_group_size == key.sub_group_size).then_some(st)
+        })
+    }
+
+    pub fn save_stats(&self, key: &StatsKey, stats: &KernelStats) -> Result<(), String> {
+        let j = Json::obj(vec![
+            ("format_version", (STORE_FORMAT_VERSION as i64).into()),
+            ("kind", "kernel-stats".into()),
+            ("fingerprint", format!("{:032x}", key.fingerprint).into()),
+            ("sub_group_size", (key.sub_group_size as i64).into()),
+            ("stats", codec::stats_to_json(stats)),
+        ]);
+        self.write_atomic(&self.stats_path(key), &j.to_string())
+    }
+
+    /// Load a persisted calibration; `None` unless the format version
+    /// and the full model fingerprint both match.
+    pub fn load_fit(&self, key: &FitKey) -> Option<FitResult> {
+        Self::contained(|| {
+            let j = self.read_versioned(&self.fit_path(key), "fit")?;
+            if j.get("case")?.as_str()? != key.case
+                || j.get("device")?.as_str()? != key.device
+            {
+                return None;
+            }
+            if j.get("model_fingerprint")?.as_str()?
+                != format!("{:032x}", key.model_fingerprint)
+            {
+                return None;
+            }
+            codec::fit_from_json(j.get("fit")?).ok()
+        })
+    }
+
+    pub fn save_fit(&self, key: &FitKey, fit: &FitResult) -> Result<(), String> {
+        let j = Json::obj(vec![
+            ("format_version", (STORE_FORMAT_VERSION as i64).into()),
+            ("kind", "fit".into()),
+            ("case", key.case.as_str().into()),
+            ("device", key.device.as_str().into()),
+            ("nonlinear", key.nonlinear.into()),
+            (
+                "model_fingerprint",
+                format!("{:032x}", key.model_fingerprint).into(),
+            ),
+            ("fit", codec::fit_to_json(fit)),
+        ]);
+        self.write_atomic(&self.fit_path(key), &j.to_string())
+    }
+}
+
+impl StatsBacking for ArtifactStore {
+    fn load(&self, key: &StatsKey) -> Option<KernelStats> {
+        self.load_stats(key)
+    }
+
+    fn store(&self, key: &StatsKey, stats: &KernelStats) {
+        // Best-effort: a full disk must not fail the in-memory lookup.
+        if let Err(e) = self.save_stats(key, stats) {
+            eprintln!("warning: artifact store write failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "perflex-store-test-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn open_rejects_unusable_roots() {
+        let dir = tmp_store("open");
+        // A file where the root should be.
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("not-a-dir");
+        std::fs::write(&file, b"x").unwrap();
+        assert!(ArtifactStore::open(&file).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_roundtrip_through_disk() {
+        let dir = tmp_store("stats");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let k = crate::uipick::derived::build_axpy(DType::F32).unwrap().freeze();
+        let st = crate::stats::gather(&k, 32).unwrap();
+        let key = StatsKey {
+            fingerprint: k.fingerprint(),
+            sub_group_size: 32,
+        };
+        assert!(store.load_stats(&key).is_none(), "cold store must miss");
+        store.save_stats(&key, &st).unwrap();
+        let back = store.load_stats(&key).expect("saved stats must load");
+        let env: std::collections::BTreeMap<String, i128> =
+            [("n".to_string(), 1 << 20)].into_iter().collect();
+        assert_eq!(
+            st.op_count(DType::F32, "madd").eval(&env),
+            back.op_count(DType::F32, "madd").eval(&env)
+        );
+        // A different sub-group size is a different artifact.
+        let other = StatsKey {
+            fingerprint: k.fingerprint(),
+            sub_group_size: 64,
+        };
+        assert!(store.load_stats(&other).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_skew_and_key_mismatch_are_rejected() {
+        let dir = tmp_store("skew");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let fit = FitResult {
+            param_names: vec!["p_a".into()],
+            params: vec![2.0],
+            residual: 0.0,
+            iterations: 3,
+        };
+        let key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 0xabcd,
+        };
+        store.save_fit(&key, &fit).unwrap();
+        assert!(store.load_fit(&key).is_some());
+
+        // Model changed: same path, different fingerprint -> refit.
+        let moved = FitKey {
+            model_fingerprint: 0xabce,
+            ..key.clone()
+        };
+        assert!(store.load_fit(&moved).is_none());
+
+        // Stale format version on disk -> rejected (refit), not parsed.
+        let path = store.fit_path(&key);
+        let stale = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"format_version\":1", "\"format_version\":999");
+        assert_ne!(
+            stale,
+            std::fs::read_to_string(&path).unwrap(),
+            "version field must exist to be tampered with"
+        );
+        std::fs::write(&path, stale).unwrap();
+        assert!(store.load_fit(&key).is_none());
+
+        // Truncated JSON -> rejected.
+        std::fs::write(&path, "{\"format_version\":1,\"kind\":\"fit\"").unwrap();
+        assert!(store.load_fit(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

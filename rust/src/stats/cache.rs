@@ -16,13 +16,28 @@
 //! calibration — so each distinct kernel is symbolically counted
 //! exactly once per run and only cheap `QPoly` evaluation remains per
 //! problem size.  Devices that share a sub-group size share entries.
+//!
+//! Two refinements keep the hot path cheap beyond the memoization
+//! itself:
+//!
+//! * lookups are generic over [`KernelRef`], so a
+//!   [`FrozenKernel`](crate::ir::FrozenKernel) resolves its cache key
+//!   from the fingerprint minted at freeze time instead of re-rendering
+//!   the whole IR per lookup;
+//! * an optional [`StatsBacking`] (implemented by
+//!   [`crate::session::ArtifactStore`]) persists entries across
+//!   *processes*: a miss first consults the backing, and a fresh gather
+//!   is written back, so repeated CLI invocations against the same
+//!   store start warm.  Backing hits are tallied separately
+//!   ([`StatsCache::disk_hits`]); [`StatsCache::misses`] keeps meaning
+//!   "ran the full symbolic pass".
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::{gather, KernelStats};
-use crate::ir::Kernel;
+use crate::ir::{Kernel, KernelRef};
 
 /// One memoization slot.  The map entry is created under the map lock,
 /// but the expensive gather runs inside the slot's own [`OnceLock`], so
@@ -46,11 +61,23 @@ impl StatsKey {
     }
 }
 
+/// Persistence hook for cache entries (disk-backed stores implement
+/// this).  `load` may return `None` for any reason — missing, stale
+/// format version, parse failure — and the cache falls back to a fresh
+/// gather.  `store` is best-effort: persistence failures must not fail
+/// the lookup.
+pub trait StatsBacking: Send + Sync {
+    fn load(&self, key: &StatsKey) -> Option<KernelStats>;
+    fn store(&self, key: &StatsKey, stats: &KernelStats);
+}
+
 /// Shared, interior-mutable memoization of [`gather`] results.
 #[derive(Default)]
 pub struct StatsCache {
     slots: Mutex<HashMap<StatsKey, Slot>>,
+    backing: Option<Arc<dyn StatsBacking>>,
     hits: AtomicU64,
+    disk_hits: AtomicU64,
     misses: AtomicU64,
 }
 
@@ -59,37 +86,69 @@ impl StatsCache {
         StatsCache::default()
     }
 
+    /// A cache whose misses consult (and whose fresh gathers populate)
+    /// a persistent backing.
+    pub fn with_backing(backing: Arc<dyn StatsBacking>) -> StatsCache {
+        StatsCache {
+            backing: Some(backing),
+            ..StatsCache::default()
+        }
+    }
+
     /// Cached [`gather`]: runs the symbolic counting pass at most once
     /// per distinct (kernel fingerprint, sub-group size), even under
     /// concurrent lookups (losers of the insertion race block on the
     /// winner's slot instead of re-deriving).  Gather errors are cached
     /// and replayed too, keeping cached and fresh behavior identical.
-    pub fn get_or_gather(
+    ///
+    /// Accepts any [`KernelRef`]; pass a
+    /// [`FrozenKernel`](crate::ir::FrozenKernel) to key the lookup by
+    /// its precomputed fingerprint instead of re-rendering the IR.
+    pub fn get_or_gather<K: KernelRef>(
         &self,
-        knl: &Kernel,
+        knl: &K,
         sub_group_size: u64,
     ) -> Result<Arc<KernelStats>, String> {
-        let key = StatsKey::of(knl, sub_group_size);
+        let key = StatsKey {
+            fingerprint: knl.fingerprint(),
+            sub_group_size,
+        };
         let slot: Slot = {
             let mut slots = self.slots.lock().unwrap();
             slots.entry(key).or_default().clone()
         };
-        let mut fresh = false;
+        // 0 = memory hit, 1 = backing hit, 2 = fresh gather.
+        let mut outcome = 0u8;
         let res = slot.get_or_init(|| {
-            fresh = true;
-            gather(knl, sub_group_size).map(Arc::new)
+            if let Some(backing) = &self.backing {
+                if let Some(stats) = backing.load(&key) {
+                    outcome = 1;
+                    return Ok(Arc::new(stats));
+                }
+            }
+            outcome = 2;
+            let gathered = gather(knl.as_kernel(), sub_group_size).map(Arc::new);
+            if let (Some(backing), Ok(stats)) = (&self.backing, &gathered) {
+                backing.store(&key, stats);
+            }
+            gathered
         });
-        if fresh {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        }
+        match outcome {
+            0 => self.hits.fetch_add(1, Ordering::Relaxed),
+            1 => self.disk_hits.fetch_add(1, Ordering::Relaxed),
+            _ => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
         res.clone()
     }
 
     /// Lookups served from memory.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups served from the persistent backing (no symbolic pass).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
     }
 
     /// Lookups that ran the full symbolic pass.
@@ -161,5 +220,62 @@ mod tests {
         });
         assert_eq!(cache.misses(), 1, "the symbolic pass must run once");
         assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn frozen_lookup_matches_plain_lookup() {
+        let cache = StatsCache::new();
+        let k = build_axpy(DType::F32).unwrap();
+        let frozen = k.clone().freeze();
+        let a = cache.get_or_gather(&k, 32).unwrap();
+        let b = cache.get_or_gather(&frozen, 32).unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "frozen and plain lookups must share an entry"
+        );
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+    }
+
+    /// An in-memory backing standing in for the disk store.
+    #[derive(Default)]
+    struct MapBacking {
+        map: Mutex<HashMap<StatsKey, KernelStats>>,
+        loads: AtomicU64,
+        stores: AtomicU64,
+    }
+
+    impl StatsBacking for MapBacking {
+        fn load(&self, key: &StatsKey) -> Option<KernelStats> {
+            self.loads.fetch_add(1, Ordering::Relaxed);
+            self.map.lock().unwrap().get(key).cloned()
+        }
+
+        fn store(&self, key: &StatsKey, stats: &KernelStats) {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+            self.map.lock().unwrap().insert(*key, stats.clone());
+        }
+    }
+
+    #[test]
+    fn backing_serves_warm_starts_and_absorbs_fresh_gathers() {
+        let backing = Arc::new(MapBacking::default());
+        let k = build_axpy(DType::F32).unwrap();
+
+        // First process: miss -> gather -> write-through to the backing.
+        let first = StatsCache::with_backing(backing.clone());
+        first.get_or_gather(&k, 32).unwrap();
+        assert_eq!((first.misses(), first.disk_hits()), (1, 0));
+        assert_eq!(backing.stores.load(Ordering::Relaxed), 1);
+
+        // Second process: cold memory, warm backing -> zero symbolic
+        // passes, and in-memory hits thereafter.
+        let second = StatsCache::with_backing(backing.clone());
+        let a = second.get_or_gather(&k, 32).unwrap();
+        assert_eq!((second.misses(), second.disk_hits()), (0, 1));
+        let b = second.get_or_gather(&k, 32).unwrap();
+        assert_eq!((second.misses(), second.disk_hits(), second.hits()), (0, 1, 1));
+        assert!(Arc::ptr_eq(&a, &b));
+        // The backing is only stored to on fresh gathers.
+        assert_eq!(backing.stores.load(Ordering::Relaxed), 1);
     }
 }

@@ -23,12 +23,22 @@
 //! scoped threads of parallel fleet calibration — so each distinct
 //! kernel pays the polyhedral counting pass exactly once and every
 //! further use is a cheap `QPoly` re-evaluation.
+//!
+//! The amortization also crosses process boundaries: a cache built
+//! with [`StatsCache::with_backing`] persists entries through a
+//! [`StatsBacking`] (the disk-backed
+//! [`crate::session::ArtifactStore`]), so repeated CLI invocations
+//! against the same `--store` directory skip the counting pass
+//! entirely.  Lookups are keyed by precomputed
+//! [`crate::ir::FrozenKernel`] fingerprints on the hot paths, so the
+//! IR is rendered at most once per kernel (at freeze time), not once
+//! per lookup.
 
 use std::collections::BTreeMap;
 
 pub mod cache;
 
-pub use cache::{StatsCache, StatsKey};
+pub use cache::{StatsBacking, StatsCache, StatsKey};
 
 use crate::ir::{Access, DType, IndexTag, Kernel, LhsRef, MemScope, Stmt};
 use crate::polyhedral::QPoly;

@@ -425,7 +425,7 @@ fn gen_matmul(args: &VariantArgs) -> Result<GeneratedKernel, String> {
         return Err(format!("n={n} not divisible by tile {tile}"));
     }
     Ok(GeneratedKernel {
-        kernel: build_matmul(dtype, prefetch, tile)?,
+        kernel: build_matmul(dtype, prefetch, tile)?.freeze(),
         generator: "matmul_sq".into(),
         args: args.clone(),
         env: env1("n", n),
@@ -441,7 +441,7 @@ fn gen_dg(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     let mut env = env1("nelements", nel);
     env.insert("nmatrices".into(), nmat);
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: "dg_diff".into(),
         args: args.clone(),
         env,
@@ -455,7 +455,7 @@ fn gen_fdiff(args: &VariantArgs) -> Result<GeneratedKernel, String> {
         return Err(format!("n={n} not divisible by interior {}", lsize - 2));
     }
     Ok(GeneratedKernel {
-        kernel: build_fdiff(lsize)?,
+        kernel: build_fdiff(lsize)?.freeze(),
         generator: "fdiff_2d5pt".into(),
         args: args.clone(),
         env: env1("n", n),
@@ -465,7 +465,7 @@ fn gen_fdiff(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 fn gen_transpose(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     let n = args.get_i64("n")?;
     Ok(GeneratedKernel {
-        kernel: build_transpose(16)?,
+        kernel: build_transpose(16)?.freeze(),
         generator: "transpose_sq".into(),
         args: args.clone(),
         env: env1("n", n),

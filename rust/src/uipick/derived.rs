@@ -40,7 +40,7 @@ fn gen_gmem_from_matmul(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     let mut kernel = remove_work(&app, &spec)?;
     kernel.name = format!("gmem_mm_{variant}");
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: "gmem_from_matmul".into(),
         args: args.clone(),
         env: env(&[("n", n)]),
@@ -68,7 +68,7 @@ fn gen_gmem_from_dg(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     let mut kernel = remove_work(&app, &RemoveSpec::arrays(&remove))?;
     kernel.name = format!("gmem_dg_{pattern}");
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: "gmem_from_dg".into(),
         args: args.clone(),
         env: env(&[("nelements", nel), ("nmatrices", 3)]),
@@ -83,7 +83,7 @@ fn gen_gmem_from_fdiff(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     let mut kernel = remove_work(&app, &RemoveSpec::arrays(&["res"]))?;
     kernel.name = format!("gmem_fdiff_{lsize}");
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: "gmem_from_fdiff".into(),
         args: args.clone(),
         env: env(&[("n", n)]),
@@ -225,7 +225,7 @@ pub fn build_stencil1d(dtype: DType) -> Result<Kernel, String> {
 
 fn gen_axpy(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_axpy(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?,
+        kernel: build_axpy(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?.freeze(),
         generator: "axpy".into(),
         args: args.clone(),
         env: env(&[("n", args.get_i64("n")?)]),
@@ -234,7 +234,7 @@ fn gen_axpy(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_vecadd(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_vecadd(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?,
+        kernel: build_vecadd(DType::parse(args.get("dtype")?).ok_or("bad dtype")?)?.freeze(),
         generator: "vecadd".into(),
         args: args.clone(),
         env: env(&[("n", args.get_i64("n")?)]),
@@ -243,7 +243,7 @@ fn gen_vecadd(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_matvec(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_matvec(DType::F32)?,
+        kernel: build_matvec(DType::F32)?.freeze(),
         generator: "matvec".into(),
         args: args.clone(),
         env: env(&[("n", args.get_i64("n")?)]),
@@ -252,7 +252,7 @@ fn gen_matvec(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_stencil1d(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_stencil1d(DType::F32)?,
+        kernel: build_stencil1d(DType::F32)?.freeze(),
         generator: "stencil1d_3pt".into(),
         args: args.clone(),
         env: env(&[("n", args.get_i64("n")?)]),

@@ -347,7 +347,7 @@ fn gen_flops_impl(op: &str, args: &VariantArgs) -> Result<GeneratedKernel, Strin
         "m >= 1",
     )?;
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: format!("flops_{op}_pattern"),
         args: args.clone(),
         env: env(&[
@@ -365,7 +365,7 @@ fn gen_gmem_pattern(args: &VariantArgs) -> Result<GeneratedKernel, String> {
         args.get_i64("n_arrays")?,
     )?;
     Ok(GeneratedKernel {
-        kernel,
+        kernel: kernel.freeze(),
         generator: "gmem_pattern".into(),
         args: args.clone(),
         env: env(&[("nelements", args.get_i64("nelements")?)]),
@@ -374,7 +374,7 @@ fn gen_gmem_pattern(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_lmem(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_lmem_move(dtype_of(args)?, args.get_i64("stride")?)?,
+        kernel: build_lmem_move(dtype_of(args)?, args.get_i64("stride")?)?.freeze(),
         generator: "lmem_move".into(),
         args: args.clone(),
         env: env(&[
@@ -386,7 +386,7 @@ fn gen_lmem(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_barrier(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_barrier_pattern(dtype_of(args)?)?,
+        kernel: build_barrier_pattern(dtype_of(args)?)?.freeze(),
         generator: "barrier_pattern".into(),
         args: args.clone(),
         env: env(&[
@@ -398,7 +398,7 @@ fn gen_barrier(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_empty(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_empty()?,
+        kernel: build_empty()?.freeze(),
         generator: "empty_kernel".into(),
         args: args.clone(),
         env: env(&[("n_groups", args.get_i64("n_groups")?)]),
@@ -407,7 +407,7 @@ fn gen_empty(args: &VariantArgs) -> Result<GeneratedKernel, String> {
 
 fn gen_overlap(args: &VariantArgs) -> Result<GeneratedKernel, String> {
     Ok(GeneratedKernel {
-        kernel: build_overlap_ratio(dtype_of(args)?)?,
+        kernel: build_overlap_ratio(dtype_of(args)?)?.freeze(),
         generator: "overlap_ratio".into(),
         args: args.clone(),
         env: env(&[

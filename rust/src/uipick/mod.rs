@@ -28,7 +28,7 @@ pub mod micro;
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::ir::Kernel;
+use crate::ir::FrozenKernel;
 
 /// Build-function argument set: `argument -> chosen value`.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -61,9 +61,16 @@ impl VariantArgs {
 
 /// A kernel produced by a generator, with the concrete problem sizes
 /// it should be measured/evaluated at.
+///
+/// The kernel is [frozen](crate::ir::Kernel::freeze) at generation
+/// time: its structural fingerprint is minted exactly once, and every
+/// downstream cache lookup (measurement, feature gathering,
+/// prediction, the persistent artifact store) reuses it instead of
+/// re-rendering the IR.  `FrozenKernel` derefs to
+/// [`Kernel`](crate::ir::Kernel), so read access is unchanged.
 #[derive(Clone, Debug)]
 pub struct GeneratedKernel {
-    pub kernel: Kernel,
+    pub kernel: FrozenKernel,
     pub generator: String,
     pub args: VariantArgs,
     /// Values for the kernel's size parameters.

@@ -1,0 +1,76 @@
+//! Incremental 128-bit FNV-1a — the one hash implementation shared by
+//! structural kernel fingerprints ([`crate::ir::Kernel::fingerprint`])
+//! and artifact-store fit keys ([`crate::session::fit_key`]).
+
+const PRIME: u64 = 0x100000001b3;
+
+/// Incremental 128-bit FNV-1a hasher (two mixed 64-bit lanes).
+pub struct Fnv128 {
+    lo: u64,
+    hi: u64,
+}
+
+impl Fnv128 {
+    pub fn new() -> Fnv128 {
+        Fnv128 {
+            lo: 0xcbf29ce484222325,
+            hi: 0x9e3779b97f4a7c15,
+        }
+    }
+
+    /// Feed raw bytes (no framing).
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.lo = (self.lo ^ b as u64).wrapping_mul(PRIME);
+            self.hi = (self.hi ^ b as u64).wrapping_mul(PRIME).rotate_left(29);
+        }
+    }
+
+    /// Feed one delimited field: the bytes plus a separator mix, so
+    /// ("ab", "c") and ("a", "bc") hash differently.
+    pub fn update(&mut self, bytes: &[u8]) {
+        self.write(bytes);
+        self.lo = (self.lo ^ 0xff).wrapping_mul(PRIME);
+        self.hi = (self.hi ^ 0xff).wrapping_mul(PRIME).rotate_left(29);
+    }
+
+    pub fn finish(&self) -> u128 {
+        ((self.hi as u128) << 64) | self.lo as u128
+    }
+}
+
+impl Default for Fnv128 {
+    fn default() -> Fnv128 {
+        Fnv128::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields(parts: &[&str]) -> u128 {
+        let mut h = Fnv128::new();
+        for p in parts {
+            h.update(p.as_bytes());
+        }
+        h.finish()
+    }
+
+    #[test]
+    fn field_framing_distinguishes_splits() {
+        assert_ne!(fields(&["ab", "c"]), fields(&["a", "bc"]));
+        assert_ne!(fields(&["ab"]), fields(&["ab", ""]));
+        assert_eq!(fields(&["ab", "c"]), fields(&["ab", "c"]));
+    }
+
+    #[test]
+    fn write_is_raw_concatenation() {
+        let mut a = Fnv128::new();
+        a.write(b"ab");
+        a.write(b"c");
+        let mut b = Fnv128::new();
+        b.write(b"abc");
+        assert_eq!(a.finish(), b.finish());
+    }
+}

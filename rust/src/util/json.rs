@@ -132,7 +132,12 @@ impl fmt::Display for Json {
             Json::Null => f.write_str("null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // Integer-valued floats print as integers — except
+                // negative zero, which must keep its sign so that
+                // serialize -> parse -> serialize round-trips f64s
+                // exactly (the artifact store depends on this).
+                if x.fract() == 0.0 && x.abs() < 1e15 && (*x != 0.0 || x.is_sign_positive())
+                {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
@@ -367,5 +372,18 @@ mod tests {
     #[test]
     fn rejects_trailing_garbage() {
         assert!(Json::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn floats_roundtrip_exactly() {
+        for x in [0.1 + 0.2, 1.5e-9, -0.0, 5.0, -7.0, 3.86e-17, 1e300] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "{x} -> '{text}' -> {back} must preserve bits"
+            );
+        }
     }
 }

@@ -5,10 +5,27 @@
 //! dependency closure (see Cargo.toml header note): no `serde`, no
 //! `rand`, no `proptest`.
 
+pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rat;
 pub mod rng;
 
+pub use fnv::Fnv128;
 pub use rat::Rat;
 pub use rng::Rng;
+
+/// Ensure `dir` exists and is actually writable (a probe file is
+/// created and removed): the shared fail-fast check behind the CLI's
+/// `--json` flag and the artifact store root.  Creating directories
+/// alone is not enough — `create_dir_all` succeeds on a pre-existing
+/// read-only tree; a real write cannot.
+pub fn ensure_writable_dir(dir: &std::path::Path, what: &str) -> Result<(), String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("{what} '{}' is unusable: {e}", dir.display()))?;
+    let probe = dir.join(format!(".probe-{}", std::process::id()));
+    std::fs::write(&probe, b"ok")
+        .map_err(|e| format!("{what} '{}' is not writable: {e}", dir.display()))?;
+    let _ = std::fs::remove_file(&probe);
+    Ok(())
+}

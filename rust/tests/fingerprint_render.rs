@@ -1,0 +1,46 @@
+//! Acceptance check for the frozen-kernel refactor: the measurement /
+//! feature-gathering / prediction hot paths must never re-render
+//! kernel IR — each kernel's fingerprint is minted exactly once, at
+//! freeze time.
+//!
+//! This is deliberately the *only* test in this binary:
+//! [`perflex::ir::ir_render_count`] is process-global, and unit tests
+//! running on sibling threads would perturb it.
+
+use perflex::coordinator::expsets;
+use perflex::gpusim::{device_by_id, measure_with_cache};
+use perflex::ir::ir_render_count;
+use perflex::stats::StatsCache;
+
+#[test]
+fn hot_paths_never_rerender_frozen_kernel_ir() {
+    let dev = device_by_id("titan_v").unwrap();
+    let case = expsets::eval_case("matmul").unwrap();
+    // Generation freezes every kernel (renders happen here, once per
+    // generated kernel)...
+    let kernels =
+        expsets::generate_measurement_kernels(&(case.measurement_sets)()).unwrap();
+    let ids = (case.model)(dev.id, true).feature_columns();
+    let app = perflex::uipick::apps::build_matmul(perflex::ir::DType::F32, true, 16)
+        .unwrap()
+        .freeze();
+    let env: std::collections::BTreeMap<String, i64> =
+        [("n".to_string(), 2048i64)].into_iter().collect();
+
+    // ... and from here on, zero renders: every cache key comes from a
+    // frozen fingerprint.
+    let cache = StatsCache::new();
+    let before = ir_render_count();
+    let data =
+        perflex::calibrate::gather_features_by_ids_cached(ids, &kernels, &dev, &cache)
+            .unwrap();
+    assert!(!data.is_empty());
+    for _ in 0..3 {
+        measure_with_cache(&dev, &app, &env, &cache).unwrap();
+    }
+    assert_eq!(
+        ir_render_count(),
+        before,
+        "measurement, gathering and prediction must not re-render IR"
+    );
+}

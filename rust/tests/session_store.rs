@@ -1,0 +1,82 @@
+//! Warm-vs-cold integration tests for the persistent calibration
+//! session (`perflex::session`).
+//!
+//! The acceptance bar: a warm artifact store changes *cost*, never
+//! *output* — experiment reports are byte-identical between a cold run
+//! and a warm re-run, and the warm run performs zero symbolic counting
+//! passes.
+
+use std::path::PathBuf;
+
+use perflex::coordinator::run_experiment_in_session;
+use perflex::coordinator::expsets;
+use perflex::gpusim::device_by_id;
+use perflex::session::Session;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "perflex-itest-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn experiment_fig1_reports_byte_identical_cold_vs_warm() {
+    let dir = tmp_dir("fig1");
+
+    let cold = Session::with_store(&dir).expect("store must open");
+    let rep_cold = run_experiment_in_session("fig1", false, &cold).unwrap();
+    assert!(
+        cold.cache().misses() > 0,
+        "cold run must actually run the symbolic pass"
+    );
+
+    // A fresh session over the same store: statistics come from disk.
+    let warm = Session::with_store(&dir).unwrap();
+    let rep_warm = run_experiment_in_session("fig1", false, &warm).unwrap();
+    assert_eq!(
+        warm.cache().misses(),
+        0,
+        "warm run must serve every symbolic bundle from the store"
+    );
+    assert!(warm.cache().disk_hits() > 0);
+
+    assert_eq!(rep_cold.render(), rep_warm.render());
+    assert_eq!(
+        rep_cold.to_json().to_string(),
+        rep_warm.to_json().to_string(),
+        "warm report must be byte-identical to the cold one"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_calibrate_returns_stored_fit_for_both_model_forms() {
+    let dir = tmp_dir("forms");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("gtx_titan_x").unwrap();
+
+    let cold = Session::with_store(&dir).unwrap();
+    let nl_cold = cold.calibrate_case(&case, &dev, true, None).unwrap();
+    let lin_cold = cold.calibrate_case(&case, &dev, false, None).unwrap();
+    assert!(!nl_cold.from_store && !lin_cold.from_store);
+    assert_ne!(
+        nl_cold.fit.params, lin_cold.fit.params,
+        "the two model forms are distinct artifacts"
+    );
+
+    let warm = Session::with_store(&dir).unwrap();
+    let nl_warm = warm.calibrate_case(&case, &dev, true, None).unwrap();
+    let lin_warm = warm.calibrate_case(&case, &dev, false, None).unwrap();
+    assert!(nl_warm.from_store && lin_warm.from_store);
+    assert_eq!(nl_cold.fit.params, nl_warm.fit.params);
+    assert_eq!(lin_cold.fit.params, lin_warm.fit.params);
+    assert_eq!(
+        warm.cache().misses(),
+        0,
+        "stored fits must not trigger measurement or counting"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
