@@ -91,4 +91,46 @@ fn main() {
     );
     assert_eq!(last_disk_hits, kernels.len() as u64);
     let _ = std::fs::remove_dir_all(&dir);
+
+    // Parallel measurement sweep: the per-kernel loop of
+    // gather_features_by_ids_cached on worker threads vs the
+    // sequential reference, over a real measurement-kernel collection
+    // (matmul case, Titan V).  Cold caches per pass so each iteration
+    // pays the full measure + count + bind pipeline; outputs asserted
+    // byte-identical.
+    let case = &perflex::coordinator::expsets::eval_cases()[0];
+    let m_knls = perflex::coordinator::expsets::generate_measurement_kernels(
+        &(case.measurement_sets)(),
+    )
+    .unwrap();
+    let dev = perflex::gpusim::device_by_id("titan_v").unwrap();
+    let ids = (case.model)(dev.id, true).feature_columns();
+    let mut seq_data = None;
+    bench("measurement sweep, sequential reference", 5, || {
+        seq_data = Some(
+            perflex::calibrate::gather_features_by_ids_sequential(
+                ids.clone(),
+                &m_knls,
+                &dev,
+                &StatsCache::new(),
+            )
+            .unwrap(),
+        );
+    });
+    let mut par_data = None;
+    bench("measurement sweep, parallel workers", 5, || {
+        par_data = Some(
+            perflex::calibrate::gather_features_by_ids_cached(
+                ids.clone(),
+                &m_knls,
+                &dev,
+                &StatsCache::new(),
+            )
+            .unwrap(),
+        );
+    });
+    assert_eq!(
+        seq_data, par_data,
+        "parallel sweep must be byte-identical to sequential"
+    );
 }

@@ -18,10 +18,13 @@
 //!   `lm_step` artifact on the PJRT CPU client.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::features::{BoundFeature, FeatureSpec};
-use crate::gpusim::{measure_with_cache, DeviceProfile};
+use crate::gpusim::{
+    is_per_kernel_measure_error, measure_with_cache, DeviceProfile,
+};
 use crate::ir::KernelRef;
 use crate::model::{Model, ModelExpr};
 use crate::stats::{KernelStats, StatsCache};
@@ -93,6 +96,13 @@ pub fn gather_features_by_ids(
 /// once across measurement, feature evaluation, and any other caller
 /// sharing the cache (e.g. a whole multi-device experiment).
 ///
+/// The per-kernel measurement loop runs on scoped worker threads (one
+/// per available core, work-stealing over the kernel list) sharing the
+/// cache; rows are merged back in measurement-kernel order, so the
+/// resulting [`FeatureData`] — and everything downstream of it, fits
+/// and figure reports included — is byte-identical to the sequential
+/// reference ([`gather_features_by_ids_sequential`]).
+///
 /// Feature evaluation is batched across problem sizes: a measurement
 /// set typically reuses one structural kernel at many sizes, so the
 /// feature columns are [bound](FeatureSpec::bind) once per distinct
@@ -106,51 +116,95 @@ pub fn gather_features_by_ids_cached(
     device: &DeviceProfile,
     cache: &StatsCache,
 ) -> Result<FeatureData, String> {
-    let specs: Vec<FeatureSpec> = ids
-        .iter()
-        .map(|id| FeatureSpec::parse(id))
-        .collect::<Result<_, _>>()?;
-    let mut data = FeatureData {
-        feature_ids: ids,
-        ..Default::default()
+    let workers = std::thread::available_parallelism()
+        .map(usize::from)
+        .unwrap_or(1)
+        .min(kernels.len().max(1));
+    gather_features_by_ids_inner(ids, kernels, device, cache, workers)
+}
+
+/// The sequential reference implementation of
+/// [`gather_features_by_ids_cached`]: one thread, kernels in order.
+/// The parallel path must match it byte-for-byte (see the determinism
+/// tests); it also serves as the baseline in `benches/stats_cache.rs`.
+pub fn gather_features_by_ids_sequential(
+    ids: Vec<String>,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+    cache: &StatsCache,
+) -> Result<FeatureData, String> {
+    gather_features_by_ids_inner(ids, kernels, device, cache, 1)
+}
+
+/// One gathered calibration row (feature values, measured output,
+/// diagnostic label), produced per launchable measurement kernel.
+struct GatheredRow {
+    row: Vec<f64>,
+    output: f64,
+    label: String,
+}
+
+/// Per-distinct-kernel bound state: the stats bundle plus the feature
+/// columns bound against it.  The map entry is created under the map
+/// lock, but binding runs inside the slot's own [`OnceLock`] — the
+/// same pattern as [`StatsCache`] — so concurrent workers bind each
+/// distinct kernel exactly once.
+type BindSlot =
+    Arc<OnceLock<Result<(Arc<KernelStats>, Arc<Vec<BoundFeature>>), String>>>;
+
+fn bind_features(
+    slots: &Mutex<HashMap<u128, BindSlot>>,
+    gk: &GeneratedKernel,
+    specs: &[FeatureSpec],
+    device: &DeviceProfile,
+    cache: &StatsCache,
+) -> Result<(Arc<KernelStats>, Arc<Vec<BoundFeature>>), String> {
+    let slot: BindSlot = {
+        let mut map = slots.lock().unwrap();
+        map.entry(gk.kernel.fingerprint()).or_default().clone()
     };
-    // Per-distinct-kernel bound feature columns (keyed by the frozen
-    // fingerprint; the sub-group size is fixed by `device` here).
-    let mut bound: HashMap<u128, (Arc<KernelStats>, Vec<BoundFeature>)> =
-        HashMap::new();
-    for gk in kernels {
-        // Measure first: kernels a device cannot launch (e.g. 18x18
-        // work-groups on the AMD R9 Fury) are skipped, exactly as the
-        // paper had to, and the launchability check precedes all
-        // symbolic work — so skipped kernels no longer pay a full
-        // feature-evaluation pass for nothing.  Their exclusive
-        // features stay at the bound of 0.
-        let t = match measure_with_cache(device, &gk.kernel, &gk.env, cache) {
-            Ok(t) => t,
-            Err(e) if e.contains("CL_INVALID_WORK_GROUP_SIZE") => continue,
-            Err(e) => return Err(e),
-        };
-        let entry = match bound.entry(gk.kernel.fingerprint()) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(v) => {
-                let st = cache.get_or_gather(&gk.kernel, device.sub_group_size)?;
-                let feats = specs
-                    .iter()
-                    .map(|s| s.bind(&st))
-                    .collect::<Result<Vec<_>, String>>()?;
-                v.insert((st, feats))
-            }
-        };
-        let (st, feats) = (&entry.0, &entry.1);
-        let env: BTreeMap<String, i128> = gk
-            .env
+    slot.get_or_init(|| {
+        let st = cache.get_or_gather(&gk.kernel, device.sub_group_size)?;
+        let feats = specs
             .iter()
-            .map(|(k, v)| (k.clone(), *v as i128))
-            .collect();
-        let row: Vec<f64> = feats.iter().map(|b| b.eval(st, &env)).collect();
-        data.rows.push(row);
-        data.outputs.push(t);
-        data.labels.push(format!(
+            .map(|s| s.bind(&st))
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok((st, Arc::new(feats)))
+    })
+    .clone()
+}
+
+/// Measure and evaluate one measurement kernel.  `Ok(None)` when the
+/// device skips it — unlaunchable work-group sizes and unmeasurable
+/// access maps condemn the kernel, not the sweep.
+fn gather_one(
+    gk: &GeneratedKernel,
+    specs: &[FeatureSpec],
+    device: &DeviceProfile,
+    cache: &StatsCache,
+    slots: &Mutex<HashMap<u128, BindSlot>>,
+) -> Result<Option<GatheredRow>, String> {
+    // Measure first: kernels a device cannot launch (e.g. 18x18
+    // work-groups on the AMD R9 Fury) are skipped, exactly as the
+    // paper had to, and the launchability check precedes all
+    // symbolic work — so skipped kernels pay nothing.  Their
+    // exclusive features stay at the bound of 0.
+    let t = match measure_with_cache(device, &gk.kernel, &gk.env, cache) {
+        Ok(t) => t,
+        Err(e) if is_per_kernel_measure_error(&e) => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let (st, feats) = bind_features(slots, gk, specs, device, cache)?;
+    let env: BTreeMap<String, i128> = gk
+        .env
+        .iter()
+        .map(|(k, v)| (k.clone(), *v as i128))
+        .collect();
+    let row: Vec<f64> = feats.iter().map(|b| b.eval(&st, &env)).collect();
+    Ok(Some(GatheredRow {
+        row,
+        output: t,
+        label: format!(
             "{}[{}]",
             gk.kernel.name,
             gk.env
@@ -158,15 +212,119 @@ pub fn gather_features_by_ids_cached(
                 .map(|(k, v)| format!("{k}={v}"))
                 .collect::<Vec<_>>()
                 .join(",")
-        ));
+        ),
+    }))
+}
+
+fn gather_features_by_ids_inner(
+    ids: Vec<String>,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+    cache: &StatsCache,
+    workers: usize,
+) -> Result<FeatureData, String> {
+    let specs: Vec<FeatureSpec> = ids
+        .iter()
+        .map(|id| FeatureSpec::parse(id))
+        .collect::<Result<_, _>>()?;
+    let slots: Mutex<HashMap<u128, BindSlot>> = Mutex::new(HashMap::new());
+
+    // Per-kernel outcomes, indexed in measurement-kernel order.  `None`
+    // marks a kernel whose worker died before reporting.
+    let mut outcomes: Vec<Option<Result<Option<GatheredRow>, String>>> =
+        kernels.iter().map(|_| None).collect();
+    let mut worker_panic: Option<String> = None;
+    if workers <= 1 {
+        for (i, gk) in kernels.iter().enumerate() {
+            let out = gather_one(gk, &specs, device, cache, &slots);
+            let failed = out.is_err();
+            outcomes[i] = Some(out);
+            if failed {
+                // Match the sequential contract: stop at the first
+                // error in kernel order.
+                break;
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let joined: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let (specs, slots, next) = (&specs, &slots, &next);
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= kernels.len() {
+                                break;
+                            }
+                            local.push((
+                                i,
+                                gather_one(&kernels[i], specs, device, cache, slots),
+                            ));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        for res in joined {
+            match res {
+                Ok(list) => {
+                    for (i, out) in list {
+                        outcomes[i] = Some(out);
+                    }
+                }
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| payload.downcast_ref::<&str>().copied())
+                        .unwrap_or("opaque panic payload")
+                        .to_string();
+                    worker_panic.get_or_insert(msg);
+                }
+            }
+        }
+    }
+
+    // Merge in kernel order: the first error in order wins (exactly the
+    // sequential short-circuit), skipped kernels drop out, surviving
+    // rows keep their measurement-set order — so the output is
+    // byte-identical to the sequential pass.
+    let mut data = FeatureData {
+        feature_ids: ids,
+        ..Default::default()
+    };
+    for outcome in outcomes {
+        match outcome {
+            Some(Ok(Some(g))) => {
+                data.rows.push(g.row);
+                data.outputs.push(g.output);
+                data.labels.push(g.label);
+            }
+            Some(Ok(None)) => {}
+            Some(Err(e)) => return Err(e),
+            None => {
+                if let Some(msg) = worker_panic.take() {
+                    return Err(format!(
+                        "measurement sweep worker panicked: {msg}"
+                    ));
+                }
+                // Sequential early-stop: a preceding error was already
+                // returned above, so this is unreachable in practice.
+                break;
+            }
+        }
     }
     if data.is_empty() {
         // Fitting zero rows would "succeed" on garbage parameters; make
         // the failure mode explicit instead.
         return Err(format!(
             "calibration data for device '{}' is empty: all {} measurement \
-             kernels were skipped (CL_INVALID_WORK_GROUP_SIZE) or none were \
-             provided; refusing to fit a model to zero rows",
+             kernels were skipped (unlaunchable or unmeasurable there) or \
+             none were provided; refusing to fit a model to zero rows",
             device.id,
             kernels.len()
         ));
@@ -683,6 +841,37 @@ mod tests {
             implied > 0.2 * dev.peak_flops() && implied < 3.0 * dev.peak_flops(),
             "implied {implied:.3e} vs peak {:.3e}",
             dev.peak_flops()
+        );
+    }
+
+    /// Tentpole invariant: the parallel measurement sweep produces
+    /// `FeatureData` byte-identical to the sequential reference —
+    /// including on a device that skips part of the measurement set
+    /// (the Fury rejects the 18x18 fdiff kernels), so row merge order
+    /// and skip handling are both exercised.
+    #[test]
+    fn parallel_sweep_matches_sequential_byte_for_byte() {
+        let dev = device_by_id("amd_r9_fury").unwrap();
+        let case = &crate::coordinator::expsets::eval_cases()[2];
+        let kernels = crate::coordinator::expsets::generate_measurement_kernels(
+            &(case.measurement_sets)(),
+        )
+        .unwrap();
+        let ids = (case.model)(dev.id, true).feature_columns();
+        let seq = gather_features_by_ids_sequential(
+            ids.clone(),
+            &kernels,
+            &dev,
+            &StatsCache::new(),
+        )
+        .unwrap();
+        let par =
+            gather_features_by_ids_cached(ids, &kernels, &dev, &StatsCache::new())
+                .unwrap();
+        assert_eq!(seq, par, "parallel sweep must be byte-identical");
+        assert!(
+            par.len() < kernels.len(),
+            "the Fury must skip the 18x18 kernels mid-sweep"
         );
     }
 

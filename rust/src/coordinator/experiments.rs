@@ -14,14 +14,19 @@
 //! to a warm re-run).  Model fits stay on the dispatching thread: the
 //! optional AOT artifact wraps a PJRT client that is not assumed
 //! thread-safe, and the fits are cheap next to the symbolic and
-//! measurement work anyway.
+//! measurement work anyway.  With a store-backed session the
+//! per-device *fleet fits* are artifacts too (keyed like the CLI's
+//! `calibrate` fits, see [`crate::session::fit_key`]): a warm fleet
+//! run loads every fit from disk, skips the per-device measurement
+//! gathering wholesale, and still renders byte-identical reports.
 
 use std::collections::BTreeMap;
 
 use super::expsets;
 use super::report::{fmt_time, geomean, ExperimentReport, Prediction};
 use crate::calibrate::{
-    eval_with_kernel_cached, gather_features_by_ids_cached, FitResult, LmOptions,
+    eval_with_kernel_cached, gather_features_by_ids_cached, FeatureData, FitResult,
+    LmOptions,
 };
 use crate::features::FeatureSpec;
 use crate::gpusim::{fleet, measure_with_cache, DeviceProfile};
@@ -30,7 +35,7 @@ use crate::model::{CostGroup, CostModel};
 use crate::runtime::{
     artifacts_available, fit_cost_model_aot, fit_cost_model_native, Artifacts,
 };
-use crate::session::Session;
+use crate::session::{fit_key_parts, FitKey, Session};
 use crate::stats;
 use crate::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
 use crate::uipick::KernelCollection;
@@ -261,54 +266,110 @@ fn fig4() -> Result<ExperimentReport, String> {
 // ----------------------------------------------------------------------
 // Figure 5 — overlap of local and global memory transactions.
 // ----------------------------------------------------------------------
+
+/// Fig. 5's inline cost model: launch overheads, the two tagged global
+/// streams, and the local traffic whose hiding is under study.
+fn fig5_cost_model(device_id: &str) -> CostModel {
+    CostModel::new(device_id, true)
+        .term("launch_kernel", "f_sync_kernel_launch", CostGroup::Overhead)
+        .term("launch_group", "f_thread_groups", CostGroup::Overhead)
+        .term("gin", "f_mem_access_tag:patLD", CostGroup::Gmem)
+        .term("gout", "f_mem_access_tag:outST", CostGroup::Gmem)
+        .term("f32lmem", "f_mem_access_local_float32", CostGroup::OnChip)
+}
+
+/// The local-work sweep of Fig. 5, as a measurement-set filter group.
+fn fig5_measurement_sets() -> Vec<Vec<String>> {
+    let ms = [0i64, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64];
+    vec![vec![
+        "overlap_ratio".into(),
+        "dtype:float32".into(),
+        "nelements:4194304".into(),
+        format!(
+            "m:{}",
+            ms.iter()
+                .map(|m| m.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    ]]
+}
+
+/// Artifact identity of one device's fig5 overlap fit.  Public so the
+/// store's GC reachability set
+/// ([`crate::session::reachable_fit_fingerprints`]) covers the
+/// experiment harnesses, not just the CLI cases.
+pub fn fig5_fit_key(device: &DeviceProfile) -> FitKey {
+    fit_key_parts(
+        "fig5_overlap",
+        device,
+        true,
+        &fig5_cost_model(device.id),
+        &fig5_measurement_sets(),
+    )
+}
+
 fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, String> {
     let cache = session.cache();
     let mut rep = ExperimentReport::new(
         "fig5",
         "modeling overlap of local/global memory transactions (Figure 5)",
     );
-    let ms: Vec<i64> = vec![0, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64];
     let devices = fleet();
 
-    // Phase 1 (parallel over devices): generate and measure the sweep.
-    let gathered = parallel_map(&devices, |device| {
-        let cm = CostModel::new(device.id, true)
-            .term("launch_kernel", "f_sync_kernel_launch", CostGroup::Overhead)
-            .term("launch_group", "f_thread_groups", CostGroup::Overhead)
-            .term("gin", "f_mem_access_tag:patLD", CostGroup::Gmem)
-            .term("gout", "f_mem_access_tag:outST", CostGroup::Gmem)
-            .term(
-                "f32lmem",
-                "f_mem_access_local_float32",
-                CostGroup::OnChip,
-            );
-        let filter: Vec<String> = vec![
-            "overlap_ratio".into(),
-            "dtype:float32".into(),
-            "nelements:4194304".into(),
-            format!(
-                "m:{}",
-                ms.iter()
-                    .map(|m| m.to_string())
-                    .collect::<Vec<_>>()
-                    .join(",")
-            ),
-        ];
-        let refs: Vec<&str> = filter.iter().map(|s| s.as_str()).collect();
-        let knls = KernelCollection::all().generate_kernels(&refs)?;
-        let mut data =
-            gather_features_by_ids_cached(cm.feature_columns(), &knls, device, cache)?;
-        data.scale_features_by_output();
-        Ok((cm, knls, data))
+    // Phase 1 (parallel over devices): generate the sweep, and measure
+    // it only for devices whose fit is not already in the artifact
+    // store — a warm store turns the whole fleet calibration into a
+    // disk load.
+    let mut gathered = parallel_map(&devices, |device| {
+        let cm = fig5_cost_model(device.id);
+        let knls = expsets::generate_measurement_kernels(&fig5_measurement_sets())?;
+        let key = fig5_fit_key(device);
+        let data = if session.stored_fit(&key).is_some() {
+            None
+        } else {
+            let mut data = gather_features_by_ids_cached(
+                cm.feature_columns(),
+                &knls,
+                device,
+                cache,
+            )?;
+            data.scale_features_by_output();
+            Some(data)
+        };
+        Ok((cm, knls, key, data))
     })?;
 
-    // Phase 2 (sequential): fits stay on this thread (AOT path).
+    // Phase 2 (sequential): fits stay on this thread (AOT path); each
+    // device's fit loads from the store when fresh, else is fitted and
+    // persisted for the next fleet run.
     let mut fits = Vec::with_capacity(devices.len());
-    for (cm, _, data) in &gathered {
-        fits.push(match aot {
-            Some(a) => fit_cost_model_aot(a, cm, data, &LmOptions::default())?,
-            None => fit_cost_model_native(cm, data, &LmOptions::default())?,
-        });
+    for (device, (cm, knls, key, data)) in devices.iter().zip(gathered.iter_mut()) {
+        let fit = match session.stored_fit(key) {
+            Some(fit) => fit,
+            None => {
+                if data.is_none() {
+                    // Raced by a concurrent GC between phases: fall
+                    // back to a sequential gather.
+                    let mut d = gather_features_by_ids_cached(
+                        cm.feature_columns(),
+                        knls,
+                        device,
+                        cache,
+                    )?;
+                    d.scale_features_by_output();
+                    *data = Some(d);
+                }
+                let d = data.as_ref().unwrap();
+                let fit = match aot {
+                    Some(a) => fit_cost_model_aot(a, cm, d, &LmOptions::default())?,
+                    None => fit_cost_model_native(cm, d, &LmOptions::default())?,
+                };
+                session.persist_fit(key, &fit)?;
+                fit
+            }
+        };
+        fits.push(fit);
     }
 
     // Phase 3 (parallel over devices): predict the sweep back (the
@@ -321,7 +382,7 @@ fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
     }
     let jobs: Vec<(usize, &DeviceProfile)> = devices.iter().enumerate().collect();
     let parts = parallel_map(&jobs, |&(i, device)| {
-        let (cm, knls, _) = &gathered[i];
+        let (cm, knls, _, _) = &gathered[i];
         let fit = &fits[i];
         let mut t0 = 0.0;
         let mut hidden_up_to = 0i64;
@@ -645,15 +706,25 @@ fn accuracy_experiment(
 
     // Phase 1 (parallel over devices): one measurement-gathering pass
     // per device serves both model forms.  Devices sharing a sub-group
-    // size also share the session cache's symbolic entries.
-    let datas = parallel_map(&devices, |device| session.gather_case_data(case, device))?;
+    // size also share the session cache's symbolic entries — and a
+    // device whose fleet fits are already in the artifact store skips
+    // its gathering (and the measurement sweep behind it) entirely.
+    let mut datas: Vec<Option<FeatureData>> = parallel_map(&devices, |device| {
+        if session.has_stored_fits(case, device) {
+            Ok(None)
+        } else {
+            session.gather_case_data(case, device).map(Some)
+        }
+    })?;
 
-    // Phase 2 (sequential): both fits per device on this thread.
+    // Phase 2 (sequential): both fits per device on this thread (the
+    // AOT client is not assumed thread-safe), loaded from the store
+    // when fresh and persisted for the next fleet run when not.
     let mut fits = Vec::with_capacity(devices.len());
-    for (device, data) in devices.iter().zip(&datas) {
-        let nl = session.fit_case(case, device, data, true, aot)?;
-        let lin = session.fit_case(case, device, data, false, aot)?;
-        fits.push((nl, lin));
+    for (device, data) in devices.iter().zip(datas.iter_mut()) {
+        let nl = session.fit_case_persistent(case, device, data, true, aot)?;
+        let lin = session.fit_case_persistent(case, device, data, false, aot)?;
+        fits.push(((nl.cm, nl.fit), (lin.cm, lin.fit)));
     }
 
     // Phase 3 (parallel over devices): model-form selection and the

@@ -30,6 +30,29 @@ fn env_i128(env: &BTreeMap<String, i64>) -> BTreeMap<String, i128> {
     env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect()
 }
 
+/// Marker carried by per-kernel measurement errors: one kernel's
+/// statistics cannot be evaluated on this device/size combination
+/// (e.g. an access map whose local strides reference a parameter the
+/// measurement env does not bind).  The sweep drivers treat such
+/// errors like `CL_INVALID_WORK_GROUP_SIZE` — skip the kernel, keep
+/// the sweep — instead of aborting the whole run.
+pub const KERNEL_UNMEASURABLE: &str = "KERNEL_UNMEASURABLE";
+
+/// True for errors that condemn a single measurement kernel rather
+/// than the whole sweep (unlaunchable work-group sizes, unevaluable
+/// access maps).
+pub fn is_per_kernel_measure_error(e: &str) -> bool {
+    e.contains("CL_INVALID_WORK_GROUP_SIZE") || e.contains(KERNEL_UNMEASURABLE)
+}
+
+fn unmeasurable(knl: &Kernel, m: &MemAccessStat, err: String) -> String {
+    format!(
+        "{KERNEL_UNMEASURABLE}: kernel '{}', access of array '{}' in \
+         statement '{}': {err}",
+        knl.name, m.array, m.stmt_id
+    )
+}
+
 /// Coalescing analysis of one sub-group's 32 lane addresses: returns
 /// (unique cache lines touched, unique addresses) from the evaluated
 /// lid strides.
@@ -39,11 +62,11 @@ fn lines_per_subgroup(
     e: &BTreeMap<String, i128>,
     line_bytes: u64,
     sg: u64,
-) -> (u64, u64) {
+) -> Result<(u64, u64), String> {
     let dsize = m.dtype.size_bytes() as i128;
     let ls: Vec<i128> = (0..3)
-        .map(|ax| m.lstrides[ax].eval(e).floor())
-        .collect();
+        .map(|ax| m.lstrides[ax].try_eval(e).map(|r| r.floor()))
+        .collect::<Result<_, _>>()?;
     let (l0, l1) = (knl.lsize(0).max(1), knl.lsize(1).max(1));
     let mut lines: Vec<i128> = Vec::with_capacity(sg as usize);
     let mut addrs: Vec<i128> = Vec::with_capacity(sg as usize);
@@ -60,18 +83,23 @@ fn lines_per_subgroup(
             addrs.push(addr);
         }
     }
-    (lines.len() as u64, addrs.len() as u64)
+    Ok((lines.len() as u64, addrs.len() as u64))
 }
 
 /// Innermost non-zero sequential-loop stride in bytes (None if the
 /// access is loop-invariant).
-fn innermost_seq_stride_bytes(m: &MemAccessStat, e: &BTreeMap<String, i128>) -> Option<i128> {
+fn innermost_seq_stride_bytes(
+    m: &MemAccessStat,
+    e: &BTreeMap<String, i128>,
+) -> Result<Option<i128>, String> {
     let dsize = m.dtype.size_bytes() as i128;
-    m.loop_strides
-        .iter()
-        .rev()
-        .map(|(_, s)| s.eval(e).floor().abs() * dsize)
-        .find(|s| *s != 0)
+    for (_, s) in m.loop_strides.iter().rev() {
+        let s = s.try_eval(e)?.floor().abs() * dsize;
+        if s != 0 {
+            return Ok(Some(s));
+        }
+    }
+    Ok(None)
 }
 
 /// Launchability check: runs before any symbolic work so that kernels
@@ -96,7 +124,7 @@ pub fn simulate_breakdown(
 ) -> Result<CostBreakdown, String> {
     check_launchable(dev, knl)?;
     let stats = stats::gather(knl, dev.sub_group_size)?;
-    Ok(breakdown_from_stats(dev, knl, &stats, env))
+    breakdown_from_stats(dev, knl, &stats, env)
 }
 
 /// [`simulate_breakdown`] through a shared [`StatsCache`]: the symbolic
@@ -111,20 +139,32 @@ pub fn simulate_breakdown_with_cache<K: KernelRef>(
 ) -> Result<CostBreakdown, String> {
     check_launchable(dev, knl.as_kernel())?;
     let stats = cache.get_or_gather(knl, dev.sub_group_size)?;
-    Ok(breakdown_from_stats(dev, knl.as_kernel(), &stats, env))
+    breakdown_from_stats(dev, knl.as_kernel(), &stats, env)
 }
 
-/// Core cost model over gathered statistics.
+/// Core cost model over gathered statistics.  Fallible: a kernel whose
+/// access map cannot be evaluated at these sizes yields a
+/// [`KERNEL_UNMEASURABLE`] error (skippable per kernel) instead of a
+/// process-aborting panic.
 pub(crate) fn breakdown_from_stats(
     dev: &DeviceProfile,
     knl: &Kernel,
     stats: &KernelStats,
     env: &BTreeMap<String, i64>,
-) -> CostBreakdown {
+) -> Result<CostBreakdown, String> {
     let e = env_i128(env);
+    // Kernel-level counts guarded like the access strides below: a
+    // stats bundle (possibly decoded from a hand-edited store) whose
+    // polynomials reference parameters the env does not bind fails
+    // this one kernel, never the process.
+    let ev = |p: &crate::polyhedral::QPoly, what: &str| -> Result<f64, String> {
+        p.try_eval_f64(&e).map_err(|err| {
+            format!("{KERNEL_UNMEASURABLE}: kernel '{}', {what}: {err}", knl.name)
+        })
+    };
     let sg = dev.sub_group_size;
     let clock = dev.clock_ghz * 1e9;
-    let n_wg = stats.num_groups.eval_f64(&e).max(1.0);
+    let n_wg = ev(&stats.num_groups, "group count")?.max(1.0);
     let wg_size = stats.work_group_size.max(1);
 
     // Warp quantization: a 324-item work-group occupies ceil(324/32) =
@@ -144,7 +184,7 @@ pub(crate) fn breakdown_from_stats(
     // ---- Arithmetic (on-chip) -------------------------------------
     let mut t_arith = 0.0;
     for op in &stats.ops {
-        let wi_ops = op.count_sg.eval_f64(&e) * sg as f64;
+        let wi_ops = ev(&op.count_sg, "op count")? * sg as f64;
         if wi_ops <= 0.0 {
             continue;
         }
@@ -162,14 +202,24 @@ pub(crate) fn breakdown_from_stats(
     // ---- Local memory (on-chip) -----------------------------------
     let mut t_lmem = 0.0;
     for m in stats.mem.iter().filter(|m| m.scope == MemScope::Local) {
-        let wi = m.count_wi.eval_f64(&e);
+        let wi = m
+            .count_wi
+            .try_eval_f64(&e)
+            .map_err(|err| unmeasurable(knl, m, err))?;
         if wi <= 0.0 {
             continue;
         }
         // Bank conflicts: stride-s access across 32 banks serializes by
         // gcd(s, 32); capped — modern LDS/shared pipes mitigate worst
-        // cases.
-        let s0 = m.lstrides[0].eval(&e).floor().unsigned_abs() as u64 % 32;
+        // cases.  The stride evaluation is guarded: an access map with
+        // no evaluable local stride must fail this one kernel, not
+        // abort the whole measurement sweep.
+        let s0 = m.lstrides[0]
+            .try_eval(&e)
+            .map_err(|err| unmeasurable(knl, m, err))?
+            .floor()
+            .unsigned_abs() as u64
+            % 32;
         let conflict = if s0 == 0 {
             1 // broadcast
         } else {
@@ -191,7 +241,10 @@ pub(crate) fn breakdown_from_stats(
     let l1_capacity = dev.l1_kb_per_sm as f64 * 1024.0;
     let l2_capacity = dev.l2_kb as f64 * 1024.0;
     for m in stats.mem.iter().filter(|m| m.scope == MemScope::Global) {
-        let wi = m.count_wi.eval_f64(&e);
+        let wi = m
+            .count_wi
+            .try_eval_f64(&e)
+            .map_err(|err| unmeasurable(knl, m, err))?;
         if wi <= 0.0 {
             continue;
         }
@@ -202,6 +255,7 @@ pub(crate) fn breakdown_from_stats(
             Granularity::SubGroup => (1, 1),
             Granularity::WorkItem => {
                 lines_per_subgroup(knl, m, &e, dev.line_bytes, sg)
+                    .map_err(|err| unmeasurable(knl, m, err))?
             }
         };
         let (lines, uniq_addrs) = (lines_u as f64, addrs_u as f64);
@@ -214,7 +268,8 @@ pub(crate) fn breakdown_from_stats(
         // lines survive in L1 across iterations.
         let retained =
             lines * dev.line_bytes as f64 * resident_sgs_per_sm <= l1_capacity;
-        let seq_stride = innermost_seq_stride_bytes(m, &e);
+        let seq_stride = innermost_seq_stride_bytes(m, &e)
+            .map_err(|err| unmeasurable(knl, m, err))?;
         let seq_reuse = match seq_stride {
             Some(s) if (s as u64) < dev.line_bytes && s > 0 && retained => {
                 s as f64 / dev.line_bytes as f64
@@ -228,8 +283,13 @@ pub(crate) fn breakdown_from_stats(
         // overfetch of the access's coalescing pattern.
         let overfetch =
             (lines * dev.line_bytes as f64) / (uniq_addrs * dsize).max(1.0);
-        let wg_tile_bytes =
-            m.footprint_per_wg.eval_f64(&e).max(1.0) * dsize * overfetch.max(1.0);
+        let wg_tile_bytes = m
+            .footprint_per_wg
+            .try_eval_f64(&e)
+            .map_err(|err| unmeasurable(knl, m, err))?
+            .max(1.0)
+            * dsize
+            * overfetch.max(1.0);
         let to_l2 = if wg_tile_bytes <= l1_capacity {
             // Intra-WG reuse is L1-served: L2 sees roughly one tile per
             // work-group plus a small residual of capacity misses.
@@ -244,7 +304,12 @@ pub(crate) fn breakdown_from_stats(
         // since concurrent streams compete for the cache) are fetched
         // from DRAM ~once; larger footprints still see partial
         // concurrent-WG reuse.
-        let footprint_bytes = m.footprint.eval_f64(&e).min(wi) * dsize;
+        let footprint_bytes = m
+            .footprint
+            .try_eval_f64(&e)
+            .map_err(|err| unmeasurable(knl, m, err))?
+            .min(wi)
+            * dsize;
         let dram_bytes = if to_l2 > footprint_bytes {
             let miss = if footprint_bytes <= l2_capacity / 4.0 {
                 0.05
@@ -274,7 +339,7 @@ pub(crate) fn breakdown_from_stats(
     let t_gmem = dram_time.max(t_l2).max(t_latency).max(t_lsu);
 
     // ---- Synchronization & launch ----------------------------------
-    let barriers = stats.barriers_per_wi.eval_f64(&e);
+    let barriers = ev(&stats.barriers_per_wi, "barrier count")?;
     let t_barrier = barriers * n_wg * dev.barrier_ns * 1e-9 / resident_wgs;
     let t_launch = dev.kernel_launch_us * 1e-6 + n_wg * dev.wg_launch_ns * 1e-9;
 
@@ -289,7 +354,7 @@ pub(crate) fn breakdown_from_stats(
     let t_core = t_gmem.max(t_onchip) + (1.0 - dev.overlap) * t_gmem.min(t_onchip);
 
     let total = t_launch + t_barrier + t_core / utilization;
-    CostBreakdown {
+    Ok(CostBreakdown {
         t_dram: dram_time,
         t_l2,
         t_lsu,
@@ -302,7 +367,7 @@ pub(crate) fn breakdown_from_stats(
         t_launch,
         utilization,
         total,
-    }
+    })
 }
 
 fn num_gcd(mut a: u64, mut b: u64) -> u64 {
@@ -600,6 +665,30 @@ mod tests {
         // (warp 32 on the NVIDIA parts, wavefront 64 on GCN3).
         assert_eq!(cache.misses(), 2);
         assert_eq!(cache.hits(), 3);
+    }
+
+    /// A local access whose stride polynomial references a parameter
+    /// the measurement env does not bind must fail as a skippable
+    /// per-kernel error, not abort the process (the sweep drivers
+    /// skip such kernels exactly like unlaunchable ones).
+    #[test]
+    fn unevaluable_local_stride_is_a_per_kernel_error() {
+        let pf = matmul(true);
+        let d = device_by_id("titan_v").unwrap();
+        let mut stats = crate::stats::gather(&pf, d.sub_group_size).unwrap();
+        let local = stats
+            .mem
+            .iter_mut()
+            .find(|m| m.scope == MemScope::Local)
+            .expect("prefetch matmul has local accesses");
+        local.lstrides[0] = QPoly::var("never_bound");
+        let err =
+            breakdown_from_stats(&d, &pf, &stats, &env(2048)).unwrap_err();
+        assert!(err.contains(KERNEL_UNMEASURABLE), "{err}");
+        assert!(err.contains("never_bound"), "{err}");
+        assert!(is_per_kernel_measure_error(&err));
+        assert!(is_per_kernel_measure_error("CL_INVALID_WORK_GROUP_SIZE: x"));
+        assert!(!is_per_kernel_measure_error("singular normal equations"));
     }
 
     #[test]

@@ -20,6 +20,6 @@ pub mod exec;
 
 pub use device::{device_by_id, fleet, DeviceProfile, DEFAULT_SUB_GROUP_SIZE};
 pub use exec::{
-    measure, measure_with_cache, simulate_time, simulate_time_with_cache,
-    CostBreakdown,
+    is_per_kernel_measure_error, measure, measure_with_cache, simulate_time,
+    simulate_time_with_cache, CostBreakdown, KERNEL_UNMEASURABLE,
 };

@@ -13,13 +13,22 @@
 //! perflex calibrate <case> <device> [--store <dir>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
 //! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
+//! perflex store ls|stat|gc --store <dir> [--dry-run] [--temp-ttl-secs <n>]
 //! ```
 //!
 //! `--store <dir>` opens a persistent artifact store (see
 //! `perflex::session`): symbolic kernel statistics and calibration
 //! fits are written there, and later invocations start warm — a
 //! `predict` against a fresh store runs zero LM iterations and zero
-//! symbolic counting passes.
+//! symbolic counting passes.  The store is fleet-wide: stats entries
+//! are keyed by (kernel fingerprint, sub-group size), so calibrating a
+//! second device with the same sub-group size against the same store
+//! performs zero fresh counting passes (store-backed commands print
+//! the cache ledger so this is observable).  `perflex store`
+//! inspects (`ls`, `stat`) and maintains (`gc`) a store: GC sweeps
+//! orphaned temp files and ages out artifacts whose format version or
+//! model fingerprint no longer matches anything this binary can
+//! produce.
 
 use std::collections::BTreeMap;
 
@@ -43,8 +52,9 @@ fn main() {
 fn usage() -> String {
     "usage: perflex <command> [...]\n\
      commands: list-generators | list-devices | gen | show | measure | \
-     calibrate | predict | experiment\n\
+     calibrate | predict | experiment | store\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
+     store maintenance: perflex store ls|stat|gc --store <dir>\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
         .to_string()
 }
@@ -71,6 +81,18 @@ fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
         }
         None => false,
     }
+}
+
+/// The cache ledger store-backed commands end with: how many symbolic
+/// counting passes actually ran vs were served from disk or memory.
+/// The shared-store CI job asserts "0 fresh counting passes" here when
+/// a sub-group twin already populated the store.
+fn print_ledger(session: &Session) {
+    let (fresh, disk, mem) = session.cache().ledger();
+    println!(
+        "stats cache: {fresh} fresh counting passes, {disk} disk hits, \
+         {mem} memory hits"
+    );
 }
 
 fn dispatch(mut args: Vec<String>) -> Result<(), String> {
@@ -147,6 +169,9 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     }
                 }
             }
+            if store_dir.is_some() {
+                print_ledger(&session);
+            }
             Ok(())
         }
         "calibrate" | "predict" => {
@@ -215,6 +240,9 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     100.0 * (predicted - measured).abs() / measured
                 );
             }
+            if store_dir.is_some() {
+                print_ledger(&session);
+            }
             Ok(())
         }
         "experiment" => {
@@ -236,7 +264,129 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                 rep.write_json(&dir)?;
                 println!("(json written to {}/{}.json)", dir.display(), rep.id);
             }
+            if store_dir.is_some() {
+                print_ledger(&session);
+            }
             Ok(())
+        }
+        "store" => {
+            let dry_run = take_flag(&mut rest, "--dry-run");
+            let temp_ttl_secs = match take_flag_value(&mut rest, "--temp-ttl-secs")? {
+                Some(v) => v
+                    .parse::<u64>()
+                    .map_err(|_| format!("--temp-ttl-secs: bad integer '{v}'"))?,
+                None => perflex::session::GcOptions::default().temp_ttl_secs,
+            };
+            let sub = rest
+                .first()
+                .ok_or("store <ls|stat|gc> --store <dir>")?
+                .clone();
+            let dir = store_dir
+                .ok_or("store commands need --store <dir> (the store to operate on)")?;
+            // Maintenance commands inspect an *existing* store; opening
+            // would silently create directories at a mistyped path.
+            if !std::path::Path::new(&dir).is_dir() {
+                return Err(format!(
+                    "store directory '{dir}' does not exist (store \
+                     ls/stat/gc never create one)"
+                ));
+            }
+            let store = perflex::session::ArtifactStore::open(&dir)?;
+            // Fits are reachable while this binary can still mint their
+            // model fingerprint (eval cases x fleet x forms, plus the
+            // experiment harness fits).
+            let reachable = perflex::session::reachable_fit_fingerprints();
+            let unreachable = |info: &perflex::session::ArtifactInfo| {
+                info.kind == perflex::session::ArtifactKind::Fit
+                    && info
+                        .model_fingerprint
+                        .is_some_and(|fp| !reachable.contains(&fp))
+            };
+            match sub.as_str() {
+                "ls" => {
+                    for info in store.list()? {
+                        let kind = match info.kind {
+                            perflex::session::ArtifactKind::Stats => "stats",
+                            perflex::session::ArtifactKind::Fit => "fit",
+                            perflex::session::ArtifactKind::Temp => "temp",
+                            perflex::session::ArtifactKind::Other => "other",
+                        };
+                        // Temps are possibly-live writes, not staleness.
+                        let status = match info.kind {
+                            perflex::session::ArtifactKind::Temp => "temp",
+                            perflex::session::ArtifactKind::Other => "ok",
+                            _ if !info.valid => "STALE",
+                            _ if unreachable(&info) => "UNREACHABLE",
+                            _ => "ok",
+                        };
+                        println!(
+                            "{kind:<6} {:>9}B {status:<12} {}",
+                            info.bytes, info.describe
+                        );
+                    }
+                    Ok(())
+                }
+                "stat" => {
+                    let infos = store.list()?;
+                    let count = |k: perflex::session::ArtifactKind| {
+                        let matching: Vec<_> =
+                            infos.iter().filter(|i| i.kind == k).collect();
+                        (
+                            matching.len(),
+                            matching.iter().map(|i| i.bytes).sum::<u64>(),
+                        )
+                    };
+                    let (n_stats, b_stats) = count(perflex::session::ArtifactKind::Stats);
+                    let (n_fits, b_fits) = count(perflex::session::ArtifactKind::Fit);
+                    let (n_temp, b_temp) = count(perflex::session::ArtifactKind::Temp);
+                    // Temp files are counted on their own line above,
+                    // not as staleness — a mid-write temp is healthy.
+                    let stale = infos
+                        .iter()
+                        .filter(|i| {
+                            !i.valid
+                                && matches!(
+                                    i.kind,
+                                    perflex::session::ArtifactKind::Stats
+                                        | perflex::session::ArtifactKind::Fit
+                                )
+                        })
+                        .count();
+                    let dead_fits = infos.iter().filter(|i| unreachable(i)).count();
+                    println!("store root: {}", store.root().display());
+                    println!(
+                        "format version: {}",
+                        perflex::session::STORE_FORMAT_VERSION
+                    );
+                    println!("stats artifacts: {n_stats} ({b_stats} bytes)");
+                    println!("fit artifacts: {n_fits} ({b_fits} bytes)");
+                    println!("temp files: {n_temp} ({b_temp} bytes)");
+                    println!("stale or corrupt: {stale}");
+                    println!("unreachable fits: {dead_fits}");
+                    Ok(())
+                }
+                "gc" => {
+                    let outcome = store.gc(&perflex::session::GcOptions {
+                        reachable_fits: Some(&reachable),
+                        temp_ttl_secs,
+                        dry_run,
+                    })?;
+                    let verb = if dry_run { "would remove" } else { "removed" };
+                    for (path, reason) in &outcome.removed {
+                        println!("{verb} {} ({reason})", path.display());
+                    }
+                    println!(
+                        "{verb} {} of {} artifact(s), {} bytes reclaimed",
+                        outcome.removed.len(),
+                        outcome.scanned,
+                        outcome.reclaimed_bytes
+                    );
+                    Ok(())
+                }
+                other => Err(format!(
+                    "unknown store subcommand '{other}' (ls|stat|gc)"
+                )),
+            }
         }
         "--help" | "-h" | "help" => {
             println!("{}", usage());

@@ -248,8 +248,17 @@ impl QPoly {
         })
     }
 
-    /// Exact evaluation at integer parameter values.
+    /// Exact evaluation at integer parameter values.  Panics on an
+    /// unbound parameter; callers that cannot rule one out (e.g. the
+    /// simulator evaluating decoded access strides) should use
+    /// [`QPoly::try_eval`] instead.
     pub fn eval(&self, env: &BTreeMap<String, i128>) -> Rat {
+        self.try_eval(env).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Non-panicking [`QPoly::eval`]: an unbound parameter yields an
+    /// error naming it instead of aborting the process.
+    pub fn try_eval(&self, env: &BTreeMap<String, i128>) -> Result<Rat, String> {
         let mut acc = Rat::ZERO;
         for (m, c) in &self.terms {
             let mut v = *c;
@@ -257,21 +266,26 @@ impl QPoly {
                 let base = match a {
                     Atom::Var(name) => Rat::int(
                         *env.get(name)
-                            .unwrap_or_else(|| panic!("unbound parameter '{name}'")),
+                            .ok_or_else(|| format!("unbound parameter '{name}'"))?,
                     ),
                     Atom::Floor { num, den } => {
-                        Rat::int((num.eval(env) / Rat::int(*den)).floor())
+                        Rat::int((num.try_eval(env)? / Rat::int(*den)).floor())
                     }
                 };
                 v = v * base.pow(*e);
             }
             acc += v;
         }
-        acc
+        Ok(acc)
     }
 
     pub fn eval_f64(&self, env: &BTreeMap<String, i128>) -> f64 {
         self.eval(env).to_f64()
+    }
+
+    /// Non-panicking [`QPoly::eval_f64`].
+    pub fn try_eval_f64(&self, env: &BTreeMap<String, i128>) -> Result<f64, String> {
+        self.try_eval(env).map(|r| r.to_f64())
     }
 
     /// Rewrite floor atoms using divisibility assumptions; see

@@ -59,6 +59,26 @@ fn i128_from(j: &Json, what: &str) -> Result<i128, String> {
         .ok_or_else(|| err(what))
 }
 
+/// Render a 128-bit fingerprint the way every artifact embeds it (and
+/// the stats filenames encode it): fixed-width lowercase hex.
+pub fn fingerprint_to_hex(fp: u128) -> String {
+    format!("{fp:032x}")
+}
+
+/// Parse a [`fingerprint_to_hex`] rendering back; rejects anything but
+/// exactly 32 lowercase hex digits, so filename and embedded-key
+/// comparisons cannot be spoofed by alternate encodings.
+pub fn fingerprint_from_hex(s: &str) -> Result<u128, String> {
+    if s.len() != 32
+        || !s
+            .bytes()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+    {
+        return Err(err("fingerprint"));
+    }
+    u128::from_str_radix(s, 16).map_err(|_| err("fingerprint"))
+}
+
 // ---------------------------------------------------------------------
 // Rat / QPoly
 // ---------------------------------------------------------------------
@@ -484,6 +504,17 @@ mod tests {
         assert_eq!(back.residual, fit.residual);
         assert_eq!(back.iterations, fit.iterations);
         assert_eq!(fit_to_json(&back).to_string(), text);
+    }
+
+    #[test]
+    fn fingerprint_hex_roundtrips_and_rejects_spoofs() {
+        let fp: u128 = 0x00ab_cdef_0123_4567_89ab_cdef_0123_4567;
+        let s = fingerprint_to_hex(fp);
+        assert_eq!(s.len(), 32);
+        assert_eq!(fingerprint_from_hex(&s).unwrap(), fp);
+        assert!(fingerprint_from_hex("not-hex").is_err());
+        assert!(fingerprint_from_hex(&s.to_uppercase()).is_err());
+        assert!(fingerprint_from_hex(&s[1..]).is_err());
     }
 
     #[test]

@@ -19,10 +19,14 @@
 //!   fingerprint covers the entire kernel IR, so any structural change
 //!   mints a new key; devices sharing a sub-group size share entries.
 //! * **Calibration fits** — keyed by [`FitKey`]: (case id, device id,
-//!   model form) name the file, and an embedded `model_fingerprint`
-//!   (hash of the model's feature columns, the measurement-set filter
-//!   tags, the device's sub-group size, and the store format version)
-//!   guards its content.
+//!   model form) name the file (sanitized, plus a raw-key hash so ids
+//!   containing `-` or path characters cannot collide or escape the
+//!   store root), and an embedded `model_fingerprint` (hash of the
+//!   model's feature columns, the measurement-set filter tags, the
+//!   device's sub-group size, and the store format version) guards
+//!   its content.  Both the CLI's `calibrate`/`predict` fits and the
+//!   experiment harnesses' per-device fleet fits (via
+//!   [`Session::fit_case_persistent`] / [`fit_key_parts`]) live here.
 //!
 //! # Invalidation rules
 //!
@@ -46,7 +50,10 @@
 pub mod codec;
 mod store;
 
-pub use store::{ArtifactStore, FitKey, STORE_FORMAT_VERSION};
+pub use store::{
+    ArtifactInfo, ArtifactKind, ArtifactStore, FitKey, GcOptions, GcOutcome,
+    STORE_FORMAT_VERSION,
+};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -169,6 +176,27 @@ impl Session {
         Ok((cm, fit))
     }
 
+    /// Look a fit up in the artifact store: `None` without a store, on
+    /// version skew, or on any key mismatch.  Fleet harnesses pair
+    /// this with [`Session::persist_fit`] to warm-start per-device
+    /// fits without re-gathering data a stored fit no longer needs.
+    pub fn stored_fit(&self, key: &FitKey) -> Option<FitResult> {
+        self.store.as_ref()?.load_fit(key)
+    }
+
+    /// Persist one fit artifact (a no-op without a store).
+    ///
+    /// Any *new* key family persisted through here (i.e. minted by
+    /// [`fit_key_parts`] with a new case id) must also be registered
+    /// in [`reachable_fit_fingerprints`], or `perflex store gc` will
+    /// classify its artifacts as unreachable and collect them.
+    pub fn persist_fit(&self, key: &FitKey, fit: &FitResult) -> Result<(), String> {
+        match &self.store {
+            Some(store) => store.save_fit(key, fit),
+            None => Ok(()),
+        }
+    }
+
     /// Stages 2+3 with artifact reuse: return a stored calibration when
     /// a fresh one exists (zero LM iterations, zero measurement and
     /// counting work this process), otherwise gather, fit and persist.
@@ -180,25 +208,63 @@ impl Session {
         aot: Option<&Artifacts>,
     ) -> Result<Calibration, String> {
         let key = fit_key(case, device, nonlinear);
-        if let Some(store) = &self.store {
-            if let Some(fit) = store.load_fit(&key) {
-                return Ok(Calibration {
-                    cm: (case.model)(device.id, nonlinear),
-                    fit,
-                    from_store: true,
-                });
-            }
+        if let Some(fit) = self.stored_fit(&key) {
+            return Ok(Calibration {
+                cm: (case.model)(device.id, nonlinear),
+                fit,
+                from_store: true,
+            });
         }
         let data = self.gather_case_data(case, device)?;
         let (cm, fit) = self.fit_case(case, device, &data, nonlinear, aot)?;
-        if let Some(store) = &self.store {
-            store.save_fit(&key, &fit)?;
-        }
+        self.persist_fit(&key, &fit)?;
         Ok(Calibration {
             cm,
             fit,
             from_store: false,
         })
+    }
+
+    /// [`Session::fit_case`] with artifact reuse over already-gathered
+    /// (or lazily gathered) data: the warm path loads the stored fit
+    /// and touches neither `data` nor the LM loop; the cold path
+    /// gathers on demand, fits, and persists.  This is the engine
+    /// behind the experiment harnesses' per-device fleet fits.
+    pub fn fit_case_persistent(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        data: &mut Option<FeatureData>,
+        nonlinear: bool,
+        aot: Option<&Artifacts>,
+    ) -> Result<Calibration, String> {
+        let key = fit_key(case, device, nonlinear);
+        if let Some(fit) = self.stored_fit(&key) {
+            return Ok(Calibration {
+                cm: (case.model)(device.id, nonlinear),
+                fit,
+                from_store: true,
+            });
+        }
+        if data.is_none() {
+            *data = Some(self.gather_case_data(case, device)?);
+        }
+        let (cm, fit) =
+            self.fit_case(case, device, data.as_ref().unwrap(), nonlinear, aot)?;
+        self.persist_fit(&key, &fit)?;
+        Ok(Calibration {
+            cm,
+            fit,
+            from_store: false,
+        })
+    }
+
+    /// True when fresh stored fits exist for *both* model forms of
+    /// (case, device) — the condition under which a fleet harness can
+    /// skip gathering that device's calibration data entirely.
+    pub fn has_stored_fits(&self, case: &EvalCase, device: &DeviceProfile) -> bool {
+        self.stored_fit(&fit_key(case, device, true)).is_some()
+            && self.stored_fit(&fit_key(case, device, false)).is_some()
     }
 
     /// Pipeline stage 4: predict a kernel's wall time from a
@@ -226,10 +292,38 @@ impl Session {
 /// module docs for what it covers (and therefore what invalidates it).
 pub fn fit_key(case: &EvalCase, device: &DeviceProfile, nonlinear: bool) -> FitKey {
     let cm = (case.model)(device.id, nonlinear);
+    fit_key_parts(
+        case.id,
+        device,
+        nonlinear,
+        &cm,
+        &(case.measurement_sets)(),
+    )
+}
+
+/// [`fit_key`] for fits whose model and measurement set are built
+/// inline rather than through an [`EvalCase`] — e.g. the fig5 overlap
+/// harness.  `case_id` names the artifact family; the fingerprint
+/// hashes everything that shaped the fit (feature columns, parameter
+/// names, device, sub-group size, measurement-set filter tags and the
+/// store format version), so a change to any of them invalidates it.
+///
+/// Every distinct key family minted through this function must be
+/// enumerated by [`reachable_fit_fingerprints`] — GC deletes fits it
+/// cannot re-derive.  The fleet integration tests guard this by
+/// running `gc` over a store a real experiment just populated and
+/// asserting nothing is removed.
+pub fn fit_key_parts(
+    case_id: &str,
+    device: &DeviceProfile,
+    nonlinear: bool,
+    cm: &CostModel,
+    measurement_sets: &[Vec<String>],
+) -> FitKey {
     let mut h = Fnv128::new();
     h.update(b"perflex-fit-v");
     h.update(STORE_FORMAT_VERSION.to_string().as_bytes());
-    h.update(case.id.as_bytes());
+    h.update(case_id.as_bytes());
     h.update(device.id.as_bytes());
     h.update(device.sub_group_size.to_string().as_bytes());
     h.update(if nonlinear { b"overlap" } else { b"linear" });
@@ -239,18 +333,40 @@ pub fn fit_key(case: &EvalCase, device: &DeviceProfile, nonlinear: bool) -> FitK
     for name in cm.param_names() {
         h.update(name.as_bytes());
     }
-    for set in (case.measurement_sets)() {
+    for set in measurement_sets {
         for tag in set {
             h.update(tag.as_bytes());
         }
         h.update(b"|");
     }
     FitKey {
-        case: case.id.to_string(),
+        case: case_id.to_string(),
         device: device.id.to_string(),
         nonlinear,
         model_fingerprint: h.finish(),
     }
+}
+
+/// Every fit model fingerprint the current binary can produce: the
+/// evaluation cases × the fleet × both model forms (covering CLI
+/// `calibrate`/`predict` and the fig7–9/table3 harnesses) plus the
+/// fig5 overlap harness.  `perflex store gc` ages out fit artifacts
+/// whose embedded fingerprint falls outside this set — retired
+/// devices, edited models, stale format versions.
+pub fn reachable_fit_fingerprints() -> std::collections::HashSet<u128> {
+    let mut out = std::collections::HashSet::new();
+    for device in crate::gpusim::fleet() {
+        for case in expsets::eval_cases() {
+            for nonlinear in [false, true] {
+                out.insert(fit_key(&case, &device, nonlinear).model_fingerprint);
+            }
+        }
+        out.insert(
+            crate::coordinator::experiments::fig5_fit_key(&device)
+                .model_fingerprint,
+        );
+    }
+    out
 }
 
 #[cfg(test)]

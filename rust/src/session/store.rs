@@ -1,12 +1,17 @@
 //! Disk-backed artifact store: persisted symbolic statistics and
-//! calibration fits.
+//! calibration fits, shareable fleet-wide and self-maintaining.
 //!
 //! Layout under the store root (the CLI's `--store <dir>`):
 //!
 //! ```text
 //! <root>/stats/<fingerprint:032x>-sg<sub_group_size>.json
-//! <root>/fits/<case>-<device>-<linear|overlap>.json
+//! <root>/fits/<case>-<device>-<linear|overlap>-<keyhash:016x>.json
 //! ```
+//!
+//! Fit filename components are sanitized to `[A-Za-z0-9_]` (raw case
+//! or device ids containing `-`, `/` or `..` can neither collide nor
+//! escape the store root) and disambiguated by a hash of the *raw*
+//! key, so distinct keys always map to distinct paths.
 //!
 //! Every artifact embeds [`STORE_FORMAT_VERSION`] plus the key it was
 //! written under; [`ArtifactStore::load_stats`] / `load_fit` return
@@ -15,23 +20,38 @@
 //! corrupt store therefore degrades to a cold start, never to garbage
 //! predictions.
 //!
-//! Writes go through a temp file + rename, so a crashed or concurrent
-//! writer can leave behind at worst a stale temp file, never a torn
-//! artifact.  The store implements [`StatsBacking`], which is how a
+//! Writes go through a per-writer-unique temp file + rename, so any
+//! number of concurrent writers — threads of one process or whole
+//! fleet calibrations racing on a shared store — can leave behind at
+//! worst a stale temp file, never a torn artifact.
+//! [`ArtifactStore::gc`] is the maintenance half: it sweeps orphaned
+//! temp files and ages out artifacts whose format version, placement
+//! or model fingerprint no longer matches anything the current binary
+//! can reach (`perflex store gc`).
+//!
+//! The store implements [`StatsBacking`], which is how a
 //! [`StatsCache`](crate::stats::StatsCache) built with
 //! `with_backing` transparently persists the counting pass across
-//! processes.
+//! processes — and, because stats keys are device-independent
+//! (kernel fingerprint + sub-group size), across *devices*: in a
+//! fleet calibration against one shared store, every device with the
+//! same sub-group size reuses the first device's counting passes.
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::SystemTime;
 
 use super::codec;
 use crate::calibrate::FitResult;
 use crate::stats::{KernelStats, StatsBacking, StatsKey};
 use crate::util::json::Json;
+use crate::util::Fnv128;
 
 /// Bump when any persisted representation (or its semantics) changes;
-/// all artifacts written under other versions are ignored.
-pub const STORE_FORMAT_VERSION: u64 = 1;
+/// all artifacts written under other versions are ignored (and swept
+/// by `store gc`).  v2: sanitized + hash-disambiguated fit filenames.
+pub const STORE_FORMAT_VERSION: u64 = 2;
 
 /// Identity of one calibration artifact.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -73,21 +93,58 @@ impl ArtifactStore {
 
     fn stats_path(&self, key: &StatsKey) -> PathBuf {
         self.root.join("stats").join(format!(
-            "{:032x}-sg{}.json",
-            key.fingerprint, key.sub_group_size
+            "{}-sg{}.json",
+            codec::fingerprint_to_hex(key.fingerprint),
+            key.sub_group_size
         ))
+    }
+
+    /// One filename component: anything outside `[A-Za-z0-9_]` maps to
+    /// `_` (bounded length), so raw case/device ids can neither escape
+    /// the store root nor smuggle the `-` field separator.
+    fn sanitize_component(s: &str) -> String {
+        let mut out: String = s
+            .chars()
+            .take(40)
+            .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+            .collect();
+        if out.is_empty() {
+            out.push('_');
+        }
+        out
     }
 
     fn fit_path(&self, key: &FitKey) -> PathBuf {
         let form = if key.nonlinear { "overlap" } else { "linear" };
-        self.root
-            .join("fits")
-            .join(format!("{}-{}-{form}.json", key.case, key.device))
+        // Sanitization is lossy ("fdiff-16x16" and "fdiff_16x16" both
+        // map to "fdiff_16x16"), so the filename carries a hash of the
+        // raw key fields: distinct keys get distinct paths, and the
+        // readable prefix stays for humans.  The embedded-key check in
+        // `load_fit` remains the actual guard.
+        let mut h = Fnv128::new();
+        h.update(key.case.as_bytes());
+        h.update(key.device.as_bytes());
+        h.update(form.as_bytes());
+        self.root.join("fits").join(format!(
+            "{}-{}-{form}-{:016x}.json",
+            Self::sanitize_component(&key.case),
+            Self::sanitize_component(&key.device),
+            h.finish() as u64
+        ))
     }
 
     /// Atomic-enough write: temp file in the target directory + rename.
+    /// The temp name is unique per (process, write), so concurrent
+    /// writers — even two threads publishing the same artifact — never
+    /// clobber each other's temp file; `store gc` sweeps any orphan a
+    /// crashed writer leaves behind.
     fn write_atomic(&self, path: &Path, text: &str) -> Result<(), String> {
-        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, text)
             .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path)
@@ -123,7 +180,9 @@ impl ArtifactStore {
     pub fn load_stats(&self, key: &StatsKey) -> Option<KernelStats> {
         Self::contained(|| {
             let j = self.read_versioned(&self.stats_path(key), "kernel-stats")?;
-            if j.get("fingerprint")?.as_str()? != format!("{:032x}", key.fingerprint) {
+            if j.get("fingerprint")?.as_str()?
+                != codec::fingerprint_to_hex(key.fingerprint)
+            {
                 return None;
             }
             if j.get("sub_group_size")?.as_f64()? != key.sub_group_size as f64 {
@@ -138,7 +197,7 @@ impl ArtifactStore {
         let j = Json::obj(vec![
             ("format_version", (STORE_FORMAT_VERSION as i64).into()),
             ("kind", "kernel-stats".into()),
-            ("fingerprint", format!("{:032x}", key.fingerprint).into()),
+            ("fingerprint", codec::fingerprint_to_hex(key.fingerprint).into()),
             ("sub_group_size", (key.sub_group_size as i64).into()),
             ("stats", codec::stats_to_json(stats)),
         ]);
@@ -156,7 +215,7 @@ impl ArtifactStore {
                 return None;
             }
             if j.get("model_fingerprint")?.as_str()?
-                != format!("{:032x}", key.model_fingerprint)
+                != codec::fingerprint_to_hex(key.model_fingerprint)
             {
                 return None;
             }
@@ -173,12 +232,255 @@ impl ArtifactStore {
             ("nonlinear", key.nonlinear.into()),
             (
                 "model_fingerprint",
-                format!("{:032x}", key.model_fingerprint).into(),
+                codec::fingerprint_to_hex(key.model_fingerprint).into(),
             ),
             ("fit", codec::fit_to_json(fit)),
         ]);
         self.write_atomic(&self.fit_path(key), &j.to_string())
     }
+
+    /// Inventory of every file under the store's artifact directories,
+    /// classified and validated (`perflex store ls`/`stat`), sorted by
+    /// path for deterministic output.
+    pub fn list(&self) -> Result<Vec<ArtifactInfo>, String> {
+        let mut out = Vec::new();
+        for sub in ["stats", "fits"] {
+            let dir = self.root.join(sub);
+            let entries = std::fs::read_dir(&dir)
+                .map_err(|e| format!("reading {}: {e}", dir.display()))?;
+            for entry in entries {
+                let entry =
+                    entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+                let path = entry.path();
+                if path.is_file() {
+                    out.push(self.classify(sub, &path));
+                }
+            }
+        }
+        out.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(out)
+    }
+
+    fn classify(&self, sub: &str, path: &Path) -> ArtifactInfo {
+        let (bytes, age_secs) = match std::fs::metadata(path) {
+            Ok(m) => (
+                m.len(),
+                m.modified().ok().and_then(|t| {
+                    SystemTime::now().duration_since(t).ok().map(|d| d.as_secs())
+                }),
+            ),
+            Err(_) => (0, None),
+        };
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        let (kind, describe, model_fingerprint, valid) =
+            if name.contains(".tmp.") {
+                (
+                    ArtifactKind::Temp,
+                    "temp file from an interrupted write".to_string(),
+                    None,
+                    false,
+                )
+            } else if !name.ends_with(".json") {
+                (
+                    ArtifactKind::Other,
+                    "foreign file (left alone)".to_string(),
+                    None,
+                    true,
+                )
+            } else if sub == "stats" {
+                let (describe, valid) = self.classify_stats(path, name);
+                (ArtifactKind::Stats, describe, None, valid)
+            } else {
+                let (describe, fp, valid) = self.classify_fit(path);
+                (ArtifactKind::Fit, describe, fp, valid)
+            };
+        ArtifactInfo {
+            path: path.to_path_buf(),
+            kind,
+            bytes,
+            age_secs,
+            describe,
+            model_fingerprint,
+            valid,
+        }
+    }
+
+    fn classify_stats(&self, path: &Path, name: &str) -> (String, bool) {
+        // Filename scheme: <fingerprint:032x>-sg<sub_group_size>.json.
+        let key = name
+            .strip_suffix(".json")
+            .and_then(|stem| stem.split_once("-sg"))
+            .and_then(|(fp_hex, sg)| {
+                Some(StatsKey {
+                    fingerprint: codec::fingerprint_from_hex(fp_hex).ok()?,
+                    sub_group_size: sg.parse().ok()?,
+                })
+            });
+        match key {
+            Some(key) => {
+                let valid = self.stats_path(&key) == path
+                    && self.load_stats(&key).is_some();
+                (
+                    format!(
+                        "stats kernel={} sg={}",
+                        codec::fingerprint_to_hex(key.fingerprint),
+                        key.sub_group_size
+                    ),
+                    valid,
+                )
+            }
+            None => ("unrecognized stats filename".to_string(), false),
+        }
+    }
+
+    fn classify_fit(&self, path: &Path) -> (String, Option<u128>, bool) {
+        let parsed = Self::contained(|| {
+            let j = self.read_versioned(path, "fit")?;
+            let key = FitKey {
+                case: j.get("case")?.as_str()?.to_string(),
+                device: j.get("device")?.as_str()?.to_string(),
+                nonlinear: j.get("nonlinear")?.as_bool()?,
+                model_fingerprint: codec::fingerprint_from_hex(
+                    j.get("model_fingerprint")?.as_str()?,
+                )
+                .ok()?,
+            };
+            let payload_ok = codec::fit_from_json(j.get("fit")?).is_ok();
+            Some((key, payload_ok))
+        });
+        match parsed {
+            Some((key, payload_ok)) => {
+                // A valid artifact also lives where its embedded key
+                // says it should: anything else (e.g. a file written
+                // under an older path scheme) can never be loaded and
+                // is GC fodder.
+                let placed = self.fit_path(&key) == path;
+                let form = if key.nonlinear { "overlap" } else { "linear" };
+                (
+                    format!(
+                        "fit {}/{} {form} model={}",
+                        key.case,
+                        key.device,
+                        codec::fingerprint_to_hex(key.model_fingerprint)
+                    ),
+                    Some(key.model_fingerprint),
+                    payload_ok && placed,
+                )
+            }
+            None => (
+                "unreadable, stale-version or foreign fit artifact".to_string(),
+                None,
+                false,
+            ),
+        }
+    }
+
+    /// Age out everything the store can prove dead: artifacts that are
+    /// corrupt, carry a stale [`STORE_FORMAT_VERSION`], sit at a path
+    /// their embedded key no longer maps to, or (for fits, when a
+    /// reachability set is given) belong to a model fingerprint the
+    /// current binary can no longer produce — plus temp files older
+    /// than `temp_ttl_secs`.  Foreign files are never touched.
+    pub fn gc(&self, opts: &GcOptions) -> Result<GcOutcome, String> {
+        let mut out = GcOutcome::default();
+        for info in self.list()? {
+            out.scanned += 1;
+            let reason = match info.kind {
+                ArtifactKind::Temp => {
+                    if info.age_secs.is_some_and(|a| a >= opts.temp_ttl_secs) {
+                        Some("orphaned temp file".to_string())
+                    } else {
+                        None
+                    }
+                }
+                ArtifactKind::Other => None,
+                ArtifactKind::Stats | ArtifactKind::Fit if !info.valid => {
+                    Some("stale, corrupt or misplaced artifact".to_string())
+                }
+                ArtifactKind::Fit => match (opts.reachable_fits, info.model_fingerprint)
+                {
+                    (Some(reach), Some(fp)) if !reach.contains(&fp) => Some(
+                        "model fingerprint unreachable from this binary".to_string(),
+                    ),
+                    _ => None,
+                },
+                ArtifactKind::Stats => None,
+            };
+            if let Some(reason) = reason {
+                if !opts.dry_run {
+                    std::fs::remove_file(&info.path).map_err(|e| {
+                        format!("removing {}: {e}", info.path.display())
+                    })?;
+                }
+                out.reclaimed_bytes += info.bytes;
+                out.removed.push((info.path, reason));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Classification of one file found under the store root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Stats,
+    Fit,
+    /// A `*.tmp.*` file left by an interrupted [`ArtifactStore`] write.
+    Temp,
+    /// Anything the store did not write; never removed.
+    Other,
+}
+
+/// One entry of [`ArtifactStore::list`].
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub bytes: u64,
+    /// Seconds since last modification (None when the filesystem
+    /// withholds mtimes).
+    pub age_secs: Option<u64>,
+    /// Human-readable key description for `store ls`.
+    pub describe: String,
+    /// Embedded model fingerprint (fit artifacts only).
+    pub model_fingerprint: Option<u128>,
+    /// Parses, carries the current format version, and lives at the
+    /// path its embedded key maps to.
+    pub valid: bool,
+}
+
+/// Policy knobs for [`ArtifactStore::gc`].
+#[derive(Clone, Copy, Debug)]
+pub struct GcOptions<'a> {
+    /// Model fingerprints still derivable from this binary (see
+    /// [`super::reachable_fit_fingerprints`]); fits outside the set
+    /// are aged out.  `None` skips reachability pruning.
+    pub reachable_fits: Option<&'a HashSet<u128>>,
+    /// Minimum age before a temp file counts as orphaned — a live
+    /// writer's temp is younger than this.
+    pub temp_ttl_secs: u64,
+    /// Report what would be removed without deleting anything.
+    pub dry_run: bool,
+}
+
+impl Default for GcOptions<'_> {
+    fn default() -> Self {
+        GcOptions {
+            reachable_fits: None,
+            // Long enough that any live writer has finished its rename.
+            temp_ttl_secs: 15 * 60,
+            dry_run: false,
+        }
+    }
+}
+
+/// What [`ArtifactStore::gc`] did (or, dry-run, would do).
+#[derive(Debug, Default)]
+pub struct GcOutcome {
+    pub scanned: usize,
+    /// `(path, reason)` per removed artifact, in path order.
+    pub removed: Vec<(PathBuf, String)>,
+    pub reclaimed_bytes: u64,
 }
 
 impl StatsBacking for ArtifactStore {
@@ -275,9 +577,10 @@ mod tests {
 
         // Stale format version on disk -> rejected (refit), not parsed.
         let path = store.fit_path(&key);
-        let stale = std::fs::read_to_string(&path)
-            .unwrap()
-            .replace("\"format_version\":1", "\"format_version\":999");
+        let stale = std::fs::read_to_string(&path).unwrap().replace(
+            &format!("\"format_version\":{STORE_FORMAT_VERSION}"),
+            "\"format_version\":999",
+        );
         assert_ne!(
             stale,
             std::fs::read_to_string(&path).unwrap(),
@@ -287,8 +590,177 @@ mod tests {
         assert!(store.load_fit(&key).is_none());
 
         // Truncated JSON -> rejected.
-        std::fs::write(&path, "{\"format_version\":1,\"kind\":\"fit\"").unwrap();
+        std::fs::write(&path, "{\"format_version\":2,\"kind\":\"fit\"").unwrap();
         assert!(store.load_fit(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn some_fit(p: f64) -> FitResult {
+        FitResult {
+            param_names: vec!["p_a".into()],
+            params: vec![p],
+            residual: 0.0,
+            iterations: 1,
+        }
+    }
+
+    /// The path-ambiguity regression: raw case/device ids containing
+    /// `-` used to collide in `<case>-<device>-<form>.json`, and path
+    /// characters could escape the store root.
+    #[test]
+    fn ambiguous_and_hostile_fit_keys_get_distinct_contained_paths() {
+        let dir = tmp_store("paths");
+        let store = ArtifactStore::open(&dir).unwrap();
+        // "fdiff-16x16" + "dev" vs "fdiff" + "16x16-dev": identical
+        // under naive concatenation.
+        let a = FitKey {
+            case: "fdiff-16x16".into(),
+            device: "dev".into(),
+            nonlinear: false,
+            model_fingerprint: 1,
+        };
+        let b = FitKey {
+            case: "fdiff".into(),
+            device: "16x16-dev".into(),
+            nonlinear: false,
+            model_fingerprint: 2,
+        };
+        assert_ne!(store.fit_path(&a), store.fit_path(&b));
+        store.save_fit(&a, &some_fit(1.0)).unwrap();
+        store.save_fit(&b, &some_fit(2.0)).unwrap();
+        assert_eq!(store.load_fit(&a).unwrap().params, vec![1.0]);
+        assert_eq!(store.load_fit(&b).unwrap().params, vec![2.0]);
+
+        // Hostile components stay inside <root>/fits.
+        let evil = FitKey {
+            case: "../../escape".into(),
+            device: "a/b\\c".into(),
+            nonlinear: true,
+            model_fingerprint: 3,
+        };
+        let p = store.fit_path(&evil);
+        assert!(p.starts_with(dir.join("fits")), "{}", p.display());
+        store.save_fit(&evil, &some_fit(3.0)).unwrap();
+        assert_eq!(store.load_fit(&evil).unwrap().params, vec![3.0]);
+        assert!(
+            std::fs::read_dir(dir.join("fits")).unwrap().count() >= 3,
+            "every artifact must land in the fits directory"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The temp-file-clobber regression: many threads publishing the
+    /// same artifact path concurrently must all succeed (per-writer
+    /// temp names) and leave no temp debris behind.
+    #[test]
+    fn concurrent_same_key_writers_never_clobber() {
+        let dir = tmp_store("contend");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 7,
+        };
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let (store, key) = (&store, &key);
+                s.spawn(move || {
+                    for i in 0..20 {
+                        store
+                            .save_fit(key, &some_fit((t * 100 + i) as f64))
+                            .expect("concurrent save must not clobber");
+                    }
+                });
+            }
+        });
+        assert!(store.load_fit(&key).is_some(), "a torn artifact leaked");
+        let leftovers: Vec<_> = std::fs::read_dir(dir.join("fits"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_sweeps_dead_artifacts_and_spares_live_ones() {
+        let dir = tmp_store("gc");
+        let store = ArtifactStore::open(&dir).unwrap();
+
+        // Live artifacts: one stats bundle, one reachable fit.
+        let k = crate::uipick::derived::build_axpy(DType::F32)
+            .unwrap()
+            .freeze();
+        let skey = StatsKey {
+            fingerprint: k.fingerprint(),
+            sub_group_size: 32,
+        };
+        store
+            .save_stats(&skey, &crate::stats::gather(&k, 32).unwrap())
+            .unwrap();
+        let live = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 0xa11ce,
+        };
+        store.save_fit(&live, &some_fit(1.0)).unwrap();
+
+        // Dead: unreachable-model fit, stale-version file, corrupt
+        // file, orphan temp, and a foreign file that must survive.
+        let dead = FitKey {
+            case: "matmul".into(),
+            device: "retired_gpu".into(),
+            nonlinear: false,
+            model_fingerprint: 0xdead,
+        };
+        store.save_fit(&dead, &some_fit(2.0)).unwrap();
+        let stale = dir.join("fits").join("old-fit-linear-0000000000000000.json");
+        std::fs::write(
+            &stale,
+            "{\"format_version\":1,\"kind\":\"fit\",\"case\":\"x\"}",
+        )
+        .unwrap();
+        let corrupt = dir.join("stats").join("nonsense.json");
+        std::fs::write(&corrupt, "{not json").unwrap();
+        let orphan = dir.join("stats").join("whatever.tmp.999.0");
+        std::fs::write(&orphan, "partial").unwrap();
+        let foreign = dir.join("fits").join("NOTES.txt");
+        std::fs::write(&foreign, "hands off").unwrap();
+
+        let reachable: HashSet<u128> = [0xa11ce_u128].into_iter().collect();
+        // Dry run first: reports, removes nothing.
+        let dry = store
+            .gc(&GcOptions {
+                reachable_fits: Some(&reachable),
+                temp_ttl_secs: 0,
+                dry_run: true,
+            })
+            .unwrap();
+        assert_eq!(dry.removed.len(), 4, "{:?}", dry.removed);
+        assert!(stale.exists() && corrupt.exists() && orphan.exists());
+
+        let gc = store
+            .gc(&GcOptions {
+                reachable_fits: Some(&reachable),
+                temp_ttl_secs: 0,
+                dry_run: false,
+            })
+            .unwrap();
+        assert_eq!(gc.removed.len(), 4, "{:?}", gc.removed);
+        assert!(gc.reclaimed_bytes > 0);
+        assert!(!stale.exists() && !corrupt.exists() && !orphan.exists());
+        assert!(store.load_fit(&dead).is_none(), "unreachable fit aged out");
+        assert!(foreign.exists(), "foreign files are never touched");
+        assert!(store.load_fit(&live).is_some(), "live fit survives");
+        assert!(store.load_stats(&skey).is_some(), "live stats survive");
+
+        // A fresh temp file survives a TTL-respecting sweep.
+        std::fs::write(dir.join("fits").join("busy.tmp.1.2"), "x").unwrap();
+        let gentle = store.gc(&GcOptions::default()).unwrap();
+        assert!(gentle.removed.is_empty(), "{:?}", gentle.removed);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -37,7 +37,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::{gather, KernelStats};
-use crate::ir::{Kernel, KernelRef};
+use crate::ir::KernelRef;
 
 /// One memoization slot.  The map entry is created under the map lock,
 /// but the expensive gather runs inside the slot's own [`OnceLock`], so
@@ -50,15 +50,6 @@ type Slot = Arc<OnceLock<Result<Arc<KernelStats>, String>>>;
 pub struct StatsKey {
     pub fingerprint: u128,
     pub sub_group_size: u64,
-}
-
-impl StatsKey {
-    pub fn of(knl: &Kernel, sub_group_size: u64) -> StatsKey {
-        StatsKey {
-            fingerprint: knl.fingerprint(),
-            sub_group_size,
-        }
-    }
 }
 
 /// Persistence hook for cache entries (disk-backed stores implement
@@ -154,6 +145,14 @@ impl StatsCache {
     /// Lookups that ran the full symbolic pass.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// `(fresh counting passes, disk hits, memory hits)` — the one-line
+    /// ledger store-backed CLI commands print, and what the shared-store
+    /// CI job asserts on ("0 fresh counting passes" for a device whose
+    /// sub-group twin already populated the store).
+    pub fn ledger(&self) -> (u64, u64, u64) {
+        (self.misses(), self.disk_hits(), self.hits())
     }
 
     /// Distinct (kernel, sub-group size) entries resident.

@@ -10,8 +10,8 @@ use std::path::PathBuf;
 
 use perflex::coordinator::run_experiment_in_session;
 use perflex::coordinator::expsets;
-use perflex::gpusim::device_by_id;
-use perflex::session::Session;
+use perflex::gpusim::{device_by_id, fleet};
+use perflex::session::{reachable_fit_fingerprints, GcOptions, Session};
 
 fn tmp_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!(
@@ -78,5 +78,155 @@ fn warm_calibrate_returns_stored_fit_for_both_model_forms() {
         0,
         "stored fits must not trigger measurement or counting"
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fleet-wide sharing: a second device with the same sub-group size,
+/// calibrated from a fresh session ("new process") against the same
+/// store, performs zero fresh counting passes — every symbolic bundle
+/// comes from the first device's run.
+#[test]
+fn same_sub_group_device_reuses_counting_passes_from_shared_store() {
+    let dir = tmp_dir("xdev");
+    let case = expsets::eval_case("matmul").unwrap();
+
+    let a = Session::with_store(&dir).unwrap();
+    let dev_a = device_by_id("titan_v").unwrap();
+    a.calibrate_case(&case, &dev_a, true, None).unwrap();
+    assert!(a.cache().misses() > 0, "first device pays the counting");
+
+    let b = Session::with_store(&dir).unwrap();
+    let dev_b = device_by_id("gtx_titan_x").unwrap();
+    assert_eq!(dev_a.sub_group_size, dev_b.sub_group_size);
+    let cal = b.calibrate_case(&case, &dev_b, true, None).unwrap();
+    assert!(!cal.from_store, "a different device needs its own fit");
+    assert_eq!(
+        b.cache().misses(),
+        0,
+        "same-sub-group device must reuse every counting pass"
+    );
+    assert!(b.cache().disk_hits() > 0);
+
+    // A wavefront-64 device keys a separate stats family and must
+    // gather its own counts.
+    let c = Session::with_store(&dir).unwrap();
+    let amd = device_by_id("amd_r9_fury").unwrap();
+    c.calibrate_case(&case, &amd, true, None).unwrap();
+    assert!(c.cache().misses() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two sessions (threads standing in for processes) calibrating the
+/// same case against one store concurrently: both finish, produce the
+/// same deterministic fit, and leave the store warm and torn-free.
+#[test]
+fn concurrent_sessions_share_one_store_safely() {
+    let dir = tmp_dir("concurrent");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let cals: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let session = Session::with_store(&dir).unwrap();
+                    let case = expsets::eval_case("matmul").unwrap();
+                    let dev = device_by_id("titan_v").unwrap();
+                    session.calibrate_case(&case, &dev, true, None).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(cals[0].fit.params, cals[1].fit.params);
+    assert_eq!(cals[0].fit.residual, cals[1].fit.residual);
+
+    let warm = Session::with_store(&dir).unwrap();
+    let cal = warm.calibrate_case(&case, &dev, true, None).unwrap();
+    assert!(cal.from_store, "the racing writers left a loadable artifact");
+    assert_eq!(warm.cache().misses(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The experiment harnesses' per-device fleet fits are artifacts too:
+/// a cold fig9 run persists all ten (5 devices x 2 forms), and a warm
+/// re-run loads every one, performs zero counting passes, and renders
+/// a byte-identical report.
+#[test]
+fn fleet_experiment_fits_warm_start_from_shared_store() {
+    let dir = tmp_dir("fleet-fig9");
+    let case = expsets::eval_case("fdiff").unwrap();
+
+    let cold = Session::with_store(&dir).unwrap();
+    let rep_cold = run_experiment_in_session("fig9", false, &cold).unwrap();
+    for dev in fleet() {
+        assert!(
+            cold.has_stored_fits(&case, &dev),
+            "cold run must persist both fleet fits for {}",
+            dev.id
+        );
+    }
+
+    // Reachability-drift guard: GC over a store a real experiment just
+    // populated must treat every persisted fleet fit as live.
+    let gc = cold
+        .store()
+        .unwrap()
+        .gc(&GcOptions {
+            reachable_fits: Some(&reachable_fit_fingerprints()),
+            temp_ttl_secs: 0,
+            dry_run: false,
+        })
+        .unwrap();
+    assert!(
+        gc.removed.is_empty(),
+        "GC must not collect live experiment fits: {:?}",
+        gc.removed
+    );
+
+    let warm = Session::with_store(&dir).unwrap();
+    let rep_warm = run_experiment_in_session("fig9", false, &warm).unwrap();
+    assert_eq!(
+        rep_cold.render(),
+        rep_warm.render(),
+        "warm fleet run must be byte-identical"
+    );
+    assert_eq!(
+        warm.cache().misses(),
+        0,
+        "warm fleet run must not run the counting pass"
+    );
+    assert!(warm.cache().disk_hits() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `store gc` with the binary's reachability set must treat everything
+/// a real calibration writes as live: nothing is removed, and the
+/// store stays warm afterwards.
+#[test]
+fn gc_keeps_everything_a_real_calibration_wrote() {
+    let dir = tmp_dir("gc-live");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let session = Session::with_store(&dir).unwrap();
+    session.calibrate_case(&case, &dev, true, None).unwrap();
+
+    let reach = reachable_fit_fingerprints();
+    let outcome = session
+        .store()
+        .unwrap()
+        .gc(&GcOptions {
+            reachable_fits: Some(&reach),
+            temp_ttl_secs: 0,
+            dry_run: false,
+        })
+        .unwrap();
+    assert!(outcome.removed.is_empty(), "{:?}", outcome.removed);
+    assert!(outcome.scanned > 0);
+
+    let warm = Session::with_store(&dir).unwrap();
+    let cal = warm.calibrate_case(&case, &dev, true, None).unwrap();
+    assert!(cal.from_store, "gc must not disturb live artifacts");
+    assert_eq!(warm.cache().misses(), 0);
     let _ = std::fs::remove_dir_all(&dir);
 }
