@@ -90,6 +90,12 @@ fn main() {
         last_disk_hits
     );
     assert_eq!(last_disk_hits, kernels.len() as u64);
+    // Every disk hit above was answered through the store index (the
+    // artifacts were saved by this process, so the in-memory manifest
+    // vouches for them): zero probe/validate parses across all passes.
+    let (index_hits, parses) = store.ledger();
+    println!("store index: {index_hits} index hits, {parses} full-artifact parses");
+    assert_eq!(parses, 0, "index must vouch for every disk-warm load");
     let _ = std::fs::remove_dir_all(&dir);
 
     // Parallel measurement sweep: the per-kernel loop of

@@ -5,9 +5,12 @@
 //! the model is fitted by Levenberg-Marquardt.  Gathering goes through
 //! a [`StatsCache`] (the `_cached` variants accept a shared one), so a
 //! kernel's symbolic statistics are derived once and reused by both its
-//! simulated measurement and its feature row; a measurement set whose
-//! kernels are *all* skipped as unlaunchable yields an error rather
-//! than a silent zero-row "fit".  The LM *loop* lives
+//! simulated measurement and its feature row; with a disk-backed cache
+//! (`StatsCache::with_backing` over an artifact store) the counting
+//! pass is skipped across processes too, and the store's journaled
+//! index spares every warm hit its validation parse.  A
+//! measurement set whose kernels are *all* skipped as unlaunchable
+//! yields an error rather than a silent zero-row "fit".  The LM *loop* lives
 //! here in Rust; the residual/Jacobian/step evaluation is a pluggable
 //! [`LmBackend`]:
 //!

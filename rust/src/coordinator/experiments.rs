@@ -19,6 +19,12 @@
 //! `calibrate` fits, see [`crate::session::fit_key`]): a warm fleet
 //! run loads every fit from disk, skips the per-device measurement
 //! gathering wholesale, and still renders byte-identical reports.
+//! The warm-start probes (`stored_fit`/`has_stored_fits`, issued once
+//! per device × form before any gathering) are answered by the
+//! store's journaled index: a warm fleet's "is this device already
+//! calibrated?" sweep is hash-map hits plus payload decodes, with no
+//! per-artifact validation parsing (a cold probe still pays one cheap
+//! file-open miss — the index accelerates, it is not the authority).
 
 use std::collections::BTreeMap;
 

@@ -13,7 +13,7 @@
 //! perflex calibrate <case> <device> [--store <dir>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
 //! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
-//! perflex store ls|stat|gc --store <dir> [--dry-run] [--temp-ttl-secs <n>]
+//! perflex store ls|stat|gc|compact --store <dir> [--dry-run] [--temp-ttl-secs <n>]
 //! ```
 //!
 //! `--store <dir>` opens a persistent artifact store (see
@@ -24,11 +24,14 @@
 //! are keyed by (kernel fingerprint, sub-group size), so calibrating a
 //! second device with the same sub-group size against the same store
 //! performs zero fresh counting passes (store-backed commands print
-//! the cache ledger so this is observable).  `perflex store`
-//! inspects (`ls`, `stat`) and maintains (`gc`) a store: GC sweeps
-//! orphaned temp files and ages out artifacts whose format version or
-//! model fingerprint no longer matches anything this binary can
-//! produce.
+//! the cache + store-index ledgers so this is observable; a warm run
+//! against a fresh index also reports zero full-artifact parses).
+//! `perflex store` inspects (`ls`, `stat`) and maintains (`gc`,
+//! `compact`) a store: GC sweeps orphaned temp files and ages out
+//! artifacts whose format version or model fingerprint no longer
+//! matches anything this binary can produce; `compact` deduplicates
+//! the sub-group-size-invariant stats sections shared between sg
+//! families of one kernel.
 
 use std::collections::BTreeMap;
 
@@ -54,17 +57,25 @@ fn usage() -> String {
      commands: list-generators | list-devices | gen | show | measure | \
      calibrate | predict | experiment | store\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
-     store maintenance: perflex store ls|stat|gc --store <dir>\n\
+     store maintenance: perflex store ls|stat|gc|compact --store <dir>\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
         .to_string()
 }
 
 /// Remove `flag <value>` from `args`, returning the value if present.
+/// A duplicated flag is an error, not a silent misparse: removing only
+/// the first `--store a` of `--store a --store b` used to leave
+/// `--store b` behind to be consumed as positional arguments.
 fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Result<Option<String>, String> {
     match args.iter().position(|a| a == flag) {
         Some(i) if i + 1 < args.len() => {
             let v = args.remove(i + 1);
             args.remove(i);
+            if args.iter().any(|a| a == flag) {
+                return Err(format!(
+                    "{flag} given more than once; pass a single value"
+                ));
+            }
             Ok(Some(v))
         }
         Some(_) => Err(format!("{flag} needs a value")),
@@ -73,26 +84,38 @@ fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Result<Option<String>,
 }
 
 /// Remove a boolean `flag` from `args`, returning whether it was given.
+/// Boolean flags are idempotent, so duplicates are consumed rather
+/// than left behind as stray positional arguments.
 fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
-    match args.iter().position(|a| a == flag) {
-        Some(i) => {
-            args.remove(i);
-            true
-        }
-        None => false,
-    }
+    let before = args.len();
+    args.retain(|a| a != flag);
+    args.len() != before
 }
 
 /// The cache ledger store-backed commands end with: how many symbolic
-/// counting passes actually ran vs were served from disk or memory.
+/// counting passes actually ran vs were served from disk or memory,
+/// and how the store answered — index hits vs full-artifact parses
+/// (the probe/validate/classify parses the index eliminates; payload
+/// decodes of vouched artifacts are the data fetch, not a probe).
 /// The shared-store CI job asserts "0 fresh counting passes" here when
-/// a sub-group twin already populated the store.
+/// a sub-group twin already populated the store, and "0 full-artifact
+/// parses" for warm runs against a fresh index.
 fn print_ledger(session: &Session) {
     let (fresh, disk, mem) = session.cache().ledger();
     println!(
         "stats cache: {fresh} fresh counting passes, {disk} disk hits, \
          {mem} memory hits"
     );
+    if let Some((hits, parses)) = session.store_ledger() {
+        println!("store index: {hits} index hits, {parses} full-artifact parses");
+    }
+}
+
+/// The store-index half of the ledger alone, for `perflex store`
+/// subcommands (which operate on a bare store, not a session).
+fn print_store_ledger(store: &perflex::session::ArtifactStore) {
+    let (hits, parses) = store.ledger();
+    println!("store index: {hits} index hits, {parses} full-artifact parses");
 }
 
 fn dispatch(mut args: Vec<String>) -> Result<(), String> {
@@ -279,7 +302,7 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             };
             let sub = rest
                 .first()
-                .ok_or("store <ls|stat|gc> --store <dir>")?
+                .ok_or("store <ls|stat|gc|compact> --store <dir>")?
                 .clone();
             let dir = store_dir
                 .ok_or("store commands need --store <dir> (the store to operate on)")?;
@@ -308,6 +331,7 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                         let kind = match info.kind {
                             perflex::session::ArtifactKind::Stats => "stats",
                             perflex::session::ArtifactKind::Fit => "fit",
+                            perflex::session::ArtifactKind::Shared => "shared",
                             perflex::session::ArtifactKind::Temp => "temp",
                             perflex::session::ArtifactKind::Other => "other",
                         };
@@ -324,6 +348,7 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                             info.bytes, info.describe
                         );
                     }
+                    print_store_ledger(&store);
                     Ok(())
                 }
                 "stat" => {
@@ -338,6 +363,8 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     };
                     let (n_stats, b_stats) = count(perflex::session::ArtifactKind::Stats);
                     let (n_fits, b_fits) = count(perflex::session::ArtifactKind::Fit);
+                    let (n_shared, b_shared) =
+                        count(perflex::session::ArtifactKind::Shared);
                     let (n_temp, b_temp) = count(perflex::session::ArtifactKind::Temp);
                     // Temp files are counted on their own line above,
                     // not as staleness — a mid-write temp is healthy.
@@ -349,10 +376,12 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                                     i.kind,
                                     perflex::session::ArtifactKind::Stats
                                         | perflex::session::ArtifactKind::Fit
+                                        | perflex::session::ArtifactKind::Shared
                                 )
                         })
                         .count();
                     let dead_fits = infos.iter().filter(|i| unreachable(i)).count();
+                    let (ix_stats, ix_fits, ix_shared) = store.index_counts();
                     println!("store root: {}", store.root().display());
                     println!(
                         "format version: {}",
@@ -360,9 +389,15 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     );
                     println!("stats artifacts: {n_stats} ({b_stats} bytes)");
                     println!("fit artifacts: {n_fits} ({b_fits} bytes)");
+                    println!("shared sections: {n_shared} ({b_shared} bytes)");
                     println!("temp files: {n_temp} ({b_temp} bytes)");
                     println!("stale or corrupt: {stale}");
                     println!("unreachable fits: {dead_fits}");
+                    println!(
+                        "index entries: {ix_stats} stats, {ix_fits} fits, \
+                         {ix_shared} shared"
+                    );
+                    print_store_ledger(&store);
                     Ok(())
                 }
                 "gc" => {
@@ -381,10 +416,28 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                         outcome.scanned,
                         outcome.reclaimed_bytes
                     );
+                    print_store_ledger(&store);
+                    Ok(())
+                }
+                "compact" => {
+                    let outcome = store.compact()?;
+                    println!(
+                        "compacted {} of {} sub-group famil{} ({} artifacts \
+                         rewritten, {} shared sections, {} skipped), {} bytes \
+                         reclaimed",
+                        outcome.shared_sections,
+                        outcome.families,
+                        if outcome.families == 1 { "y" } else { "ies" },
+                        outcome.rewritten,
+                        outcome.shared_sections,
+                        outcome.skipped,
+                        outcome.reclaimed_bytes
+                    );
+                    print_store_ledger(&store);
                     Ok(())
                 }
                 other => Err(format!(
-                    "unknown store subcommand '{other}' (ls|stat|gc)"
+                    "unknown store subcommand '{other}' (ls|stat|gc|compact)"
                 )),
             }
         }
@@ -405,5 +458,57 @@ fn build_variant(case: &str, variant: &str) -> Result<perflex::ir::Kernel, Strin
         ("fdiff", "16x16") => build_fdiff(16),
         ("fdiff", "18x18") => build_fdiff(18),
         _ => Err(format!("unknown variant '{variant}' for case '{case}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{take_flag, take_flag_value};
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn take_flag_value_extracts_and_leaves_the_rest() {
+        let mut a = args(&["calibrate", "--store", "/tmp/s", "matmul", "titan_v"]);
+        assert_eq!(
+            take_flag_value(&mut a, "--store").unwrap().as_deref(),
+            Some("/tmp/s")
+        );
+        assert_eq!(a, args(&["calibrate", "matmul", "titan_v"]));
+        assert_eq!(take_flag_value(&mut a, "--store").unwrap(), None);
+        assert_eq!(a, args(&["calibrate", "matmul", "titan_v"]));
+    }
+
+    /// The duplicate-flag regression: `--store a --store b` used to
+    /// consume only `--store a` and leave `--store b` behind as two
+    /// stray positional arguments.
+    #[test]
+    fn take_flag_value_rejects_duplicate_flags() {
+        let mut a = args(&["calibrate", "--store", "a", "--store", "b", "matmul"]);
+        let err = take_flag_value(&mut a, "--store").unwrap_err();
+        assert!(err.contains("--store"), "{err}");
+        assert!(err.contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn take_flag_value_requires_a_value() {
+        let mut a = args(&["store", "gc", "--temp-ttl-secs"]);
+        assert!(take_flag_value(&mut a, "--temp-ttl-secs")
+            .unwrap_err()
+            .contains("needs a value"));
+    }
+
+    #[test]
+    fn take_flag_consumes_every_occurrence() {
+        let mut a = args(&["experiment", "--dry-run", "fig5", "--dry-run"]);
+        assert!(take_flag(&mut a, "--dry-run"));
+        assert_eq!(
+            a,
+            args(&["experiment", "fig5"]),
+            "no stray flag copy may survive as a positional argument"
+        );
+        assert!(!take_flag(&mut a, "--dry-run"));
     }
 }

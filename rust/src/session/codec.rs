@@ -306,35 +306,27 @@ fn mem_from_json(j: &Json) -> Result<MemAccessStat, String> {
     })
 }
 
-pub fn stats_to_json(st: &KernelStats) -> Json {
-    Json::obj(vec![
-        ("kernel_name", st.kernel_name.as_str().into()),
-        (
-            "ops",
-            Json::Arr(
-                st.ops
-                    .iter()
-                    .map(|o| {
-                        Json::obj(vec![
-                            ("dtype", o.dtype.feature_name().into()),
-                            ("op", o.op.as_str().into()),
-                            ("count_sg", qpoly_to_json(&o.count_sg)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-        ("mem", Json::Arr(st.mem.iter().map(mem_to_json).collect())),
-        ("barriers_per_wi", qpoly_to_json(&st.barriers_per_wi)),
-        ("num_groups", qpoly_to_json(&st.num_groups)),
-        ("work_group_size", (st.work_group_size as i64).into()),
-        ("sub_group_size", (st.sub_group_size as i64).into()),
-    ])
+/// Arithmetic-op stats as a JSON array.  Factored out of the full
+/// bundle codec because op counts (already scaled by 1/sg) are the
+/// *only* sub-group-size-dependent section of a stats bundle — the
+/// compacted artifact form persists them per sub-group size while the
+/// rest of the bundle is deduplicated (see [`stats_shared_to_json`]).
+pub fn ops_to_json(ops: &[OpStat]) -> Json {
+    Json::Arr(
+        ops.iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("dtype", o.dtype.feature_name().into()),
+                    ("op", o.op.as_str().into()),
+                    ("count_sg", qpoly_to_json(&o.count_sg)),
+                ])
+            })
+            .collect(),
+    )
 }
 
-pub fn stats_from_json(j: &Json) -> Result<KernelStats, String> {
-    let ops = get(j, "ops", "kernel stats")?
-        .as_arr()
+pub fn ops_from_json(j: &Json) -> Result<Vec<OpStat>, String> {
+    j.as_arr()
         .ok_or_else(|| err("op stats"))?
         .iter()
         .map(|o| {
@@ -344,7 +336,82 @@ pub fn stats_from_json(j: &Json) -> Result<KernelStats, String> {
                 count_sg: qpoly_from_json(get(o, "count_sg", "op stat")?)?,
             })
         })
+        .collect()
+}
+
+/// The sub-group-size-invariant section of a [`KernelStats`] bundle:
+/// everything [`crate::stats::gather`] derives without consulting the
+/// sub-group size (memory-access classification, barriers, launch
+/// geometry).  `perflex store compact` deduplicates this section
+/// between the sg-32 and sg-64 twins of one kernel fingerprint; the
+/// reassembled bundle ([`stats_from_parts`]) is structurally identical
+/// to the original, so compaction never changes a report byte.
+pub struct SharedStats {
+    pub kernel_name: String,
+    pub mem: Vec<MemAccessStat>,
+    pub barriers_per_wi: QPoly,
+    pub num_groups: QPoly,
+    pub work_group_size: u64,
+}
+
+pub fn stats_shared_to_json(st: &KernelStats) -> Json {
+    Json::obj(vec![
+        ("kernel_name", st.kernel_name.as_str().into()),
+        ("mem", Json::Arr(st.mem.iter().map(mem_to_json).collect())),
+        ("barriers_per_wi", qpoly_to_json(&st.barriers_per_wi)),
+        ("num_groups", qpoly_to_json(&st.num_groups)),
+        ("work_group_size", (st.work_group_size as i64).into()),
+    ])
+}
+
+pub fn stats_shared_from_json(j: &Json) -> Result<SharedStats, String> {
+    let mem = get(j, "mem", "shared stats")?
+        .as_arr()
+        .ok_or_else(|| err("mem stats"))?
+        .iter()
+        .map(mem_from_json)
         .collect::<Result<Vec<_>, String>>()?;
+    Ok(SharedStats {
+        kernel_name: get_str(j, "kernel_name", "shared stats")?,
+        mem,
+        barriers_per_wi: qpoly_from_json(get(j, "barriers_per_wi", "shared stats")?)?,
+        num_groups: qpoly_from_json(get(j, "num_groups", "shared stats")?)?,
+        work_group_size: get_u64(j, "work_group_size", "shared stats")?,
+    })
+}
+
+/// Reassemble a full bundle from its deduplicated halves — the inverse
+/// of splitting via [`stats_shared_to_json`] + [`ops_to_json`].
+pub fn stats_from_parts(
+    shared: SharedStats,
+    ops: Vec<OpStat>,
+    sub_group_size: u64,
+) -> KernelStats {
+    KernelStats {
+        kernel_name: shared.kernel_name,
+        ops,
+        mem: shared.mem,
+        barriers_per_wi: shared.barriers_per_wi,
+        num_groups: shared.num_groups,
+        work_group_size: shared.work_group_size,
+        sub_group_size,
+    }
+}
+
+pub fn stats_to_json(st: &KernelStats) -> Json {
+    Json::obj(vec![
+        ("kernel_name", st.kernel_name.as_str().into()),
+        ("ops", ops_to_json(&st.ops)),
+        ("mem", Json::Arr(st.mem.iter().map(mem_to_json).collect())),
+        ("barriers_per_wi", qpoly_to_json(&st.barriers_per_wi)),
+        ("num_groups", qpoly_to_json(&st.num_groups)),
+        ("work_group_size", (st.work_group_size as i64).into()),
+        ("sub_group_size", (st.sub_group_size as i64).into()),
+    ])
+}
+
+pub fn stats_from_json(j: &Json) -> Result<KernelStats, String> {
+    let ops = ops_from_json(get(j, "ops", "kernel stats")?)?;
     let mem = get(j, "mem", "kernel stats")?
         .as_arr()
         .ok_or_else(|| err("mem stats"))?
@@ -486,6 +553,36 @@ mod tests {
             stats_to_json(&back).to_string(),
             text,
             "stats serialization must be byte-stable"
+        );
+    }
+
+    /// The compaction split: (shared section, ops, sg) must reassemble
+    /// into a bundle indistinguishable from the full round trip, and
+    /// the shared section of sg-32 and sg-64 gathers of one kernel must
+    /// encode byte-identically (the invariant `store compact` relies
+    /// on to dedup across sub-group families).
+    #[test]
+    fn shared_split_reassembles_exactly_and_is_sg_invariant() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let st32 = crate::stats::gather(&k, 32).unwrap();
+        let st64 = crate::stats::gather(&k, 64).unwrap();
+        assert_eq!(
+            stats_shared_to_json(&st32).to_string(),
+            stats_shared_to_json(&st64).to_string(),
+            "shared section must not depend on the sub-group size"
+        );
+
+        let shared_text = stats_shared_to_json(&st32).to_string();
+        let ops_text = ops_to_json(&st32.ops).to_string();
+        let shared =
+            stats_shared_from_json(&Json::parse(&shared_text).unwrap()).unwrap();
+        let ops = ops_from_json(&Json::parse(&ops_text).unwrap()).unwrap();
+        let rebuilt = stats_from_parts(shared, ops, 32);
+        assert_stats_equivalent(&st32, &rebuilt, &[1024, 2048, 3584]);
+        assert_eq!(
+            stats_to_json(&rebuilt).to_string(),
+            stats_to_json(&st32).to_string(),
+            "reassembly must be byte-identical to the full encoding"
         );
     }
 

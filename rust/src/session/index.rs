@@ -1,0 +1,454 @@
+//! Read-mostly store index: a journaled manifest of every *valid*
+//! artifact in an [`ArtifactStore`](super::ArtifactStore).
+//!
+//! The seed store answered every question by touching the filesystem:
+//! `load_*` probed (and on a hit fully parsed) an artifact file per
+//! lookup, and `store ls`/`stat`/`gc` re-parsed **every** artifact on
+//! every invocation — O(N · parse) per scan, paid again by each fleet
+//! member sharing the store.  The index replaces those probes with
+//! hash-map lookups:
+//!
+//! * `<root>/index.json` — an atomic snapshot of the manifest, written
+//!   at open (after a rebuild), after `gc`/`compact`, and whenever the
+//!   journal grows past [`JOURNAL_COMPACT_THRESHOLD`];
+//! * `<root>/index.journal` — an append-only log of
+//!   [`JournalOp`] records (one JSON object per line) written by
+//!   `save_stats`/`save_fit`/`gc`/`compact` between snapshots.
+//!
+//! A process loads the snapshot once, replays the journal on top, and
+//! thereafter shares the in-memory index read-mostly across every
+//! fleet session holding the same `Arc<ArtifactStore>`.  The index is
+//! an *accelerator, never an authority*: a positive entry still has
+//! its artifact validated when the payload is fetched (a vouched file
+//! that fails validation is dropped from the index and degrades to a
+//! cold start), a negative answer falls back to a direct disk probe
+//! (so another process's writes are adopted, at the cost of one
+//! counted full-artifact parse), a corrupt or version-skewed snapshot
+//! triggers a full rebuild scan, and unparseable journal lines (torn
+//! appends from crashed writers) are simply skipped — a lost put
+//! re-adopts on the next lookup, a lost delete is dropped by the next
+//! vouched load, so journal damage never produces wrong answers.
+//!
+//! Filenames are *derived*, not stored: every artifact family's path
+//! is a pure function of its key (see `ArtifactStore::fit_path` and
+//! friends), so the manifest serializes only keys and the reverse
+//! (filename → key) maps are rebuilt in memory on load.
+
+use std::collections::{HashMap, HashSet};
+
+use super::codec;
+use super::store::{fit_file_name, FitKey, STORE_FORMAT_VERSION};
+use crate::stats::StatsKey;
+use crate::util::json::Json;
+
+/// Journal lines accumulated before the next open rewrites the
+/// snapshot and truncates the journal (bounds replay cost).
+pub(crate) const JOURNAL_COMPACT_THRESHOLD: usize = 256;
+
+fn err(what: &str) -> String {
+    format!("store index: malformed {what}")
+}
+
+/// Index metadata for one stats artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StatsEntry {
+    /// True when the artifact is in compacted form: it persists only
+    /// the per-sub-group op counts and references the deduplicated
+    /// sg-invariant section under `<root>/shared/` (`store compact`).
+    pub compacted: bool,
+}
+
+/// One journal record: a single put/delete of an index entry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalOp {
+    PutStats(StatsKey, StatsEntry),
+    DelStats(StatsKey),
+    PutFit(FitKey),
+    DelFit(FitKey),
+    PutShared(u128),
+    DelShared(u128),
+}
+
+fn stats_key_fields(key: &StatsKey) -> Vec<(&'static str, Json)> {
+    vec![
+        (
+            "fingerprint",
+            codec::fingerprint_to_hex(key.fingerprint).into(),
+        ),
+        ("sub_group_size", (key.sub_group_size as i64).into()),
+    ]
+}
+
+fn stats_key_from(j: &Json) -> Result<StatsKey, String> {
+    Ok(StatsKey {
+        fingerprint: codec::fingerprint_from_hex(
+            j.get("fingerprint")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("stats entry"))?,
+        )?,
+        sub_group_size: j
+            .get("sub_group_size")
+            .and_then(Json::as_f64)
+            .filter(|x| *x >= 1.0 && x.fract() == 0.0)
+            .ok_or_else(|| err("stats entry"))? as u64,
+    })
+}
+
+fn fit_key_fields(key: &FitKey) -> Vec<(&'static str, Json)> {
+    vec![
+        ("case", key.case.as_str().into()),
+        ("device", key.device.as_str().into()),
+        ("nonlinear", key.nonlinear.into()),
+        (
+            "model_fingerprint",
+            codec::fingerprint_to_hex(key.model_fingerprint).into(),
+        ),
+    ]
+}
+
+fn fit_key_from(j: &Json) -> Result<FitKey, String> {
+    Ok(FitKey {
+        case: j
+            .get("case")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("fit entry"))?
+            .to_string(),
+        device: j
+            .get("device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("fit entry"))?
+            .to_string(),
+        nonlinear: j
+            .get("nonlinear")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| err("fit entry"))?,
+        model_fingerprint: codec::fingerprint_from_hex(
+            j.get("model_fingerprint")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("fit entry"))?,
+        )?,
+    })
+}
+
+impl JournalOp {
+    pub fn to_json(&self) -> Json {
+        let (op, mut fields) = match self {
+            JournalOp::PutStats(key, entry) => {
+                let mut f = stats_key_fields(key);
+                f.push(("compacted", entry.compacted.into()));
+                ("put-stats", f)
+            }
+            JournalOp::DelStats(key) => ("del-stats", stats_key_fields(key)),
+            JournalOp::PutFit(key) => ("put-fit", fit_key_fields(key)),
+            JournalOp::DelFit(key) => ("del-fit", fit_key_fields(key)),
+            JournalOp::PutShared(fp) => (
+                "put-shared",
+                vec![("fingerprint", codec::fingerprint_to_hex(*fp).into())],
+            ),
+            JournalOp::DelShared(fp) => (
+                "del-shared",
+                vec![("fingerprint", codec::fingerprint_to_hex(*fp).into())],
+            ),
+        };
+        fields.push(("op", op.into()));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JournalOp, String> {
+        let shared_fp = |j: &Json| {
+            codec::fingerprint_from_hex(
+                j.get("fingerprint")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| err("shared entry"))?,
+            )
+        };
+        match j.get("op").and_then(Json::as_str) {
+            Some("put-stats") => Ok(JournalOp::PutStats(
+                stats_key_from(j)?,
+                StatsEntry {
+                    compacted: j
+                        .get("compacted")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| err("stats entry"))?,
+                },
+            )),
+            Some("del-stats") => Ok(JournalOp::DelStats(stats_key_from(j)?)),
+            Some("put-fit") => Ok(JournalOp::PutFit(fit_key_from(j)?)),
+            Some("del-fit") => Ok(JournalOp::DelFit(fit_key_from(j)?)),
+            Some("put-shared") => Ok(JournalOp::PutShared(shared_fp(j)?)),
+            Some("del-shared") => Ok(JournalOp::DelShared(shared_fp(j)?)),
+            _ => Err(err("journal op")),
+        }
+    }
+}
+
+/// The in-memory manifest: which keys have a valid artifact on disk,
+/// and in which form.  See the module docs for the maintenance
+/// protocol (snapshot + journal + rebuild).
+#[derive(Default)]
+pub struct StoreIndex {
+    stats: HashMap<StatsKey, StatsEntry>,
+    fits: HashSet<FitKey>,
+    /// Derived reverse map: fit artifact filename → key (fit filenames
+    /// embed a key hash, so unlike stats filenames they cannot be
+    /// parsed back into their key).
+    fit_names: HashMap<String, FitKey>,
+    shared: HashSet<u128>,
+}
+
+impl StoreIndex {
+    pub fn new() -> StoreIndex {
+        StoreIndex::default()
+    }
+
+    pub fn stats(&self, key: &StatsKey) -> Option<StatsEntry> {
+        self.stats.get(key).copied()
+    }
+
+    pub fn has_fit(&self, key: &FitKey) -> bool {
+        self.fits.contains(key)
+    }
+
+    pub fn fit_for_file(&self, name: &str) -> Option<&FitKey> {
+        self.fit_names.get(name)
+    }
+
+    pub fn has_shared(&self, fp: u128) -> bool {
+        self.shared.contains(&fp)
+    }
+
+    pub fn stats_entries(&self) -> impl Iterator<Item = (&StatsKey, &StatsEntry)> {
+        self.stats.iter()
+    }
+
+    pub fn shared_fingerprints(&self) -> impl Iterator<Item = u128> + '_ {
+        self.shared.iter().copied()
+    }
+
+    /// `(stats, fits, shared)` entry counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (self.stats.len(), self.fits.len(), self.shared.len())
+    }
+
+    pub fn apply(&mut self, op: &JournalOp) {
+        match op {
+            JournalOp::PutStats(key, entry) => {
+                self.stats.insert(*key, *entry);
+            }
+            JournalOp::DelStats(key) => {
+                self.stats.remove(key);
+            }
+            JournalOp::PutFit(key) => {
+                if self.fits.insert(key.clone()) {
+                    self.fit_names.insert(fit_file_name(key), key.clone());
+                }
+            }
+            JournalOp::DelFit(key) => {
+                if self.fits.remove(key) {
+                    self.fit_names.remove(&fit_file_name(key));
+                }
+            }
+            JournalOp::PutShared(fp) => {
+                self.shared.insert(*fp);
+            }
+            JournalOp::DelShared(fp) => {
+                self.shared.remove(fp);
+            }
+        }
+    }
+
+    /// Serialize the manifest as a deterministic snapshot (entries in
+    /// sorted key order, so identical manifests are byte-identical).
+    pub fn to_snapshot_json(&self) -> Json {
+        let mut stats: Vec<_> = self.stats.iter().collect();
+        stats.sort_by_key(|(k, _)| (k.fingerprint, k.sub_group_size));
+        let mut fits: Vec<_> = self.fits.iter().collect();
+        fits.sort_by(|a, b| {
+            (&a.case, &a.device, a.nonlinear, a.model_fingerprint)
+                .cmp(&(&b.case, &b.device, b.nonlinear, b.model_fingerprint))
+        });
+        let mut shared: Vec<_> = self.shared.iter().copied().collect();
+        shared.sort_unstable();
+        Json::obj(vec![
+            ("format_version", (STORE_FORMAT_VERSION as i64).into()),
+            ("kind", "store-index".into()),
+            (
+                "stats",
+                Json::Arr(
+                    stats
+                        .into_iter()
+                        .map(|(key, entry)| {
+                            let mut f = stats_key_fields(key);
+                            f.push(("compacted", entry.compacted.into()));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "fits",
+                Json::Arr(
+                    fits.into_iter()
+                        .map(|key| Json::obj(fit_key_fields(key)))
+                        .collect(),
+                ),
+            ),
+            (
+                "shared",
+                Json::Arr(
+                    shared
+                        .into_iter()
+                        .map(|fp| codec::fingerprint_to_hex(fp).into())
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Strict snapshot decode: any malformed entry or version skew is
+    /// an error, and the caller falls back to a full rebuild scan —
+    /// the index never limps along on a partially-understood manifest.
+    pub fn from_snapshot_json(j: &Json) -> Result<StoreIndex, String> {
+        if j.get("format_version").and_then(Json::as_f64)
+            != Some(STORE_FORMAT_VERSION as f64)
+        {
+            return Err(err("snapshot version"));
+        }
+        if j.get("kind").and_then(Json::as_str) != Some("store-index") {
+            return Err(err("snapshot kind"));
+        }
+        let mut index = StoreIndex::new();
+        for entry in j
+            .get("stats")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("snapshot stats"))?
+        {
+            let key = stats_key_from(entry)?;
+            let compacted = entry
+                .get("compacted")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| err("stats entry"))?;
+            index.apply(&JournalOp::PutStats(key, StatsEntry { compacted }));
+        }
+        for entry in j
+            .get("fits")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("snapshot fits"))?
+        {
+            index.apply(&JournalOp::PutFit(fit_key_from(entry)?));
+        }
+        for entry in j
+            .get("shared")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("snapshot shared"))?
+        {
+            let fp = codec::fingerprint_from_hex(
+                entry.as_str().ok_or_else(|| err("shared entry"))?,
+            )?;
+            index.apply(&JournalOp::PutShared(fp));
+        }
+        Ok(index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_fit_key() -> FitKey {
+        FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 0xabcd,
+        }
+    }
+
+    #[test]
+    fn journal_ops_roundtrip_and_apply() {
+        let skey = StatsKey {
+            fingerprint: 0x1234,
+            sub_group_size: 64,
+        };
+        let fkey = sample_fit_key();
+        let ops = vec![
+            JournalOp::PutStats(skey, StatsEntry { compacted: false }),
+            JournalOp::PutFit(fkey.clone()),
+            JournalOp::PutShared(0x1234),
+            JournalOp::PutStats(skey, StatsEntry { compacted: true }),
+            JournalOp::DelShared(0x1234),
+        ];
+        let mut index = StoreIndex::new();
+        for op in &ops {
+            let line = op.to_json().to_string();
+            let back = JournalOp::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(&back, op, "journal line must round-trip: {line}");
+            index.apply(&back);
+        }
+        assert_eq!(index.stats(&skey), Some(StatsEntry { compacted: true }));
+        assert!(index.has_fit(&fkey));
+        assert!(!index.has_shared(0x1234));
+        assert_eq!(
+            index.fit_for_file(&fit_file_name(&fkey)),
+            Some(&fkey),
+            "fit filename reverse map must track puts"
+        );
+        index.apply(&JournalOp::DelFit(fkey.clone()));
+        assert!(!index.has_fit(&fkey));
+        assert!(index.fit_for_file(&fit_file_name(&fkey)).is_none());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_is_deterministic() {
+        let mut index = StoreIndex::new();
+        for sg in [32u64, 64] {
+            index.apply(&JournalOp::PutStats(
+                StatsKey {
+                    fingerprint: 0xfeed,
+                    sub_group_size: sg,
+                },
+                StatsEntry { compacted: sg == 64 },
+            ));
+        }
+        index.apply(&JournalOp::PutFit(sample_fit_key()));
+        index.apply(&JournalOp::PutShared(0xfeed));
+
+        let text = index.to_snapshot_json().to_string();
+        let back =
+            StoreIndex::from_snapshot_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.counts(), index.counts());
+        assert_eq!(
+            back.to_snapshot_json().to_string(),
+            text,
+            "snapshot serialization must be byte-stable"
+        );
+        assert!(back.has_fit(&sample_fit_key()));
+        assert_eq!(
+            back.stats(&StatsKey {
+                fingerprint: 0xfeed,
+                sub_group_size: 64
+            }),
+            Some(StatsEntry { compacted: true })
+        );
+    }
+
+    #[test]
+    fn corrupt_snapshots_and_journal_lines_are_rejected() {
+        assert!(StoreIndex::from_snapshot_json(&Json::parse("{}").unwrap()).is_err());
+        let skewed = format!(
+            "{{\"format_version\":{},\"kind\":\"store-index\",\
+             \"stats\":[],\"fits\":[],\"shared\":[]}}",
+            STORE_FORMAT_VERSION + 1
+        );
+        assert!(
+            StoreIndex::from_snapshot_json(&Json::parse(&skewed).unwrap()).is_err(),
+            "version skew must force a rebuild"
+        );
+        assert!(JournalOp::from_json(&Json::parse("{\"op\":\"nope\"}").unwrap())
+            .is_err());
+        assert!(JournalOp::from_json(
+            &Json::parse("{\"op\":\"put-fit\",\"case\":\"x\"}").unwrap()
+        )
+        .is_err());
+    }
+}

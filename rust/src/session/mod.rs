@@ -18,15 +18,29 @@
 //!   sub-group size), exactly the in-memory [`StatsCache`] key.  The
 //!   fingerprint covers the entire kernel IR, so any structural change
 //!   mints a new key; devices sharing a sub-group size share entries.
-//! * **Calibration fits** — keyed by [`FitKey`]: (case id, device id,
-//!   model form) name the file (sanitized, plus a raw-key hash so ids
-//!   containing `-` or path characters cannot collide or escape the
-//!   store root), and an embedded `model_fingerprint` (hash of the
-//!   model's feature columns, the measurement-set filter tags, the
-//!   device's sub-group size, and the store format version) guards
-//!   its content.  Both the CLI's `calibrate`/`predict` fits and the
-//!   experiment harnesses' per-device fleet fits (via
-//!   [`Session::fit_case_persistent`] / [`fit_key_parts`]) live here.
+//! * **Calibration fits** — keyed by [`FitKey`]: the *full* key —
+//!   case id, device id, model form **and** `model_fingerprint` (hash
+//!   of the model's feature columns, the measurement-set filter tags,
+//!   the device's sub-group size, and the store format version) — is
+//!   hashed into the filename (components sanitized, so ids containing
+//!   `-` or path characters cannot collide or escape the store root),
+//!   and the embedded key guards the content.  Fingerprint-only
+//!   siblings (a re-featured model, sub-group twins of a renamed
+//!   device) therefore persist side by side; before v3 they shared a
+//!   path and silently evicted each other.  Both the CLI's
+//!   `calibrate`/`predict` fits and the experiment harnesses'
+//!   per-device fleet fits (via [`Session::fit_case_persistent`] /
+//!   [`fit_key_parts`]) live here.
+//!
+//! Artifact existence and validity are answered by the journaled
+//! [`index::StoreIndex`] (`<store>/index.json` + `index.journal`),
+//! loaded once per process and shared read-mostly across fleet
+//! sessions: warm `load_*`, `store ls`, `stat` and `gc` are hash-map
+//! lookups, not per-lookup file probes or O(N · parse) scans (the
+//! store ledger makes this observable; see
+//! [`ArtifactStore::ledger`]).  `perflex store compact` additionally
+//! deduplicates the sub-group-size-invariant section of stats bundles
+//! shared between sg families of one kernel (`<store>/shared/`).
 //!
 //! # Invalidation rules
 //!
@@ -48,11 +62,12 @@
 //! crate::ir::FrozenKernel::thaw) it, which discards the key.
 
 pub mod codec;
+pub mod index;
 mod store;
 
 pub use store::{
-    ArtifactInfo, ArtifactKind, ArtifactStore, FitKey, GcOptions, GcOutcome,
-    STORE_FORMAT_VERSION,
+    ArtifactInfo, ArtifactKind, ArtifactStore, CompactOutcome, FitKey, GcOptions,
+    GcOutcome, STORE_FORMAT_VERSION,
 };
 
 use std::path::Path;
@@ -121,6 +136,15 @@ impl Session {
 
     pub fn store(&self) -> Option<&ArtifactStore> {
         self.store.as_deref()
+    }
+
+    /// The store-index ledger — `(index hits, full-artifact parses)` —
+    /// or `None` for a store-less session.  Store-backed CLI commands
+    /// print this beside the stats-cache ledger; the CI fleet-store
+    /// job asserts zero full-artifact parses for `store ls` and warm
+    /// `predict` against a fresh index.
+    pub fn store_ledger(&self) -> Option<(u64, u64)> {
+        self.store.as_ref().map(|s| s.ledger())
     }
 
     /// Pipeline stage 1: measure a kernel on a device (through the
@@ -459,6 +483,12 @@ mod tests {
             "warm predict must not run the symbolic pass"
         );
         assert!(warm.cache().disk_hits() >= 1);
+        let (index_hits, parses) = warm.store_ledger().unwrap();
+        assert_eq!(
+            parses, 0,
+            "with a fresh index, a warm run performs zero full-artifact parses"
+        );
+        assert!(index_hits > 0, "warm loads must be index-vouched");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

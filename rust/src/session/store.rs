@@ -5,13 +5,23 @@
 //!
 //! ```text
 //! <root>/stats/<fingerprint:032x>-sg<sub_group_size>.json
-//! <root>/fits/<case>-<device>-<linear|overlap>-<keyhash:016x>.json
+//! <root>/fits/<case>-<device>-<linear|overlap>-m<fp:08x>-<keyhash:016x>.json
+//! <root>/shared/<fingerprint:032x>.json     (deduplicated sg-invariant
+//!                                            stats sections, `store compact`)
+//! <root>/index.json + <root>/index.journal  (the store index, see
+//!                                            [`super::index`])
 //! ```
 //!
 //! Fit filename components are sanitized to `[A-Za-z0-9_]` (raw case
 //! or device ids containing `-`, `/` or `..` can neither collide nor
 //! escape the store root) and disambiguated by a hash of the *raw*
-//! key, so distinct keys always map to distinct paths.
+//! key — **including the model fingerprint**, whose leading 32 bits
+//! also appear readably as the `m<fp:08x>` field.  Two fits that
+//! differ only in model fingerprint (a re-featured model, or the
+//! sg-32/sg-64 twins of a renamed device) therefore persist side by
+//! side instead of silently evicting each other (the v2 scheme hashed
+//! only case/device/form, so such siblings shared one path and the
+//! embedded-key guard turned the loser into a permanent cold start).
 //!
 //! Every artifact embeds [`STORE_FORMAT_VERSION`] plus the key it was
 //! written under; [`ArtifactStore::load_stats`] / `load_fit` return
@@ -20,6 +30,22 @@
 //! corrupt store therefore degrades to a cold start, never to garbage
 //! predictions.
 //!
+//! Lookups go through the journaled [`StoreIndex`](super::index): the
+//! manifest of valid artifacts is loaded once per process (snapshot +
+//! journal replay, rebuilt from a full scan on corruption or version
+//! skew) and shared read-mostly across every fleet session holding
+//! the store, so warm `load_*`, `store ls`, `stat` and `gc` answer
+//! existence/validity questions with hash-map lookups instead of
+//! per-lookup validation parses and O(N · parse) scans (a cold miss
+//! still falls back to one cheap file-open probe, adopted on success —
+//! the index accelerates, it is never the authority).  The store ledger
+//! ([`ArtifactStore::ledger`]) tallies `index hits` against
+//! `full-artifact parses` — the probe/validate/classify parses the
+//! index is meant to eliminate; payload decodes of index-vouched
+//! artifacts are the irreducible data fetch and are not counted.
+//! With a fresh index, `store ls` and a warm `predict` report zero
+//! full-artifact parses (the CI fleet-store job asserts it).
+//!
 //! Writes go through a per-writer-unique temp file + rename, so any
 //! number of concurrent writers — threads of one process or whole
 //! fleet calibrations racing on a shared store — can leave behind at
@@ -27,7 +53,12 @@
 //! [`ArtifactStore::gc`] is the maintenance half: it sweeps orphaned
 //! temp files and ages out artifacts whose format version, placement
 //! or model fingerprint no longer matches anything the current binary
-//! can reach (`perflex store gc`).
+//! can reach (`perflex store gc`).  [`ArtifactStore::compact`]
+//! deduplicates the sub-group-size-invariant section of stats bundles
+//! shared between sg families of one kernel fingerprint
+//! (`perflex store compact`); reassembled bundles are structurally
+//! identical to the originals, so compaction never changes a report
+//! byte.
 //!
 //! The store implements [`StatsBacking`], which is how a
 //! [`StatsCache`](crate::stats::StatsCache) built with
@@ -37,12 +68,14 @@
 //! fleet calibration against one shared store, every device with the
 //! same sub-group size reuses the first device's counting passes.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 use std::time::SystemTime;
 
 use super::codec;
+use super::index::{JournalOp, StatsEntry, StoreIndex, JOURNAL_COMPACT_THRESHOLD};
 use crate::calibrate::FitResult;
 use crate::stats::{KernelStats, StatsBacking, StatsKey};
 use crate::util::json::Json;
@@ -50,11 +83,14 @@ use crate::util::Fnv128;
 
 /// Bump when any persisted representation (or its semantics) changes;
 /// all artifacts written under other versions are ignored (and swept
-/// by `store gc`).  v2: sanitized + hash-disambiguated fit filenames.
-pub const STORE_FORMAT_VERSION: u64 = 2;
+/// by `store gc`).  v3: fit paths hash the model fingerprint (siblings
+/// differing only in model fingerprint no longer collide), the store
+/// index (`index.json` + journal), and compacted stats artifacts
+/// referencing `<root>/shared/` sections.
+pub const STORE_FORMAT_VERSION: u64 = 3;
 
 /// Identity of one calibration artifact.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct FitKey {
     pub case: String,
     pub device: String,
@@ -66,72 +102,309 @@ pub struct FitKey {
     pub model_fingerprint: u128,
 }
 
+/// One filename component: anything outside `[A-Za-z0-9_]` maps to
+/// `_` (bounded length), so raw case/device ids can neither escape
+/// the store root nor smuggle the `-` field separator.
+fn sanitize_component(s: &str) -> String {
+    let mut out: String = s
+        .chars()
+        .take(40)
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Stats artifact filename — fully invertible (the filename *is* the
+/// key), which is what lets the index serialize keys instead of paths.
+pub(crate) fn stats_file_name(key: &StatsKey) -> String {
+    format!(
+        "{}-sg{}.json",
+        codec::fingerprint_to_hex(key.fingerprint),
+        key.sub_group_size
+    )
+}
+
+fn stats_key_from_name(name: &str) -> Option<StatsKey> {
+    let stem = name.strip_suffix(".json")?;
+    let (fp_hex, sg) = stem.split_once("-sg")?;
+    Some(StatsKey {
+        fingerprint: codec::fingerprint_from_hex(fp_hex).ok()?,
+        sub_group_size: sg.parse().ok()?,
+    })
+}
+
+/// Fit artifact filename.  Sanitization is lossy ("fdiff-16x16" and
+/// "fdiff_16x16" both map to "fdiff_16x16"), so the filename carries a
+/// hash of the raw key fields — case, device, form, **and the model
+/// fingerprint** (the v2 bug: omitting it sent fingerprint-only
+/// siblings to one path, where each save evicted the other).  NUL
+/// separators keep adjacent fields from aliasing, the `m<fp:08x>`
+/// field keeps the fingerprint readable for humans, and the
+/// embedded-key check in `load_fit` remains the actual guard.
+pub(crate) fn fit_file_name(key: &FitKey) -> String {
+    let form = if key.nonlinear { "overlap" } else { "linear" };
+    let mut h = Fnv128::new();
+    h.update(key.case.as_bytes());
+    h.update(&[0]);
+    h.update(key.device.as_bytes());
+    h.update(&[0]);
+    h.update(form.as_bytes());
+    h.update(&[0]);
+    h.update(&key.model_fingerprint.to_le_bytes());
+    format!(
+        "{}-{}-{form}-m{:08x}-{:016x}.json",
+        sanitize_component(&key.case),
+        sanitize_component(&key.device),
+        (key.model_fingerprint >> 96) as u32,
+        h.finish() as u64
+    )
+}
+
+/// Shared (sg-invariant) stats-section filename.
+pub(crate) fn shared_file_name(fp: u128) -> String {
+    format!("{}.json", codec::fingerprint_to_hex(fp))
+}
+
+fn shared_fp_from_name(name: &str) -> Option<u128> {
+    codec::fingerprint_from_hex(name.strip_suffix(".json")?).ok()
+}
+
 /// Disk-backed persistence for session artifacts.
 pub struct ArtifactStore {
     root: PathBuf,
+    /// The journaled manifest of valid artifacts; read-mostly (every
+    /// lookup takes a read lock, only adoption/eviction/maintenance
+    /// write).
+    index: RwLock<StoreIndex>,
+    index_hits: AtomicU64,
+    artifact_parses: AtomicU64,
 }
 
 impl ArtifactStore {
-    /// Open (creating if necessary) a store rooted at `root`, and
-    /// verify up front that both artifact directories are writable —
-    /// so a bad `--store` argument fails before any expensive work,
-    /// not after.
+    /// Open (creating if necessary) a store rooted at `root`, verify
+    /// up front that the artifact directories are writable — so a bad
+    /// `--store` argument fails before any expensive work — and load
+    /// the store index (snapshot + journal replay; full rebuild scan
+    /// on corruption or version skew).
     pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore, String> {
         let root = root.into();
-        for sub in ["stats", "fits"] {
+        for sub in ["stats", "fits", "shared"] {
             crate::util::ensure_writable_dir(
                 &root.join(sub),
                 "artifact store directory",
             )?;
         }
-        Ok(ArtifactStore { root })
+        let store = ArtifactStore {
+            root,
+            index: RwLock::new(StoreIndex::new()),
+            index_hits: AtomicU64::new(0),
+            artifact_parses: AtomicU64::new(0),
+        };
+        store.load_index()?;
+        Ok(store)
     }
 
     pub fn root(&self) -> &Path {
         &self.root
     }
 
-    fn stats_path(&self, key: &StatsKey) -> PathBuf {
-        self.root.join("stats").join(format!(
-            "{}-sg{}.json",
-            codec::fingerprint_to_hex(key.fingerprint),
-            key.sub_group_size
-        ))
+    /// `(index hits, full-artifact parses)`: lookups answered by the
+    /// in-memory index vs artifact files fully parsed to (re)establish
+    /// identity or validity — the per-lookup probes and O(N) scan
+    /// parses the index replaces.  Payload decodes of index-vouched
+    /// artifacts are the data being fetched, not a probe, and are not
+    /// counted; with a fresh index a warm run therefore reports zero
+    /// full-artifact parses (CI-asserted).
+    pub fn ledger(&self) -> (u64, u64) {
+        (
+            self.index_hits.load(Ordering::Relaxed),
+            self.artifact_parses.load(Ordering::Relaxed),
+        )
     }
 
-    /// One filename component: anything outside `[A-Za-z0-9_]` maps to
-    /// `_` (bounded length), so raw case/device ids can neither escape
-    /// the store root nor smuggle the `-` field separator.
-    fn sanitize_component(s: &str) -> String {
-        let mut out: String = s
-            .chars()
-            .take(40)
-            .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
-            .collect();
-        if out.is_empty() {
-            out.push('_');
-        }
-        out
+    pub fn index_hits(&self) -> u64 {
+        self.index_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn artifact_parses(&self) -> u64 {
+        self.artifact_parses.load(Ordering::Relaxed)
+    }
+
+    /// `(stats, fits, shared)` entry counts of the in-memory index.
+    pub fn index_counts(&self) -> (usize, usize, usize) {
+        self.index.read().unwrap().counts()
+    }
+
+    fn count_parse(&self) {
+        self.artifact_parses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count_hit(&self) {
+        self.index_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn stats_path(&self, key: &StatsKey) -> PathBuf {
+        self.root.join("stats").join(stats_file_name(key))
     }
 
     fn fit_path(&self, key: &FitKey) -> PathBuf {
-        let form = if key.nonlinear { "overlap" } else { "linear" };
-        // Sanitization is lossy ("fdiff-16x16" and "fdiff_16x16" both
-        // map to "fdiff_16x16"), so the filename carries a hash of the
-        // raw key fields: distinct keys get distinct paths, and the
-        // readable prefix stays for humans.  The embedded-key check in
-        // `load_fit` remains the actual guard.
-        let mut h = Fnv128::new();
-        h.update(key.case.as_bytes());
-        h.update(key.device.as_bytes());
-        h.update(form.as_bytes());
-        self.root.join("fits").join(format!(
-            "{}-{}-{form}-{:016x}.json",
-            Self::sanitize_component(&key.case),
-            Self::sanitize_component(&key.device),
-            h.finish() as u64
-        ))
+        self.root.join("fits").join(fit_file_name(key))
     }
+
+    fn shared_path(&self, fp: u128) -> PathBuf {
+        self.root.join("shared").join(shared_file_name(fp))
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    fn journal_path(&self) -> PathBuf {
+        self.root.join("index.journal")
+    }
+
+    // -----------------------------------------------------------------
+    // Index maintenance
+    // -----------------------------------------------------------------
+
+    /// Load the index: snapshot, then journal replay on top.  Any
+    /// corruption or version skew falls back to a full rebuild scan —
+    /// the index is an accelerator, never an authority, so the worst
+    /// a bad manifest can cost is one O(N) re-scan.
+    fn load_index(&self) -> Result<(), String> {
+        let snapshot = std::fs::read_to_string(self.index_path())
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| StoreIndex::from_snapshot_json(&j).ok());
+        if let Some(mut index) = snapshot {
+            let (applied, skipped) = self.replay_journal(&mut index);
+            *self.index.write().unwrap() = index;
+            // Tidy the journal when it has grown long or accumulated
+            // unparseable lines (torn appends from crashed writers).
+            if skipped > 0 || applied > JOURNAL_COMPACT_THRESHOLD {
+                self.checkpoint_index();
+            }
+            return Ok(());
+        }
+        self.rebuild_index()
+    }
+
+    /// Replay `index.journal` onto `index`, skipping unparseable lines
+    /// (torn tails from crashed writers, including a fragment a later
+    /// append merged with).  A skipped line is at worst a lost put
+    /// (the next lookup re-adopts from disk) or a lost delete (the
+    /// next vouched load drops the dead entry), so journal damage
+    /// degrades to a few extra parses — never to wrong answers, and
+    /// never to a full rebuild.  Returns `(applied, skipped)` line
+    /// counts.
+    fn replay_journal(&self, index: &mut StoreIndex) -> (usize, usize) {
+        let text = match std::fs::read_to_string(self.journal_path()) {
+            Ok(t) => t,
+            Err(_) => return (0, 0),
+        };
+        let (mut applied, mut skipped) = (0, 0);
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            match Json::parse(line).and_then(|j| JournalOp::from_json(&j)) {
+                Ok(op) => {
+                    index.apply(&op);
+                    applied += 1;
+                }
+                Err(_) => skipped += 1,
+            }
+        }
+        (applied, skipped)
+    }
+
+    /// Rebuild the manifest from a full scan: every artifact file is
+    /// parsed and validated (each one a counted full-artifact parse),
+    /// valid ones are indexed, and a fresh snapshot is written.  The
+    /// (corrupt or stale) journal is truncated *before* the scan: its
+    /// contents predate what the scan will observe, so merging it back
+    /// at checkpoint time could resurrect stale deletes — only lines
+    /// appended by writers racing the scan belong in the new snapshot.
+    fn rebuild_index(&self) -> Result<(), String> {
+        let _ = std::fs::write(self.journal_path(), "");
+        *self.index.write().unwrap() = StoreIndex::new();
+        for sub in ["shared", "stats", "fits"] {
+            let dir = self.root.join(sub);
+            let entries = std::fs::read_dir(&dir)
+                .map_err(|e| format!("reading {}: {e}", dir.display()))?;
+            for entry in entries {
+                let entry =
+                    entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+                let path = entry.path();
+                let name = match path.file_name().and_then(|n| n.to_str()) {
+                    Some(n) => n.to_string(),
+                    None => continue,
+                };
+                if !path.is_file() || name.contains(".tmp.") || !name.ends_with(".json")
+                {
+                    continue;
+                }
+                // classify_* adopt valid unindexed artifacts into the
+                // (currently empty) index as a side effect.
+                match sub {
+                    "stats" => {
+                        let _ = self.classify_stats(&name);
+                    }
+                    "fits" => {
+                        let _ = self.classify_fit(&path, &name);
+                    }
+                    _ => {
+                        let _ = self.classify_shared(&name);
+                    }
+                }
+            }
+        }
+        self.checkpoint_index();
+        Ok(())
+    }
+
+    /// Write an atomic snapshot of the index and truncate the journal.
+    /// The on-disk journal is merged into the in-memory manifest first,
+    /// so entries appended by *other* fleet processes since this
+    /// process opened the store survive the truncation (a writer racing
+    /// into the tiny merge→truncate window can still lose its line;
+    /// that only costs the next reader one adopt-on-miss parse, never
+    /// correctness).  Best-effort: a full disk degrades the index to a
+    /// rebuild at next open, never the store to an error.
+    fn checkpoint_index(&self) {
+        let text = {
+            let mut index = self.index.write().unwrap();
+            self.replay_journal(&mut index);
+            index.to_snapshot_json().to_string()
+        };
+        if self.write_atomic(&self.index_path(), &text).is_ok() {
+            let _ = std::fs::write(self.journal_path(), "");
+        }
+    }
+
+    /// Apply one index mutation and append it to the journal
+    /// (best-effort; an unwritable journal costs a rebuild later, not
+    /// an error now).  The line is rendered up front and issued as one
+    /// `write_all` on an `O_APPEND` handle: concurrent fleet writers
+    /// append whole lines, never interleaved bytes — a multi-write
+    /// `writeln!` here could tear a *non-final* journal line and force
+    /// every subsequent open into a full rebuild scan.
+    fn record(&self, op: JournalOp) {
+        self.index.write().unwrap().apply(&op);
+        use std::io::Write;
+        let line = format!("{}\n", op.to_json());
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.journal_path())
+        {
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Reads and writes
+    // -----------------------------------------------------------------
 
     /// Atomic-enough write: temp file in the target directory + rename.
     /// The temp name is unique per (process, write), so concurrent
@@ -151,9 +424,10 @@ impl ArtifactStore {
             .map_err(|e| format!("publishing {}: {e}", path.display()))
     }
 
-    fn read_versioned(&self, path: &Path, kind: &str) -> Option<Json> {
-        let text = std::fs::read_to_string(path).ok()?;
-        let j = Json::parse(&text).ok()?;
+    /// Validate the envelope of a parsed artifact: current format
+    /// version + expected kind.
+    fn parse_versioned(text: &str, kind: &str) -> Option<Json> {
+        let j = Json::parse(text).ok()?;
         let version = j.get("format_version")?.as_f64()?;
         if version != STORE_FORMAT_VERSION as f64 {
             return None;
@@ -176,21 +450,95 @@ impl ArtifactStore {
     }
 
     /// Load a persisted stats bundle; `None` on miss, version skew,
-    /// key mismatch or parse failure.
+    /// key mismatch or parse failure.  An index hit vouches for the
+    /// artifact (the read is a payload fetch); an index miss falls
+    /// back to a disk probe — a counted full-artifact parse when the
+    /// file exists — whose result is adopted into the index, so
+    /// another process's writes cost one parse, then hash-map hits.
     pub fn load_stats(&self, key: &StatsKey) -> Option<KernelStats> {
-        Self::contained(|| {
-            let j = self.read_versioned(&self.stats_path(key), "kernel-stats")?;
-            if j.get("fingerprint")?.as_str()?
-                != codec::fingerprint_to_hex(key.fingerprint)
-            {
+        let indexed = self.index.read().unwrap().stats(key);
+        let vouched = indexed.is_some();
+        if vouched {
+            self.count_hit();
+        }
+        let loaded = Self::contained(|| self.read_stats_artifact(key, vouched));
+        match &loaded {
+            // Adopt on miss, and refresh a lagging `compacted` flag on
+            // a hit: another process's `store compact` may have
+            // rewritten the artifact since this index was loaded, and
+            // gc's shared-section reference set depends on the flag.
+            Some((_, compacted)) => {
+                let fresh = StatsEntry {
+                    compacted: *compacted,
+                };
+                if indexed != Some(fresh) {
+                    self.record(JournalOp::PutStats(*key, fresh));
+                }
+            }
+            None if vouched => self.record(JournalOp::DelStats(*key)),
+            None => {}
+        }
+        loaded.map(|(st, _)| st)
+    }
+
+    /// The full read path for one stats artifact; the returned flag is
+    /// true when the artifact is in compacted form.
+    fn read_stats_artifact(
+        &self,
+        key: &StatsKey,
+        vouched: bool,
+    ) -> Option<(KernelStats, bool)> {
+        let text = std::fs::read_to_string(self.stats_path(key)).ok()?;
+        if !vouched {
+            self.count_parse();
+        }
+        let j = Self::parse_versioned(&text, "kernel-stats")?;
+        if j.get("fingerprint")?.as_str()?
+            != codec::fingerprint_to_hex(key.fingerprint)
+        {
+            return None;
+        }
+        if j.get("sub_group_size")?.as_f64()? != key.sub_group_size as f64 {
+            return None;
+        }
+        if let Some(stats) = j.get("stats") {
+            let st = codec::stats_from_json(stats).ok()?;
+            return (st.sub_group_size == key.sub_group_size).then_some((st, false));
+        }
+        // Compacted form: per-sub-group op counts plus a reference to
+        // the deduplicated sg-invariant section under <root>/shared/.
+        if j.get("shared")?.as_str()? != codec::fingerprint_to_hex(key.fingerprint) {
+            return None;
+        }
+        let ops = codec::ops_from_json(j.get("ops")?).ok()?;
+        let shared = self.read_shared_artifact(key.fingerprint)?;
+        Some((codec::stats_from_parts(shared, ops, key.sub_group_size), true))
+    }
+
+    /// Load one shared sg-invariant stats section (compacted stores).
+    fn read_shared_artifact(&self, fp: u128) -> Option<codec::SharedStats> {
+        let vouched = self.index.read().unwrap().has_shared(fp);
+        if vouched {
+            self.count_hit();
+        }
+        let loaded = (|| {
+            let text = std::fs::read_to_string(self.shared_path(fp)).ok()?;
+            if !vouched {
+                self.count_parse();
+            }
+            let j = Self::parse_versioned(&text, "kernel-stats-shared")?;
+            if j.get("fingerprint")?.as_str()? != codec::fingerprint_to_hex(fp) {
                 return None;
             }
-            if j.get("sub_group_size")?.as_f64()? != key.sub_group_size as f64 {
-                return None;
-            }
-            let st = codec::stats_from_json(j.get("stats")?).ok()?;
-            (st.sub_group_size == key.sub_group_size).then_some(st)
-        })
+            codec::stats_shared_from_json(j.get("shared")?).ok()
+        })();
+        if vouched && loaded.is_none() {
+            self.record(JournalOp::DelShared(fp));
+        }
+        if !vouched && loaded.is_some() {
+            self.record(JournalOp::PutShared(fp));
+        }
+        loaded
     }
 
     pub fn save_stats(&self, key: &StatsKey, stats: &KernelStats) -> Result<(), String> {
@@ -201,26 +549,51 @@ impl ArtifactStore {
             ("sub_group_size", (key.sub_group_size as i64).into()),
             ("stats", codec::stats_to_json(stats)),
         ]);
-        self.write_atomic(&self.stats_path(key), &j.to_string())
+        self.write_atomic(&self.stats_path(key), &j.to_string())?;
+        let entry = StatsEntry { compacted: false };
+        if self.index.read().unwrap().stats(key) != Some(entry) {
+            self.record(JournalOp::PutStats(*key, entry));
+        }
+        Ok(())
     }
 
     /// Load a persisted calibration; `None` unless the format version
-    /// and the full model fingerprint both match.
+    /// and the full embedded key (case, device, form and model
+    /// fingerprint) all match.  Index vouching and miss-adoption work
+    /// as in [`ArtifactStore::load_stats`].
     pub fn load_fit(&self, key: &FitKey) -> Option<FitResult> {
-        Self::contained(|| {
-            let j = self.read_versioned(&self.fit_path(key), "fit")?;
-            if j.get("case")?.as_str()? != key.case
-                || j.get("device")?.as_str()? != key.device
-            {
-                return None;
-            }
-            if j.get("model_fingerprint")?.as_str()?
-                != codec::fingerprint_to_hex(key.model_fingerprint)
-            {
-                return None;
-            }
-            codec::fit_from_json(j.get("fit")?).ok()
-        })
+        let vouched = self.index.read().unwrap().has_fit(key);
+        if vouched {
+            self.count_hit();
+        }
+        let loaded = Self::contained(|| self.read_fit_artifact(key, vouched));
+        if vouched && loaded.is_none() {
+            self.record(JournalOp::DelFit(key.clone()));
+        }
+        if !vouched && loaded.is_some() {
+            self.record(JournalOp::PutFit(key.clone()));
+        }
+        loaded
+    }
+
+    fn read_fit_artifact(&self, key: &FitKey, vouched: bool) -> Option<FitResult> {
+        let text = std::fs::read_to_string(self.fit_path(key)).ok()?;
+        if !vouched {
+            self.count_parse();
+        }
+        let j = Self::parse_versioned(&text, "fit")?;
+        if j.get("case")?.as_str()? != key.case
+            || j.get("device")?.as_str()? != key.device
+            || j.get("nonlinear")?.as_bool()? != key.nonlinear
+        {
+            return None;
+        }
+        if j.get("model_fingerprint")?.as_str()?
+            != codec::fingerprint_to_hex(key.model_fingerprint)
+        {
+            return None;
+        }
+        codec::fit_from_json(j.get("fit")?).ok()
     }
 
     pub fn save_fit(&self, key: &FitKey, fit: &FitResult) -> Result<(), String> {
@@ -236,15 +609,44 @@ impl ArtifactStore {
             ),
             ("fit", codec::fit_to_json(fit)),
         ]);
-        self.write_atomic(&self.fit_path(key), &j.to_string())
+        self.write_atomic(&self.fit_path(key), &j.to_string())?;
+        if !self.index.read().unwrap().has_fit(key) {
+            self.record(JournalOp::PutFit(key.clone()));
+        }
+        Ok(())
     }
 
-    /// Inventory of every file under the store's artifact directories,
-    /// classified and validated (`perflex store ls`/`stat`), sorted by
-    /// path for deterministic output.
+    // -----------------------------------------------------------------
+    // Inventory, GC and compaction
+    // -----------------------------------------------------------------
+
+    /// Inventory of every file under the store root, classified and
+    /// validated (`perflex store ls`/`stat`), sorted by path for
+    /// deterministic output.  Indexed artifacts are described from the
+    /// manifest without touching their bytes; only unindexed `.json`
+    /// files pay a (counted) classification parse.  Nested
+    /// directories and foreign files are surfaced — never silently
+    /// omitted — so `ls`/`stat`/`gc` account for everything, and
+    /// `index.json`/`index.journal` (store metadata, not artifacts)
+    /// are the only paths skipped.
     pub fn list(&self) -> Result<Vec<ArtifactInfo>, String> {
         let mut out = Vec::new();
-        for sub in ["stats", "fits"] {
+        let entries = std::fs::read_dir(&self.root)
+            .map_err(|e| format!("reading {}: {e}", self.root.display()))?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| format!("reading {}: {e}", self.root.display()))?;
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if matches!(
+                name.as_str(),
+                "stats" | "fits" | "shared" | "index.json" | "index.journal"
+            ) {
+                continue;
+            }
+            out.push(self.classify_foreign(&path));
+        }
+        for sub in ["stats", "fits", "shared"] {
             let dir = self.root.join(sub);
             let entries = std::fs::read_dir(&dir)
                 .map_err(|e| format!("reading {}: {e}", dir.display()))?;
@@ -252,7 +654,9 @@ impl ArtifactStore {
                 let entry =
                     entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
                 let path = entry.path();
-                if path.is_file() {
+                if path.is_dir() {
+                    out.push(self.classify_foreign(&path));
+                } else {
                     out.push(self.classify(sub, &path));
                 }
             }
@@ -261,22 +665,71 @@ impl ArtifactStore {
         Ok(out)
     }
 
-    fn classify(&self, sub: &str, path: &Path) -> ArtifactInfo {
-        let (bytes, age_secs) = match std::fs::metadata(path) {
+    fn file_meta(path: &Path) -> (u64, Option<u64>) {
+        match std::fs::metadata(path) {
             Ok(m) => (
                 m.len(),
-                m.modified().ok().and_then(|t| {
-                    SystemTime::now().duration_since(t).ok().map(|d| d.as_secs())
+                // A future mtime (clock skew between fleet writers)
+                // counts as age 0, not "unknown": a skewed temp file
+                // must still age toward the GC TTL instead of living
+                // forever.
+                m.modified().ok().map(|t| {
+                    SystemTime::now()
+                        .duration_since(t)
+                        .map(|d| d.as_secs())
+                        .unwrap_or(0)
                 }),
             ),
             Err(_) => (0, None),
-        };
+        }
+    }
+
+    /// Classify something the store does not own: nested directories,
+    /// root-level files, and temp debris outside the artifact naming
+    /// schemes.  Foreign entries are surfaced but never removed.
+    fn classify_foreign(&self, path: &Path) -> ArtifactInfo {
+        let (bytes, age_secs) = Self::file_meta(path);
         let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
-        let (kind, describe, model_fingerprint, valid) =
+        let (kind, describe, valid) = if name.contains(".tmp.") {
+            (
+                ArtifactKind::Temp,
+                "temp file from an interrupted write".to_string(),
+                false,
+            )
+        } else if path.is_dir() {
+            (
+                ArtifactKind::Other,
+                "nested directory (left alone)".to_string(),
+                true,
+            )
+        } else {
+            (
+                ArtifactKind::Other,
+                "foreign file (left alone)".to_string(),
+                true,
+            )
+        };
+        ArtifactInfo {
+            path: path.to_path_buf(),
+            kind,
+            bytes,
+            age_secs,
+            describe,
+            model_fingerprint: None,
+            shared_fingerprint: None,
+            valid,
+        }
+    }
+
+    fn classify(&self, sub: &str, path: &Path) -> ArtifactInfo {
+        let (bytes, age_secs) = Self::file_meta(path);
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        let (kind, describe, model_fingerprint, shared_fingerprint, valid) =
             if name.contains(".tmp.") {
                 (
                     ArtifactKind::Temp,
                     "temp file from an interrupted write".to_string(),
+                    None,
                     None,
                     false,
                 )
@@ -285,14 +738,18 @@ impl ArtifactStore {
                     ArtifactKind::Other,
                     "foreign file (left alone)".to_string(),
                     None,
+                    None,
                     true,
                 )
             } else if sub == "stats" {
-                let (describe, valid) = self.classify_stats(path, name);
-                (ArtifactKind::Stats, describe, None, valid)
+                let (describe, shared_fp, valid) = self.classify_stats(name);
+                (ArtifactKind::Stats, describe, None, shared_fp, valid)
+            } else if sub == "fits" {
+                let (describe, fp, valid) = self.classify_fit(path, name);
+                (ArtifactKind::Fit, describe, fp, None, valid)
             } else {
-                let (describe, fp, valid) = self.classify_fit(path);
-                (ArtifactKind::Fit, describe, fp, valid)
+                let (describe, fp, valid) = self.classify_shared(name);
+                (ArtifactKind::Shared, describe, None, fp, valid)
             };
         ArtifactInfo {
             path: path.to_path_buf(),
@@ -301,41 +758,71 @@ impl ArtifactStore {
             age_secs,
             describe,
             model_fingerprint,
+            shared_fingerprint,
             valid,
         }
     }
 
-    fn classify_stats(&self, path: &Path, name: &str) -> (String, bool) {
-        // Filename scheme: <fingerprint:032x>-sg<sub_group_size>.json.
-        let key = name
-            .strip_suffix(".json")
-            .and_then(|stem| stem.split_once("-sg"))
-            .and_then(|(fp_hex, sg)| {
-                Some(StatsKey {
-                    fingerprint: codec::fingerprint_from_hex(fp_hex).ok()?,
-                    sub_group_size: sg.parse().ok()?,
-                })
-            });
-        match key {
-            Some(key) => {
-                let valid = self.stats_path(&key) == path
-                    && self.load_stats(&key).is_some();
-                (
-                    format!(
-                        "stats kernel={} sg={}",
-                        codec::fingerprint_to_hex(key.fingerprint),
-                        key.sub_group_size
-                    ),
-                    valid,
-                )
+    /// `(describe, referenced shared fingerprint, valid)` for one
+    /// stats artifact.  The filename *is* the key, so an indexed entry
+    /// answers without touching the file.
+    fn classify_stats(&self, name: &str) -> (String, Option<u128>, bool) {
+        let key = match stats_key_from_name(name)
+            .filter(|k| stats_file_name(k) == name)
+        {
+            Some(k) => k,
+            None => return ("unrecognized stats filename".to_string(), None, false),
+        };
+        let describe = format!(
+            "stats kernel={} sg={}",
+            codec::fingerprint_to_hex(key.fingerprint),
+            key.sub_group_size
+        );
+        let indexed = self.index.read().unwrap().stats(&key);
+        if let Some(entry) = indexed {
+            self.count_hit();
+            return (
+                describe,
+                entry.compacted.then_some(key.fingerprint),
+                true,
+            );
+        }
+        // Unindexed: one counted parse decides validity (and, on
+        // success inside load_stats' probe path, adopts the entry).
+        match Self::contained(|| self.read_stats_artifact(&key, false)) {
+            Some((_, compacted)) => {
+                self.record(JournalOp::PutStats(key, StatsEntry { compacted }));
+                (describe, compacted.then_some(key.fingerprint), true)
             }
-            None => ("unrecognized stats filename".to_string(), false),
+            None => (describe, None, false),
         }
     }
 
-    fn classify_fit(&self, path: &Path) -> (String, Option<u128>, bool) {
+    fn fit_describe(key: &FitKey) -> String {
+        let form = if key.nonlinear { "overlap" } else { "linear" };
+        format!(
+            "fit {}/{} {form} model={}",
+            key.case,
+            key.device,
+            codec::fingerprint_to_hex(key.model_fingerprint)
+        )
+    }
+
+    /// `(describe, model fingerprint, valid)` for one fit artifact.
+    fn classify_fit(&self, path: &Path, name: &str) -> (String, Option<u128>, bool) {
+        let indexed = self.index.read().unwrap().fit_for_file(name).cloned();
+        if let Some(key) = indexed {
+            self.count_hit();
+            return (
+                Self::fit_describe(&key),
+                Some(key.model_fingerprint),
+                true,
+            );
+        }
         let parsed = Self::contained(|| {
-            let j = self.read_versioned(path, "fit")?;
+            let text = std::fs::read_to_string(path).ok()?;
+            self.count_parse();
+            let j = Self::parse_versioned(&text, "fit")?;
             let key = FitKey {
                 case: j.get("case")?.as_str()?.to_string(),
                 device: j.get("device")?.as_str()?.to_string(),
@@ -352,20 +839,14 @@ impl ArtifactStore {
             Some((key, payload_ok)) => {
                 // A valid artifact also lives where its embedded key
                 // says it should: anything else (e.g. a file written
-                // under an older path scheme) can never be loaded and
-                // is GC fodder.
-                let placed = self.fit_path(&key) == path;
-                let form = if key.nonlinear { "overlap" } else { "linear" };
-                (
-                    format!(
-                        "fit {}/{} {form} model={}",
-                        key.case,
-                        key.device,
-                        codec::fingerprint_to_hex(key.model_fingerprint)
-                    ),
-                    Some(key.model_fingerprint),
-                    payload_ok && placed,
-                )
+                // under the v2 path scheme) can never be loaded and is
+                // GC fodder.
+                let placed = fit_file_name(&key) == name;
+                let valid = payload_ok && placed;
+                if valid {
+                    self.record(JournalOp::PutFit(key.clone()));
+                }
+                (Self::fit_describe(&key), Some(key.model_fingerprint), valid)
             }
             None => (
                 "unreadable, stale-version or foreign fit artifact".to_string(),
@@ -375,15 +856,123 @@ impl ArtifactStore {
         }
     }
 
+    /// `(describe, fingerprint, valid)` for one shared stats section.
+    fn classify_shared(&self, name: &str) -> (String, Option<u128>, bool) {
+        let fp = match shared_fp_from_name(name).filter(|fp| shared_file_name(*fp) == name)
+        {
+            Some(fp) => fp,
+            None => {
+                return (
+                    "unrecognized shared-section filename".to_string(),
+                    None,
+                    false,
+                )
+            }
+        };
+        let describe = format!(
+            "shared stats section kernel={}",
+            codec::fingerprint_to_hex(fp)
+        );
+        if self.index.read().unwrap().has_shared(fp) {
+            self.count_hit();
+            return (describe, Some(fp), true);
+        }
+        // read_shared_artifact adopts on success / counts the parse.
+        let ok = Self::contained(|| self.read_shared_artifact(fp)).is_some();
+        (describe, Some(fp), ok)
+    }
+
+    /// Before sweeping an apparently-orphaned shared section, verify
+    /// against the *artifacts on disk* that no twin of its family
+    /// references it: the in-memory `compacted` flags can lag another
+    /// process's `store compact`, and removing a section that live
+    /// twins reference would turn them all into permanent cold starts.
+    /// Only runs for candidate orphans (each family member read is a
+    /// counted full-artifact parse), and heals any lagging flag it
+    /// finds.
+    fn shared_referenced_on_disk(&self, fp: u128) -> bool {
+        let family: Vec<(StatsKey, StatsEntry)> = {
+            let index = self.index.read().unwrap();
+            index
+                .stats_entries()
+                .filter(|(k, _)| k.fingerprint == fp)
+                .map(|(k, e)| (*k, *e))
+                .collect()
+        };
+        let mut referenced = false;
+        for (key, entry) in family {
+            if let Some((_, compacted)) =
+                Self::contained(|| self.read_stats_artifact(&key, false))
+            {
+                let fresh = StatsEntry { compacted };
+                if fresh != entry {
+                    self.record(JournalOp::PutStats(key, fresh));
+                }
+                referenced |= compacted;
+            }
+        }
+        referenced
+    }
+
+    /// Drop the index entry (if any) behind a file GC just removed.
+    fn forget_file(&self, kind: ArtifactKind, path: &Path) {
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => return,
+        };
+        match kind {
+            ArtifactKind::Stats => {
+                if let Some(key) = stats_key_from_name(name) {
+                    if self.index.read().unwrap().stats(&key).is_some() {
+                        self.record(JournalOp::DelStats(key));
+                    }
+                }
+            }
+            ArtifactKind::Fit => {
+                let indexed = self.index.read().unwrap().fit_for_file(name).cloned();
+                if let Some(key) = indexed {
+                    self.record(JournalOp::DelFit(key));
+                }
+            }
+            ArtifactKind::Shared => {
+                if let Some(fp) = shared_fp_from_name(name) {
+                    if self.index.read().unwrap().has_shared(fp) {
+                        self.record(JournalOp::DelShared(fp));
+                    }
+                }
+            }
+            ArtifactKind::Temp | ArtifactKind::Other => {}
+        }
+    }
+
     /// Age out everything the store can prove dead: artifacts that are
     /// corrupt, carry a stale [`STORE_FORMAT_VERSION`], sit at a path
-    /// their embedded key no longer maps to, or (for fits, when a
+    /// their embedded key no longer maps to, (for fits, when a
     /// reachability set is given) belong to a model fingerprint the
-    /// current binary can no longer produce — plus temp files older
-    /// than `temp_ttl_secs`.  Foreign files are never touched.
+    /// current binary can no longer produce, or (for shared sections)
+    /// are referenced by no valid stats artifact — plus temp files
+    /// older than `temp_ttl_secs`.  Foreign files and nested
+    /// directories are never touched.
+    ///
+    /// Corruption detection trusts the index: an *unindexed* corrupt
+    /// file is caught (and swept) by its classification parse, while a
+    /// file corrupted *behind* a valid index entry stays invisible to
+    /// `ls`/`stat`/`gc` until the first warm load fails — which evicts
+    /// the entry (cold start, never garbage), after which the next
+    /// sweep reclaims the bytes.  A non-dry-run GC ends by
+    /// checkpointing the index (journal merge + snapshot + journal
+    /// truncation).
     pub fn gc(&self, opts: &GcOptions) -> Result<GcOutcome, String> {
+        let infos = self.list()?;
+        // Shared sections are live while any valid stats artifact
+        // references them.
+        let referenced: HashSet<u128> = infos
+            .iter()
+            .filter(|i| i.kind == ArtifactKind::Stats && i.valid)
+            .filter_map(|i| i.shared_fingerprint)
+            .collect();
         let mut out = GcOutcome::default();
-        for info in self.list()? {
+        for info in infos {
             out.scanned += 1;
             let reason = match info.kind {
                 ArtifactKind::Temp => {
@@ -394,7 +983,9 @@ impl ArtifactStore {
                     }
                 }
                 ArtifactKind::Other => None,
-                ArtifactKind::Stats | ArtifactKind::Fit if !info.valid => {
+                ArtifactKind::Stats | ArtifactKind::Fit | ArtifactKind::Shared
+                    if !info.valid =>
+                {
                     Some("stale, corrupt or misplaced artifact".to_string())
                 }
                 ArtifactKind::Fit => match (opts.reachable_fits, info.model_fingerprint)
@@ -404,6 +995,15 @@ impl ArtifactStore {
                     ),
                     _ => None,
                 },
+                ArtifactKind::Shared => match info.shared_fingerprint {
+                    Some(fp)
+                        if !referenced.contains(&fp)
+                            && !self.shared_referenced_on_disk(fp) =>
+                    {
+                        Some("shared stats section no longer referenced".to_string())
+                    }
+                    _ => None,
+                },
                 ArtifactKind::Stats => None,
             };
             if let Some(reason) = reason {
@@ -411,11 +1011,117 @@ impl ArtifactStore {
                     std::fs::remove_file(&info.path).map_err(|e| {
                         format!("removing {}: {e}", info.path.display())
                     })?;
+                    self.forget_file(info.kind, &info.path);
                 }
                 out.reclaimed_bytes += info.bytes;
                 out.removed.push((info.path, reason));
             }
         }
+        if !opts.dry_run {
+            self.checkpoint_index();
+        }
+        Ok(out)
+    }
+
+    /// Deduplicate the sub-group-size-invariant section of stats
+    /// bundles shared between sg families of one kernel fingerprint
+    /// (`perflex store compact`): families with two or more sub-group
+    /// twins get one `<root>/shared/<fingerprint>.json` section, and
+    /// each twin is rewritten to carry only its per-sg op counts plus
+    /// a reference.  Reassembled bundles are structurally identical to
+    /// the originals — warm reports stay byte-identical — and a
+    /// family whose twins' invariant sections do not encode
+    /// byte-identically (a hand-edited artifact) is skipped, never
+    /// grafted.  Ends by checkpointing the index.
+    pub fn compact(&self) -> Result<CompactOutcome, String> {
+        let mut groups: HashMap<u128, Vec<(StatsKey, StatsEntry)>> = HashMap::new();
+        {
+            let index = self.index.read().unwrap();
+            for (key, entry) in index.stats_entries() {
+                groups.entry(key.fingerprint).or_default().push((*key, *entry));
+            }
+        }
+        let mut fps: Vec<u128> = groups
+            .iter()
+            .filter(|(_, members)| members.len() >= 2)
+            .map(|(fp, _)| *fp)
+            .collect();
+        fps.sort_unstable();
+
+        let file_len =
+            |p: &Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        let mut out = CompactOutcome::default();
+        for fp in fps {
+            let mut members = groups.remove(&fp).unwrap();
+            members.sort_by_key(|(k, _)| k.sub_group_size);
+            out.families += 1;
+            let blob_present = self.index.read().unwrap().has_shared(fp);
+            if blob_present && members.iter().all(|(_, e)| e.compacted) {
+                continue; // nothing left to dedup in this family
+            }
+            let mut loaded = Vec::new();
+            for (key, entry) in &members {
+                match self.load_stats(key) {
+                    Some(st) => loaded.push((*key, *entry, st)),
+                    None => break, // vanished or corrupt: skip family
+                }
+            }
+            if loaded.len() != members.len() {
+                out.skipped += 1;
+                continue;
+            }
+            let shared_texts: Vec<String> = loaded
+                .iter()
+                .map(|(_, _, st)| codec::stats_shared_to_json(st).to_string())
+                .collect();
+            if shared_texts.windows(2).any(|w| w[0] != w[1]) {
+                out.skipped += 1;
+                continue;
+            }
+            let bytes_before: u64 = members
+                .iter()
+                .map(|(k, _)| file_len(&self.stats_path(k)))
+                .sum::<u64>()
+                + file_len(&self.shared_path(fp));
+
+            // Publish the shared section *before* rewriting any twin:
+            // a compacted artifact must never reference a missing
+            // section, even across a crash mid-compaction.
+            let shared_j = Json::obj(vec![
+                ("format_version", (STORE_FORMAT_VERSION as i64).into()),
+                ("kind", "kernel-stats-shared".into()),
+                ("fingerprint", codec::fingerprint_to_hex(fp).into()),
+                ("shared", Json::parse(&shared_texts[0]).expect("just encoded")),
+            ]);
+            self.write_atomic(&self.shared_path(fp), &shared_j.to_string())?;
+            if !self.index.read().unwrap().has_shared(fp) {
+                self.record(JournalOp::PutShared(fp));
+            }
+            out.shared_sections += 1;
+            for (key, entry, st) in &loaded {
+                if entry.compacted {
+                    continue; // already referencing the section
+                }
+                let j = Json::obj(vec![
+                    ("format_version", (STORE_FORMAT_VERSION as i64).into()),
+                    ("kind", "kernel-stats".into()),
+                    ("fingerprint", codec::fingerprint_to_hex(fp).into()),
+                    ("sub_group_size", (key.sub_group_size as i64).into()),
+                    ("shared", codec::fingerprint_to_hex(fp).into()),
+                    ("ops", codec::ops_to_json(&st.ops)),
+                ]);
+                self.write_atomic(&self.stats_path(key), &j.to_string())?;
+                self.record(JournalOp::PutStats(*key, StatsEntry { compacted: true }));
+                out.rewritten += 1;
+            }
+            let bytes_after: u64 = members
+                .iter()
+                .map(|(k, _)| file_len(&self.stats_path(k)))
+                .sum::<u64>()
+                + file_len(&self.shared_path(fp));
+            out.reclaimed_bytes += bytes_before.saturating_sub(bytes_after);
+        }
+        self.checkpoint_index();
         Ok(out)
     }
 }
@@ -425,9 +1131,12 @@ impl ArtifactStore {
 pub enum ArtifactKind {
     Stats,
     Fit,
+    /// A deduplicated sg-invariant stats section (`store compact`).
+    Shared,
     /// A `*.tmp.*` file left by an interrupted [`ArtifactStore`] write.
     Temp,
-    /// Anything the store did not write; never removed.
+    /// Anything the store did not write — foreign files and nested
+    /// directories; surfaced by `ls`, never removed.
     Other,
 }
 
@@ -437,13 +1146,17 @@ pub struct ArtifactInfo {
     pub path: PathBuf,
     pub kind: ArtifactKind,
     pub bytes: u64,
-    /// Seconds since last modification (None when the filesystem
-    /// withholds mtimes).
+    /// Seconds since last modification; future mtimes (clock skew)
+    /// clamp to 0, and `None` only when the filesystem withholds
+    /// mtimes entirely.
     pub age_secs: Option<u64>,
     /// Human-readable key description for `store ls`.
     pub describe: String,
     /// Embedded model fingerprint (fit artifacts only).
     pub model_fingerprint: Option<u128>,
+    /// For a compacted stats artifact: the shared section it
+    /// references.  For a shared section: its own fingerprint.
+    pub shared_fingerprint: Option<u128>,
     /// Parses, carries the current format version, and lives at the
     /// path its embedded key maps to.
     pub valid: bool,
@@ -480,6 +1193,21 @@ pub struct GcOutcome {
     pub scanned: usize,
     /// `(path, reason)` per removed artifact, in path order.
     pub removed: Vec<(PathBuf, String)>,
+    pub reclaimed_bytes: u64,
+}
+
+/// What [`ArtifactStore::compact`] did.
+#[derive(Debug, Default)]
+pub struct CompactOutcome {
+    /// Kernel fingerprints with two or more sub-group twins on file.
+    pub families: usize,
+    /// Shared sections written (or refreshed) this run.
+    pub shared_sections: usize,
+    /// Per-sub-group artifacts rewritten into compacted form.
+    pub rewritten: usize,
+    /// Families skipped: a twin vanished mid-compaction or the twins'
+    /// invariant sections diverged (hand-edited artifact).
+    pub skipped: usize,
     pub reclaimed_bytes: u64,
 }
 
@@ -568,7 +1296,8 @@ mod tests {
         store.save_fit(&key, &fit).unwrap();
         assert!(store.load_fit(&key).is_some());
 
-        // Model changed: same path, different fingerprint -> refit.
+        // Model changed: a different fingerprint is a different path
+        // (the v3 fix) and a cold start, not a misload.
         let moved = FitKey {
             model_fingerprint: 0xabce,
             ..key.clone()
@@ -590,7 +1319,7 @@ mod tests {
         assert!(store.load_fit(&key).is_none());
 
         // Truncated JSON -> rejected.
-        std::fs::write(&path, "{\"format_version\":2,\"kind\":\"fit\"").unwrap();
+        std::fs::write(&path, "{\"format_version\":3,\"kind\":\"fit\"").unwrap();
         assert!(store.load_fit(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -602,6 +1331,47 @@ mod tests {
             residual: 0.0,
             iterations: 1,
         }
+    }
+
+    /// THE v3 regression: two fits differing *only* in model
+    /// fingerprint used to map to one path — each save evicted the
+    /// other, and the embedded-key guard turned the survivor's sibling
+    /// into a permanent cold start.  They must persist side by side
+    /// and both load warm.
+    #[test]
+    fn fingerprint_only_siblings_coexist_and_both_load_warm() {
+        let dir = tmp_store("fp-siblings");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let a = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: false,
+            model_fingerprint: 0x1111_2222_3333_4444_5555_6666_7777_8888,
+        };
+        let b = FitKey {
+            model_fingerprint: 0x9999_aaaa_bbbb_cccc_dddd_eeee_ffff_0000,
+            ..a.clone()
+        };
+        assert_ne!(
+            store.fit_path(&a),
+            store.fit_path(&b),
+            "fingerprint-only siblings must get distinct paths"
+        );
+        store.save_fit(&a, &some_fit(1.0)).unwrap();
+        store.save_fit(&b, &some_fit(2.0)).unwrap();
+        assert_eq!(store.load_fit(&a).unwrap().params, vec![1.0]);
+        assert_eq!(store.load_fit(&b).unwrap().params, vec![2.0]);
+
+        // And across a "process restart" (fresh index load).
+        let warm = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(warm.load_fit(&a).unwrap().params, vec![1.0]);
+        assert_eq!(warm.load_fit(&b).unwrap().params, vec![2.0]);
+        assert_eq!(
+            warm.artifact_parses(),
+            0,
+            "journal-replayed index must vouch for both siblings"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The path-ambiguity regression: raw case/device ids containing
@@ -761,6 +1531,239 @@ mod tests {
         std::fs::write(dir.join("fits").join("busy.tmp.1.2"), "x").unwrap();
         let gentle = store.gc(&GcOptions::default()).unwrap();
         assert!(gentle.removed.is_empty(), "{:?}", gentle.removed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Clock-skew regression: a temp file whose mtime is in the
+    /// *future* used to get `age_secs = None` and survive every sweep;
+    /// it must count as age 0 and age out normally.
+    #[test]
+    fn future_mtime_temp_files_age_from_zero_not_forever() {
+        let dir = tmp_store("skewed-mtime");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let orphan = dir.join("stats").join("skewed.tmp.1.0");
+        std::fs::write(&orphan, "partial").unwrap();
+        let f = std::fs::File::options().write(true).open(&orphan).unwrap();
+        f.set_modified(SystemTime::now() + std::time::Duration::from_secs(3600))
+            .unwrap();
+        drop(f);
+
+        let info = store
+            .list()
+            .unwrap()
+            .into_iter()
+            .find(|i| i.path == orphan)
+            .expect("skewed temp file must be surfaced");
+        assert_eq!(info.kind, ArtifactKind::Temp);
+        assert_eq!(info.age_secs, Some(0), "future mtime must clamp to age 0");
+
+        // A TTL-respecting sweep spares it (age 0 < ttl)...
+        let gentle = store.gc(&GcOptions::default()).unwrap();
+        assert!(gentle.removed.is_empty(), "{:?}", gentle.removed);
+        // ... and a zero-TTL sweep reclaims it instead of skipping it.
+        let gc = store
+            .gc(&GcOptions {
+                reachable_fits: None,
+                temp_ttl_secs: 0,
+                dry_run: false,
+            })
+            .unwrap();
+        assert_eq!(gc.removed.len(), 1, "{:?}", gc.removed);
+        assert!(!orphan.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Nested directories under the artifact dirs used to be invisible
+    /// to ls/stat/gc (`is_file` guard); they must be surfaced as
+    /// foreign entries and never removed.
+    #[test]
+    fn nested_directories_are_surfaced_and_never_removed() {
+        let dir = tmp_store("nested");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let nested = dir.join("stats").join("backup");
+        std::fs::create_dir_all(&nested).unwrap();
+        std::fs::write(nested.join("old.json"), "{}").unwrap();
+
+        let infos = store.list().unwrap();
+        let info = infos
+            .iter()
+            .find(|i| i.path == nested)
+            .expect("nested directory must be surfaced, not skipped");
+        assert_eq!(info.kind, ArtifactKind::Other);
+        assert!(info.valid);
+        assert!(info.describe.contains("nested directory"));
+
+        let gc = store
+            .gc(&GcOptions {
+                reachable_fits: None,
+                temp_ttl_secs: 0,
+                dry_run: false,
+            })
+            .unwrap();
+        assert!(gc.removed.is_empty(), "{:?}", gc.removed);
+        assert!(nested.exists() && nested.join("old.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `compact` dedups the sg-invariant section between sub-group
+    /// twins; both twins must reload exactly (byte-identical
+    /// re-encoding), the orphaned section must be GC'd once its
+    /// referents are gone, and a second compaction must be a no-op.
+    #[test]
+    fn compact_dedups_sub_group_twins_and_reloads_exactly() {
+        let dir = tmp_store("compact");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let k = crate::uipick::derived::build_axpy(DType::F32).unwrap().freeze();
+        let keys: Vec<StatsKey> = [32u64, 64]
+            .iter()
+            .map(|&sg| StatsKey {
+                fingerprint: k.fingerprint(),
+                sub_group_size: sg,
+            })
+            .collect();
+        let mut originals = Vec::new();
+        for key in &keys {
+            let st = crate::stats::gather(&k, key.sub_group_size).unwrap();
+            store.save_stats(key, &st).unwrap();
+            originals.push(codec::stats_to_json(&st).to_string());
+        }
+
+        let outcome = store.compact().unwrap();
+        assert_eq!(outcome.families, 1);
+        assert_eq!(outcome.shared_sections, 1);
+        assert_eq!(outcome.rewritten, 2);
+        assert_eq!(outcome.skipped, 0);
+        assert!(
+            store.root().join("shared").join(shared_file_name(k.fingerprint())).exists(),
+            "shared section must be on disk"
+        );
+
+        for (key, original) in keys.iter().zip(&originals) {
+            let back = store.load_stats(key).expect("compacted twin must load");
+            assert_eq!(
+                codec::stats_to_json(&back).to_string(),
+                *original,
+                "reassembled bundle must be byte-identical (sg={})",
+                key.sub_group_size
+            );
+        }
+        // GC right after compaction: everything is referenced, nothing
+        // is removed.
+        let gc = store.gc(&GcOptions::default()).unwrap();
+        assert!(gc.removed.is_empty(), "{:?}", gc.removed);
+
+        // A second compaction finds nothing left to rewrite.
+        let again = store.compact().unwrap();
+        assert_eq!((again.shared_sections, again.rewritten), (0, 0));
+
+        // Remove both twins: the shared section is orphaned and GC'd.
+        for key in &keys {
+            std::fs::remove_file(store.stats_path(key)).unwrap();
+            assert!(store.load_stats(key).is_none());
+        }
+        let gc = store
+            .gc(&GcOptions {
+                reachable_fits: None,
+                temp_ttl_secs: 0,
+                dry_run: false,
+            })
+            .unwrap();
+        assert_eq!(gc.removed.len(), 1, "{:?}", gc.removed);
+        assert!(
+            !store.root().join("shared").join(shared_file_name(k.fingerprint())).exists(),
+            "orphaned shared section must be reclaimed"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A fresh open replays the journal: every artifact the first
+    /// "process" saved is vouched for without a single full-artifact
+    /// parse, and `ls` stays parse-free too.
+    #[test]
+    fn journal_replay_makes_reopened_stores_parse_free() {
+        let dir = tmp_store("replay");
+        let key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 0x77,
+        };
+        {
+            let store = ArtifactStore::open(&dir).unwrap();
+            store.save_fit(&key, &some_fit(4.0)).unwrap();
+            let k =
+                crate::uipick::derived::build_axpy(DType::F32).unwrap().freeze();
+            let skey = StatsKey {
+                fingerprint: k.fingerprint(),
+                sub_group_size: 32,
+            };
+            store
+                .save_stats(&skey, &crate::stats::gather(&k, 32).unwrap())
+                .unwrap();
+        }
+        let warm = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(
+            warm.index_counts(),
+            (1, 1, 0),
+            "journal replay must reconstruct the manifest"
+        );
+        assert!(warm.load_fit(&key).is_some());
+        let infos = warm.list().unwrap();
+        assert!(infos.iter().all(|i| i.valid), "{infos:?}");
+        assert_eq!(
+            warm.artifact_parses(),
+            0,
+            "a fresh index must answer ls + warm loads without parses"
+        );
+        assert!(warm.index_hits() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Corrupt index metadata (snapshot or journal) must trigger a
+    /// full rebuild scan that restores the manifest — never an error,
+    /// never a cold store.
+    #[test]
+    fn corrupt_index_rebuilds_from_scan() {
+        let dir = tmp_store("rebuild");
+        let key = FitKey {
+            case: "dg".into(),
+            device: "amd_r9_fury".into(),
+            nonlinear: false,
+            model_fingerprint: 0x55,
+        };
+        {
+            let store = ArtifactStore::open(&dir).unwrap();
+            store.save_fit(&key, &some_fit(9.0)).unwrap();
+        }
+        // Torn final journal line: ignored, no rebuild needed.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(dir.join("index.journal"))
+                .unwrap();
+            write!(f, "{{\"op\":\"put-f").unwrap();
+        }
+        {
+            let store = ArtifactStore::open(&dir).unwrap();
+            assert!(store.load_fit(&key).is_some());
+            assert_eq!(store.artifact_parses(), 0, "torn tail must not force a rebuild");
+        }
+        // Corrupt snapshot: rebuild scan re-validates every artifact.
+        std::fs::write(dir.join("index.json"), "{definitely not json").unwrap();
+        std::fs::write(dir.join("index.journal"), "garbage\nmore garbage\n").unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert!(
+            store.artifact_parses() > 0,
+            "rebuild must re-scan the artifacts"
+        );
+        assert_eq!(store.index_counts().1, 1, "the fit must be re-indexed");
+        assert!(store.load_fit(&key).is_some());
+        // The rebuild checkpointed a fresh snapshot: the next open is
+        // parse-free again.
+        let warm = ArtifactStore::open(&dir).unwrap();
+        assert!(warm.load_fit(&key).is_some());
+        assert_eq!(warm.artifact_parses(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

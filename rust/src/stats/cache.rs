@@ -30,7 +30,14 @@
 //!   is written back, so repeated CLI invocations against the same
 //!   store start warm.  Backing hits are tallied separately
 //!   ([`StatsCache::disk_hits`]); [`StatsCache::misses`] keeps meaning
-//!   "ran the full symbolic pass".
+//!   "ran the full symbolic pass".  The disk backing answers
+//!   existence/validity through the store's journaled index (a
+//!   hash-map lookup — see `perflex::session::index`): a vouched hit
+//!   skips the probe/validate parse and decodes only the payload it
+//!   fetches, while a miss still falls back to one cheap file-open
+//!   probe (adopt-on-miss keeps the index an accelerator, never an
+//!   authority); the store ledger (`ArtifactStore::ledger`) counts
+//!   index hits vs full-artifact parses next to this cache's ledger.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

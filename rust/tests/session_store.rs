@@ -8,10 +8,13 @@
 
 use std::path::PathBuf;
 
+use perflex::calibrate::FitResult;
 use perflex::coordinator::run_experiment_in_session;
 use perflex::coordinator::expsets;
 use perflex::gpusim::{device_by_id, fleet};
-use perflex::session::{reachable_fit_fingerprints, GcOptions, Session};
+use perflex::session::{
+    fit_key_parts, reachable_fit_fingerprints, GcOptions, Session,
+};
 
 fn tmp_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!(
@@ -197,6 +200,150 @@ fn fleet_experiment_fits_warm_start_from_shared_store() {
         "warm fleet run must not run the counting pass"
     );
     assert!(warm.cache().disk_hits() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The v3 fit-path regression at session level: two keys minted by
+/// `fit_key_parts` for the *same* (case, device, form) but different
+/// model shapes (here: a changed measurement set, i.e. a "re-featured"
+/// model) differ only in `model_fingerprint`.  Under the v2 path
+/// scheme they shared one file and each `save_fit` silently evicted
+/// the other; they must persist side by side and both load warm from
+/// a fresh session without a single full-artifact parse.
+#[test]
+fn fingerprint_only_fit_siblings_persist_side_by_side() {
+    let dir = tmp_dir("fp-siblings");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let cm = (case.model)(dev.id, true);
+    let sets_a = (case.measurement_sets)();
+    let mut sets_b = sets_a.clone();
+    sets_b.push(vec!["extra_filter_tag".to_string()]);
+    let key_a = fit_key_parts(case.id, &dev, true, &cm, &sets_a);
+    let key_b = fit_key_parts(case.id, &dev, true, &cm, &sets_b);
+    assert_eq!(key_a.case, key_b.case);
+    assert_eq!(key_a.device, key_b.device);
+    assert_eq!(key_a.nonlinear, key_b.nonlinear);
+    assert_ne!(
+        key_a.model_fingerprint, key_b.model_fingerprint,
+        "a changed measurement set must re-fingerprint the fit"
+    );
+
+    let fit = |p: f64| FitResult {
+        param_names: vec!["p_a".into()],
+        params: vec![p],
+        residual: 0.0,
+        iterations: 1,
+    };
+    let cold = Session::with_store(&dir).unwrap();
+    cold.persist_fit(&key_a, &fit(1.0)).unwrap();
+    cold.persist_fit(&key_b, &fit(2.0)).unwrap();
+    assert_eq!(cold.stored_fit(&key_a).unwrap().params, vec![1.0]);
+    assert_eq!(
+        cold.stored_fit(&key_b).unwrap().params,
+        vec![2.0],
+        "the sibling save must not have evicted key_a's artifact"
+    );
+
+    // A fresh session ("new process"): the journal-replayed index
+    // vouches for both siblings — warm loads, zero parses.
+    let warm = Session::with_store(&dir).unwrap();
+    assert_eq!(warm.stored_fit(&key_a).unwrap().params, vec![1.0]);
+    assert_eq!(warm.stored_fit(&key_b).unwrap().params, vec![2.0]);
+    let (hits, parses) = warm.store_ledger().unwrap();
+    assert_eq!(parses, 0, "index must vouch for both siblings");
+    assert!(hits >= 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt index metadata (snapshot and journal) must never cool the
+/// store: the next open rebuilds the manifest from a full scan, every
+/// artifact stays warm, and the rebuild's checkpoint makes the session
+/// after that parse-free again.
+#[test]
+fn corrupt_index_metadata_never_cools_the_store() {
+    let dir = tmp_dir("ixcorrupt");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let cold = Session::with_store(&dir).unwrap();
+    cold.calibrate_case(&case, &dev, true, None).unwrap();
+
+    std::fs::write(dir.join("index.json"), "{definitely not json").unwrap();
+    std::fs::write(dir.join("index.journal"), "garbage\nmore garbage\n").unwrap();
+
+    let rebuilt = Session::with_store(&dir).unwrap();
+    assert!(
+        rebuilt.store().unwrap().artifact_parses() > 0,
+        "corrupt metadata must force a rebuild scan"
+    );
+    let cal = rebuilt.calibrate_case(&case, &dev, true, None).unwrap();
+    assert!(cal.from_store, "rebuild must re-index every live artifact");
+    assert_eq!(rebuilt.cache().misses(), 0);
+
+    // The rebuild checkpointed a fresh snapshot: the next "process"
+    // answers everything from the index again.
+    let warm = Session::with_store(&dir).unwrap();
+    let cal = warm.calibrate_case(&case, &dev, true, None).unwrap();
+    assert!(cal.from_store);
+    assert_eq!(warm.cache().misses(), 0);
+    assert_eq!(
+        warm.store().unwrap().artifact_parses(),
+        0,
+        "post-rebuild snapshot must restore parse-free warm starts"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `store compact` dedups the sg-invariant stats sections between the
+/// wavefront-32 devices and the wavefront-64 Fury; a warm fleet rerun
+/// over the compacted store must render byte-identical reports with
+/// zero counting passes and zero full-artifact parses, and GC must
+/// treat the compacted layout as fully live.
+#[test]
+fn compaction_preserves_fleet_reports_byte_for_byte() {
+    let dir = tmp_dir("compact");
+    let cold = Session::with_store(&dir).unwrap();
+    let rep_cold = run_experiment_in_session("fig9", false, &cold).unwrap();
+
+    let outcome = cold.store().unwrap().compact().unwrap();
+    assert!(
+        outcome.shared_sections > 0 && outcome.rewritten > 0,
+        "fleet stores hold sg-32/sg-64 twins to dedup: {outcome:?}"
+    );
+    assert_eq!(outcome.skipped, 0, "{outcome:?}");
+
+    let warm = Session::with_store(&dir).unwrap();
+    let rep_warm = run_experiment_in_session("fig9", false, &warm).unwrap();
+    assert_eq!(
+        rep_cold.render(),
+        rep_warm.render(),
+        "compaction must not change a report byte"
+    );
+    assert_eq!(
+        rep_cold.to_json().to_string(),
+        rep_warm.to_json().to_string()
+    );
+    assert_eq!(warm.cache().misses(), 0, "compacted store must stay warm");
+    assert_eq!(
+        warm.store().unwrap().artifact_parses(),
+        0,
+        "compaction's checkpoint must keep warm runs parse-free"
+    );
+
+    let gc = warm
+        .store()
+        .unwrap()
+        .gc(&GcOptions {
+            reachable_fits: Some(&reachable_fit_fingerprints()),
+            temp_ttl_secs: 0,
+            dry_run: false,
+        })
+        .unwrap();
+    assert!(
+        gc.removed.is_empty(),
+        "GC must keep every compacted artifact and referenced section: {:?}",
+        gc.removed
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
