@@ -64,7 +64,7 @@ fn main() -> Result<(), String> {
         "n:2048,2560,3072,3584",
     ])?;
     let mut data = gather_feature_values(&model, &m_knls, &device)?;
-    data.scale_features_by_output();
+    data.scale_features_by_output()?;
     let fit = fit_model(&model, &data, &LmOptions::default())?;
     let pa = fit.param("p_a").unwrap();
     let pb = fit.param("p_b").unwrap();

@@ -42,7 +42,7 @@ fn main() -> Result<(), String> {
 
     // 4. Gather feature values and fit (§7.2).
     let mut data = gather_feature_values(&model, &m_knls, &device)?;
-    data.scale_features_by_output();
+    data.scale_features_by_output()?;
     let fit = fit_model(&model, &data, &LmOptions::default())?;
     println!(
         "calibrated p_f32madd = {:.3e} s per sub-group madd",
@@ -73,7 +73,7 @@ fn main() -> Result<(), String> {
         "m:1024,1152,1280,1408",
     ])?;
     let mut data2 = gather_feature_values(&model, &micro, &device)?;
-    data2.scale_features_by_output();
+    data2.scale_features_by_output()?;
     let fit2 = fit_model(&model, &data2, &LmOptions::default())?;
     println!("\n--- Figure 2: madd-component (peak-throughput calibration) ---");
     println!("{:>6} {:>12} {:>14} {:>8}", "n", "measured", "madd component", "share");

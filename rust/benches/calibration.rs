@@ -29,7 +29,7 @@ fn synthetic(rows: usize, terms: usize) -> (CostModel, FeatureData) {
         data.outputs.push(t);
         data.labels.push("syn".into());
     }
-    data.scale_features_by_output();
+    data.scale_features_by_output().unwrap();
     (cm, data)
 }
 

@@ -59,7 +59,28 @@ impl FeatureData {
 
     /// §7.2: divide each input-feature row by its output value and set
     /// outputs to 1, making the fit minimize *relative* error.
-    pub fn scale_features_by_output(&mut self) {
+    ///
+    /// A zero or non-finite measured time would poison every scaled
+    /// feature of its row with inf/NaN and thereby the whole fit (LM
+    /// happily converges on garbage once a NaN enters the normal
+    /// equations), so the outputs are validated *before* anything is
+    /// mutated and the offending kernel is named in the error — a
+    /// labeled per-kernel failure, never a silent bad fit and never a
+    /// half-scaled `FeatureData`.
+    pub fn scale_features_by_output(&mut self) -> Result<(), String> {
+        for (i, t) in self.outputs.iter().enumerate() {
+            if !t.is_finite() || *t <= 0.0 {
+                let label = self
+                    .labels
+                    .get(i)
+                    .map(String::as_str)
+                    .unwrap_or("<unlabeled>");
+                return Err(format!(
+                    "measurement kernel '{label}' has a non-scalable measured \
+                     time ({t}); refusing to scale features by output"
+                ));
+            }
+        }
         for (row, t) in self.rows.iter_mut().zip(&self.outputs) {
             for v in row.iter_mut() {
                 *v /= *t;
@@ -69,6 +90,7 @@ impl FeatureData {
             *t = 1.0;
         }
         self.scaled = true;
+        Ok(())
     }
 }
 
@@ -104,7 +126,11 @@ pub fn gather_features_by_ids(
 /// cache; rows are merged back in measurement-kernel order, so the
 /// resulting [`FeatureData`] — and everything downstream of it, fits
 /// and figure reports included — is byte-identical to the sequential
-/// reference ([`gather_features_by_ids_sequential`]).
+/// reference ([`gather_features_by_ids_sequential`]).  Failures are
+/// part of that contract: when workers fail (errors or contained
+/// panics), the surfaced error is deterministically the one at the
+/// lowest kernel index — exactly what the sequential pass would have
+/// reported — regardless of work-stealing or completion order.
 ///
 /// Feature evaluation is batched across problem sizes: a measurement
 /// set typically reuses one structural kernel at many sizes, so the
@@ -219,6 +245,15 @@ fn gather_one(
     }))
 }
 
+/// Best-effort human-readable form of a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("opaque panic payload")
+}
+
 fn gather_features_by_ids_inner(
     ids: Vec<String>,
     kernels: &[GeneratedKernel],
@@ -232,11 +267,12 @@ fn gather_features_by_ids_inner(
         .collect::<Result<_, _>>()?;
     let slots: Mutex<HashMap<u128, BindSlot>> = Mutex::new(HashMap::new());
 
-    // Per-kernel outcomes, indexed in measurement-kernel order.  `None`
-    // marks a kernel whose worker died before reporting.
+    // Per-kernel outcomes, indexed in measurement-kernel order.  In
+    // the parallel path every claimed index reports (panics are
+    // contained per kernel), so `None` only marks the tail behind a
+    // sequential early stop.
     let mut outcomes: Vec<Option<Result<Option<GatheredRow>, String>>> =
         kernels.iter().map(|_| None).collect();
-    let mut worker_panic: Option<String> = None;
     if workers <= 1 {
         for (i, gk) in kernels.iter().enumerate() {
             let out = gather_one(gk, &specs, device, cache, &slots);
@@ -250,7 +286,8 @@ fn gather_features_by_ids_inner(
         }
     } else {
         let next = AtomicUsize::new(0);
-        let joined: Vec<_> = std::thread::scope(|s| {
+        // Each worker returns its Vec<(kernel index, outcome)>.
+        let joined: Vec<Vec<_>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     let (specs, slots, next) = (&specs, &slots, &next);
@@ -261,41 +298,61 @@ fn gather_features_by_ids_inner(
                             if i >= kernels.len() {
                                 break;
                             }
-                            local.push((
-                                i,
-                                gather_one(&kernels[i], specs, device, cache, slots),
-                            ));
+                            // Contain panics *per kernel*, so a
+                            // panicking kernel cannot discard its
+                            // worker's other finished outcomes —
+                            // which would make the surfaced
+                            // failure depend on work-stealing
+                            // order.  Every claimed index reports,
+                            // and the merge below picks the lowest
+                            // failing index deterministically.
+                            let out = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    gather_one(
+                                        &kernels[i],
+                                        specs,
+                                        device,
+                                        cache,
+                                        slots,
+                                    )
+                                }),
+                            )
+                            .unwrap_or_else(|payload| {
+                                Err(format!(
+                                    "measurement sweep worker panicked at \
+                                     kernel {i}: {}",
+                                    panic_message(payload.as_ref())
+                                ))
+                            });
+                            local.push((i, out));
                         }
                         local
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join()).collect()
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().expect(
+                        "sweep workers contain panics per kernel and \
+                         cannot themselves panic",
+                    )
+                })
+                .collect()
         });
-        for res in joined {
-            match res {
-                Ok(list) => {
-                    for (i, out) in list {
-                        outcomes[i] = Some(out);
-                    }
-                }
-                Err(payload) => {
-                    let msg = payload
-                        .downcast_ref::<String>()
-                        .map(String::as_str)
-                        .or_else(|| payload.downcast_ref::<&str>().copied())
-                        .unwrap_or("opaque panic payload")
-                        .to_string();
-                    worker_panic.get_or_insert(msg);
-                }
+        for list in joined {
+            for (i, out) in list {
+                outcomes[i] = Some(out);
             }
         }
     }
 
-    // Merge in kernel order: the first error in order wins (exactly the
-    // sequential short-circuit), skipped kernels drop out, surviving
-    // rows keep their measurement-set order — so the output is
-    // byte-identical to the sequential pass.
+    // Merge in kernel order: the first error in order wins — exactly
+    // the sequential short-circuit, so the surfaced error (like the
+    // surviving rows) is byte-identical to the sequential pass no
+    // matter how many workers failed or in which temporal order.
+    // Skipped kernels drop out; surviving rows keep their
+    // measurement-set order.
     let mut data = FeatureData {
         feature_ids: ids,
         ..Default::default()
@@ -309,16 +366,9 @@ fn gather_features_by_ids_inner(
             }
             Some(Ok(None)) => {}
             Some(Err(e)) => return Err(e),
-            None => {
-                if let Some(msg) = worker_panic.take() {
-                    return Err(format!(
-                        "measurement sweep worker panicked: {msg}"
-                    ));
-                }
-                // Sequential early-stop: a preceding error was already
-                // returned above, so this is unreachable in practice.
-                break;
-            }
+            // Sequential early-stop tail: the error ahead of it was
+            // already returned above.
+            None => break,
         }
     }
     if data.is_empty() {
@@ -812,7 +862,7 @@ mod tests {
         )
         .unwrap();
         let mut data = gather_feature_values(&model, &knls, &dev).unwrap();
-        data.scale_features_by_output();
+        data.scale_features_by_output().unwrap();
         let fit = fit_model(&model, &data, &LmOptions::default()).unwrap();
 
         // Held-out: different (nelements, m).
@@ -887,9 +937,118 @@ mod tests {
             labels: vec!["a".into(), "b".into()],
             scaled: false,
         };
-        d.scale_features_by_output();
+        d.scale_features_by_output().unwrap();
         assert_eq!(d.rows, vec![vec![5.0], vec![5.0]]);
         assert_eq!(d.outputs, vec![1.0, 1.0]);
         assert!(d.scaled);
+    }
+
+    /// A zero (or NaN/inf) measured time used to silently poison the
+    /// whole fit with inf/NaN features; it must instead fail with an
+    /// error naming the offending kernel, leaving the data untouched.
+    #[test]
+    fn scale_features_by_output_rejects_unscalable_outputs() {
+        let fresh = || FeatureData {
+            feature_ids: vec!["f_thread_groups".into()],
+            rows: vec![vec![10.0], vec![40.0]],
+            outputs: vec![2.0, 0.0],
+            labels: vec!["good[n=1]".into(), "bad[n=2]".into()],
+            scaled: false,
+        };
+        let mut d = fresh();
+        let err = d.scale_features_by_output().unwrap_err();
+        assert!(err.contains("bad[n=2]"), "{err}");
+        assert!(!d.scaled);
+        assert_eq!(
+            d.rows,
+            vec![vec![10.0], vec![40.0]],
+            "a rejected scale must not half-apply"
+        );
+        assert_eq!(d.outputs, vec![2.0, 0.0]);
+
+        for poison in [f64::NAN, f64::INFINITY, -1.0] {
+            let mut d = fresh();
+            d.outputs[1] = poison;
+            let err = d.scale_features_by_output().unwrap_err();
+            assert!(err.contains("bad[n=2]"), "{poison}: {err}");
+        }
+    }
+
+    /// An axpy measurement kernel at size `n` (multiples of 256).
+    fn axpy_gk(n: i64) -> GeneratedKernel {
+        GeneratedKernel {
+            kernel: crate::uipick::derived::build_axpy(crate::ir::DType::F32)
+                .unwrap()
+                .freeze(),
+            generator: "test".into(),
+            args: Default::default(),
+            env: [("n".to_string(), n)].into_iter().collect(),
+        }
+    }
+
+    /// An axpy variant poisoned with a statement reading an undeclared
+    /// array: `stats::gather` rejects it at validation, which surfaces
+    /// as a *hard* (non-skippable) per-kernel error naming `bad_{tag}`.
+    fn poisoned_gk(tag: &str, n: i64) -> GeneratedKernel {
+        use crate::ir::{Access, AffExpr, Expr, LhsRef, Stmt};
+        let mut knl =
+            crate::uipick::derived::build_axpy(crate::ir::DType::F32).unwrap();
+        knl.name = format!("poisoned_{tag}");
+        // build_axpy split `i` into i_out/i_in; reuse that order so the
+        // *unknown array* check is what rejects this statement.
+        knl.add_stmt(Stmt::new(
+            &format!("bad_{tag}"),
+            LhsRef::Array(Access::new("y", vec![AffExpr::var("i_in")])),
+            Expr::load(Access::new("nope", vec![AffExpr::var("i_in")])),
+            &["i_out", "i_in"],
+        ));
+        GeneratedKernel {
+            kernel: knl.freeze(),
+            generator: "test".into(),
+            args: Default::default(),
+            env: [("n".to_string(), n)].into_iter().collect(),
+        }
+    }
+
+    /// Two injected hard failures (kernel indexes 1 and 3): the
+    /// parallel sweep must surface exactly the sequential error — the
+    /// one at the lowest failing kernel index — on every run,
+    /// regardless of which worker hits which failure first.
+    #[test]
+    fn parallel_sweep_surfaces_lowest_index_error_deterministically() {
+        let dev = device_by_id("titan_v").unwrap();
+        let kernels = vec![
+            axpy_gk(256),
+            poisoned_gk("k1", 512),
+            axpy_gk(768),
+            poisoned_gk("k3", 1024),
+            axpy_gk(1280),
+        ];
+        let ids = vec!["f_op_float32_madd".to_string()];
+        let reference = gather_features_by_ids_sequential(
+            ids.clone(),
+            &kernels,
+            &dev,
+            &StatsCache::new(),
+        )
+        .unwrap_err();
+        assert!(
+            reference.contains("bad_k1"),
+            "the sequential error names the first poisoned kernel: {reference}"
+        );
+        for round in 0..10 {
+            let err = gather_features_by_ids_inner(
+                ids.clone(),
+                &kernels,
+                &dev,
+                &StatsCache::new(),
+                4,
+            )
+            .unwrap_err();
+            assert_eq!(
+                err, reference,
+                "round {round}: the lowest kernel index must win"
+            );
+        }
     }
 }

@@ -199,7 +199,7 @@ fn fig1_fig2(
         &device,
         cache,
     )?;
-    data.scale_features_by_output();
+    data.scale_features_by_output()?;
     let fit = crate::calibrate::fit_model(&model, &data, &LmOptions::default())?;
     rep.line(format!(
         "p_f32madd = {:.4e} s/madd (residual {:.3e})",
@@ -340,7 +340,7 @@ fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
                 device,
                 cache,
             )?;
-            data.scale_features_by_output();
+            data.scale_features_by_output()?;
             Some(data)
         };
         Ok((cm, knls, key, data))
@@ -363,7 +363,7 @@ fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
                         device,
                         cache,
                     )?;
-                    d.scale_features_by_output();
+                    d.scale_features_by_output()?;
                     *data = Some(d);
                 }
                 let d = data.as_ref().unwrap();
@@ -1088,7 +1088,7 @@ mod tests {
                 let mut data =
                     gather_features_by_ids(model.input_features(), &kernels, d)
                         .unwrap();
-                data.scale_features_by_output();
+                data.scale_features_by_output().unwrap();
                 fit_model(&model, &data, &LmOptions::default()).unwrap()
             })
             .collect();
@@ -1108,7 +1108,7 @@ mod tests {
                             cache,
                         )
                         .unwrap();
-                        data.scale_features_by_output();
+                        data.scale_features_by_output().unwrap();
                         fit_model(model, &data, &LmOptions::default()).unwrap()
                     })
                 })

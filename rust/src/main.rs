@@ -13,7 +13,8 @@
 //! perflex calibrate <case> <device> [--store <dir>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
 //! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
-//! perflex store ls|stat|gc|compact --store <dir> [--dry-run] [--temp-ttl-secs <n>]
+//! perflex store ls|stat|verify|gc|compact --store <dir> [--dry-run]
+//!               [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]
 //! ```
 //!
 //! `--store <dir>` opens a persistent artifact store (see
@@ -26,12 +27,17 @@
 //! performs zero fresh counting passes (store-backed commands print
 //! the cache + store-index ledgers so this is observable; a warm run
 //! against a fresh index also reports zero full-artifact parses).
-//! `perflex store` inspects (`ls`, `stat`) and maintains (`gc`,
-//! `compact`) a store: GC sweeps orphaned temp files and ages out
-//! artifacts whose format version or model fingerprint no longer
+//! `perflex store` inspects (`ls`, `stat`, `verify`) and maintains
+//! (`gc`, `compact`) a store: GC sweeps orphaned temp files and ages
+//! out artifacts whose format version or model fingerprint no longer
 //! matches anything this binary can produce; `compact` deduplicates
 //! the sub-group-size-invariant stats sections shared between sg
-//! families of one kernel.
+//! families of one kernel; `verify` asserts the journaled index
+//! equals a full rebuild scan.  The store is multi-process safe:
+//! concurrent invocations serialize journal appends under a
+//! cross-process writer lock, and destructive maintenance holds a
+//! lease (`--lease-ttl-secs`) — a second `gc`/`compact` refuses with
+//! a lease-held error instead of double-deleting.
 
 use std::collections::BTreeMap;
 
@@ -57,7 +63,8 @@ fn usage() -> String {
      commands: list-generators | list-devices | gen | show | measure | \
      calibrate | predict | experiment | store\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
-     store maintenance: perflex store ls|stat|gc|compact --store <dir>\n\
+     store maintenance: perflex store ls|stat|verify|gc|compact --store <dir>\n\
+     \x20    [--dry-run] [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
         .to_string()
 }
@@ -109,6 +116,9 @@ fn print_ledger(session: &Session) {
     if let Some((hits, parses)) = session.store_ledger() {
         println!("store index: {hits} index hits, {parses} full-artifact parses");
     }
+    if let Some((locks, contended)) = session.store_lock_ledger() {
+        println!("store lock: {locks} acquisitions, {contended} contended");
+    }
 }
 
 /// The store-index half of the ledger alone, for `perflex store`
@@ -116,6 +126,8 @@ fn print_ledger(session: &Session) {
 fn print_store_ledger(store: &perflex::session::ArtifactStore) {
     let (hits, parses) = store.ledger();
     println!("store index: {hits} index hits, {parses} full-artifact parses");
+    let (locks, contended) = store.lock_ledger();
+    println!("store lock: {locks} acquisitions, {contended} contended");
 }
 
 fn dispatch(mut args: Vec<String>) -> Result<(), String> {
@@ -300,9 +312,19 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     .map_err(|_| format!("--temp-ttl-secs: bad integer '{v}'"))?,
                 None => perflex::session::GcOptions::default().temp_ttl_secs,
             };
+            // How long this run's maintenance lease fences out other
+            // destructive maintainers (a crashed gc/compact blocks the
+            // fleet for at most this long).
+            let lease_ttl_secs = match take_flag_value(&mut rest, "--lease-ttl-secs")?
+            {
+                Some(v) => v
+                    .parse::<u64>()
+                    .map_err(|_| format!("--lease-ttl-secs: bad integer '{v}'"))?,
+                None => perflex::session::DEFAULT_LEASE_TTL_SECS,
+            };
             let sub = rest
                 .first()
-                .ok_or("store <ls|stat|gc|compact> --store <dir>")?
+                .ok_or("store <ls|stat|verify|gc|compact> --store <dir>")?
                 .clone();
             let dir = store_dir
                 .ok_or("store commands need --store <dir> (the store to operate on)")?;
@@ -400,10 +422,34 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     print_store_ledger(&store);
                     Ok(())
                 }
+                "verify" => {
+                    let outcome = store.verify_index()?;
+                    let (ix_stats, ix_fits, ix_shared) = outcome.indexed;
+                    let (sc_stats, sc_fits, sc_shared) = outcome.scanned;
+                    println!(
+                        "index entries: {ix_stats} stats, {ix_fits} fits, \
+                         {ix_shared} shared"
+                    );
+                    println!(
+                        "rebuild scan:  {sc_stats} stats, {sc_fits} fits, \
+                         {sc_shared} shared"
+                    );
+                    print_store_ledger(&store);
+                    if outcome.matches {
+                        println!("index matches a full rebuild scan");
+                        Ok(())
+                    } else {
+                        Err("store index does not match a full rebuild scan \
+                             (a `store gc` checkpoint, or the next open's \
+                             rebuild, will heal it)"
+                            .to_string())
+                    }
+                }
                 "gc" => {
                     let outcome = store.gc(&perflex::session::GcOptions {
                         reachable_fits: Some(&reachable),
                         temp_ttl_secs,
+                        lease_ttl_secs,
                         dry_run,
                     })?;
                     let verb = if dry_run { "would remove" } else { "removed" };
@@ -420,7 +466,7 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     Ok(())
                 }
                 "compact" => {
-                    let outcome = store.compact()?;
+                    let outcome = store.compact(lease_ttl_secs)?;
                     println!(
                         "compacted {} of {} sub-group famil{} ({} artifacts \
                          rewritten, {} shared sections, {} skipped), {} bytes \
@@ -437,7 +483,8 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     Ok(())
                 }
                 other => Err(format!(
-                    "unknown store subcommand '{other}' (ls|stat|gc|compact)"
+                    "unknown store subcommand '{other}' \
+                     (ls|stat|verify|gc|compact)"
                 )),
             }
         }

@@ -24,10 +24,15 @@
 //! cold start), a negative answer falls back to a direct disk probe
 //! (so another process's writes are adopted, at the cost of one
 //! counted full-artifact parse), a corrupt or version-skewed snapshot
-//! triggers a full rebuild scan, and unparseable journal lines (torn
-//! appends from crashed writers) are simply skipped — a lost put
-//! re-adopts on the next lookup, a lost delete is dropped by the next
-//! vouched load, so journal damage never produces wrong answers.
+//! triggers a full rebuild scan, and unparseable journal lines are
+//! simply skipped — a lost put re-adopts on the next lookup, a lost
+//! delete is dropped by the next vouched load, so journal damage never
+//! produces wrong answers.  Since the cross-process layer
+//! ([`super::lock`]) serialized appends under the writer lock (one
+//! fsynced `O_APPEND` line per record) and epoch-fenced checkpoints,
+//! torn lines are impossible from live writers rather than merely
+//! tolerated; the tolerant replay remains as defense in depth against
+//! hand-edited or crash-truncated journals.
 //!
 //! Filenames are *derived*, not stored: every artifact family's path
 //! is a pure function of its key (see `ArtifactStore::fit_path` and
@@ -182,10 +187,24 @@ impl JournalOp {
     }
 }
 
+/// The monotonically increasing compaction epoch carried by a
+/// snapshot; snapshots from pre-epoch writers read as 0.  The epoch is
+/// a *fence*, not content: a checkpoint re-bases itself on the current
+/// on-disk snapshot and writes `max(disk epoch, seen epoch) + 1`, so a
+/// writer holding an older view can detect — and never clobber — a
+/// newer snapshot another process published since it loaded.
+pub fn snapshot_epoch(j: &Json) -> u64 {
+    j.get("epoch")
+        .and_then(Json::as_f64)
+        .filter(|e| *e >= 0.0 && e.fract() == 0.0)
+        .map(|e| e as u64)
+        .unwrap_or(0)
+}
+
 /// The in-memory manifest: which keys have a valid artifact on disk,
 /// and in which form.  See the module docs for the maintenance
 /// protocol (snapshot + journal + rebuild).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct StoreIndex {
     stats: HashMap<StatsKey, StatsEntry>,
     fits: HashSet<FitKey>,
@@ -258,8 +277,12 @@ impl StoreIndex {
     }
 
     /// Serialize the manifest as a deterministic snapshot (entries in
-    /// sorted key order, so identical manifests are byte-identical).
-    pub fn to_snapshot_json(&self) -> Json {
+    /// sorted key order, so identical manifests are byte-identical,
+    /// and two manifests serialized under the same `epoch` compare
+    /// byte-for-byte iff their entries agree — which is how
+    /// `verify_index` and the multi-process tests compare an index
+    /// against a rebuild scan).
+    pub fn to_snapshot_json(&self, epoch: u64) -> Json {
         let mut stats: Vec<_> = self.stats.iter().collect();
         stats.sort_by_key(|(k, _)| (k.fingerprint, k.sub_group_size));
         let mut fits: Vec<_> = self.fits.iter().collect();
@@ -272,6 +295,7 @@ impl StoreIndex {
         Json::obj(vec![
             ("format_version", (STORE_FORMAT_VERSION as i64).into()),
             ("kind", "store-index".into()),
+            ("epoch", (epoch as i64).into()),
             (
                 "stats",
                 Json::Arr(
@@ -308,6 +332,8 @@ impl StoreIndex {
     /// Strict snapshot decode: any malformed entry or version skew is
     /// an error, and the caller falls back to a full rebuild scan —
     /// the index never limps along on a partially-understood manifest.
+    /// The `epoch` field is decoded separately ([`snapshot_epoch`]):
+    /// it fences checkpoints, it is not manifest content.
     pub fn from_snapshot_json(j: &Json) -> Result<StoreIndex, String> {
         if j.get("format_version").and_then(Json::as_f64)
             != Some(STORE_FORMAT_VERSION as f64)
@@ -413,14 +439,20 @@ mod tests {
         index.apply(&JournalOp::PutFit(sample_fit_key()));
         index.apply(&JournalOp::PutShared(0xfeed));
 
-        let text = index.to_snapshot_json().to_string();
-        let back =
-            StoreIndex::from_snapshot_json(&Json::parse(&text).unwrap()).unwrap();
+        let text = index.to_snapshot_json(7).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(snapshot_epoch(&parsed), 7, "the epoch fence must round-trip");
+        let back = StoreIndex::from_snapshot_json(&parsed).unwrap();
         assert_eq!(back.counts(), index.counts());
         assert_eq!(
-            back.to_snapshot_json().to_string(),
+            back.to_snapshot_json(7).to_string(),
             text,
             "snapshot serialization must be byte-stable"
+        );
+        assert_ne!(
+            back.to_snapshot_json(8).to_string(),
+            text,
+            "the epoch is part of the serialized snapshot"
         );
         assert!(back.has_fit(&sample_fit_key()));
         assert_eq!(
@@ -430,6 +462,20 @@ mod tests {
             }),
             Some(StatsEntry { compacted: true })
         );
+    }
+
+    /// Snapshots written before the epoch fence existed carry no
+    /// `epoch` field; they decode (strictly) and read as epoch 0, so
+    /// upgrading a binary never forces a rebuild scan.
+    #[test]
+    fn pre_epoch_snapshots_decode_and_read_as_epoch_zero() {
+        let text = format!(
+            "{{\"format_version\":{STORE_FORMAT_VERSION},\
+             \"kind\":\"store-index\",\"stats\":[],\"fits\":[],\"shared\":[]}}"
+        );
+        let j = Json::parse(&text).unwrap();
+        assert!(StoreIndex::from_snapshot_json(&j).is_ok());
+        assert_eq!(snapshot_epoch(&j), 0);
     }
 
     #[test]

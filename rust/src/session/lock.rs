@@ -1,0 +1,477 @@
+//! Cross-process concurrency primitives for the artifact store:
+//! an advisory [`FileLock`] serializing writers, and a [`Lease`]
+//! fencing destructive maintenance.
+//!
+//! Both are built on the one primitive every filesystem gives us
+//! atomically: exclusive file creation (`O_CREAT | O_EXCL`).  No
+//! `flock(2)` binding exists in the offline crate set, and `flock`
+//! semantics differ across the network filesystems a fleet-shared
+//! store is most likely to live on, so a lock *file* — created
+//! atomically, removed on release — is the portable choice.  The two
+//! types differ in policy, not mechanism:
+//!
+//! * [`FileLock`] (`<root>/index.lock`) protects short critical
+//!   sections — a journal append, a snapshot checkpoint, a victim
+//!   unlink — so acquisition *waits*, with bounded exponential
+//!   backoff, and presumes a holder older than
+//!   [`LockOptions::stale_after_secs`] crashed (its file is stolen).
+//! * [`Lease`] (`<root>/gc.lease`) protects whole maintenance runs
+//!   (`store gc`, `store compact`), so acquisition *refuses* while a
+//!   live foreign lease exists — a second maintainer must not queue up
+//!   behind the first and re-delete what it already swept — and the
+//!   holder advertises an explicit expiry instead of relying on file
+//!   age, so a crashed maintainer blocks the fleet for at most its
+//!   TTL.
+//!
+//! Stale holders are stolen in two steps — rename the dead file to a
+//! unique debris name, then remove the debris — so when several
+//! processes notice the same corpse, exactly one rename wins and the
+//! losers simply retry; nobody ever deletes a *live* holder's file,
+//! and release only removes the file while it still carries the
+//! releaser's own token.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// How long a maintenance lease protects its holder by default before
+/// a fellow maintainer may presume it dead and steal it
+/// (`--lease-ttl-secs` overrides).
+pub const DEFAULT_LEASE_TTL_SECS: u64 = 10 * 60;
+
+/// Seconds since the Unix epoch (0 on a pre-epoch clock).
+fn unix_now_secs() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+static TOKEN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A holder token unique across the processes sharing a store: pid +
+/// a process-global sequence number + a nanosecond clock sample, so
+/// concurrent holders (and a process's own successive acquisitions)
+/// can always tell their files apart.
+fn fresh_token() -> String {
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    format!(
+        "{}-{}-{}",
+        std::process::id(),
+        TOKEN_SEQ.fetch_add(1, Ordering::Relaxed),
+        nanos
+    )
+}
+
+/// The holder metadata written into a lock/lease file.  Diagnostic
+/// except for `token` (release-safety) and `expires_at` (lease
+/// liveness); the exclusive create is the lock itself.
+fn holder_json(token: &str, expires_at: Option<u64>) -> String {
+    let mut fields = vec![
+        ("pid", Json::from(std::process::id() as i64)),
+        ("token", Json::from(token)),
+        ("acquired_at", Json::from(unix_now_secs() as i64)),
+    ];
+    if let Some(t) = expires_at {
+        fields.push(("expires_at", Json::from(t as i64)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Atomically create `path` holding `content`; `Ok(false)` when it
+/// already exists (someone else holds it).
+fn try_create(path: &Path, content: &str) -> Result<bool, String> {
+    match std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(path)
+    {
+        Ok(mut f) => {
+            // Best-effort, and deliberately not fsynced: the metadata
+            // is diagnostic (plus expiry/token bookkeeping) and the
+            // exclusive create already is the acquisition — an fsync
+            // here would tax every journal append, and losing the
+            // content in a crash merely makes the file unreadable,
+            // which observers already treat as a dead holder.
+            let _ = f.write_all(content.as_bytes());
+            Ok(true)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(format!("creating {}: {e}", path.display())),
+    }
+}
+
+/// Remove `path` iff it still carries `token` — a releaser must never
+/// delete a file a stealer has since replaced.  The read-then-remove
+/// pair is not atomic: a holder stalled past the staleness TTL whose
+/// release interleaves exactly with a steal *and* a fresh acquisition
+/// can still unlink the successor's file.  Holders avoid ever going
+/// stale by calling `refresh()` during long operations, which is what
+/// makes that window practically unreachable; closing it fully would
+/// need link/rename tricks that do not survive all network
+/// filesystems.
+fn remove_if_token(path: &Path, token: &str) {
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if text.contains(token) {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Steal a dead holder's file: rename it to a unique debris name (so
+/// exactly one of several stealers wins — the losers' renames fail and
+/// they retry), then remove the debris.
+fn steal(path: &Path, token: &str) {
+    let name = match path.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n,
+        None => return,
+    };
+    let debris = path.with_file_name(format!("{name}.stale.{token}"));
+    if std::fs::rename(path, &debris).is_ok() {
+        let _ = std::fs::remove_file(&debris);
+    }
+}
+
+/// Policy knobs for [`FileLock::acquire`].
+#[derive(Clone, Copy, Debug)]
+pub struct LockOptions {
+    /// A lock file older than this is presumed to belong to a crashed
+    /// holder and stolen.  Writer critical sections are normally
+    /// milliseconds; a full rebuild scan under the lock is the long
+    /// pole, so the default is generous.
+    pub stale_after_secs: u64,
+    /// Give up after waiting this long; callers degrade (a skipped
+    /// journal line self-heals through adopt-on-miss) rather than
+    /// hang.
+    pub max_wait_ms: u64,
+}
+
+impl Default for LockOptions {
+    fn default() -> Self {
+        LockOptions {
+            stale_after_secs: 60,
+            max_wait_ms: 10_000,
+        }
+    }
+}
+
+/// An exclusive cross-process advisory lock backed by an atomically
+/// created lock file.  Waits with bounded exponential backoff, steals
+/// provably-stale holders, and releases on drop.
+pub struct FileLock {
+    path: PathBuf,
+    token: String,
+    contended: bool,
+}
+
+impl FileLock {
+    pub fn acquire(path: &Path, opts: &LockOptions) -> Result<FileLock, String> {
+        let token = fresh_token();
+        let started = Instant::now();
+        let mut backoff_ms = 1u64;
+        let mut contended = false;
+        loop {
+            if try_create(path, &holder_json(&token, None))? {
+                return Ok(FileLock {
+                    path: path.to_path_buf(),
+                    token,
+                    contended,
+                });
+            }
+            contended = true;
+            // Crashed holder?  Age by mtime; steal races have exactly
+            // one winner and the losers land back here.
+            let age = std::fs::metadata(path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| SystemTime::now().duration_since(t).ok());
+            if age.is_some_and(|a| a.as_secs() >= opts.stale_after_secs) {
+                steal(path, &token);
+                continue;
+            }
+            if started.elapsed() >= Duration::from_millis(opts.max_wait_ms) {
+                return Err(format!(
+                    "lock {} is busy (waited {}ms for the holder)",
+                    path.display(),
+                    opts.max_wait_ms
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(backoff_ms));
+            backoff_ms = (backoff_ms * 2).min(50);
+        }
+    }
+
+    /// True when this acquisition had to wait behind (or steal from)
+    /// another holder — the store's lock-contention ledger counts it.
+    pub fn contended(&self) -> bool {
+        self.contended
+    }
+
+    /// Liveness beacon for long holds (a rebuild scan over a large
+    /// store): rewrite the lock file so its mtime — the staleness
+    /// clock every contender reads — restarts.  Without this, a hold
+    /// outliving [`LockOptions::stale_after_secs`] looks crashed and
+    /// gets stolen, voiding the exclusivity.  Best-effort and
+    /// token-guarded like release.
+    pub fn refresh(&self) {
+        if let Ok(text) = std::fs::read_to_string(&self.path) {
+            if text.contains(&self.token) {
+                let _ = std::fs::write(&self.path, text);
+            }
+        }
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        remove_if_token(&self.path, &self.token);
+    }
+}
+
+/// A maintenance lease: holder pid + explicit expiry.  Acquisition
+/// never waits — a live foreign lease is a *refusal* (the caller
+/// surfaces it and exits), an expired or unreadable one is a dead
+/// holder and is stolen.  Released on drop.
+pub struct Lease {
+    path: PathBuf,
+    token: String,
+}
+
+impl Lease {
+    pub fn acquire(path: &Path, ttl_secs: u64) -> Result<Lease, String> {
+        let token = fresh_token();
+        // Bounded retries: each round either acquires, refuses, or
+        // steals a provably-dead lease (one steal winner per corpse),
+        // so a handful of attempts always terminates.
+        for _ in 0..8 {
+            let expires_at = unix_now_secs().saturating_add(ttl_secs.max(1));
+            if try_create(path, &holder_json(&token, Some(expires_at)))? {
+                return Ok(Lease {
+                    path: path.to_path_buf(),
+                    token,
+                });
+            }
+            let holder = std::fs::read_to_string(path)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok());
+            let expiry = holder
+                .as_ref()
+                .and_then(|j| j.get("expires_at"))
+                .and_then(Json::as_f64)
+                .filter(|s| *s >= 0.0)
+                .map(|s| s as u64);
+            let now = unix_now_secs();
+            match expiry {
+                Some(e) if e > now => {
+                    let pid = holder
+                        .as_ref()
+                        .and_then(|j| j.get("pid"))
+                        .and_then(Json::as_f64)
+                        .map(|p| p as u64)
+                        .unwrap_or(0);
+                    return Err(format!(
+                        "maintenance lease {} is held by pid {pid} (expires \
+                         in {}s); refusing to run destructive maintenance \
+                         under a live foreign lease",
+                        path.display(),
+                        e - now
+                    ));
+                }
+                // Expired or unreadable: a dead holder.
+                _ => steal(path, &token),
+            }
+        }
+        Err(format!(
+            "maintenance lease {} could not be acquired (persistent steal \
+             races)",
+            path.display()
+        ))
+    }
+
+    /// Extend this lease to `ttl_secs` from now.  Long maintenance
+    /// runs call this periodically (the store does so once per victim
+    /// batch / compaction family) so a sweep can never outlive its own
+    /// lease — an expired-mid-run lease would be stolen and two
+    /// destructive maintainers would run concurrently, exactly what
+    /// the lease exists to prevent.  Best-effort and token-guarded
+    /// like release.
+    pub fn refresh(&self, ttl_secs: u64) {
+        if let Ok(text) = std::fs::read_to_string(&self.path) {
+            if text.contains(&self.token) {
+                let expires_at = unix_now_secs().saturating_add(ttl_secs.max(1));
+                let _ = std::fs::write(
+                    &self.path,
+                    holder_json(&self.token, Some(expires_at)),
+                );
+            }
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        remove_if_token(&self.path, &self.token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "perflex-lock-test-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("the.lock")
+    }
+
+    #[test]
+    fn lock_excludes_waits_and_releases() {
+        let path = tmp_path("excl");
+        let first = FileLock::acquire(&path, &LockOptions::default()).unwrap();
+        assert!(!first.contended());
+
+        // A second acquisition with a short patience times out.
+        let opts = LockOptions {
+            stale_after_secs: 3600,
+            max_wait_ms: 60,
+        };
+        let err = FileLock::acquire(&path, &opts).unwrap_err();
+        assert!(err.contains("busy"), "{err}");
+        assert!(path.exists(), "a failed acquire must not disturb the holder");
+
+        // A patient acquisition gets the lock once the holder drops.
+        let handle = std::thread::spawn({
+            let path = path.clone();
+            move || {
+                FileLock::acquire(
+                    &path,
+                    &LockOptions {
+                        stale_after_secs: 3600,
+                        max_wait_ms: 5_000,
+                    },
+                )
+                .unwrap()
+            }
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(first);
+        let second = handle.join().unwrap();
+        assert!(second.contended(), "the wait must be observable");
+        drop(second);
+        assert!(!path.exists(), "release must remove the lock file");
+    }
+
+    #[test]
+    fn stale_lock_files_are_stolen() {
+        let path = tmp_path("stale");
+        std::fs::write(&path, "{\"pid\":999999,\"token\":\"dead\"}").unwrap();
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(SystemTime::now() - Duration::from_secs(3600))
+            .unwrap();
+        drop(f);
+        let lock = FileLock::acquire(
+            &path,
+            &LockOptions {
+                stale_after_secs: 60,
+                max_wait_ms: 1_000,
+            },
+        )
+        .unwrap();
+        assert!(lock.contended(), "a theft counts as contention");
+        drop(lock);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn lease_refuses_live_foreign_holders_and_steals_expired_ones() {
+        let path = tmp_path("lease");
+        std::fs::write(
+            &path,
+            "{\"pid\":424242,\"token\":\"foreign\",\"expires_at\":99999999999}",
+        )
+        .unwrap();
+        let err = Lease::acquire(&path, 60).unwrap_err();
+        assert!(err.contains("424242"), "{err}");
+        assert!(err.contains("refusing"), "{err}");
+        assert!(path.exists(), "a refusal must not disturb the holder");
+
+        // Expired: a dead maintainer; the lease is stolen.
+        std::fs::write(
+            &path,
+            "{\"pid\":424242,\"token\":\"foreign\",\"expires_at\":1}",
+        )
+        .unwrap();
+        let lease = Lease::acquire(&path, 60).unwrap();
+        drop(lease);
+        assert!(!path.exists(), "release must remove the lease file");
+
+        // Unreadable: also a dead holder.
+        std::fs::write(&path, "{not json").unwrap();
+        let lease = Lease::acquire(&path, 60).unwrap();
+        drop(lease);
+        assert!(!path.exists());
+    }
+
+    /// A long hold that keeps refreshing never looks stale, so nobody
+    /// steals it; the contender times out instead.
+    #[test]
+    fn refreshed_long_holds_are_not_stolen() {
+        let path = tmp_path("refresh");
+        let lock = FileLock::acquire(&path, &LockOptions::default()).unwrap();
+        // Simulate a hold older than the staleness TTL...
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(SystemTime::now() - Duration::from_secs(3600))
+            .unwrap();
+        drop(f);
+        // ...whose holder just proved liveness.
+        lock.refresh();
+        let err = FileLock::acquire(
+            &path,
+            &LockOptions {
+                stale_after_secs: 60,
+                max_wait_ms: 80,
+            },
+        )
+        .unwrap_err();
+        assert!(err.contains("busy"), "{err}");
+        drop(lock);
+        assert!(!path.exists(), "a refreshed lock still releases cleanly");
+    }
+
+    /// A refreshed lease advertises a new expiry, so a sweep that
+    /// refreshes per batch can never be stolen mid-run.
+    #[test]
+    fn lease_refresh_extends_the_expiry() {
+        let path = tmp_path("lease-refresh");
+        let lease = Lease::acquire(&path, 1).unwrap();
+        lease.refresh(3600);
+        let err = Lease::acquire(&path, 60).unwrap_err();
+        assert!(err.contains("refusing"), "{err}");
+        drop(lease);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn release_never_deletes_a_stolen_and_replaced_holder_file() {
+        let path = tmp_path("replaced");
+        let lock = FileLock::acquire(&path, &LockOptions::default()).unwrap();
+        // Simulate a misbehaving stealer replacing the file mid-hold.
+        std::fs::write(&path, "{\"pid\":1,\"token\":\"thief\"}").unwrap();
+        drop(lock);
+        assert!(
+            path.exists(),
+            "drop must leave a file that no longer carries its token"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -42,6 +42,18 @@
 //! deduplicates the sub-group-size-invariant section of stats bundles
 //! shared between sg families of one kernel (`<store>/shared/`).
 //!
+//! The store is safe to share between *processes*, not just threads:
+//! journal appends serialize under a cross-process writer lock and
+//! fsync, snapshot checkpoints are epoch-fenced, and destructive
+//! maintenance (`gc`, `compact`) runs under a lease and re-verifies
+//! each victim under the lock before unlinking (see the
+//! [`store`](ArtifactStore) and `lock` module docs).  The writer-lock
+//! ledger ([`ArtifactStore::lock_ledger`], printed by store-backed CLI
+//! commands) makes cross-process contention observable, and
+//! `perflex store verify` ([`ArtifactStore::verify_index`]) asserts
+//! the invariant all of this buys: the index always equals a full
+//! rebuild scan.
+//!
 //! # Invalidation rules
 //!
 //! Artifacts are *rejected, never migrated*: a loader returns `None`
@@ -63,11 +75,13 @@
 
 pub mod codec;
 pub mod index;
+mod lock;
 mod store;
 
+pub use lock::DEFAULT_LEASE_TTL_SECS;
 pub use store::{
     ArtifactInfo, ArtifactKind, ArtifactStore, CompactOutcome, FitKey, GcOptions,
-    GcOutcome, STORE_FORMAT_VERSION,
+    GcOutcome, IndexVerifyOutcome, STORE_FORMAT_VERSION,
 };
 
 use std::path::Path;
@@ -147,6 +161,15 @@ impl Session {
         self.store.as_ref().map(|s| s.ledger())
     }
 
+    /// The cross-process writer-lock ledger — `(acquisitions,
+    /// contended)` — or `None` for a store-less session.  Contended
+    /// acquisitions mean another process (or thread) was appending to
+    /// the shared journal at the same moment; they cost backoff
+    /// milliseconds, never correctness.
+    pub fn store_lock_ledger(&self) -> Option<(u64, u64)> {
+        self.store.as_ref().map(|s| s.lock_ledger())
+    }
+
     /// Pipeline stage 1: measure a kernel on a device (through the
     /// session cache, so its symbolic statistics are derived or loaded
     /// at most once per process).
@@ -178,7 +201,7 @@ impl Session {
             device,
             &self.cache,
         )?;
-        data.scale_features_by_output();
+        data.scale_features_by_output()?;
         Ok(data)
     }
 

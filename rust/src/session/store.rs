@@ -46,10 +46,37 @@
 //! With a fresh index, `store ls` and a warm `predict` report zero
 //! full-artifact parses (the CI fleet-store job asserts it).
 //!
-//! Writes go through a per-writer-unique temp file + rename, so any
-//! number of concurrent writers — threads of one process or whole
-//! fleet calibrations racing on a shared store — can leave behind at
-//! worst a stale temp file, never a torn artifact.
+//! Writes go through a per-writer-unique temp file + fsync + rename
+//! (see [`ArtifactStore::write_atomic`] for the durability contract),
+//! so any number of concurrent writers — threads of one process or
+//! whole fleet calibrations racing on a shared store — can leave
+//! behind at worst a stale temp file, never a torn or hollow artifact.
+//!
+//! The store is **multi-process safe** (the exact usage fleet-wide
+//! sharing advertises: several `perflex` invocations on one
+//! `--store`).  Three mechanisms, all in [`super::lock`]:
+//!
+//! * every journal append happens under the cross-process writer lock
+//!   (`<root>/index.lock`) as a single fsynced `O_APPEND` line, so
+//!   concurrent writers serialize and torn journal lines are
+//!   impossible rather than merely tolerated;
+//! * snapshot checkpoints are *epoch-fenced*: under the same lock, the
+//!   checkpoint re-bases on the current on-disk snapshot (not this
+//!   process's possibly-stale view), replays every journal line on
+//!   top, writes `max(disk epoch, seen epoch) + 1`, and only then
+//!   truncates the journal — no concurrent appender's put can be lost
+//!   between snapshot-write and journal-truncate;
+//! * destructive maintenance (`gc`, `compact`) runs under a lease
+//!   (`<root>/gc.lease`, holder pid + expiry): a live foreign lease is
+//!   a refusal, and each victim classified stale/corrupt is
+//!   re-verified under the writer lock immediately before its unlink,
+//!   so a concurrent calibrate that just republished a valid artifact
+//!   at that path never has it deleted out from under it.
+//!
+//! [`ArtifactStore::verify_index`] (`perflex store verify`) asserts
+//! the resulting invariant: the journaled index always agrees
+//! entry-for-entry with a full rebuild scan of the artifacts on disk.
+//!
 //! [`ArtifactStore::gc`] is the maintenance half: it sweeps orphaned
 //! temp files and ages out artifacts whose format version, placement
 //! or model fingerprint no longer matches anything the current binary
@@ -75,7 +102,10 @@ use std::sync::RwLock;
 use std::time::SystemTime;
 
 use super::codec;
-use super::index::{JournalOp, StatsEntry, StoreIndex, JOURNAL_COMPACT_THRESHOLD};
+use super::index::{
+    snapshot_epoch, JournalOp, StatsEntry, StoreIndex, JOURNAL_COMPACT_THRESHOLD,
+};
+use super::lock::{FileLock, Lease, LockOptions, DEFAULT_LEASE_TTL_SECS};
 use crate::calibrate::FitResult;
 use crate::stats::{KernelStats, StatsBacking, StatsKey};
 use crate::util::json::Json;
@@ -179,8 +209,13 @@ pub struct ArtifactStore {
     /// lookup takes a read lock, only adoption/eviction/maintenance
     /// write).
     index: RwLock<StoreIndex>,
+    /// The snapshot epoch this process last observed or wrote; the
+    /// checkpoint fence takes `max(disk, this) + 1`.
+    epoch: AtomicU64,
     index_hits: AtomicU64,
     artifact_parses: AtomicU64,
+    lock_acquired: AtomicU64,
+    lock_contended: AtomicU64,
 }
 
 impl ArtifactStore {
@@ -200,8 +235,11 @@ impl ArtifactStore {
         let store = ArtifactStore {
             root,
             index: RwLock::new(StoreIndex::new()),
+            epoch: AtomicU64::new(0),
             index_hits: AtomicU64::new(0),
             artifact_parses: AtomicU64::new(0),
+            lock_acquired: AtomicU64::new(0),
+            lock_contended: AtomicU64::new(0),
         };
         store.load_index()?;
         Ok(store)
@@ -238,6 +276,31 @@ impl ArtifactStore {
         self.index.read().unwrap().counts()
     }
 
+    /// `(acquisitions, contended)` cross-process writer-lock counts:
+    /// how often this process took the lock (journal appends,
+    /// checkpoints, victim unlinks) and how many of those had to wait
+    /// behind — or steal from — another holder.  Printed beside the
+    /// store-index ledger by store-backed CLI commands.
+    pub fn lock_ledger(&self) -> (u64, u64) {
+        (
+            self.lock_acquired.load(Ordering::Relaxed),
+            self.lock_contended.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Acquire the cross-process writer lock, counted in the lock
+    /// ledger.  NOT reentrant (a lock file cannot be): a holder must
+    /// thread its guard to [`ArtifactStore::record_under`] and friends
+    /// instead of re-acquiring.
+    fn writer_lock(&self) -> Result<FileLock, String> {
+        let lock = FileLock::acquire(&self.lock_path(), &LockOptions::default())?;
+        self.lock_acquired.fetch_add(1, Ordering::Relaxed);
+        if lock.contended() {
+            self.lock_contended.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(lock)
+    }
+
     fn count_parse(&self) {
         self.artifact_parses.fetch_add(1, Ordering::Relaxed);
     }
@@ -266,6 +329,14 @@ impl ArtifactStore {
         self.root.join("index.journal")
     }
 
+    fn lock_path(&self) -> PathBuf {
+        self.root.join("index.lock")
+    }
+
+    fn lease_path(&self) -> PathBuf {
+        self.root.join("gc.lease")
+    }
+
     // -----------------------------------------------------------------
     // Index maintenance
     // -----------------------------------------------------------------
@@ -275,15 +346,20 @@ impl ArtifactStore {
     /// the index is an accelerator, never an authority, so the worst
     /// a bad manifest can cost is one O(N) re-scan.
     fn load_index(&self) -> Result<(), String> {
-        let snapshot = std::fs::read_to_string(self.index_path())
+        let parsed = std::fs::read_to_string(self.index_path())
             .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .and_then(|j| StoreIndex::from_snapshot_json(&j).ok());
-        if let Some(mut index) = snapshot {
+            .and_then(|text| Json::parse(&text).ok());
+        let snapshot = parsed.as_ref().and_then(|j| {
+            StoreIndex::from_snapshot_json(j)
+                .ok()
+                .map(|ix| (ix, snapshot_epoch(j)))
+        });
+        if let Some((mut index, epoch)) = snapshot {
+            self.epoch.store(epoch, Ordering::Relaxed);
             let (applied, skipped) = self.replay_journal(&mut index);
             *self.index.write().unwrap() = index;
             // Tidy the journal when it has grown long or accumulated
-            // unparseable lines (torn appends from crashed writers).
+            // unparseable lines (crash-truncated tails).
             if skipped > 0 || applied > JOURNAL_COMPACT_THRESHOLD {
                 self.checkpoint_index();
             }
@@ -293,13 +369,13 @@ impl ArtifactStore {
     }
 
     /// Replay `index.journal` onto `index`, skipping unparseable lines
-    /// (torn tails from crashed writers, including a fragment a later
-    /// append merged with).  A skipped line is at worst a lost put
-    /// (the next lookup re-adopts from disk) or a lost delete (the
-    /// next vouched load drops the dead entry), so journal damage
-    /// degrades to a few extra parses — never to wrong answers, and
-    /// never to a full rebuild.  Returns `(applied, skipped)` line
-    /// counts.
+    /// (with locked single-write appends these can only be
+    /// crash-truncated tails or hand edits, never live-writer
+    /// interleavings).  A skipped line is at worst a lost put (the
+    /// next lookup re-adopts from disk) or a lost delete (the next
+    /// vouched load drops the dead entry), so journal damage degrades
+    /// to a few extra parses — never to wrong answers, and never to a
+    /// full rebuild.  Returns `(applied, skipped)` line counts.
     fn replay_journal(&self, index: &mut StoreIndex) -> (usize, usize) {
         let text = match std::fs::read_to_string(self.journal_path()) {
             Ok(t) => t,
@@ -318,21 +394,74 @@ impl ArtifactStore {
         (applied, skipped)
     }
 
-    /// Rebuild the manifest from a full scan: every artifact file is
-    /// parsed and validated (each one a counted full-artifact parse),
-    /// valid ones are indexed, and a fresh snapshot is written.  The
-    /// (corrupt or stale) journal is truncated *before* the scan: its
-    /// contents predate what the scan will observe, so merging it back
-    /// at checkpoint time could resurrect stale deletes — only lines
-    /// appended by writers racing the scan belong in the new snapshot.
+    /// Rebuild the manifest from a full scan, holding the writer lock
+    /// for the whole rebuild: every artifact file is parsed and
+    /// validated (each one a counted full-artifact parse), valid ones
+    /// are indexed, and a fresh snapshot replaces the corrupt one.
+    /// The (corrupt or stale) journal is truncated first: its contents
+    /// predate what the scan observes, so merging it back could
+    /// resurrect stale deletes.  Because appends also take the lock,
+    /// no foreign journal line can slip between the scan and the
+    /// snapshot write — a concurrent writer either blocks (bounded)
+    /// or skips its line and is re-adopted on a later lookup.
     fn rebuild_index(&self) -> Result<(), String> {
-        let _ = std::fs::write(self.journal_path(), "");
-        *self.index.write().unwrap() = StoreIndex::new();
+        match self.writer_lock() {
+            Ok(guard) => {
+                let _ = std::fs::write(self.journal_path(), "");
+                let index = self.scan_index(Some(&guard))?;
+                let epoch = self.epoch.load(Ordering::Relaxed) + 1;
+                // Best-effort snapshot: a full disk degrades to a
+                // re-scan at the next open, never to an error.
+                if self
+                    .write_atomic(
+                        &self.index_path(),
+                        &index.to_snapshot_json(epoch).to_string(),
+                    )
+                    .is_ok()
+                {
+                    self.epoch.store(epoch, Ordering::Relaxed);
+                }
+                *self.index.write().unwrap() = index;
+            }
+            // Lock unavailable (a wedged or very slow holder): the
+            // index is an accelerator, never an authority, so opening
+            // must degrade rather than fail.  Scan into memory only —
+            // truncating the journal or writing a snapshot without
+            // the lock could clobber live writers — and let the next
+            // open retry the locked rebuild.
+            Err(_) => {
+                let index = self.scan_index(None)?;
+                *self.index.write().unwrap() = index;
+            }
+        }
+        Ok(())
+    }
+
+    /// Scan the artifact directories into a fresh [`StoreIndex`]
+    /// without touching the live index or the journal — the read core
+    /// of both the (lock-holding) rebuild and [`verify_index`].  Every
+    /// artifact read here is a counted full-artifact parse; a family's
+    /// shared sg-invariant section is decoded once per scan (the
+    /// shared pass runs first and feeds the stats pass), not once per
+    /// compacted twin.  `keepalive` is the rebuild's held writer lock:
+    /// it is refreshed as the scan walks, so a long scan never looks
+    /// stale to contenders.
+    fn scan_index(&self, keepalive: Option<&FileLock>) -> Result<StoreIndex, String> {
+        let mut index = StoreIndex::new();
+        let mut shared_ok: HashSet<u128> = HashSet::new();
         for sub in ["shared", "stats", "fits"] {
+            if let Some(guard) = keepalive {
+                guard.refresh();
+            }
             let dir = self.root.join(sub);
             let entries = std::fs::read_dir(&dir)
                 .map_err(|e| format!("reading {}: {e}", dir.display()))?;
-            for entry in entries {
+            for (seen, entry) in entries.enumerate() {
+                if seen % 128 == 127 {
+                    if let Some(guard) = keepalive {
+                        guard.refresh();
+                    }
+                }
                 let entry =
                     entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
                 let path = entry.path();
@@ -344,52 +473,154 @@ impl ArtifactStore {
                 {
                     continue;
                 }
-                // classify_* adopt valid unindexed artifacts into the
-                // (currently empty) index as a side effect.
                 match sub {
                     "stats" => {
-                        let _ = self.classify_stats(&name);
+                        let key = stats_key_from_name(&name)
+                            .filter(|k| stats_file_name(k) == name);
+                        if let Some(key) = key {
+                            if let Some(compacted) = Self::contained(|| {
+                                self.scan_stats_valid(&key, &shared_ok)
+                            }) {
+                                index.apply(&JournalOp::PutStats(
+                                    key,
+                                    StatsEntry { compacted },
+                                ));
+                            }
+                        }
                     }
                     "fits" => {
-                        let _ = self.classify_fit(&path, &name);
+                        let parsed =
+                            Self::contained(|| self.parse_fit_file(&path));
+                        if let Some((key, payload_ok)) = parsed {
+                            if payload_ok && fit_file_name(&key) == name {
+                                index.apply(&JournalOp::PutFit(key));
+                            }
+                        }
                     }
                     _ => {
-                        let _ = self.classify_shared(&name);
+                        let fp = shared_fp_from_name(&name)
+                            .filter(|fp| shared_file_name(*fp) == name);
+                        if let Some(fp) = fp {
+                            if Self::contained(|| self.read_shared_scan(fp))
+                                .is_some()
+                            {
+                                shared_ok.insert(fp);
+                                index.apply(&JournalOp::PutShared(fp));
+                            }
+                        }
                     }
                 }
             }
         }
-        self.checkpoint_index();
-        Ok(())
+        Ok(index)
     }
 
-    /// Write an atomic snapshot of the index and truncate the journal.
-    /// The on-disk journal is merged into the in-memory manifest first,
-    /// so entries appended by *other* fleet processes since this
-    /// process opened the store survive the truncation (a writer racing
-    /// into the tiny merge→truncate window can still lose its line;
-    /// that only costs the next reader one adopt-on-miss parse, never
-    /// correctness).  Best-effort: a full disk degrades the index to a
-    /// rebuild at next open, never the store to an error.
+    /// Scan-time validity for one stats artifact: `Some(compacted)`
+    /// when it parses, matches its key, and (compacted form) both its
+    /// op section decodes and its shared section was validated by the
+    /// scan's shared pass — so a family of `k` twins decodes the large
+    /// invariant section once, not `k` times.  Counted parse, no index
+    /// side effects.
+    fn scan_stats_valid(
+        &self,
+        key: &StatsKey,
+        shared_ok: &HashSet<u128>,
+    ) -> Option<bool> {
+        let text = std::fs::read_to_string(self.stats_path(key)).ok()?;
+        self.count_parse();
+        let j = Self::parse_versioned(&text, "kernel-stats")?;
+        if j.get("fingerprint")?.as_str()?
+            != codec::fingerprint_to_hex(key.fingerprint)
+        {
+            return None;
+        }
+        if j.get("sub_group_size")?.as_f64()? != key.sub_group_size as f64 {
+            return None;
+        }
+        if let Some(stats) = j.get("stats") {
+            let st = codec::stats_from_json(stats).ok()?;
+            return (st.sub_group_size == key.sub_group_size).then_some(false);
+        }
+        if j.get("shared")?.as_str()? != codec::fingerprint_to_hex(key.fingerprint) {
+            return None;
+        }
+        codec::ops_from_json(j.get("ops")?).ok()?;
+        shared_ok.contains(&key.fingerprint).then_some(true)
+    }
+
+    /// Write an atomic snapshot of the index and truncate the journal,
+    /// under the writer lock and epoch-fenced: the snapshot re-bases
+    /// on the *current* on-disk snapshot — another process may have
+    /// checkpointed since this one loaded its view — replays every
+    /// journal line on top, and carries `max(disk epoch, seen epoch)
+    /// + 1`, so no concurrent appender's put can be lost between the
+    /// snapshot write and the journal truncation and an older view
+    /// can never downgrade a newer snapshot.  Best-effort: an
+    /// unacquirable lock or a full disk leaves the journal growing
+    /// (replayed, or rebuilt, at the next open) — never the store in
+    /// an error state.
     fn checkpoint_index(&self) {
-        let text = {
-            let mut index = self.index.write().unwrap();
-            self.replay_journal(&mut index);
-            index.to_snapshot_json().to_string()
-        };
-        if self.write_atomic(&self.index_path(), &text).is_ok() {
-            let _ = std::fs::write(self.journal_path(), "");
+        if let Ok(guard) = self.writer_lock() {
+            self.checkpoint_under(&guard);
         }
     }
 
-    /// Apply one index mutation and append it to the journal
-    /// (best-effort; an unwritable journal costs a rebuild later, not
-    /// an error now).  The line is rendered up front and issued as one
-    /// `write_all` on an `O_APPEND` handle: concurrent fleet writers
-    /// append whole lines, never interleaved bytes — a multi-write
-    /// `writeln!` here could tear a *non-final* journal line and force
-    /// every subsequent open into a full rebuild scan.
+    fn checkpoint_under(&self, _guard: &FileLock) {
+        let disk = std::fs::read_to_string(self.index_path())
+            .ok()
+            .and_then(|text| Json::parse(&text).ok());
+        let (mut index, disk_epoch) = match disk
+            .as_ref()
+            .and_then(|j| StoreIndex::from_snapshot_json(j).ok())
+        {
+            Some(ix) => {
+                let e = disk.as_ref().map(snapshot_epoch).unwrap_or(0);
+                (ix, e)
+            }
+            // Unreadable disk snapshot: fall back to this process's
+            // view (the journal replay below still folds in every
+            // surviving foreign append).
+            None => (
+                self.index.read().unwrap().clone(),
+                self.epoch.load(Ordering::Relaxed),
+            ),
+        };
+        self.replay_journal(&mut index);
+        let epoch = disk_epoch.max(self.epoch.load(Ordering::Relaxed)) + 1;
+        if self
+            .write_atomic(
+                &self.index_path(),
+                &index.to_snapshot_json(epoch).to_string(),
+            )
+            .is_ok()
+        {
+            let _ = std::fs::write(self.journal_path(), "");
+            self.epoch.store(epoch, Ordering::Relaxed);
+            *self.index.write().unwrap() = index;
+        }
+    }
+
+    /// Apply one index mutation and append it to the journal.  The
+    /// append happens under the cross-process writer lock as a single
+    /// pre-rendered fsynced `write_all` on an `O_APPEND` handle:
+    /// concurrent fleet *processes* serialize on the lock, so
+    /// interleaved bytes — torn journal lines — are impossible by
+    /// construction rather than merely tolerated by the replayer.
+    /// Best-effort: when the lock (or the journal) is unavailable the
+    /// in-memory index is still updated and only the line is lost,
+    /// re-adopted on a later lookup or restored by a rebuild.
     fn record(&self, op: JournalOp) {
+        match self.writer_lock() {
+            Ok(guard) => self.record_under(op, &guard),
+            Err(_) => self.index.write().unwrap().apply(&op),
+        }
+    }
+
+    /// [`ArtifactStore::record`] for callers already holding the
+    /// writer lock (GC's victim bookkeeping) — the lock file is not
+    /// reentrant, so re-acquiring would deadlock until the staleness
+    /// TTL.
+    fn record_under(&self, op: JournalOp, _guard: &FileLock) {
         self.index.write().unwrap().apply(&op);
         use std::io::Write;
         let line = format!("{}\n", op.to_json());
@@ -398,7 +629,12 @@ impl ArtifactStore {
             .append(true)
             .open(self.journal_path())
         {
-            let _ = f.write_all(line.as_bytes());
+            // A failed write or fsync costs at worst this one line —
+            // re-adopted later — never a torn one (single write, and
+            // the lock excludes interleaving writers).
+            if f.write_all(line.as_bytes()).is_ok() {
+                let _ = f.sync_data();
+            }
         }
     }
 
@@ -406,11 +642,20 @@ impl ArtifactStore {
     // Reads and writes
     // -----------------------------------------------------------------
 
-    /// Atomic-enough write: temp file in the target directory + rename.
-    /// The temp name is unique per (process, write), so concurrent
-    /// writers — even two threads publishing the same artifact — never
-    /// clobber each other's temp file; `store gc` sweeps any orphan a
-    /// crashed writer leaves behind.
+    /// Atomic durable write: temp file in the target directory, fsync,
+    /// rename, then a best-effort fsync of the parent directory.
+    ///
+    /// Durability contract: the payload reaches stable storage
+    /// *before* the rename publishes it (renaming an unsynced temp
+    /// can, after a crash, surface a published-but-empty artifact that
+    /// later loads flag as corrupt and GC has to sweep), and the
+    /// parent-directory sync makes the rename itself survive the
+    /// crash.  So a crash at any point leaves either the old artifact,
+    /// the new artifact, or a stale temp file — never a torn or hollow
+    /// published file.  The temp name is unique per (process, write),
+    /// so concurrent writers — even two threads publishing the same
+    /// artifact — never clobber each other's temp file; `store gc`
+    /// sweeps any orphan a crashed writer leaves behind.
     fn write_atomic(&self, path: &Path, text: &str) -> Result<(), String> {
         static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
         let tmp = path.with_extension(format!(
@@ -418,10 +663,23 @@ impl ArtifactStore {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, text)
-            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+            f.write_all(text.as_bytes())
+                .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+            f.sync_all()
+                .map_err(|e| format!("syncing {}: {e}", tmp.display()))?;
+        }
         std::fs::rename(&tmp, path)
-            .map_err(|e| format!("publishing {}: {e}", path.display()))
+            .map_err(|e| format!("publishing {}: {e}", path.display()))?;
+        if let Some(parent) = path.parent() {
+            if let Ok(dir) = std::fs::File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+        Ok(())
     }
 
     /// Validate the envelope of a parsed artifact: current format
@@ -488,6 +746,25 @@ impl ArtifactStore {
         key: &StatsKey,
         vouched: bool,
     ) -> Option<(KernelStats, bool)> {
+        self.read_stats_with(key, vouched, false)
+    }
+
+    /// [`ArtifactStore::read_stats_artifact`] for scan paths that must
+    /// not touch the live index — the rebuild scan (which holds the
+    /// writer lock, and journal adoption would deadlock on it),
+    /// `verify_index`, and GC's under-lock victim revalidation.  Every
+    /// read is a counted parse, and a compacted twin's shared section
+    /// is read raw instead of through the adopt-on-miss path.
+    fn read_stats_scan(&self, key: &StatsKey) -> Option<(KernelStats, bool)> {
+        self.read_stats_with(key, false, true)
+    }
+
+    fn read_stats_with(
+        &self,
+        key: &StatsKey,
+        vouched: bool,
+        scan: bool,
+    ) -> Option<(KernelStats, bool)> {
         let text = std::fs::read_to_string(self.stats_path(key)).ok()?;
         if !vouched {
             self.count_parse();
@@ -511,8 +788,20 @@ impl ArtifactStore {
             return None;
         }
         let ops = codec::ops_from_json(j.get("ops")?).ok()?;
-        let shared = self.read_shared_artifact(key.fingerprint)?;
+        let shared = if scan {
+            self.read_shared_scan(key.fingerprint)?
+        } else {
+            self.read_shared_artifact(key.fingerprint)?
+        };
         Some((codec::stats_from_parts(shared, ops, key.sub_group_size), true))
+    }
+
+    fn decode_shared(text: &str, fp: u128) -> Option<codec::SharedStats> {
+        let j = Self::parse_versioned(text, "kernel-stats-shared")?;
+        if j.get("fingerprint")?.as_str()? != codec::fingerprint_to_hex(fp) {
+            return None;
+        }
+        codec::stats_shared_from_json(j.get("shared")?).ok()
     }
 
     /// Load one shared sg-invariant stats section (compacted stores).
@@ -526,11 +815,7 @@ impl ArtifactStore {
             if !vouched {
                 self.count_parse();
             }
-            let j = Self::parse_versioned(&text, "kernel-stats-shared")?;
-            if j.get("fingerprint")?.as_str()? != codec::fingerprint_to_hex(fp) {
-                return None;
-            }
-            codec::stats_shared_from_json(j.get("shared")?).ok()
+            Self::decode_shared(&text, fp)
         })();
         if vouched && loaded.is_none() {
             self.record(JournalOp::DelShared(fp));
@@ -539,6 +824,15 @@ impl ArtifactStore {
             self.record(JournalOp::PutShared(fp));
         }
         loaded
+    }
+
+    /// [`ArtifactStore::read_shared_artifact`] without index side
+    /// effects (see [`ArtifactStore::read_stats_scan`]); the parse is
+    /// counted.
+    fn read_shared_scan(&self, fp: u128) -> Option<codec::SharedStats> {
+        let text = std::fs::read_to_string(self.shared_path(fp)).ok()?;
+        self.count_parse();
+        Self::decode_shared(&text, fp)
     }
 
     pub fn save_stats(&self, key: &StatsKey, stats: &KernelStats) -> Result<(), String> {
@@ -626,9 +920,10 @@ impl ArtifactStore {
     /// manifest without touching their bytes; only unindexed `.json`
     /// files pay a (counted) classification parse.  Nested
     /// directories and foreign files are surfaced — never silently
-    /// omitted — so `ls`/`stat`/`gc` account for everything, and
-    /// `index.json`/`index.journal` (store metadata, not artifacts)
-    /// are the only paths skipped.
+    /// omitted — so `ls`/`stat`/`gc` account for everything; the only
+    /// paths skipped are store metadata, not artifacts:
+    /// `index.json`/`index.journal`, the writer lock and the
+    /// maintenance lease.
     pub fn list(&self) -> Result<Vec<ArtifactInfo>, String> {
         let mut out = Vec::new();
         let entries = std::fs::read_dir(&self.root)
@@ -638,9 +933,17 @@ impl ArtifactStore {
                 entry.map_err(|e| format!("reading {}: {e}", self.root.display()))?;
             let path = entry.path();
             let name = entry.file_name().to_string_lossy().into_owned();
+            // Store metadata (the index, the writer lock, the
+            // maintenance lease) is not inventory.
             if matches!(
                 name.as_str(),
-                "stats" | "fits" | "shared" | "index.json" | "index.journal"
+                "stats"
+                    | "fits"
+                    | "shared"
+                    | "index.json"
+                    | "index.journal"
+                    | "index.lock"
+                    | "gc.lease"
             ) {
                 continue;
             }
@@ -808,6 +1111,27 @@ impl ArtifactStore {
         )
     }
 
+    /// Parse one fit artifact file into its embedded key plus payload
+    /// validity — a counted full-artifact parse, no index side
+    /// effects.  Shared by classification, the rebuild scan, and GC's
+    /// under-lock victim revalidation.
+    fn parse_fit_file(&self, path: &Path) -> Option<(FitKey, bool)> {
+        let text = std::fs::read_to_string(path).ok()?;
+        self.count_parse();
+        let j = Self::parse_versioned(&text, "fit")?;
+        let key = FitKey {
+            case: j.get("case")?.as_str()?.to_string(),
+            device: j.get("device")?.as_str()?.to_string(),
+            nonlinear: j.get("nonlinear")?.as_bool()?,
+            model_fingerprint: codec::fingerprint_from_hex(
+                j.get("model_fingerprint")?.as_str()?,
+            )
+            .ok()?,
+        };
+        let payload_ok = codec::fit_from_json(j.get("fit")?).is_ok();
+        Some((key, payload_ok))
+    }
+
     /// `(describe, model fingerprint, valid)` for one fit artifact.
     fn classify_fit(&self, path: &Path, name: &str) -> (String, Option<u128>, bool) {
         let indexed = self.index.read().unwrap().fit_for_file(name).cloned();
@@ -819,22 +1143,7 @@ impl ArtifactStore {
                 true,
             );
         }
-        let parsed = Self::contained(|| {
-            let text = std::fs::read_to_string(path).ok()?;
-            self.count_parse();
-            let j = Self::parse_versioned(&text, "fit")?;
-            let key = FitKey {
-                case: j.get("case")?.as_str()?.to_string(),
-                device: j.get("device")?.as_str()?.to_string(),
-                nonlinear: j.get("nonlinear")?.as_bool()?,
-                model_fingerprint: codec::fingerprint_from_hex(
-                    j.get("model_fingerprint")?.as_str()?,
-                )
-                .ok()?,
-            };
-            let payload_ok = codec::fit_from_json(j.get("fit")?).is_ok();
-            Some((key, payload_ok))
-        });
+        let parsed = Self::contained(|| self.parse_fit_file(path));
         match parsed {
             Some((key, payload_ok)) => {
                 // A valid artifact also lives where its embedded key
@@ -914,8 +1223,9 @@ impl ArtifactStore {
         referenced
     }
 
-    /// Drop the index entry (if any) behind a file GC just removed.
-    fn forget_file(&self, kind: ArtifactKind, path: &Path) {
+    /// Drop the index entry (if any) behind a file GC just removed —
+    /// under the same writer-lock hold as the unlink itself.
+    fn forget_file(&self, kind: ArtifactKind, path: &Path, guard: &FileLock) {
         let name = match path.file_name().and_then(|n| n.to_str()) {
             Some(n) => n,
             None => return,
@@ -924,24 +1234,55 @@ impl ArtifactStore {
             ArtifactKind::Stats => {
                 if let Some(key) = stats_key_from_name(name) {
                     if self.index.read().unwrap().stats(&key).is_some() {
-                        self.record(JournalOp::DelStats(key));
+                        self.record_under(JournalOp::DelStats(key), guard);
                     }
                 }
             }
             ArtifactKind::Fit => {
                 let indexed = self.index.read().unwrap().fit_for_file(name).cloned();
                 if let Some(key) = indexed {
-                    self.record(JournalOp::DelFit(key));
+                    self.record_under(JournalOp::DelFit(key), guard);
                 }
             }
             ArtifactKind::Shared => {
                 if let Some(fp) = shared_fp_from_name(name) {
                     if self.index.read().unwrap().has_shared(fp) {
-                        self.record(JournalOp::DelShared(fp));
+                        self.record_under(JournalOp::DelShared(fp), guard);
                     }
                 }
             }
             ArtifactKind::Temp | ArtifactKind::Other => {}
+        }
+    }
+
+    /// Under the writer lock, immediately before an unlink: does a
+    /// victim classified stale/corrupt now parse as a *valid,
+    /// correctly placed* artifact?  A concurrent `save_*` may have
+    /// republished it between the GC scan and this moment; deleting it
+    /// anyway would hand that writer's next load a vouched-but-missing
+    /// artifact (the cross-process form of the silent-eviction bug).
+    /// Counted parses, no index side effects — the sparing caller
+    /// leaves the republisher's own journaled put standing.
+    fn revalidates_under_lock(&self, info: &ArtifactInfo) -> bool {
+        let name = match info.path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => return false,
+        };
+        match info.kind {
+            ArtifactKind::Stats => stats_key_from_name(name)
+                .filter(|k| stats_file_name(k) == name)
+                .and_then(|k| Self::contained(|| self.read_stats_scan(&k)))
+                .is_some(),
+            ArtifactKind::Fit => Self::contained(|| self.parse_fit_file(&info.path))
+                .is_some_and(|(key, payload_ok)| {
+                    payload_ok && fit_file_name(&key) == name
+                }),
+            ArtifactKind::Shared => shared_fp_from_name(name)
+                .filter(|fp| shared_file_name(*fp) == name)
+                .is_some_and(|fp| {
+                    Self::contained(|| self.read_shared_scan(fp)).is_some()
+                }),
+            ArtifactKind::Temp | ArtifactKind::Other => false,
         }
     }
 
@@ -962,7 +1303,20 @@ impl ArtifactStore {
     /// sweep reclaims the bytes.  A non-dry-run GC ends by
     /// checkpointing the index (journal merge + snapshot + journal
     /// truncation).
+    ///
+    /// Cross-process fencing: a destructive run holds the maintenance
+    /// lease for its whole duration (a live foreign lease is a
+    /// refusal — see [`GcOptions::lease_ttl_secs`]), every unlink
+    /// happens under the writer lock, and a victim classified
+    /// stale/corrupt is re-verified there first so a concurrently
+    /// republished artifact is spared.  Dry runs touch nothing and
+    /// need neither.
     pub fn gc(&self, opts: &GcOptions) -> Result<GcOutcome, String> {
+        let lease = if opts.dry_run {
+            None
+        } else {
+            Some(Lease::acquire(&self.lease_path(), opts.lease_ttl_secs)?)
+        };
         let infos = self.list()?;
         // Shared sections are live while any valid stats artifact
         // references them.
@@ -972,6 +1326,7 @@ impl ArtifactStore {
             .filter_map(|i| i.shared_fingerprint)
             .collect();
         let mut out = GcOutcome::default();
+        let mut victims: Vec<(ArtifactInfo, String)> = Vec::new();
         for info in infos {
             out.scanned += 1;
             let reason = match info.kind {
@@ -1007,19 +1362,48 @@ impl ArtifactStore {
                 ArtifactKind::Stats => None,
             };
             if let Some(reason) = reason {
-                if !opts.dry_run {
-                    std::fs::remove_file(&info.path).map_err(|e| {
-                        format!("removing {}: {e}", info.path.display())
-                    })?;
-                    self.forget_file(info.kind, &info.path);
-                }
+                victims.push((info, reason));
+            }
+        }
+        if opts.dry_run {
+            for (info, reason) in victims {
                 out.reclaimed_bytes += info.bytes;
                 out.removed.push((info.path, reason));
             }
+            return Ok(out);
         }
-        if !opts.dry_run {
-            self.checkpoint_index();
+        // Reclaim in small batches: one writer-lock hold per batch
+        // (instead of per victim) bounds lockfile churn, while batch
+        // boundaries both let concurrent writers in and refresh the
+        // lease — a sweep that outlived its own lease would be stolen
+        // mid-run, re-admitting the double-delete this fences out.
+        let lease = lease.expect("destructive gc holds the maintenance lease");
+        for batch in victims.chunks(16) {
+            lease.refresh(opts.lease_ttl_secs);
+            let guard = self.writer_lock()?;
+            for (info, reason) in batch {
+                if !info.valid && self.revalidates_under_lock(info) {
+                    // Republished by a concurrent writer since the
+                    // scan: spare it.
+                    continue;
+                }
+                match std::fs::remove_file(&info.path) {
+                    Ok(()) => {}
+                    // Already gone (the temp's owner finished its
+                    // rename): nothing to account.
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                        continue;
+                    }
+                    Err(e) => {
+                        return Err(format!("removing {}: {e}", info.path.display()))
+                    }
+                }
+                self.forget_file(info.kind, &info.path, &guard);
+                out.reclaimed_bytes += info.bytes;
+                out.removed.push((info.path.clone(), reason.clone()));
+            }
         }
+        self.checkpoint_index();
         Ok(out)
     }
 
@@ -1033,7 +1417,13 @@ impl ArtifactStore {
     /// family whose twins' invariant sections do not encode
     /// byte-identically (a hand-edited artifact) is skipped, never
     /// grafted.  Ends by checkpointing the index.
-    pub fn compact(&self) -> Result<CompactOutcome, String> {
+    ///
+    /// Rewriting artifacts in place is destructive maintenance, so the
+    /// whole run holds the maintenance lease (`lease_ttl_secs`; a live
+    /// foreign lease is a refusal) — which also excludes a concurrent
+    /// `gc` from sweeping a shared section mid-graft.
+    pub fn compact(&self, lease_ttl_secs: u64) -> Result<CompactOutcome, String> {
+        let lease = Lease::acquire(&self.lease_path(), lease_ttl_secs)?;
         let mut groups: HashMap<u128, Vec<(StatsKey, StatsEntry)>> = HashMap::new();
         {
             let index = self.index.read().unwrap();
@@ -1052,6 +1442,9 @@ impl ArtifactStore {
             |p: &Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
         let mut out = CompactOutcome::default();
         for fp in fps {
+            // One refresh per family keeps a long compaction from
+            // outliving (and thereby losing) its own lease.
+            lease.refresh(lease_ttl_secs);
             let mut members = groups.remove(&fp).unwrap();
             members.sort_by_key(|(k, _)| k.sub_group_size);
             out.families += 1;
@@ -1124,6 +1517,37 @@ impl ArtifactStore {
         self.checkpoint_index();
         Ok(out)
     }
+
+    /// Compare the live index (snapshot + journal, as loaded and
+    /// maintained by this process) against a full rebuild scan of the
+    /// artifacts on disk (`perflex store verify`).  Agreement is the
+    /// store's cross-process acceptance bar: concurrent writers may
+    /// cost each other extra parses, never index entries.  The live
+    /// index is untouched; every scanned artifact is a counted
+    /// full-artifact parse.
+    pub fn verify_index(&self) -> Result<IndexVerifyOutcome, String> {
+        let (loaded_text, indexed) = {
+            let index = self.index.read().unwrap();
+            (index.to_snapshot_json(0).to_string(), index.counts())
+        };
+        let scan = self.scan_index(None)?;
+        Ok(IndexVerifyOutcome {
+            matches: loaded_text == scan.to_snapshot_json(0).to_string(),
+            indexed,
+            scanned: scan.counts(),
+        })
+    }
+}
+
+/// Outcome of [`ArtifactStore::verify_index`].
+#[derive(Clone, Copy, Debug)]
+pub struct IndexVerifyOutcome {
+    /// The live index and the rebuild scan agree entry-for-entry.
+    pub matches: bool,
+    /// `(stats, fits, shared)` counts of the live index.
+    pub indexed: (usize, usize, usize),
+    /// `(stats, fits, shared)` counts of the rebuild scan.
+    pub scanned: (usize, usize, usize),
 }
 
 /// Classification of one file found under the store root.
@@ -1172,7 +1596,13 @@ pub struct GcOptions<'a> {
     /// Minimum age before a temp file counts as orphaned — a live
     /// writer's temp is younger than this.
     pub temp_ttl_secs: u64,
-    /// Report what would be removed without deleting anything.
+    /// How long this run's maintenance lease protects it: a concurrent
+    /// destructive `gc`/`compact` refuses while the lease is live, and
+    /// a crashed holder blocks the fleet for at most this long
+    /// (`--lease-ttl-secs` on the CLI).
+    pub lease_ttl_secs: u64,
+    /// Report what would be removed without deleting anything (needs
+    /// no lease).
     pub dry_run: bool,
 }
 
@@ -1182,6 +1612,7 @@ impl Default for GcOptions<'_> {
             reachable_fits: None,
             // Long enough that any live writer has finished its rename.
             temp_ttl_secs: 15 * 60,
+            lease_ttl_secs: DEFAULT_LEASE_TTL_SECS,
             dry_run: false,
         }
     }
@@ -1507,6 +1938,7 @@ mod tests {
                 reachable_fits: Some(&reachable),
                 temp_ttl_secs: 0,
                 dry_run: true,
+                ..GcOptions::default()
             })
             .unwrap();
         assert_eq!(dry.removed.len(), 4, "{:?}", dry.removed);
@@ -1517,6 +1949,7 @@ mod tests {
                 reachable_fits: Some(&reachable),
                 temp_ttl_secs: 0,
                 dry_run: false,
+                ..GcOptions::default()
             })
             .unwrap();
         assert_eq!(gc.removed.len(), 4, "{:?}", gc.removed);
@@ -1566,6 +1999,7 @@ mod tests {
                 reachable_fits: None,
                 temp_ttl_secs: 0,
                 dry_run: false,
+                ..GcOptions::default()
             })
             .unwrap();
         assert_eq!(gc.removed.len(), 1, "{:?}", gc.removed);
@@ -1598,6 +2032,7 @@ mod tests {
                 reachable_fits: None,
                 temp_ttl_secs: 0,
                 dry_run: false,
+                ..GcOptions::default()
             })
             .unwrap();
         assert!(gc.removed.is_empty(), "{:?}", gc.removed);
@@ -1628,7 +2063,7 @@ mod tests {
             originals.push(codec::stats_to_json(&st).to_string());
         }
 
-        let outcome = store.compact().unwrap();
+        let outcome = store.compact(DEFAULT_LEASE_TTL_SECS).unwrap();
         assert_eq!(outcome.families, 1);
         assert_eq!(outcome.shared_sections, 1);
         assert_eq!(outcome.rewritten, 2);
@@ -1653,7 +2088,7 @@ mod tests {
         assert!(gc.removed.is_empty(), "{:?}", gc.removed);
 
         // A second compaction finds nothing left to rewrite.
-        let again = store.compact().unwrap();
+        let again = store.compact(DEFAULT_LEASE_TTL_SECS).unwrap();
         assert_eq!((again.shared_sections, again.rewritten), (0, 0));
 
         // Remove both twins: the shared section is orphaned and GC'd.
@@ -1666,6 +2101,7 @@ mod tests {
                 reachable_fits: None,
                 temp_ttl_secs: 0,
                 dry_run: false,
+                ..GcOptions::default()
             })
             .unwrap();
         assert_eq!(gc.removed.len(), 1, "{:?}", gc.removed);
@@ -1764,6 +2200,244 @@ mod tests {
         let warm = ArtifactStore::open(&dir).unwrap();
         assert!(warm.load_fit(&key).is_some());
         assert_eq!(warm.artifact_parses(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// THE cross-process tentpole: N "processes" (threads, each with
+    /// its own `ArtifactStore::open` over one root) interleave saves,
+    /// vouched loads, open-time checkpoints and destructive GC.
+    /// Afterwards the journaled index must agree entry-for-entry with
+    /// a full rebuild scan, and no vouched load may ever have observed
+    /// a missing artifact.
+    #[test]
+    fn concurrent_stores_lose_no_index_entries_or_vouched_loads() {
+        let dir = tmp_store("multiproc");
+        drop(ArtifactStore::open(&dir).unwrap());
+        let (n_threads, iters) = (4usize, 8usize);
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    for i in 0..iters {
+                        // A fresh open per round exercises snapshot
+                        // load + journal replay against live writers.
+                        let store = ArtifactStore::open(&dir).unwrap();
+                        let key = FitKey {
+                            case: format!("case{t}"),
+                            device: format!("dev{i}"),
+                            nonlinear: (i + t) % 2 == 0,
+                            model_fingerprint: (t * 1000 + i) as u128,
+                        };
+                        store.save_fit(&key, &some_fit(i as f64)).unwrap();
+                        assert!(
+                            store.load_fit(&key).is_some(),
+                            "a vouched load observed a missing artifact \
+                             (t={t}, i={i})"
+                        );
+                        if i % 3 == 0 {
+                            // Destructive maintenance racing writers: a
+                            // live foreign lease refuses (fine); an
+                            // acquired one must never delete anything
+                            // live.
+                            match store.gc(&GcOptions {
+                                temp_ttl_secs: 3600,
+                                lease_ttl_secs: 30,
+                                ..GcOptions::default()
+                            }) {
+                                Ok(out) => assert!(
+                                    out.removed.is_empty(),
+                                    "gc deleted live artifacts: {:?}",
+                                    out.removed
+                                ),
+                                Err(e) => assert!(
+                                    e.contains("lease") || e.contains("lock"),
+                                    "unexpected gc failure: {e}"
+                                ),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let store = ArtifactStore::open(&dir).unwrap();
+        let outcome = store.verify_index().unwrap();
+        assert!(
+            outcome.matches,
+            "index {:?} must equal the rebuild scan {:?}",
+            outcome.indexed, outcome.scanned
+        );
+        assert_eq!(
+            store.index_counts().1,
+            n_threads * iters,
+            "no concurrent writer's put may be lost"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The epoch fence: interleaved checkpoints from two stores over
+    /// one root (each its own "process") must never lose the other's
+    /// entries — the second checkpoint re-bases on the first's
+    /// snapshot instead of overwriting it with its own older view.
+    /// Pre-fence, the loser's put survived only in self-healing
+    /// adopt-on-miss form; post-fence it is in the snapshot itself, so
+    /// a fresh open vouches for both with zero parses.
+    #[test]
+    fn interleaved_checkpoints_preserve_both_writers_entries() {
+        let dir = tmp_store("epoch-fence");
+        let a = ArtifactStore::open(&dir).unwrap();
+        let b = ArtifactStore::open(&dir).unwrap();
+        let key_a = FitKey {
+            case: "a".into(),
+            device: "d".into(),
+            nonlinear: false,
+            model_fingerprint: 1,
+        };
+        let key_b = FitKey {
+            case: "b".into(),
+            device: "d".into(),
+            nonlinear: true,
+            model_fingerprint: 2,
+        };
+        a.save_fit(&key_a, &some_fit(1.0)).unwrap();
+        b.save_fit(&key_b, &some_fit(2.0)).unwrap();
+        // Both checkpoint (gc is the public path ending in one).
+        a.gc(&GcOptions::default()).unwrap();
+        b.gc(&GcOptions::default()).unwrap();
+        let fresh = ArtifactStore::open(&dir).unwrap();
+        assert!(fresh.load_fit(&key_a).is_some());
+        assert!(fresh.load_fit(&key_b).is_some());
+        assert_eq!(
+            fresh.artifact_parses(),
+            0,
+            "both writers' puts must be in the snapshot, not merely \
+             re-adoptable"
+        );
+        assert!(fresh.verify_index().unwrap().matches);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Destructive maintenance under a live foreign lease must refuse
+    /// without deleting anything; an expired lease is a dead holder
+    /// and is stolen.
+    #[test]
+    fn gc_refuses_under_live_foreign_lease_and_steals_expired_ones() {
+        let dir = tmp_store("lease");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let corrupt = dir.join("stats").join("junk.json");
+        std::fs::write(&corrupt, "{not json").unwrap();
+
+        std::fs::write(
+            dir.join("gc.lease"),
+            "{\"pid\":424242,\"token\":\"foreign\",\"expires_at\":99999999999}",
+        )
+        .unwrap();
+        let err = store
+            .gc(&GcOptions {
+                temp_ttl_secs: 0,
+                ..GcOptions::default()
+            })
+            .unwrap_err();
+        assert!(err.contains("lease"), "{err}");
+        assert!(err.contains("refusing"), "{err}");
+        assert!(corrupt.exists(), "a refused gc must not delete anything");
+        assert!(
+            store.compact(60).unwrap_err().contains("refusing"),
+            "compact is destructive maintenance too"
+        );
+
+        // Dry runs are non-destructive: they report under any lease.
+        let dry = store
+            .gc(&GcOptions {
+                temp_ttl_secs: 0,
+                dry_run: true,
+                ..GcOptions::default()
+            })
+            .unwrap();
+        assert_eq!(dry.removed.len(), 1, "{:?}", dry.removed);
+        assert!(corrupt.exists());
+
+        // An expired lease is a dead maintainer: stolen, gc proceeds,
+        // and the lease releases on completion.
+        std::fs::write(
+            dir.join("gc.lease"),
+            "{\"pid\":424242,\"token\":\"foreign\",\"expires_at\":1}",
+        )
+        .unwrap();
+        let out = store
+            .gc(&GcOptions {
+                temp_ttl_secs: 0,
+                ..GcOptions::default()
+            })
+            .unwrap();
+        assert_eq!(out.removed.len(), 1, "{:?}", out.removed);
+        assert!(!corrupt.exists());
+        assert!(!dir.join("gc.lease").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The save-vs-gc race, deterministically: a victim classified
+    /// corrupt at scan time that a concurrent writer republishes as
+    /// valid before the unlink must be spared by the under-lock
+    /// re-verification.
+    #[test]
+    fn invalid_victims_that_revalidate_under_the_lock_are_spared() {
+        let dir = tmp_store("revive");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let k = crate::uipick::derived::build_axpy(DType::F32).unwrap().freeze();
+        let skey = StatsKey {
+            fingerprint: k.fingerprint(),
+            sub_group_size: 32,
+        };
+        let path = store.stats_path(&skey);
+        std::fs::write(&path, "{not json").unwrap();
+        let info = store
+            .list()
+            .unwrap()
+            .into_iter()
+            .find(|i| i.path == path)
+            .expect("the corrupt stats file must be surfaced");
+        assert!(!info.valid, "scan-time classification: GC fodder");
+
+        // A "concurrent writer" republishes a valid artifact at the
+        // same path before the unlink would happen.
+        let writer = ArtifactStore::open(&dir).unwrap();
+        writer
+            .save_stats(&skey, &crate::stats::gather(&k, 32).unwrap())
+            .unwrap();
+        assert!(
+            store.revalidates_under_lock(&info),
+            "the republished artifact must be spared"
+        );
+
+        // Still corrupt: still fodder.
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(!store.revalidates_under_lock(&info));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `verify_index` must detect an index whose artifact vanished
+    /// behind its back (the class of damage the locked journal +
+    /// epoch fence prevent live writers from ever causing).
+    #[test]
+    fn verify_index_detects_entries_with_missing_artifacts() {
+        let dir = tmp_store("verify");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            model_fingerprint: 0x42,
+        };
+        store.save_fit(&key, &some_fit(1.0)).unwrap();
+        let ok = store.verify_index().unwrap();
+        assert!(ok.matches, "{ok:?}");
+        assert_eq!(ok.indexed, ok.scanned);
+
+        std::fs::remove_file(store.fit_path(&key)).unwrap();
+        let bad = store.verify_index().unwrap();
+        assert!(!bad.matches, "a lost artifact must be detected");
+        assert_eq!(bad.indexed.1, 1);
+        assert_eq!(bad.scanned.1, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -138,7 +138,7 @@ fn aot_calibrates_real_measurements_from_the_fleet() {
     assert_eq!(knls.len(), 6);
     let model = cm.to_model();
     let mut data = gather_feature_values(&model, &knls, &dev).unwrap();
-    data.scale_features_by_output();
+    data.scale_features_by_output().unwrap();
     let fit = fit_cost_model_aot(&artifacts, &cm, &data, &LmOptions::default())
         .unwrap();
     // Scaled outputs are 1; a good fit has tiny residual per row.

@@ -14,6 +14,7 @@ use perflex::coordinator::expsets;
 use perflex::gpusim::{device_by_id, fleet};
 use perflex::session::{
     fit_key_parts, reachable_fit_fingerprints, GcOptions, Session,
+    DEFAULT_LEASE_TTL_SECS,
 };
 
 fn tmp_dir(name: &str) -> PathBuf {
@@ -148,6 +149,61 @@ fn concurrent_sessions_share_one_store_safely() {
     let cal = warm.calibrate_case(&case, &dev, true, None).unwrap();
     assert!(cal.from_store, "the racing writers left a loadable artifact");
     assert_eq!(warm.cache().misses(), 0);
+
+    // The cross-process acceptance bar: after the racing writers, the
+    // journaled index agrees entry-for-entry with a full rebuild scan.
+    let verify = warm.store().unwrap().verify_index().unwrap();
+    assert!(
+        verify.matches,
+        "index {:?} must equal the rebuild scan {:?}",
+        verify.indexed, verify.scanned
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A live foreign maintenance lease makes destructive `store gc` (and
+/// `compact`) refuse — without deleting anything — while dry runs and
+/// ordinary calibration traffic proceed untouched; the session stays
+/// warm throughout.
+#[test]
+fn maintenance_refuses_under_foreign_lease_but_sessions_stay_live() {
+    let dir = tmp_dir("lease-refusal");
+    let case = expsets::eval_case("matmul").unwrap();
+    let dev = device_by_id("titan_v").unwrap();
+    let session = Session::with_store(&dir).unwrap();
+    session.calibrate_case(&case, &dev, true, None).unwrap();
+
+    std::fs::write(
+        dir.join("gc.lease"),
+        "{\"pid\":424242,\"token\":\"foreign\",\"expires_at\":99999999999}",
+    )
+    .unwrap();
+    let store = session.store().unwrap();
+    let err = store
+        .gc(&GcOptions {
+            temp_ttl_secs: 0,
+            ..GcOptions::default()
+        })
+        .unwrap_err();
+    assert!(err.contains("refusing"), "{err}");
+    assert!(
+        store.compact(DEFAULT_LEASE_TTL_SECS).unwrap_err().contains("refusing")
+    );
+    // Dry runs need no lease.
+    let dry = store
+        .gc(&GcOptions {
+            temp_ttl_secs: 0,
+            dry_run: true,
+            ..GcOptions::default()
+        })
+        .unwrap();
+    assert!(dry.removed.is_empty(), "{:?}", dry.removed);
+
+    // Calibration traffic is not maintenance: a fresh session loads
+    // warm under the foreign lease.
+    let warm = Session::with_store(&dir).unwrap();
+    let cal = warm.calibrate_case(&case, &dev, true, None).unwrap();
+    assert!(cal.from_store);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -179,6 +235,7 @@ fn fleet_experiment_fits_warm_start_from_shared_store() {
             reachable_fits: Some(&reachable_fit_fingerprints()),
             temp_ttl_secs: 0,
             dry_run: false,
+            ..GcOptions::default()
         })
         .unwrap();
     assert!(
@@ -305,7 +362,7 @@ fn compaction_preserves_fleet_reports_byte_for_byte() {
     let cold = Session::with_store(&dir).unwrap();
     let rep_cold = run_experiment_in_session("fig9", false, &cold).unwrap();
 
-    let outcome = cold.store().unwrap().compact().unwrap();
+    let outcome = cold.store().unwrap().compact(DEFAULT_LEASE_TTL_SECS).unwrap();
     assert!(
         outcome.shared_sections > 0 && outcome.rewritten > 0,
         "fleet stores hold sg-32/sg-64 twins to dedup: {outcome:?}"
@@ -337,6 +394,7 @@ fn compaction_preserves_fleet_reports_byte_for_byte() {
             reachable_fits: Some(&reachable_fit_fingerprints()),
             temp_ttl_secs: 0,
             dry_run: false,
+            ..GcOptions::default()
         })
         .unwrap();
     assert!(
@@ -366,6 +424,7 @@ fn gc_keeps_everything_a_real_calibration_wrote() {
             reachable_fits: Some(&reach),
             temp_ttl_secs: 0,
             dry_run: false,
+            ..GcOptions::default()
         })
         .unwrap();
     assert!(outcome.removed.is_empty(), "{:?}", outcome.removed);
