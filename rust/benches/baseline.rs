@@ -1,0 +1,78 @@
+//! Perf baselines for the three hot paths the artifact store exists to
+//! keep fast — checked in as `BENCH_*.json` so a perf regression shows
+//! up as a diff, not a memory:
+//!
+//! * **counting pass** — one full symbolic statistics gather, the cost
+//!   the stats cache amortizes;
+//! * **warm predict** — a store-warm calibration plus one prediction,
+//!   the paper's "near-zero cost" claim (zero LM iterations, zero
+//!   counting passes);
+//! * **store open** — `Session::with_store` against a populated store,
+//!   the per-process price of the journaled index.
+//!
+//! Writes `BENCH_counting_pass.json`, `BENCH_warm_predict.json` and
+//! `BENCH_store_open.json` into `$PERFLEX_BENCH_DIR` (default: the
+//! working directory).
+
+use perflex::bench_harness::{bench_recorded, write_baseline};
+use perflex::coordinator::expsets;
+use perflex::gpusim::device_by_id;
+use perflex::session::Session;
+use perflex::uipick::apps::build_matmul;
+
+fn main() {
+    let out_dir = std::env::var("PERFLEX_BENCH_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+
+    let dev = device_by_id("titan_v").unwrap();
+    let case = &expsets::eval_cases()[0];
+    let kernel = build_matmul(perflex::ir::DType::F32, true, 16)
+        .unwrap()
+        .freeze();
+    let env: std::collections::BTreeMap<String, i64> =
+        [("n".to_string(), 2048i64)].into_iter().collect();
+
+    // 1. The counting pass (uncached by construction: a fresh gather
+    // each iteration).
+    let counting = bench_recorded("counting pass (matmul_pf, sg=32)", 20, || {
+        let _ = perflex::stats::gather(&kernel, 32).unwrap();
+    });
+    let p = write_baseline(&out_dir, "counting_pass", &[counting]).unwrap();
+    println!("baseline written to {}", p.display());
+
+    // Populate a store once (cold calibration), then measure the warm
+    // paths against it.
+    let store_dir = std::env::temp_dir()
+        .join(format!("perflex-bench-baseline-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    {
+        let cold = Session::with_store(&store_dir).unwrap();
+        let cal = cold.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(!cal.from_store);
+    }
+
+    // 2. Warm predict: store-backed calibrate (a disk load) plus one
+    // prediction — the end-to-end "near-zero cost" path.
+    let session = Session::with_store(&store_dir).unwrap();
+    let warm = bench_recorded("warm calibrate+predict (matmul, titan_v)", 50, || {
+        let cal = session.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(cal.from_store);
+        let _ = session
+            .predict(&cal.cm, &cal.fit, &kernel, &env, &dev)
+            .unwrap();
+    });
+    let p = write_baseline(&out_dir, "warm_predict", &[warm]).unwrap();
+    println!("baseline written to {}", p.display());
+
+    // 3. Store open: index snapshot + journal replay for a populated
+    // store, paid once per process.
+    let open = bench_recorded("Session::with_store (populated store)", 50, || {
+        let s = Session::with_store(&store_dir).unwrap();
+        assert!(s.store().is_some());
+    });
+    let p = write_baseline(&out_dir, "store_open", &[open]).unwrap();
+    println!("baseline written to {}", p.display());
+
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

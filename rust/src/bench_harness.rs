@@ -1,11 +1,47 @@
 //! Minimal criterion-style benchmark harness (criterion is not in the
 //! offline crate set; see Cargo.toml).  Prints mean / min / max over a
-//! fixed iteration count after a warmup run.
+//! fixed iteration count after a warmup run; [`bench_recorded`] +
+//! [`write_baseline`] additionally serialize results as `BENCH_*.json`
+//! perf-baseline artifacts (see `benches/baseline.rs`), so perf
+//! regressions show up as a diff against the checked-in baselines
+//! rather than a memory of what the numbers used to be.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::util::json::Json;
+
+/// One recorded benchmark result (milliseconds), the unit of a
+/// `BENCH_*.json` baseline file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", (self.iters as i64).into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("min_ms", self.min_ms.into()),
+            ("max_ms", self.max_ms.into()),
+        ])
+    }
+}
+
 /// Time `f` for `iters` iterations (plus one warmup) and report.
-pub fn bench(name: &str, iters: u32, mut f: impl FnMut()) {
+pub fn bench(name: &str, iters: u32, f: impl FnMut()) {
+    bench_recorded(name, iters, f);
+}
+
+/// [`bench`], additionally returning the measurements for baseline
+/// serialization.
+pub fn bench_recorded(name: &str, iters: u32, mut f: impl FnMut()) -> BenchRecord {
     f(); // warmup
     let mut times = Vec::with_capacity(iters as usize);
     for _ in 0..iters {
@@ -22,4 +58,76 @@ pub fn bench(name: &str, iters: u32, mut f: impl FnMut()) {
         min * 1e3,
         max * 1e3
     );
+    BenchRecord {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean * 1e3,
+        min_ms: min * 1e3,
+        max_ms: max * 1e3,
+    }
+}
+
+/// Write `BENCH_<bench>.json` into `dir` and return its path.  The
+/// file carries a `schema` marker, a regeneration note, and one entry
+/// per record; numbers are machine-relative, so baselines are
+/// refreshed (not diffed numerically) when the reference machine
+/// changes.
+pub fn write_baseline(
+    dir: &Path,
+    bench: &str,
+    records: &[BenchRecord],
+) -> Result<PathBuf, String> {
+    let j = Json::obj(vec![
+        ("schema", "perflex-bench-baseline".into()),
+        ("bench", bench.into()),
+        (
+            "note",
+            "regenerate with `cargo bench --bench baseline` (set \
+             PERFLEX_BENCH_DIR to choose the output directory); null \
+             metrics mean the baseline has not been measured yet"
+                .into(),
+        ),
+        (
+            "records",
+            Json::Arr(records.iter().map(BenchRecord::to_json).collect()),
+        ),
+    ]);
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, j.to_string())
+        .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_files_round_trip_through_the_json_codec() {
+        let dir = std::env::temp_dir()
+            .join(format!("perflex-bench-baseline-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let rec = bench_recorded("noop", 3, || {});
+        assert_eq!(rec.iters, 3);
+        assert!(rec.min_ms <= rec.mean_ms && rec.mean_ms <= rec.max_ms);
+        let path = write_baseline(&dir, "smoke", std::slice::from_ref(&rec)).unwrap();
+        assert!(path.ends_with("BENCH_smoke.json"));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("perflex-bench-baseline")
+        );
+        let records = match j.get("records") {
+            Some(Json::Arr(r)) => r,
+            other => panic!("records must be an array, got {other:?}"),
+        };
+        assert_eq!(records.len(), 1);
+        assert_eq!(
+            records[0].get("name").and_then(Json::as_str),
+            Some("noop")
+        );
+        assert!(records[0].get("mean_ms").and_then(Json::as_f64).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

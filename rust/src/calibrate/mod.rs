@@ -27,11 +27,90 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::features::{BoundFeature, FeatureSpec};
 use crate::gpusim::{
     is_per_kernel_measure_error, measure_with_cache, DeviceProfile,
+    MeasuredSample,
 };
 use crate::ir::KernelRef;
 use crate::model::{Model, ModelExpr};
 use crate::stats::{KernelStats, StatsCache};
 use crate::uipick::GeneratedKernel;
+
+/// A named response variable a model can be calibrated against.
+///
+/// The paper fits wall time; the same symbolic operation counts also
+/// support fitting energy and power (Braun et al., arXiv 2001.07104),
+/// so the pipeline carries the target from measurement through
+/// persistence to reporting instead of hardwiring "the output is a
+/// time in seconds".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Target {
+    /// Wall time in seconds (the paper's output feature).
+    #[default]
+    Time,
+    /// Board energy in joules over the kernel's execution.
+    Energy,
+    /// Average board power in watts (energy / time).
+    AvgPower,
+}
+
+impl Target {
+    /// Every calibratable target, in canonical order.
+    pub const ALL: [Target; 3] =
+        [Target::Time, Target::Energy, Target::AvgPower];
+
+    /// The stable name used on the CLI, in fit keys and in artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Time => "time",
+            Target::Energy => "energy",
+            Target::AvgPower => "avg_power",
+        }
+    }
+
+    /// Unit suffix for report columns.
+    pub fn unit(self) -> &'static str {
+        match self {
+            Target::Time => "s",
+            Target::Energy => "J",
+            Target::AvgPower => "W",
+        }
+    }
+
+    /// The noun used in diagnostics ("non-scalable measured {noun}").
+    pub fn noun(self) -> &'static str {
+        match self {
+            Target::Time => "time",
+            Target::Energy => "energy",
+            Target::AvgPower => "average power",
+        }
+    }
+
+    /// Parse a CLI/wire name; unknown names report the valid set.
+    pub fn parse(s: &str) -> Result<Target, String> {
+        Target::ALL
+            .iter()
+            .copied()
+            .find(|t| t.name() == s)
+            .ok_or_else(|| {
+                format!(
+                    "unknown target '{s}'; valid targets: {}",
+                    Target::ALL
+                        .iter()
+                        .map(|t| t.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Extract this target's value from a measured sample.
+    pub fn of(self, s: &MeasuredSample) -> f64 {
+        match self {
+            Target::Time => s.time_s,
+            Target::Energy => s.energy_j,
+            Target::AvgPower => s.avg_power_w(),
+        }
+    }
+}
 
 /// Feature values for a measurement-kernel set.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -40,12 +119,15 @@ pub struct FeatureData {
     pub feature_ids: Vec<String>,
     /// One row of input-feature values per measurement kernel.
     pub rows: Vec<Vec<f64>>,
-    /// Output-feature (wall time) per measurement kernel.
+    /// Output-feature (the measured `target` value) per measurement
+    /// kernel.
     pub outputs: Vec<f64>,
     /// Kernel labels for diagnostics.
     pub labels: Vec<String>,
     /// Whether `scale_features_by_output` has been applied.
     pub scaled: bool,
+    /// Which response variable `outputs` holds.
+    pub target: Target,
 }
 
 impl FeatureData {
@@ -60,7 +142,7 @@ impl FeatureData {
     /// §7.2: divide each input-feature row by its output value and set
     /// outputs to 1, making the fit minimize *relative* error.
     ///
-    /// A zero or non-finite measured time would poison every scaled
+    /// A zero or non-finite measured output would poison every scaled
     /// feature of its row with inf/NaN and thereby the whole fit (LM
     /// happily converges on garbage once a NaN enters the normal
     /// equations), so the outputs are validated *before* anything is
@@ -77,7 +159,8 @@ impl FeatureData {
                     .unwrap_or("<unlabeled>");
                 return Err(format!(
                     "measurement kernel '{label}' has a non-scalable measured \
-                     time ({t}); refusing to scale features by output"
+                     {} ({t}); refusing to scale features by output",
+                    self.target.noun()
                 ));
             }
         }
@@ -145,11 +228,26 @@ pub fn gather_features_by_ids_cached(
     device: &DeviceProfile,
     cache: &StatsCache,
 ) -> Result<FeatureData, String> {
+    gather_features_by_ids_cached_for(ids, kernels, device, cache, Target::Time)
+}
+
+/// [`gather_features_by_ids_cached`] for an arbitrary response
+/// variable: the `outputs` column holds `target.of(sample)` for each
+/// launchable measurement kernel.  Every target of the same kernel
+/// shares one measurement (and one symbolic pass) through the cache —
+/// the sample carries time and energy together.
+pub fn gather_features_by_ids_cached_for(
+    ids: Vec<String>,
+    kernels: &[GeneratedKernel],
+    device: &DeviceProfile,
+    cache: &StatsCache,
+    target: Target,
+) -> Result<FeatureData, String> {
     let workers = std::thread::available_parallelism()
         .map(usize::from)
         .unwrap_or(1)
         .min(kernels.len().max(1));
-    gather_features_by_ids_inner(ids, kernels, device, cache, workers)
+    gather_features_by_ids_inner(ids, kernels, device, cache, workers, target)
 }
 
 /// The sequential reference implementation of
@@ -162,7 +260,7 @@ pub fn gather_features_by_ids_sequential(
     device: &DeviceProfile,
     cache: &StatsCache,
 ) -> Result<FeatureData, String> {
-    gather_features_by_ids_inner(ids, kernels, device, cache, 1)
+    gather_features_by_ids_inner(ids, kernels, device, cache, 1, Target::Time)
 }
 
 /// One gathered calibration row (feature values, measured output,
@@ -212,14 +310,15 @@ fn gather_one(
     device: &DeviceProfile,
     cache: &StatsCache,
     slots: &Mutex<HashMap<u128, BindSlot>>,
+    target: Target,
 ) -> Result<Option<GatheredRow>, String> {
     // Measure first: kernels a device cannot launch (e.g. 18x18
     // work-groups on the AMD R9 Fury) are skipped, exactly as the
     // paper had to, and the launchability check precedes all
     // symbolic work — so skipped kernels pay nothing.  Their
     // exclusive features stay at the bound of 0.
-    let t = match measure_with_cache(device, &gk.kernel, &gk.env, cache) {
-        Ok(t) => t,
+    let sample = match measure_with_cache(device, &gk.kernel, &gk.env, cache) {
+        Ok(s) => s,
         Err(e) if is_per_kernel_measure_error(&e) => return Ok(None),
         Err(e) => return Err(e),
     };
@@ -232,7 +331,7 @@ fn gather_one(
     let row: Vec<f64> = feats.iter().map(|b| b.eval(&st, &env)).collect();
     Ok(Some(GatheredRow {
         row,
-        output: t,
+        output: target.of(&sample),
         label: format!(
             "{}[{}]",
             gk.kernel.name,
@@ -260,6 +359,7 @@ fn gather_features_by_ids_inner(
     device: &DeviceProfile,
     cache: &StatsCache,
     workers: usize,
+    target: Target,
 ) -> Result<FeatureData, String> {
     let specs: Vec<FeatureSpec> = ids
         .iter()
@@ -275,7 +375,7 @@ fn gather_features_by_ids_inner(
         kernels.iter().map(|_| None).collect();
     if workers <= 1 {
         for (i, gk) in kernels.iter().enumerate() {
-            let out = gather_one(gk, &specs, device, cache, &slots);
+            let out = gather_one(gk, &specs, device, cache, &slots, target);
             let failed = out.is_err();
             outcomes[i] = Some(out);
             if failed {
@@ -314,6 +414,7 @@ fn gather_features_by_ids_inner(
                                         device,
                                         cache,
                                         slots,
+                                        target,
                                     )
                                 }),
                             )
@@ -355,6 +456,7 @@ fn gather_features_by_ids_inner(
     // measurement-set order.
     let mut data = FeatureData {
         feature_ids: ids,
+        target,
         ..Default::default()
     };
     for outcome in outcomes {
@@ -588,6 +690,13 @@ pub struct FitResult {
     /// Final sum-of-squares residual (the §7.2 diagnostic Perflex logs).
     pub residual: f64,
     pub iterations: usize,
+    /// The response variable this fit explains.
+    pub target: Target,
+    /// `true` when LM exited via its convergence criterion (relative
+    /// cost improvement below `tol`); `false` on lambda saturation or
+    /// the iteration cap — the parameters may still be usable, but the
+    /// optimizer never declared them a minimum.
+    pub converged: bool,
 }
 
 impl FitResult {
@@ -600,6 +709,14 @@ impl FitResult {
 }
 
 /// The Levenberg-Marquardt loop (accept/reject with damping schedule).
+///
+/// The returned fit discriminates *why* the loop exited: `converged`
+/// is `true` only for the convergence criterion (accepted step whose
+/// relative improvement fell below `tol`), not for lambda saturation
+/// (`lam >= 1e10` — the damping schedule gave up) or the iteration
+/// cap.  The fit's `target` is stamped [`Target::Time`]; callers
+/// fitting another response variable overwrite it from their
+/// [`FeatureData`] (see [`fit_model`]).
 pub fn levenberg_marquardt(
     backend: &mut dyn LmBackend,
     param_names: Vec<String>,
@@ -610,6 +727,7 @@ pub fn levenberg_marquardt(
     let mut lam = opts.init_lambda;
     let mut cost = backend.cost(&p)?;
     let mut iters = 0;
+    let mut converged = false;
     for _ in 0..opts.max_iters {
         iters += 1;
         let (delta, _) = backend.step(&p, lam)?;
@@ -629,6 +747,7 @@ pub fn levenberg_marquardt(
             cost = new_cost;
             lam = (lam / 3.0).max(1e-14);
             if improvement < opts.tol {
+                converged = true;
                 break;
             }
         } else {
@@ -643,6 +762,8 @@ pub fn levenberg_marquardt(
         params: p,
         residual: cost,
         iterations: iters,
+        target: Target::Time,
+        converged,
     })
 }
 
@@ -688,7 +809,9 @@ pub fn fit_model(
     }
     let p0 = initial_params(data, n_terms, with_edge);
     let mut backend = NativeBackend::with_params(model, data, ordered.clone());
-    levenberg_marquardt(&mut backend, ordered, p0, opts)
+    let mut fit = levenberg_marquardt(&mut backend, ordered, p0, opts)?;
+    fit.target = data.target;
+    Ok(fit)
 }
 
 /// Predict the output feature for a kernel using fitted parameters
@@ -882,7 +1005,9 @@ mod tests {
             dev.sub_group_size,
         )
         .unwrap();
-        let actual = measure(&dev, &test[0].kernel, &test[0].env).unwrap();
+        let actual = measure(&dev, &test[0].kernel, &test[0].env)
+            .unwrap()
+            .time_s;
         let rel = (predicted - actual).abs() / actual;
         assert!(rel < 0.25, "predicted {predicted}, actual {actual}");
 
@@ -936,6 +1061,7 @@ mod tests {
             outputs: vec![2.0, 8.0],
             labels: vec!["a".into(), "b".into()],
             scaled: false,
+            target: Target::Time,
         };
         d.scale_features_by_output().unwrap();
         assert_eq!(d.rows, vec![vec![5.0], vec![5.0]]);
@@ -954,6 +1080,7 @@ mod tests {
             outputs: vec![2.0, 0.0],
             labels: vec!["good[n=1]".into(), "bad[n=2]".into()],
             scaled: false,
+            target: Target::Time,
         };
         let mut d = fresh();
         let err = d.scale_features_by_output().unwrap_err();
@@ -971,6 +1098,112 @@ mod tests {
             d.outputs[1] = poison;
             let err = d.scale_features_by_output().unwrap_err();
             assert!(err.contains("bad[n=2]"), "{poison}: {err}");
+        }
+
+        // The diagnostic names the target's own noun, not "time".
+        let mut d = fresh();
+        d.target = Target::Energy;
+        let err = d.scale_features_by_output().unwrap_err();
+        assert!(err.contains("non-scalable measured energy"), "{err}");
+        let mut d = fresh();
+        let err = d.scale_features_by_output().unwrap_err();
+        assert!(err.contains("non-scalable measured time"), "{err}");
+    }
+
+    #[test]
+    fn target_names_round_trip_and_unknown_names_list_the_valid_set() {
+        for t in Target::ALL {
+            assert_eq!(Target::parse(t.name()).unwrap(), t);
+        }
+        let err = Target::parse("joules").unwrap_err();
+        assert!(err.contains("unknown target 'joules'"), "{err}");
+        for t in Target::ALL {
+            assert!(err.contains(t.name()), "missing {}: {err}", t.name());
+        }
+    }
+
+    #[test]
+    fn lm_discriminates_convergence_from_iteration_cap() {
+        let model = Model::new(
+            "f_cl_wall_time_titan_v",
+            "p_a * f_op_float32_madd + p_b * f_thread_groups",
+        )
+        .unwrap();
+        let mut data = FeatureData {
+            feature_ids: vec![
+                "f_op_float32_madd".into(),
+                "f_thread_groups".into(),
+            ],
+            ..Default::default()
+        };
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..20 {
+            let f1 = rng.uniform_in(1.0, 10.0);
+            let f2 = rng.uniform_in(1.0, 10.0);
+            data.rows.push(vec![f1, f2]);
+            data.outputs.push(2.0 * f1 + 3.0 * f2);
+            data.labels.push("synthetic".into());
+        }
+        let fit = fit_model(&model, &data, &LmOptions::default()).unwrap();
+        assert!(fit.converged, "{fit:?}");
+        // One iteration cannot hit the 1e-14 relative-improvement
+        // criterion on this data: the loop exits via the cap instead
+        // and must say so.
+        let capped = fit_model(
+            &model,
+            &data,
+            &LmOptions {
+                max_iters: 1,
+                ..LmOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(!capped.converged, "{capped:?}");
+        assert_eq!(capped.iterations, 1);
+    }
+
+    /// Gathering with `Target::Energy` fills `outputs` with joules —
+    /// strictly above each kernel's idle-power floor — while sharing
+    /// the measurement and symbolic pass with the time gather through
+    /// the cache.
+    #[test]
+    fn energy_target_gathers_energy_outputs() {
+        let dev = device_by_id("titan_v").unwrap();
+        let knls = KernelCollection::all()
+            .generate_kernels(&[
+                "flops_madd_pattern",
+                "dtype:float32",
+                "nelements:524288,1048576",
+                "m:1024",
+            ])
+            .unwrap();
+        let ids = vec!["f_op_float32_madd".to_string()];
+        let cache = StatsCache::new();
+        let time = gather_features_by_ids_cached_for(
+            ids.clone(),
+            &knls,
+            &dev,
+            &cache,
+            Target::Time,
+        )
+        .unwrap();
+        let energy = gather_features_by_ids_cached_for(
+            ids,
+            &knls,
+            &dev,
+            &cache,
+            Target::Energy,
+        )
+        .unwrap();
+        assert_eq!(time.target, Target::Time);
+        assert_eq!(energy.target, Target::Energy);
+        assert_eq!(time.rows, energy.rows, "inputs are target-independent");
+        for (e, t) in energy.outputs.iter().zip(&time.outputs) {
+            assert!(
+                *e > dev.idle_watts * *t,
+                "energy {e} !> idle floor {}",
+                dev.idle_watts * *t
+            );
         }
     }
 
@@ -1043,6 +1276,7 @@ mod tests {
                 &dev,
                 &StatsCache::new(),
                 4,
+                Target::Time,
             )
             .unwrap_err();
             assert_eq!(

@@ -29,10 +29,10 @@
 use std::collections::BTreeMap;
 
 use super::expsets;
-use super::report::{fmt_time, geomean, ExperimentReport, Prediction};
+use super::report::{fmt_target, fmt_time, geomean, ExperimentReport, Prediction};
 use crate::calibrate::{
     eval_with_kernel_cached, gather_features_by_ids_cached, FeatureData, FitResult,
-    LmOptions,
+    LmOptions, Target,
 };
 use crate::features::FeatureSpec;
 use crate::gpusim::{fleet, measure_with_cache, DeviceProfile};
@@ -49,7 +49,7 @@ use crate::uipick::KernelCollection;
 /// Every runnable experiment.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
-    "table2", "table3", "all",
+    "table2", "table3", "table4", "all",
 ];
 
 /// Dispatch with a fresh in-memory session.
@@ -89,6 +89,7 @@ fn dispatch_experiment(
         "table1" => table1(session),
         "table2" => table2(),
         "table3" => table3(aot, session),
+        "table4" => table4(aot, session),
         "all" => all_experiments(aot, session),
         other => Err(format!(
             "unknown experiment '{other}'; known: {EXPERIMENT_IDS:?}"
@@ -211,7 +212,7 @@ fn fig1_fig2(
     rep.line(format!("{:>6} {:>12} {:>12} {:>8}", "n", "measured", "modeled", "err"));
     for n in [1024i64, 1536, 2048, 2560, 3072, 3584] {
         let env = env1("n", n);
-        let measured = measure_with_cache(&device, &test, &env, cache)?;
+        let measured = measure_with_cache(&device, &test, &env, cache)?.time_s;
         let predicted = eval_with_kernel_cached(
             &model,
             &fit,
@@ -226,6 +227,7 @@ fn fig1_fig2(
             sizes: env,
             measured,
             predicted,
+            target: "time".into(),
         });
         rep.line(format!(
             "{n:>6} {:>12} {:>12} {:>7.1}%",
@@ -312,6 +314,7 @@ pub fn fig5_fit_key(device: &DeviceProfile) -> FitKey {
         true,
         &fig5_cost_model(device.id),
         &fig5_measurement_sets(),
+        Target::Time,
     )
 }
 
@@ -396,7 +399,8 @@ fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
         let mut preds = Vec::new();
         for gk in knls {
             let m = gk.env.get("m").copied().unwrap_or(0);
-            let measured = measure_with_cache(device, &gk.kernel, &gk.env, cache)?;
+            let measured =
+                measure_with_cache(device, &gk.kernel, &gk.env, cache)?.time_s;
             let predicted = predict(cm, fit, &gk.kernel, &gk.env, device, session)?;
             if m == 0 {
                 t0 = measured;
@@ -411,6 +415,7 @@ fn fig5(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
                 sizes: gk.env.clone(),
                 measured,
                 predicted,
+                target: "time".into(),
             });
         }
         Ok(Fig5Part {
@@ -518,6 +523,7 @@ fn table1(session: &Session) -> Result<ExperimentReport, String> {
             &format!("n:{n}"),
         ])?;
         measure_with_cache(&device, &knls[0].kernel, &knls[0].env, cache)
+            .map(|s| s.time_s)
     };
     let ns = [2048i64, 2560, 3072, 3584];
     let times = parallel_map(&ns, |&n| Ok((mk("pf_a", n)?, mk("pf_b", n)?)))?;
@@ -647,6 +653,129 @@ fn granularity_and_rate(
 }
 
 // ----------------------------------------------------------------------
+// Table 4 — held-out-device error per calibration target (extension).
+// ----------------------------------------------------------------------
+
+/// Cross-machine generalization, one row per (target, held-out
+/// device): calibrate the matmul model on every fleet device *except*
+/// one — per response variable (time, energy, average power) — and
+/// predict the held-out machine's measurements with it.  The paper's
+/// per-device calibration answers "how well does the model explain the
+/// machine it was fitted on"; this table answers the harder
+/// cross-machine question for each target, which is where the
+/// accuracy/scope balance actually bites.
+fn table4(
+    aot: Option<&Artifacts>,
+    session: &Session,
+) -> Result<ExperimentReport, String> {
+    let mut rep = ExperimentReport::new(
+        "table4",
+        "held-out-device error by calibration target (cross-machine extension)",
+    );
+    let case = &expsets::eval_cases()[0];
+    let devices = fleet();
+
+    // Phase 1 (parallel over devices): one gathering per (device,
+    // target).  The targets of one device share its measurement sweep
+    // and symbolic passes through the session cache — a simulated
+    // launch yields every response variable at once.
+    let gathered: Vec<Vec<FeatureData>> = parallel_map(&devices, |device| {
+        Target::ALL
+            .iter()
+            .map(|&t| session.gather_case_data_for(case, device, t))
+            .collect::<Result<Vec<_>, String>>()
+    })?;
+
+    // Phase 2 (sequential; the AOT client stays on this thread): per
+    // (target, held-out device), fit the pooled data of the other
+    // devices and predict the held-out machine back.
+    let test = build_matmul(crate::ir::DType::F32, true, 16)?.freeze();
+    let ns = [1024i64, 2048, 3072];
+    for (ti, target) in Target::ALL.into_iter().enumerate() {
+        rep.line(format!("target {} ({}):", target.name(), target.unit()));
+        let mut t_errs = Vec::new();
+        for (di, held_out) in devices.iter().enumerate() {
+            if test.work_group_size() > held_out.max_wg_size {
+                rep.line(format!(
+                    "   {:<14} SKIP (work-group too large)",
+                    held_out.id
+                ));
+                continue;
+            }
+            // Pool every *other* device's calibration rows — the fit
+            // never sees the held-out machine.
+            let mut pool = FeatureData {
+                feature_ids: gathered[0][ti].feature_ids.clone(),
+                scaled: true,
+                target,
+                ..Default::default()
+            };
+            for (dj, per_target) in gathered.iter().enumerate() {
+                if dj == di {
+                    continue;
+                }
+                let d = &per_target[ti];
+                if d.feature_ids != pool.feature_ids {
+                    return Err(format!(
+                        "feature columns diverge across the fleet: {:?} vs {:?}",
+                        pool.feature_ids, d.feature_ids
+                    ));
+                }
+                pool.rows.extend(d.rows.iter().cloned());
+                pool.outputs.extend(d.outputs.iter().cloned());
+                pool.labels.extend(d.labels.iter().cloned());
+            }
+            let cm = (case.model)(held_out.id, true);
+            let opts = LmOptions::default();
+            let fit = match aot {
+                Some(a) => fit_cost_model_aot(a, &cm, &pool, &opts)?,
+                None => fit_cost_model_native(&cm, &pool, &opts)?,
+            };
+            let mut errs = Vec::new();
+            let mut mid = (0.0, 0.0);
+            for &n in &ns {
+                let env = env1("n", n);
+                let sample = session.measure(held_out, &test, &env)?;
+                let measured = target.of(&sample);
+                let predicted =
+                    session.predict(&cm, &fit, &test, &env, held_out)?;
+                if n == ns[1] {
+                    mid = (measured, predicted);
+                }
+                errs.push((predicted - measured).abs() / measured);
+                rep.predictions.push(Prediction {
+                    device: held_out.id.into(),
+                    variant: "matmul_pf".into(),
+                    sizes: env,
+                    measured,
+                    predicted,
+                    target: target.name().into(),
+                });
+            }
+            let g = geomean(&errs);
+            t_errs.extend(errs);
+            rep.line(format!(
+                "   {:<14} geomean err {:>5.1}%   (n={}: measured {}, predicted {})",
+                held_out.id,
+                100.0 * g,
+                ns[1],
+                fmt_target(target, mid.0),
+                fmt_target(target, mid.1),
+            ));
+            rep.summary
+                .insert(format!("err_{}_{}", target.name(), held_out.id), g);
+        }
+        rep.summary.insert(
+            format!("geomean_rel_err_{}", target.name()),
+            geomean(&t_errs),
+        );
+    }
+    rep.summary
+        .insert("geomean_rel_err".into(), rep.overall_geomean());
+    Ok(rep)
+}
+
+// ----------------------------------------------------------------------
 // Figures 7, 8, 9 — the three accuracy evaluations.
 // ----------------------------------------------------------------------
 
@@ -672,13 +801,13 @@ fn onchip_cost_is_hidden(
     session: &Session,
 ) -> Result<bool, String> {
     let cache = session.cache();
-    let t_total = measure_with_cache(device, kernel, env, cache)?;
+    let t_total = measure_with_cache(device, kernel, env, cache)?.time_s;
     let rm = crate::transform::remove_work(
         kernel,
         &crate::transform::remove_work::RemoveSpec::default(),
     )?
     .freeze();
-    let t_gmem_only = measure_with_cache(device, &rm, env, cache)?;
+    let t_gmem_only = measure_with_cache(device, &rm, env, cache)?.time_s;
     let st = cache.get_or_gather(kernel, device.sub_group_size)?;
     let envi: BTreeMap<String, i128> =
         env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
@@ -772,7 +901,9 @@ fn accuracy_experiment(
             };
             let mut v_errs = Vec::new();
             for env in &v.envs {
-                let measured = measure_with_cache(device, &v.kernel, env, session.cache())?;
+                let measured =
+                    measure_with_cache(device, &v.kernel, env, session.cache())?
+                        .time_s;
                 let predicted = predict(cm, fit, &v.kernel, env, device, session)?;
                 v_errs.push((predicted - measured).abs() / measured);
                 part.preds.push(Prediction {
@@ -781,6 +912,7 @@ fn accuracy_experiment(
                     sizes: env.clone(),
                     measured,
                     predicted,
+                    target: "time".into(),
                 });
             }
             let g = geomean(&v_errs);
@@ -1025,9 +1157,11 @@ mod tests {
             fresh
                 .rows
                 .push(specs.iter().map(|s| s.eval(&st, &env).unwrap()).collect());
-            fresh
-                .outputs
-                .push(crate::gpusim::measure(&dev, &gk.kernel, &gk.env).unwrap());
+            fresh.outputs.push(
+                crate::gpusim::measure(&dev, &gk.kernel, &gk.env)
+                    .unwrap()
+                    .time_s,
+            );
         }
         let cache = StatsCache::new();
         let cached =

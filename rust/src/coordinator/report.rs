@@ -27,6 +27,12 @@ pub struct Prediction {
     pub sizes: BTreeMap<String, i64>,
     pub measured: f64,
     pub predicted: f64,
+    /// The response variable `measured`/`predicted` are values of —
+    /// [`Target::name`](crate::calibrate::Target::name) ("time",
+    /// "energy", "avg_power").  Time predictions serialize exactly as
+    /// before the target dimension existed (no `target` key), keeping
+    /// pre-existing report JSON byte-identical.
+    pub target: String,
 }
 
 impl Prediction {
@@ -35,8 +41,8 @@ impl Prediction {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("device", self.device.as_str().into()),
+        let mut fields = vec![
+            ("device", Json::from(self.device.as_str())),
             ("variant", self.variant.as_str().into()),
             (
                 "sizes",
@@ -50,7 +56,11 @@ impl Prediction {
             ("measured_s", self.measured.into()),
             ("predicted_s", self.predicted.into()),
             ("rel_err", self.rel_err().into()),
-        ])
+        ];
+        if self.target != "time" {
+            fields.push(("target", self.target.as_str().into()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -166,6 +176,38 @@ pub fn fmt_time(t: f64) -> String {
     }
 }
 
+/// Pretty-print joules.
+pub fn fmt_energy(e: f64) -> String {
+    if e >= 1.0 {
+        format!("{e:.3} J")
+    } else if e >= 1e-3 {
+        format!("{:.3} mJ", e * 1e3)
+    } else {
+        format!("{:.1} uJ", e * 1e6)
+    }
+}
+
+/// Pretty-print watts.
+pub fn fmt_power(p: f64) -> String {
+    if p >= 1.0 {
+        format!("{p:.1} W")
+    } else {
+        format!("{:.1} mW", p * 1e3)
+    }
+}
+
+/// Pretty-print a value of an arbitrary calibration target in its
+/// natural unit.  Delegates to [`fmt_time`] for the time target, so
+/// time-only output stays byte-identical to the pre-target renderer.
+pub fn fmt_target(target: crate::calibrate::Target, v: f64) -> String {
+    use crate::calibrate::Target;
+    match target {
+        Target::Time => fmt_time(v),
+        Target::Energy => fmt_energy(v),
+        Target::AvgPower => fmt_power(v),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +229,7 @@ mod tests {
             sizes: [("n".to_string(), 2048i64)].into_iter().collect(),
             measured: 1e-3,
             predicted: 1.1e-3,
+            target: "time".into(),
         });
         r.summary.insert("geomean".into(), r.overall_geomean());
         let j = r.to_json().to_string();
@@ -196,5 +239,23 @@ mod tests {
             Some("figX")
         );
         assert!((r.overall_geomean() - 0.1).abs() < 1e-9);
+        // Time predictions keep the exact pre-target JSON shape...
+        assert!(!j.contains("\"target\""), "{j}");
+        // ...while other targets name themselves.
+        r.predictions[0].target = "energy".into();
+        let j2 = r.to_json().to_string();
+        assert!(j2.contains("\"target\":\"energy\""), "{j2}");
+    }
+
+    #[test]
+    fn target_formatters_pick_natural_units() {
+        use crate::calibrate::Target;
+        assert_eq!(fmt_target(Target::Time, 2.5e-3), fmt_time(2.5e-3));
+        assert_eq!(fmt_energy(0.004), "4.000 mJ");
+        assert_eq!(fmt_energy(2.0), "2.000 J");
+        assert_eq!(fmt_energy(5e-5), "50.0 uJ");
+        assert_eq!(fmt_power(212.5), "212.5 W");
+        assert_eq!(fmt_power(0.25), "250.0 mW");
+        assert_eq!(fmt_target(Target::AvgPower, 30.0), "30.0 W");
     }
 }

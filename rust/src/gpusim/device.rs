@@ -67,6 +67,17 @@ pub struct DeviceProfile {
     /// AMD R9 Fury; excluded by the measurement procedure like the
     /// paper does).
     pub anomaly_rate: f64,
+    /// Static board power drawn for the whole kernel duration (W).
+    /// Together with the per-op coefficients below this is the
+    /// simulator's energy model — a crude idle + activity split, NOT a
+    /// measured power curve; it exists so multi-target calibration
+    /// (`--target energy|avg_power`) has a closed black-box loop
+    /// in-tree.
+    pub idle_watts: f64,
+    /// Dynamic energy per arithmetic / local-memory operation (pJ).
+    pub pj_per_op: f64,
+    /// Dynamic energy per DRAM byte moved (pJ/B).
+    pub pj_per_dram_byte: f64,
 }
 
 impl DeviceProfile {
@@ -112,6 +123,9 @@ pub fn fleet() -> Vec<DeviceProfile> {
             barrier_ns: 40.0,
             noise_sigma: 0.012,
             anomaly_rate: 0.0,
+            idle_watts: 25.0,
+            pj_per_op: 10.0,
+            pj_per_dram_byte: 30.0,
         },
         DeviceProfile {
             id: "gtx_titan_x",
@@ -141,6 +155,9 @@ pub fn fleet() -> Vec<DeviceProfile> {
             barrier_ns: 55.0,
             noise_sigma: 0.015,
             anomaly_rate: 0.0,
+            idle_watts: 15.0,
+            pj_per_op: 20.0,
+            pj_per_dram_byte: 60.0,
         },
         DeviceProfile {
             id: "tesla_k40c",
@@ -172,6 +189,9 @@ pub fn fleet() -> Vec<DeviceProfile> {
             barrier_ns: 70.0,
             noise_sigma: 0.015,
             anomaly_rate: 0.0,
+            idle_watts: 20.0,
+            pj_per_op: 30.0,
+            pj_per_dram_byte: 70.0,
         },
         DeviceProfile {
             id: "tesla_c2070",
@@ -201,6 +221,9 @@ pub fn fleet() -> Vec<DeviceProfile> {
             barrier_ns: 90.0,
             noise_sigma: 0.018,
             anomaly_rate: 0.0,
+            idle_watts: 30.0,
+            pj_per_op: 45.0,
+            pj_per_dram_byte: 80.0,
         },
         DeviceProfile {
             id: "amd_r9_fury",
@@ -234,6 +257,9 @@ pub fn fleet() -> Vec<DeviceProfile> {
             barrier_ns: 60.0,
             noise_sigma: 0.02,
             anomaly_rate: 0.02,
+            idle_watts: 20.0,
+            pj_per_op: 15.0,
+            pj_per_dram_byte: 25.0,
         },
     ]
 }
@@ -299,6 +325,23 @@ mod tests {
         for id in ["tesla_k40c", "tesla_c2070"] {
             assert!(device_by_id(id).unwrap().overlap < 0.2, "{id}");
         }
+    }
+
+    #[test]
+    fn power_model_coefficients_are_physical() {
+        // The simulator power model is crude, but it must at least be
+        // positive everywhere (energy targets are output-scaled during
+        // calibration, which rejects non-positive outputs) and give the
+        // older process nodes worse energy-per-op than Volta.
+        for d in fleet() {
+            assert!(d.idle_watts > 0.0, "{}", d.id);
+            assert!(d.pj_per_op > 0.0, "{}", d.id);
+            assert!(d.pj_per_dram_byte > 0.0, "{}", d.id);
+        }
+        let volta = device_by_id("titan_v").unwrap();
+        let fermi = device_by_id("tesla_c2070").unwrap();
+        assert!(fermi.pj_per_op > volta.pj_per_op);
+        assert!(fermi.pj_per_dram_byte > volta.pj_per_dram_byte);
     }
 
     #[test]

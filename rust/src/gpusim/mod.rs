@@ -14,6 +14,11 @@
 //! the paper's qualitative cross-device differences (e.g. Kepler/Fermi
 //! hiding almost no on-chip cost, AMD's 256-work-item limit) are
 //! reproduced.
+//!
+//! Measurements are [`MeasuredSample`]s (wall time plus board energy
+//! from a crude idle+activity power model), so calibration can target
+//! responses other than time while the black-box loop stays closed
+//! in-tree.
 
 pub mod device;
 pub mod exec;
@@ -21,5 +26,6 @@ pub mod exec;
 pub use device::{device_by_id, fleet, DeviceProfile, DEFAULT_SUB_GROUP_SIZE};
 pub use exec::{
     is_per_kernel_measure_error, measure, measure_with_cache, simulate_time,
-    simulate_time_with_cache, CostBreakdown, KERNEL_UNMEASURABLE,
+    simulate_time_with_cache, CostBreakdown, MeasuredSample,
+    KERNEL_UNMEASURABLE,
 };

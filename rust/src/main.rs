@@ -10,12 +10,18 @@
 //! perflex gen <tag>...                    generate measurement kernels
 //! perflex show <tag>...                   print kernel schedule listings
 //! perflex measure <device> <tag>... [--store <dir>]
-//! perflex calibrate <case> <device> [--store <dir>]
+//! perflex calibrate <case> <device> [--store <dir>] [--target <name>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
+//!               [--target <name>]
 //! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
 //! perflex store ls|stat|verify|gc|compact --store <dir> [--dry-run]
 //!               [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]
 //! ```
+//!
+//! `--target <name>` selects the response variable `calibrate` fits
+//! and `predict` predicts: `time` (the default), `energy` or
+//! `avg_power`.  Fits for different targets persist side by side in
+//! the store; an unknown name is rejected with the valid list.
 //!
 //! `--store <dir>` opens a persistent artifact store (see
 //! `perflex::session`): symbolic kernel statistics and calibration
@@ -63,6 +69,7 @@ fn usage() -> String {
      commands: list-generators | list-devices | gen | show | measure | \
      calibrate | predict | experiment | store\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
+     calibrate/predict flag: --target time|energy|avg_power (default: time)\n\
      store maintenance: perflex store ls|stat|verify|gc|compact --store <dir>\n\
      \x20    [--dry-run] [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
@@ -193,11 +200,11 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             let session = Session::from_store_arg(store_dir.as_deref())?;
             for k in &knls {
                 match session.measure(&device, &k.kernel, &k.env) {
-                    Ok(t) => println!(
+                    Ok(s) => println!(
                         "{:<28} {:?} -> {}",
                         k.kernel.name,
                         k.env,
-                        perflex::coordinator::report::fmt_time(t)
+                        perflex::coordinator::report::fmt_time(s.time_s)
                     ),
                     Err(e) => {
                         println!("{:<28} {:?} -> ERROR {e}", k.kernel.name, k.env)
@@ -210,6 +217,13 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "calibrate" | "predict" => {
+            // `--target` picks the response variable (default: time).
+            // Parse errors name the valid set, so a typo is caught
+            // before any measurement work starts.
+            let target = match take_flag_value(&mut rest, "--target")? {
+                Some(name) => perflex::calibrate::Target::parse(&name)?,
+                None => perflex::calibrate::Target::Time,
+            };
             let case_id = rest
                 .first()
                 .ok_or("calibrate <case:matmul|dg|fdiff> <device>")?;
@@ -227,19 +241,37 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             // optional prediction below share symbolic passes, and a
             // `--store` session persists them for the next run.
             let session = Session::from_store_arg(store_dir.as_deref())?;
-            let cal = session.calibrate_case(&case, &device, true, aot.as_ref())?;
+            let cal =
+                session.calibrate_case_for(&case, &device, true, aot.as_ref(), target)?;
+            // Time runs print exactly the pre-target lines (the CI
+            // byte-identity job diffs this output); other targets name
+            // themselves.
+            let tgt = match target {
+                perflex::calibrate::Target::Time => String::new(),
+                t => format!(" [target {}]", t.name()),
+            };
             if cal.from_store {
                 println!(
-                    "calibration for {} on {} loaded from artifact store \
+                    "calibration for {} on {}{tgt} loaded from artifact store \
                      ({} params, residual {:.3e}; 0 LM iterations this run)",
                     case.id,
                     device.id,
                     cal.fit.params.len(),
                     cal.fit.residual,
                 );
+                if !cal.fit.converged {
+                    eprintln!(
+                        "warning: the stored {} fit for {} on {} did not \
+                         converge (it stopped at the LM iteration cap); \
+                         consider re-calibrating",
+                        cal.fit.target.name(),
+                        case.id,
+                        device.id
+                    );
+                }
             } else {
                 println!(
-                    "calibrated {} on {} ({} params, residual {:.3e}, {} LM iters{})",
+                    "calibrated {} on {}{tgt} ({} params, residual {:.3e}, {} LM iters{})",
                     case.id,
                     device.id,
                     cal.fit.params.len(),
@@ -267,11 +299,13 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                 let kernel = build_variant(case_id, variant)?.freeze();
                 let predicted =
                     session.predict(&cal.cm, &cal.fit, &kernel, &env, &device)?;
-                let measured = session.measure(&device, &kernel, &env)?;
+                let measured = target.of(&session.measure(&device, &kernel, &env)?);
+                // fmt_target(Time, ·) == fmt_time(·), so time output is
+                // byte-identical to the pre-target renderer.
                 println!(
                     "predicted {} / measured {} (err {:.1}%)",
-                    perflex::coordinator::report::fmt_time(predicted),
-                    perflex::coordinator::report::fmt_time(measured),
+                    perflex::coordinator::report::fmt_target(target, predicted),
+                    perflex::coordinator::report::fmt_target(target, measured),
                     100.0 * (predicted - measured).abs() / measured
                 );
             }

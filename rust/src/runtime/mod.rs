@@ -340,7 +340,14 @@ pub fn fit_cost_model_aot(
         opts.lower_bounds =
             crate::calibrate::LmOptions::cost_model_bounds(cm.terms.len()).lower_bounds;
     }
-    crate::calibrate::levenberg_marquardt(&mut backend, cm.param_names(), p0, &opts)
+    let mut fit = crate::calibrate::levenberg_marquardt(
+        &mut backend,
+        cm.param_names(),
+        p0,
+        &opts,
+    )?;
+    fit.target = data.target;
+    Ok(fit)
 }
 
 /// Fit the same cost model natively (ablation / fallback path).
@@ -359,7 +366,10 @@ pub fn fit_cost_model_native(
     }
     let mut backend =
         crate::calibrate::NativeBackend::with_params(&model, data, names.clone());
-    crate::calibrate::levenberg_marquardt(&mut backend, names, p0, &opts)
+    let mut fit =
+        crate::calibrate::levenberg_marquardt(&mut backend, names, p0, &opts)?;
+    fit.target = data.target;
+    Ok(fit)
 }
 
 /// Helper shared by tests and the coordinator: mapping from (BTreeMap)

@@ -18,7 +18,7 @@
 //! [`QPoly`] algebra, which reproduces the canonical internal form:
 //! serialize → parse → serialize is byte-stable.
 
-use crate::calibrate::FitResult;
+use crate::calibrate::{FitResult, Target};
 use crate::ir::{DType, MemScope};
 use crate::polyhedral::{Atom, QPoly};
 use crate::stats::{Direction, Granularity, KernelStats, MemAccessStat, OpStat};
@@ -445,9 +445,16 @@ pub fn fit_to_json(fit: &FitResult) -> Json {
         ),
         ("residual", Json::Num(fit.residual)),
         ("iterations", fit.iterations.into()),
+        ("target", fit.target.name().into()),
+        ("converged", Json::Bool(fit.converged)),
     ])
 }
 
+/// Decode a fit.  `target` and `converged` were introduced with store
+/// format v4; v3 artifacts omit them and decode as a converged time
+/// fit — exactly what every v3 store ever persisted — so the legacy
+/// loader can adopt pre-bump fits without a cold start.  A *present*
+/// but malformed field is still a hard error (corrupt artifact).
 pub fn fit_from_json(j: &Json) -> Result<FitResult, String> {
     let param_names = get(j, "param_names", "fit")?
         .as_arr()
@@ -468,11 +475,22 @@ pub fn fit_from_json(j: &Json) -> Result<FitResult, String> {
         .as_f64()
         .ok_or_else(|| err("fit residual"))?;
     let iterations = get_u64(j, "iterations", "fit")? as usize;
+    let target = match j.get("target") {
+        None => Target::Time,
+        Some(t) => Target::parse(t.as_str().ok_or_else(|| err("fit target"))?)
+            .map_err(|_| err("fit target"))?,
+    };
+    let converged = match j.get("converged") {
+        None => true,
+        Some(c) => c.as_bool().ok_or_else(|| err("fit converged flag"))?,
+    };
     Ok(FitResult {
         param_names,
         params,
         residual,
         iterations,
+        target,
+        converged,
     })
 }
 
@@ -588,19 +606,61 @@ mod tests {
 
     #[test]
     fn fit_roundtrip_is_byte_stable() {
-        let fit = FitResult {
-            param_names: vec!["p_a".into(), "p_b".into(), "p_edge".into()],
-            params: vec![1.5e-9, 0.1 + 0.2, 25.0],
-            residual: 3.86e-17,
-            iterations: 42,
-        };
-        let text = fit_to_json(&fit).to_string();
-        let back = fit_from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back.param_names, fit.param_names);
-        assert_eq!(back.params, fit.params, "f64s must round-trip exactly");
-        assert_eq!(back.residual, fit.residual);
-        assert_eq!(back.iterations, fit.iterations);
-        assert_eq!(fit_to_json(&back).to_string(), text);
+        // One fit per target, including a non-converged one: target and
+        // convergence must survive the trip byte-for-byte alongside the
+        // numeric payload.
+        for (target, converged) in [
+            (Target::Time, true),
+            (Target::Energy, false),
+            (Target::AvgPower, true),
+        ] {
+            let fit = FitResult {
+                param_names: vec!["p_a".into(), "p_b".into(), "p_edge".into()],
+                params: vec![1.5e-9, 0.1 + 0.2, 25.0],
+                residual: 3.86e-17,
+                iterations: 42,
+                target,
+                converged,
+            };
+            let text = fit_to_json(&fit).to_string();
+            let back = fit_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.param_names, fit.param_names);
+            assert_eq!(back.params, fit.params, "f64s must round-trip exactly");
+            assert_eq!(back.residual, fit.residual);
+            assert_eq!(back.iterations, fit.iterations);
+            assert_eq!(back.target, target);
+            assert_eq!(back.converged, converged);
+            assert_eq!(fit_to_json(&back).to_string(), text);
+        }
+    }
+
+    /// A v3-era fit body (no `target`, no `converged`) must decode as a
+    /// converged time fit — the read-compat half of the v3→v4 bump —
+    /// while present-but-malformed fields stay hard errors.
+    #[test]
+    fn v3_fit_bodies_decode_as_converged_time_fits() {
+        let j = Json::parse(
+            "{\"param_names\":[\"p_a\"],\"params\":[2.0],\"residual\":0.5,\
+             \"iterations\":7}",
+        )
+        .unwrap();
+        let fit = fit_from_json(&j).unwrap();
+        assert_eq!(fit.target, Target::Time);
+        assert!(fit.converged);
+        assert_eq!(fit.params, vec![2.0]);
+
+        let bad_target = Json::parse(
+            "{\"param_names\":[\"p_a\"],\"params\":[2.0],\"residual\":0.5,\
+             \"iterations\":7,\"target\":\"joules\"}",
+        )
+        .unwrap();
+        assert!(fit_from_json(&bad_target).is_err());
+        let bad_flag = Json::parse(
+            "{\"param_names\":[\"p_a\"],\"params\":[2.0],\"residual\":0.5,\
+             \"iterations\":7,\"converged\":\"yes\"}",
+        )
+        .unwrap();
+        assert!(fit_from_json(&bad_flag).is_err());
     }
 
     #[test]

@@ -43,6 +43,7 @@ use std::collections::{HashMap, HashSet};
 
 use super::codec;
 use super::store::{fit_file_name, FitKey, STORE_FORMAT_VERSION};
+use crate::calibrate::Target;
 use crate::stats::StatsKey;
 use crate::util::json::Json;
 
@@ -104,6 +105,7 @@ fn fit_key_fields(key: &FitKey) -> Vec<(&'static str, Json)> {
         ("case", key.case.as_str().into()),
         ("device", key.device.as_str().into()),
         ("nonlinear", key.nonlinear.into()),
+        ("target", key.target.name().into()),
         (
             "model_fingerprint",
             codec::fingerprint_to_hex(key.model_fingerprint).into(),
@@ -127,6 +129,16 @@ fn fit_key_from(j: &Json) -> Result<FitKey, String> {
             .get("nonlinear")
             .and_then(Json::as_bool)
             .ok_or_else(|| err("fit entry"))?,
+        // Strict: index entries are written by v4+ code only (v3
+        // snapshots are rejected wholesale by the version check, v3
+        // journal lines degrade to skipped lines → disk-probe
+        // fallback), so a missing target is corruption, not legacy.
+        target: Target::parse(
+            j.get("target")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("fit entry"))?,
+        )
+        .map_err(|_| err("fit entry"))?,
         model_fingerprint: codec::fingerprint_from_hex(
             j.get("model_fingerprint")
                 .and_then(Json::as_str)
@@ -287,8 +299,14 @@ impl StoreIndex {
         stats.sort_by_key(|(k, _)| (k.fingerprint, k.sub_group_size));
         let mut fits: Vec<_> = self.fits.iter().collect();
         fits.sort_by(|a, b| {
-            (&a.case, &a.device, a.nonlinear, a.model_fingerprint)
-                .cmp(&(&b.case, &b.device, b.nonlinear, b.model_fingerprint))
+            (&a.case, &a.device, a.nonlinear, a.target, a.model_fingerprint)
+                .cmp(&(
+                    &b.case,
+                    &b.device,
+                    b.nonlinear,
+                    b.target,
+                    b.model_fingerprint,
+                ))
         });
         let mut shared: Vec<_> = self.shared.iter().copied().collect();
         shared.sort_unstable();
@@ -386,6 +404,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 0xabcd,
         }
     }
@@ -422,6 +441,34 @@ mod tests {
         index.apply(&JournalOp::DelFit(fkey.clone()));
         assert!(!index.has_fit(&fkey));
         assert!(index.fit_for_file(&fit_file_name(&fkey)).is_none());
+    }
+
+    /// Fit keys differing only in target are distinct index entries,
+    /// and their journal lines round-trip the target.
+    #[test]
+    fn fit_keys_are_distinct_per_target() {
+        let mut index = StoreIndex::new();
+        for target in Target::ALL {
+            let key = FitKey {
+                target,
+                ..sample_fit_key()
+            };
+            let line = JournalOp::PutFit(key.clone()).to_json().to_string();
+            let back =
+                JournalOp::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, JournalOp::PutFit(key.clone()), "{line}");
+            index.apply(&back);
+        }
+        assert_eq!(index.counts().1, Target::ALL.len());
+        index.apply(&JournalOp::DelFit(FitKey {
+            target: Target::Energy,
+            ..sample_fit_key()
+        }));
+        assert!(index.has_fit(&sample_fit_key()));
+        assert!(!index.has_fit(&FitKey {
+            target: Target::Energy,
+            ..sample_fit_key()
+        }));
     }
 
     #[test]

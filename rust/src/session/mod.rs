@@ -56,16 +56,28 @@
 //!
 //! # Invalidation rules
 //!
-//! Artifacts are *rejected, never migrated*: a loader returns `None`
-//! — and the session falls back to a cold gather/fit — whenever
+//! Artifacts are rejected, not silently reinterpreted: a loader
+//! returns `None` — and the session falls back to a cold gather/fit —
+//! whenever
 //!
 //! * the artifact's `format_version` differs from
 //!   [`STORE_FORMAT_VERSION`] (bump it when any persisted semantics
 //!   change, e.g. the counting rules or the LM schedule);
 //! * the embedded key (kernel fingerprint / model fingerprint) does
 //!   not match the requested one — covering edited models, changed
-//!   measurement sets, and a changed sub-group size;
+//!   measurement sets, changed calibration [`Target`], and a changed
+//!   sub-group size;
 //! * the payload fails to parse or validate.
+//!
+//! The one sanctioned migration is the v3→v4 *fit* read-compat: v3
+//! had no target dimension, so every v3 fit is by construction a
+//! `target=time` fit.  When a time-target lookup misses under the v4
+//! key, the session probes the exact v3 key/path
+//! ([`legacy_v3_fit_key_parts`] + [`ArtifactStore::load_legacy_v3_fit`]),
+//! adopts a match as a converged time fit, and re-saves it under its
+//! v4 key — a pre-bump store warms up instead of forcing a fleet-wide
+//! cold refit.  Non-time targets never had v3 artifacts and never
+//! consult the legacy path.
 //!
 //! Kernel fingerprints are minted once per kernel by
 //! [`Kernel::freeze`](crate::ir::Kernel::freeze) (UiPiCK freezes every
@@ -88,11 +100,11 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::calibrate::{
-    eval_with_kernel_cached, gather_features_by_ids_cached, FeatureData, FitResult,
-    LmOptions,
+    eval_with_kernel_cached, gather_features_by_ids_cached_for, FeatureData,
+    FitResult, LmOptions, Target,
 };
 use crate::coordinator::expsets::{self, EvalCase};
-use crate::gpusim::{measure_with_cache, DeviceProfile};
+use crate::gpusim::{measure_with_cache, DeviceProfile, MeasuredSample};
 use crate::ir::KernelRef;
 use crate::model::CostModel;
 use crate::runtime::{fit_cost_model_aot, fit_cost_model_native, Artifacts};
@@ -172,40 +184,60 @@ impl Session {
 
     /// Pipeline stage 1: measure a kernel on a device (through the
     /// session cache, so its symbolic statistics are derived or loaded
-    /// at most once per process).
+    /// at most once per process).  One simulated launch yields every
+    /// response variable at once — project with [`Target::of`] (e.g.
+    /// `Target::Time.of(&sample)` for the wall time).
     pub fn measure<K: KernelRef>(
         &self,
         device: &DeviceProfile,
         knl: &K,
         env: &std::collections::BTreeMap<String, i64>,
-    ) -> Result<f64, String> {
+    ) -> Result<MeasuredSample, String> {
         measure_with_cache(device, knl, env, &self.cache)
     }
 
     /// Pipeline stage 2: measure + gather (and output-scale) a case's
-    /// feature data for one device.  The feature columns are shared by
-    /// the linear and nonlinear model forms, so one gathering serves
-    /// both fits; evaluation is batched across problem sizes (see
-    /// [`gather_features_by_ids_cached`]).
+    /// feature data for one device, with the measured wall time as the
+    /// response variable.
     pub fn gather_case_data(
         &self,
         case: &EvalCase,
         device: &DeviceProfile,
     ) -> Result<FeatureData, String> {
+        self.gather_case_data_for(case, device, Target::Time)
+    }
+
+    /// [`Session::gather_case_data`] for an arbitrary calibration
+    /// target.  The feature columns are shared by the linear and
+    /// nonlinear model forms, so one gathering serves both fits; and
+    /// because one simulated launch yields every response variable,
+    /// targets of the same case share measurement and counting work
+    /// through the session cache.  Evaluation is batched across
+    /// problem sizes (see [`gather_features_by_ids_cached_for`]).
+    pub fn gather_case_data_for(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        target: Target,
+    ) -> Result<FeatureData, String> {
         let cm = (case.model)(device.id, true);
         let kernels =
             expsets::generate_measurement_kernels(&(case.measurement_sets)())?;
-        let mut data = gather_features_by_ids_cached(
+        let mut data = gather_features_by_ids_cached_for(
             cm.feature_columns(),
             &kernels,
             device,
             &self.cache,
+            target,
         )?;
         data.scale_features_by_output()?;
         Ok(data)
     }
 
     /// Pipeline stage 3: fit one model form from already-gathered data.
+    /// The calibration target rides in on `data` (stamped by
+    /// [`Session::gather_case_data_for`]) and comes back out on the
+    /// returned [`FitResult`].
     pub fn fit_case(
         &self,
         case: &EvalCase,
@@ -231,6 +263,37 @@ impl Session {
         self.store.as_ref()?.load_fit(key)
     }
 
+    /// [`Session::stored_fit`], falling back to the sanctioned v3→v4
+    /// migration for time fits: on a v4 miss, probe the exact v3
+    /// key/path, adopt a match as a converged time fit, and re-save it
+    /// under the v4 key (best effort — a failed re-save still returns
+    /// the fit, it just stays cold-keyed on disk).  Non-time targets
+    /// never had v3 artifacts, so they never touch the legacy path.
+    fn stored_fit_or_legacy(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        key: &FitKey,
+    ) -> Option<FitResult> {
+        if let Some(fit) = self.stored_fit(key) {
+            return Some(fit);
+        }
+        if key.target != Target::Time {
+            return None;
+        }
+        let store = self.store.as_ref()?;
+        let legacy = legacy_v3_fit_key(case, device, key.nonlinear);
+        let fit = store.load_legacy_v3_fit(&legacy)?;
+        if store.save_fit(key, &fit).is_err() {
+            eprintln!(
+                "warning: could not re-save migrated v3 fit for {}/{} under its \
+                 v4 key; it will be re-adopted from the legacy artifact next run",
+                key.case, key.device
+            );
+        }
+        Some(fit)
+    }
+
     /// Persist one fit artifact (a no-op without a store).
     ///
     /// Any *new* key family persisted through here (i.e. minted by
@@ -238,6 +301,19 @@ impl Session {
     /// in [`reachable_fit_fingerprints`], or `perflex store gc` will
     /// classify its artifacts as unreachable and collect them.
     pub fn persist_fit(&self, key: &FitKey, fit: &FitResult) -> Result<(), String> {
+        if !fit.converged {
+            // Diagnostics go to stderr: stdout is the byte-stable
+            // report surface CI diffs against.
+            eprintln!(
+                "warning: persisting a non-converged {} fit for {} on {} \
+                 (stopped at the iteration cap, residual {:.3e}); predictions \
+                 from this artifact may be unstable",
+                fit.target.name(),
+                key.case,
+                key.device,
+                fit.residual
+            );
+        }
         match &self.store {
             Some(store) => store.save_fit(key, fit),
             None => Ok(()),
@@ -247,6 +323,8 @@ impl Session {
     /// Stages 2+3 with artifact reuse: return a stored calibration when
     /// a fresh one exists (zero LM iterations, zero measurement and
     /// counting work this process), otherwise gather, fit and persist.
+    /// Calibrates the wall-time target; see
+    /// [`Session::calibrate_case_for`] for the others.
     pub fn calibrate_case(
         &self,
         case: &EvalCase,
@@ -254,15 +332,31 @@ impl Session {
         nonlinear: bool,
         aot: Option<&Artifacts>,
     ) -> Result<Calibration, String> {
-        let key = fit_key(case, device, nonlinear);
-        if let Some(fit) = self.stored_fit(&key) {
+        self.calibrate_case_for(case, device, nonlinear, aot, Target::Time)
+    }
+
+    /// [`Session::calibrate_case`] for an arbitrary calibration target.
+    /// Fits for different targets persist side by side under
+    /// target-qualified keys; a time-target miss additionally consults
+    /// the pre-v4 artifact path (see the module docs' invalidation
+    /// rules) before falling back to a cold gather/fit.
+    pub fn calibrate_case_for(
+        &self,
+        case: &EvalCase,
+        device: &DeviceProfile,
+        nonlinear: bool,
+        aot: Option<&Artifacts>,
+        target: Target,
+    ) -> Result<Calibration, String> {
+        let key = fit_key_for(case, device, nonlinear, target);
+        if let Some(fit) = self.stored_fit_or_legacy(case, device, &key) {
             return Ok(Calibration {
                 cm: (case.model)(device.id, nonlinear),
                 fit,
                 from_store: true,
             });
         }
-        let data = self.gather_case_data(case, device)?;
+        let data = self.gather_case_data_for(case, device, target)?;
         let (cm, fit) = self.fit_case(case, device, &data, nonlinear, aot)?;
         self.persist_fit(&key, &fit)?;
         Ok(Calibration {
@@ -286,7 +380,7 @@ impl Session {
         aot: Option<&Artifacts>,
     ) -> Result<Calibration, String> {
         let key = fit_key(case, device, nonlinear);
-        if let Some(fit) = self.stored_fit(&key) {
+        if let Some(fit) = self.stored_fit_or_legacy(case, device, &key) {
             return Ok(Calibration {
                 cm: (case.model)(device.id, nonlinear),
                 fit,
@@ -306,16 +400,23 @@ impl Session {
         })
     }
 
-    /// True when fresh stored fits exist for *both* model forms of
+    /// True when fresh stored time fits exist for *both* model forms of
     /// (case, device) — the condition under which a fleet harness can
-    /// skip gathering that device's calibration data entirely.
+    /// skip gathering that device's calibration data entirely.  Probes
+    /// through the legacy fallback, so a pre-v4 store counts as warm
+    /// (and gets its fits adopted as a side effect).
     pub fn has_stored_fits(&self, case: &EvalCase, device: &DeviceProfile) -> bool {
-        self.stored_fit(&fit_key(case, device, true)).is_some()
-            && self.stored_fit(&fit_key(case, device, false)).is_some()
+        self.stored_fit_or_legacy(case, device, &fit_key(case, device, true))
+            .is_some()
+            && self
+                .stored_fit_or_legacy(case, device, &fit_key(case, device, false))
+                .is_some()
     }
 
-    /// Pipeline stage 4: predict a kernel's wall time from a
-    /// calibration (§7.3), through the session cache.
+    /// Pipeline stage 4: predict a kernel's response from a calibration
+    /// (§7.3), through the session cache.  The prediction is in the
+    /// fit's target units — seconds for time fits, joules for energy,
+    /// watts for average power (`fit.target.unit()`).
     pub fn predict<K: KernelRef>(
         &self,
         cm: &CostModel,
@@ -335,9 +436,22 @@ impl Session {
     }
 }
 
-/// The full identity of a case's calibration on a device; see the
-/// module docs for what it covers (and therefore what invalidates it).
+/// The full identity of a case's *time* calibration on a device; see
+/// the module docs for what it covers (and therefore what invalidates
+/// it).
 pub fn fit_key(case: &EvalCase, device: &DeviceProfile, nonlinear: bool) -> FitKey {
+    fit_key_for(case, device, nonlinear, Target::Time)
+}
+
+/// [`fit_key`] for an arbitrary calibration target: targets of one
+/// (case, device, form) get distinct keys — and distinct model
+/// fingerprints, since the target is part of what shaped the fit.
+pub fn fit_key_for(
+    case: &EvalCase,
+    device: &DeviceProfile,
+    nonlinear: bool,
+    target: Target,
+) -> FitKey {
     let cm = (case.model)(device.id, nonlinear);
     fit_key_parts(
         case.id,
@@ -345,15 +459,17 @@ pub fn fit_key(case: &EvalCase, device: &DeviceProfile, nonlinear: bool) -> FitK
         nonlinear,
         &cm,
         &(case.measurement_sets)(),
+        target,
     )
 }
 
-/// [`fit_key`] for fits whose model and measurement set are built
+/// [`fit_key_for`] for fits whose model and measurement set are built
 /// inline rather than through an [`EvalCase`] — e.g. the fig5 overlap
 /// harness.  `case_id` names the artifact family; the fingerprint
 /// hashes everything that shaped the fit (feature columns, parameter
-/// names, device, sub-group size, measurement-set filter tags and the
-/// store format version), so a change to any of them invalidates it.
+/// names, device, sub-group size, measurement-set filter tags, the
+/// calibration target and the store format version), so a change to
+/// any of them invalidates it.
 ///
 /// Every distinct key family minted through this function must be
 /// enumerated by [`reachable_fit_fingerprints`] — GC deletes fits it
@@ -366,10 +482,56 @@ pub fn fit_key_parts(
     nonlinear: bool,
     cm: &CostModel,
     measurement_sets: &[Vec<String>],
+    target: Target,
 ) -> FitKey {
     let mut h = Fnv128::new();
     h.update(b"perflex-fit-v");
     h.update(STORE_FORMAT_VERSION.to_string().as_bytes());
+    h.update(case_id.as_bytes());
+    h.update(device.id.as_bytes());
+    h.update(device.sub_group_size.to_string().as_bytes());
+    h.update(if nonlinear { b"overlap" } else { b"linear" });
+    h.update(target.name().as_bytes());
+    for col in cm.feature_columns() {
+        h.update(col.as_bytes());
+    }
+    for name in cm.param_names() {
+        h.update(name.as_bytes());
+    }
+    for set in measurement_sets {
+        for tag in set {
+            h.update(tag.as_bytes());
+        }
+        h.update(b"|");
+    }
+    FitKey {
+        case: case_id.to_string(),
+        device: device.id.to_string(),
+        nonlinear,
+        target,
+        model_fingerprint: h.finish(),
+    }
+}
+
+/// The exact key a **v3** binary would have computed for this fit —
+/// version literal `"3"`, no target in the hash chain (v3 predates the
+/// target dimension) — used only to locate pre-bump artifacts for the
+/// sanctioned read-compat migration.  The returned key's `target` is
+/// `Time` because that is what every v3 fit *is*.
+///
+/// This function is frozen: it must keep reproducing the v3 scheme
+/// byte-for-byte even as [`fit_key_parts`] evolves, or migration
+/// silently turns into a fleet-wide cold refit.
+pub(crate) fn legacy_v3_fit_key_parts(
+    case_id: &str,
+    device: &DeviceProfile,
+    nonlinear: bool,
+    cm: &CostModel,
+    measurement_sets: &[Vec<String>],
+) -> FitKey {
+    let mut h = Fnv128::new();
+    h.update(b"perflex-fit-v");
+    h.update(b"3");
     h.update(case_id.as_bytes());
     h.update(device.id.as_bytes());
     h.update(device.sub_group_size.to_string().as_bytes());
@@ -390,22 +552,46 @@ pub fn fit_key_parts(
         case: case_id.to_string(),
         device: device.id.to_string(),
         nonlinear,
+        target: Target::Time,
         model_fingerprint: h.finish(),
     }
 }
 
+/// [`legacy_v3_fit_key_parts`] derived from an [`EvalCase`] — the
+/// legacy twin of [`fit_key`].
+pub(crate) fn legacy_v3_fit_key(
+    case: &EvalCase,
+    device: &DeviceProfile,
+    nonlinear: bool,
+) -> FitKey {
+    let cm = (case.model)(device.id, nonlinear);
+    legacy_v3_fit_key_parts(
+        case.id,
+        device,
+        nonlinear,
+        &cm,
+        &(case.measurement_sets)(),
+    )
+}
+
 /// Every fit model fingerprint the current binary can produce: the
-/// evaluation cases × the fleet × both model forms (covering CLI
-/// `calibrate`/`predict` and the fig7–9/table3 harnesses) plus the
-/// fig5 overlap harness.  `perflex store gc` ages out fit artifacts
-/// whose embedded fingerprint falls outside this set — retired
-/// devices, edited models, stale format versions.
+/// evaluation cases × the fleet × both model forms × every calibration
+/// target (covering CLI `calibrate`/`predict` and the fig7–9/table3
+/// harnesses) plus the fig5 overlap harness (time-only — overlap
+/// discrimination is a timing question).  `perflex store gc` ages out
+/// fit artifacts whose embedded fingerprint falls outside this set —
+/// retired devices, edited models, stale format versions.
 pub fn reachable_fit_fingerprints() -> std::collections::HashSet<u128> {
     let mut out = std::collections::HashSet::new();
     for device in crate::gpusim::fleet() {
         for case in expsets::eval_cases() {
             for nonlinear in [false, true] {
-                out.insert(fit_key(&case, &device, nonlinear).model_fingerprint);
+                for target in Target::ALL {
+                    out.insert(
+                        fit_key_for(&case, &device, nonlinear, target)
+                            .model_fingerprint,
+                    );
+                }
             }
         }
         out.insert(
@@ -448,6 +634,13 @@ mod tests {
         assert_ne!(
             a.model_fingerprint,
             fit_key(&cases[1], &dev, true).model_fingerprint
+        );
+        let e = fit_key_for(&cases[0], &dev, true, Target::Energy);
+        assert_eq!(e.target, Target::Energy);
+        assert_eq!(fit_key(&cases[0], &dev, true).target, Target::Time);
+        assert_ne!(
+            a.model_fingerprint, e.model_fingerprint,
+            "the target is part of the model fingerprint"
         );
     }
 
@@ -512,6 +705,80 @@ mod tests {
             "with a fresh index, a warm run performs zero full-artifact parses"
         );
         assert!(index_hits > 0, "warm loads must be index-vouched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// THE v3→v4 migration regression: a store left behind by a v3
+    /// binary (fit artifact under the v3 path, v3 envelope, no target
+    /// field anywhere) must warm-start a v4 time calibration — zero
+    /// counting passes, zero LM iterations run here — and get adopted
+    /// under its v4 key so later runs are plain index-vouched hits.
+    #[test]
+    fn pre_bump_v3_fit_artifacts_warm_start_and_migrate() {
+        let dir = tmp_dir("v3migrate");
+        let cases = expsets::eval_cases();
+        let case = &cases[0];
+        let dev = device_by_id("titan_v").unwrap();
+
+        let legacy = legacy_v3_fit_key(case, &dev, true);
+        let v4 = fit_key(case, &dev, true);
+        assert_ne!(
+            legacy.model_fingerprint, v4.model_fingerprint,
+            "the format bump re-fingerprints every fit"
+        );
+
+        // Stage the store exactly as a v3 binary would have left it.
+        std::fs::create_dir_all(dir.join("fits")).unwrap();
+        let v3_artifact = format!(
+            "{{\"format_version\":3,\"kind\":\"fit\",\"case\":\"{}\",\
+             \"device\":\"titan_v\",\"nonlinear\":true,\
+             \"model_fingerprint\":\"{}\",\"fit\":{{\
+             \"param_names\":[\"p_a\",\"p_b\"],\"params\":[0.5,2.0],\
+             \"residual\":0.25,\"iterations\":7}}}}",
+            case.id,
+            codec::fingerprint_to_hex(legacy.model_fingerprint)
+        );
+        std::fs::write(
+            dir.join("fits").join(store::legacy_v3_fit_file_name(&legacy)),
+            &v3_artifact,
+        )
+        .unwrap();
+
+        // First v4 run: the time calibration comes from the legacy
+        // artifact — no gathering, no counting, no LM — and is
+        // re-saved under the v4 key.
+        let session = Session::with_store(&dir).unwrap();
+        let cal = session.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(cal.from_store, "the v3 artifact must be adopted, not refit");
+        assert_eq!(cal.fit.params, vec![0.5, 2.0]);
+        assert_eq!(cal.fit.iterations, 7);
+        assert_eq!(cal.fit.target, Target::Time);
+        assert!(cal.fit.converged, "v3 fits decode as converged");
+        assert_eq!(
+            session.cache().misses(),
+            0,
+            "migration must not re-run the counting pass"
+        );
+
+        // Second v4 run: a plain warm hit under the v4 key, no legacy
+        // parse, no full-artifact parse at all.
+        let warm = Session::with_store(&dir).unwrap();
+        let cal2 = warm.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(cal2.from_store);
+        assert_eq!(cal2.fit.params, cal.fit.params);
+        let (_, parses) = warm.store_ledger().unwrap();
+        assert_eq!(
+            parses, 0,
+            "post-migration loads must be index-vouched v4 hits"
+        );
+
+        // A non-time target finds nothing to migrate (v3 had no such
+        // fits) and calibrates cold.
+        let energy = warm
+            .calibrate_case_for(case, &dev, true, None, Target::Energy)
+            .unwrap();
+        assert!(!energy.from_store);
+        assert_eq!(energy.fit.target, Target::Energy);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! <root>/stats/<fingerprint:032x>-sg<sub_group_size>.json
-//! <root>/fits/<case>-<device>-<linear|overlap>-m<fp:08x>-<keyhash:016x>.json
+//! <root>/fits/<case>-<device>-<linear|overlap>-<target>-m<fp:08x>-<keyhash:016x>.json
 //! <root>/shared/<fingerprint:032x>.json     (deduplicated sg-invariant
 //!                                            stats sections, `store compact`)
 //! <root>/index.json + <root>/index.journal  (the store index, see
@@ -106,7 +106,7 @@ use super::index::{
     snapshot_epoch, JournalOp, StatsEntry, StoreIndex, JOURNAL_COMPACT_THRESHOLD,
 };
 use super::lock::{FileLock, Lease, LockOptions, DEFAULT_LEASE_TTL_SECS};
-use crate::calibrate::FitResult;
+use crate::calibrate::{FitResult, Target};
 use crate::stats::{KernelStats, StatsBacking, StatsKey};
 use crate::util::json::Json;
 use crate::util::Fnv128;
@@ -116,8 +116,13 @@ use crate::util::Fnv128;
 /// by `store gc`).  v3: fit paths hash the model fingerprint (siblings
 /// differing only in model fingerprint no longer collide), the store
 /// index (`index.json` + journal), and compacted stats artifacts
-/// referencing `<root>/shared/` sections.
-pub const STORE_FORMAT_VERSION: u64 = 3;
+/// referencing `<root>/shared/` sections.  v4: fits carry a calibration
+/// *target* (time/energy/avg_power) in their key, filename and
+/// envelope; the one sanctioned skew is read-compat for v3 *time* fits
+/// ([`ArtifactStore::load_legacy_v3_fit`] — a pre-bump fit is adopted
+/// as `target=time` and re-saved under its v4 key instead of forcing a
+/// cold refit).
+pub const STORE_FORMAT_VERSION: u64 = 4;
 
 /// Identity of one calibration artifact.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -125,10 +130,13 @@ pub struct FitKey {
     pub case: String,
     pub device: String,
     pub nonlinear: bool,
+    /// The response variable the fit explains; fits for different
+    /// targets of one (case, device, form) persist side by side.
+    pub target: Target,
     /// Hash over the model's feature columns, the measurement-set
-    /// filter tags, the device's sub-group size and the store format
-    /// version — so a fit is reused only while everything that shaped
-    /// it is unchanged.
+    /// filter tags, the device's sub-group size, the target and the
+    /// store format version — so a fit is reused only while everything
+    /// that shaped it is unchanged.
     pub model_fingerprint: u128,
 }
 
@@ -175,6 +183,31 @@ fn stats_key_from_name(name: &str) -> Option<StatsKey> {
 /// field keeps the fingerprint readable for humans, and the
 /// embedded-key check in `load_fit` remains the actual guard.
 pub(crate) fn fit_file_name(key: &FitKey) -> String {
+    let form = if key.nonlinear { "overlap" } else { "linear" };
+    let mut h = Fnv128::new();
+    h.update(key.case.as_bytes());
+    h.update(&[0]);
+    h.update(key.device.as_bytes());
+    h.update(&[0]);
+    h.update(form.as_bytes());
+    h.update(&[0]);
+    h.update(key.target.name().as_bytes());
+    h.update(&[0]);
+    h.update(&key.model_fingerprint.to_le_bytes());
+    format!(
+        "{}-{}-{form}-{}-m{:08x}-{:016x}.json",
+        sanitize_component(&key.case),
+        sanitize_component(&key.device),
+        key.target.name(),
+        (key.model_fingerprint >> 96) as u32,
+        h.finish() as u64
+    )
+}
+
+/// The v3 fit filename scheme (no target field in the name or the key
+/// hash) — used only by [`ArtifactStore::load_legacy_v3_fit`] to locate
+/// pre-bump artifacts for read-compat adoption.
+pub(crate) fn legacy_v3_fit_file_name(key: &FitKey) -> String {
     let form = if key.nonlinear { "overlap" } else { "linear" };
     let mut h = Fnv128::new();
     h.update(key.case.as_bytes());
@@ -879,6 +912,7 @@ impl ArtifactStore {
         if j.get("case")?.as_str()? != key.case
             || j.get("device")?.as_str()? != key.device
             || j.get("nonlinear")?.as_bool()? != key.nonlinear
+            || j.get("target")?.as_str()? != key.target.name()
         {
             return None;
         }
@@ -897,6 +931,7 @@ impl ArtifactStore {
             ("case", key.case.as_str().into()),
             ("device", key.device.as_str().into()),
             ("nonlinear", key.nonlinear.into()),
+            ("target", key.target.name().into()),
             (
                 "model_fingerprint",
                 codec::fingerprint_to_hex(key.model_fingerprint).into(),
@@ -908,6 +943,53 @@ impl ArtifactStore {
             self.record(JournalOp::PutFit(key.clone()));
         }
         Ok(())
+    }
+
+    /// Read-compat for pre-bump stores: attempt to load a **v3** fit
+    /// artifact as `key` (which must be a `target=time` key — every v3
+    /// fit was a time fit, there is nothing a v3 artifact could say
+    /// about other targets).  `key.model_fingerprint` must already be
+    /// the *v3* fingerprint (see `session::legacy_v3_fit_key_parts`:
+    /// the fingerprint hashes the format version, so the v4 key never
+    /// matches a v3 artifact).  The artifact is fully validated against
+    /// its embedded key exactly like a current one — only the version
+    /// check differs — and the decoded fit reads as a converged time
+    /// fit (the codec's v3 defaults).  The load is a counted parse and
+    /// never touches the index: v3 paths are invisible to it, and the
+    /// caller is expected to re-save the fit under its v4 key
+    /// ([`ArtifactStore::save_fit`]), after which the legacy artifact
+    /// is dead weight for `store gc`.
+    pub fn load_legacy_v3_fit(&self, key: &FitKey) -> Option<FitResult> {
+        if key.target != Target::Time {
+            return None;
+        }
+        let path = self
+            .root
+            .join("fits")
+            .join(legacy_v3_fit_file_name(key));
+        let text = std::fs::read_to_string(path).ok()?;
+        self.count_parse();
+        Self::contained(|| {
+            let j = Json::parse(&text).ok()?;
+            if j.get("format_version")?.as_f64()? != 3.0 {
+                return None;
+            }
+            if j.get("kind")?.as_str()? != "fit" {
+                return None;
+            }
+            if j.get("case")?.as_str()? != key.case
+                || j.get("device")?.as_str()? != key.device
+                || j.get("nonlinear")?.as_bool()? != key.nonlinear
+            {
+                return None;
+            }
+            if j.get("model_fingerprint")?.as_str()?
+                != codec::fingerprint_to_hex(key.model_fingerprint)
+            {
+                return None;
+            }
+            codec::fit_from_json(j.get("fit")?).ok()
+        })
     }
 
     // -----------------------------------------------------------------
@@ -1103,8 +1185,14 @@ impl ArtifactStore {
 
     fn fit_describe(key: &FitKey) -> String {
         let form = if key.nonlinear { "overlap" } else { "linear" };
+        // Time fits keep the pre-v4 description (byte-identical `store
+        // ls` output for time-only stores); other targets are named.
+        let target = match key.target {
+            Target::Time => String::new(),
+            t => format!(" target={}", t.name()),
+        };
         format!(
-            "fit {}/{} {form} model={}",
+            "fit {}/{} {form}{target} model={}",
             key.case,
             key.device,
             codec::fingerprint_to_hex(key.model_fingerprint)
@@ -1123,6 +1211,7 @@ impl ArtifactStore {
             case: j.get("case")?.as_str()?.to_string(),
             device: j.get("device")?.as_str()?.to_string(),
             nonlinear: j.get("nonlinear")?.as_bool()?,
+            target: Target::parse(j.get("target")?.as_str()?).ok()?,
             model_fingerprint: codec::fingerprint_from_hex(
                 j.get("model_fingerprint")?.as_str()?,
             )
@@ -1717,11 +1806,14 @@ mod tests {
             params: vec![2.0],
             residual: 0.0,
             iterations: 3,
+            target: Target::Time,
+            converged: true,
         };
         let key = FitKey {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 0xabcd,
         };
         store.save_fit(&key, &fit).unwrap();
@@ -1750,7 +1842,7 @@ mod tests {
         assert!(store.load_fit(&key).is_none());
 
         // Truncated JSON -> rejected.
-        std::fs::write(&path, "{\"format_version\":3,\"kind\":\"fit\"").unwrap();
+        std::fs::write(&path, "{\"format_version\":4,\"kind\":\"fit\"").unwrap();
         assert!(store.load_fit(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -1761,6 +1853,8 @@ mod tests {
             params: vec![p],
             residual: 0.0,
             iterations: 1,
+            target: Target::Time,
+            converged: true,
         }
     }
 
@@ -1777,6 +1871,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 0x1111_2222_3333_4444_5555_6666_7777_8888,
         };
         let b = FitKey {
@@ -1818,12 +1913,14 @@ mod tests {
             case: "fdiff-16x16".into(),
             device: "dev".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 1,
         };
         let b = FitKey {
             case: "fdiff".into(),
             device: "16x16-dev".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 2,
         };
         assert_ne!(store.fit_path(&a), store.fit_path(&b));
@@ -1837,6 +1934,7 @@ mod tests {
             case: "../../escape".into(),
             device: "a/b\\c".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 3,
         };
         let p = store.fit_path(&evil);
@@ -1861,6 +1959,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 7,
         };
         std::thread::scope(|s| {
@@ -1905,6 +2004,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 0xa11ce,
         };
         store.save_fit(&live, &some_fit(1.0)).unwrap();
@@ -1915,6 +2015,7 @@ mod tests {
             case: "matmul".into(),
             device: "retired_gpu".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 0xdead,
         };
         store.save_fit(&dead, &some_fit(2.0)).unwrap();
@@ -2122,6 +2223,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 0x77,
         };
         {
@@ -2165,6 +2267,7 @@ mod tests {
             case: "dg".into(),
             device: "amd_r9_fury".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 0x55,
         };
         {
@@ -2226,6 +2329,7 @@ mod tests {
                             case: format!("case{t}"),
                             device: format!("dev{i}"),
                             nonlinear: (i + t) % 2 == 0,
+                            target: Target::Time,
                             model_fingerprint: (t * 1000 + i) as u128,
                         };
                         store.save_fit(&key, &some_fit(i as f64)).unwrap();
@@ -2290,12 +2394,14 @@ mod tests {
             case: "a".into(),
             device: "d".into(),
             nonlinear: false,
+            target: Target::Time,
             model_fingerprint: 1,
         };
         let key_b = FitKey {
             case: "b".into(),
             device: "d".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 2,
         };
         a.save_fit(&key_a, &some_fit(1.0)).unwrap();
@@ -2426,6 +2532,7 @@ mod tests {
             case: "matmul".into(),
             device: "titan_v".into(),
             nonlinear: true,
+            target: Target::Time,
             model_fingerprint: 0x42,
         };
         store.save_fit(&key, &some_fit(1.0)).unwrap();
@@ -2438,6 +2545,128 @@ mod tests {
         assert!(!bad.matches, "a lost artifact must be detected");
         assert_eq!(bad.indexed.1, 1);
         assert_eq!(bad.scanned.1, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Fits for different targets of one (case, device, form, model)
+    /// persist side by side: distinct paths, both warm after a reopen,
+    /// and `ls` describes the time fit exactly as v3 did while naming
+    /// the energy target explicitly.
+    #[test]
+    fn per_target_fits_coexist_and_both_load_warm() {
+        let dir = tmp_store("targets");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let time_key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            target: Target::Time,
+            model_fingerprint: 0xbeef,
+        };
+        let energy_key = FitKey {
+            target: Target::Energy,
+            ..time_key.clone()
+        };
+        assert_ne!(store.fit_path(&time_key), store.fit_path(&energy_key));
+        store.save_fit(&time_key, &some_fit(1.0)).unwrap();
+        let energy_fit = FitResult {
+            target: Target::Energy,
+            ..some_fit(2.0)
+        };
+        store.save_fit(&energy_key, &energy_fit).unwrap();
+        assert_eq!(store.load_fit(&time_key).unwrap().params, vec![1.0]);
+        let back = store.load_fit(&energy_key).unwrap();
+        assert_eq!(back.params, vec![2.0]);
+        assert_eq!(back.target, Target::Energy);
+
+        let warm = ArtifactStore::open(&dir).unwrap();
+        assert!(warm.load_fit(&time_key).is_some());
+        assert!(warm.load_fit(&energy_key).is_some());
+        assert_eq!(warm.artifact_parses(), 0, "both targets must be vouched");
+
+        let describes: Vec<String> = warm
+            .list()
+            .unwrap()
+            .into_iter()
+            .filter(|i| matches!(i.kind, ArtifactKind::Fit))
+            .map(|i| i.describe)
+            .collect();
+        assert!(
+            describes.iter().any(|d| d.contains("target=energy")),
+            "{describes:?}"
+        );
+        assert!(
+            describes
+                .iter()
+                .any(|d| !d.contains("target=") && d.contains("overlap")),
+            "time fits keep the pre-v4 description: {describes:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// v3→v4 read-compat at the store layer: a raw v3 fit artifact at
+    /// the legacy path loads through `load_legacy_v3_fit` as a
+    /// converged time fit, is invisible to the v4 `load_fit` path, and
+    /// re-saving it under the v4 key makes subsequent loads warm.
+    #[test]
+    fn legacy_v3_fit_artifacts_load_and_migrate() {
+        let dir = tmp_store("v3compat");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let key = FitKey {
+            case: "matmul".into(),
+            device: "titan_v".into(),
+            nonlinear: true,
+            target: Target::Time,
+            model_fingerprint: 0x0123_4567_89ab_cdef_0123_4567_89ab_cdef,
+        };
+        // A v3 writer's artifact, verbatim: v3 envelope (no target
+        // field anywhere) at the v3 path.
+        let v3 = format!(
+            "{{\"format_version\":3,\"kind\":\"fit\",\"case\":\"matmul\",\
+             \"device\":\"titan_v\",\"nonlinear\":true,\
+             \"model_fingerprint\":\"{}\",\"fit\":{{\
+             \"param_names\":[\"p_a\"],\"params\":[2.5],\"residual\":0.125,\
+             \"iterations\":9}}}}",
+            codec::fingerprint_to_hex(key.model_fingerprint)
+        );
+        let legacy_path =
+            dir.join("fits").join(legacy_v3_fit_file_name(&key));
+        std::fs::write(&legacy_path, &v3).unwrap();
+
+        assert!(
+            store.load_fit(&key).is_none(),
+            "the v4 path must not see the legacy artifact"
+        );
+        let fit = store
+            .load_legacy_v3_fit(&key)
+            .expect("the v3 artifact must load via the legacy path");
+        assert_eq!(fit.params, vec![2.5]);
+        assert_eq!(fit.iterations, 9);
+        assert_eq!(fit.target, Target::Time, "v3 fits are time fits");
+        assert!(fit.converged, "v3 fits decode as converged");
+
+        // Non-time keys have no legacy counterpart by definition.
+        assert!(store
+            .load_legacy_v3_fit(&FitKey {
+                target: Target::Energy,
+                ..key.clone()
+            })
+            .is_none());
+
+        // Key mismatch inside the envelope is rejected like any other.
+        assert!(store
+            .load_legacy_v3_fit(&FitKey {
+                nonlinear: false,
+                ..key.clone()
+            })
+            .is_none());
+
+        // The migration step: re-save under the v4 key, then loads are
+        // warm and the legacy file is dead weight.
+        store.save_fit(&key, &fit).unwrap();
+        let warm = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(warm.load_fit(&key).unwrap().params, vec![2.5]);
+        assert_eq!(warm.artifact_parses(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }
