@@ -1,0 +1,121 @@
+//! Compiled batched prediction vs the exact per-query evaluator.
+//!
+//! The exact path re-parses every feature and re-walks the symbolic
+//! statistics (rational arithmetic, BTreeMap environments) on every
+//! query; the compiled path lowers the fitted model once to a flat f64
+//! evaluation plan (`perflex::model::compiled`) and each sweep point is
+//! a dense loop over slot-indexed values.  This bench measures both
+//! over the same sweep and records the throughput ratio — the PR's
+//! acceptance criterion (>= 100x) is asserted here, so any toolchain
+//! that can run the bench also enforces it.
+//!
+//! Writes `BENCH_batched_eval.json` into `$PERFLEX_BENCH_DIR`
+//! (default: the working directory) with a `summary` carrying
+//! `speedup` and `evals_per_sec`.
+
+use perflex::bench_harness::{bench_recorded, write_baseline_with_summary};
+use perflex::coordinator::expsets;
+use perflex::gpusim::device_by_id;
+use perflex::model::COMPILED_REL_ERR_BOUND;
+use perflex::session::Session;
+use perflex::uipick::apps::build_matmul;
+
+fn main() {
+    let out_dir = std::env::var("PERFLEX_BENCH_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+
+    let dev = device_by_id("titan_v").unwrap();
+    let case = &expsets::eval_cases()[0];
+    let kernel = build_matmul(perflex::ir::DType::F32, true, 16)
+        .unwrap()
+        .freeze();
+
+    // Populate a store once (cold calibration), then benchmark warm.
+    let store_dir = std::env::temp_dir()
+        .join(format!("perflex-bench-batched-eval-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    {
+        let cold = Session::with_store(&store_dir).unwrap();
+        let cal = cold.calibrate_case(case, &dev, true, None).unwrap();
+        assert!(!cal.from_store);
+    }
+    let session = Session::with_store(&store_dir).unwrap();
+    let cal = session.calibrate_case(case, &dev, true, None).unwrap();
+    assert!(cal.from_store);
+
+    // One sweep: n over 256 consecutive sizes.
+    let ns: Vec<i64> = (0..256).map(|i| 1024 + i).collect();
+    let base_env: std::collections::BTreeMap<String, i64> =
+        std::collections::BTreeMap::new();
+
+    // Correctness spot-check before timing anything: the compiled rows
+    // must agree with the exact evaluator within the documented bound
+    // (the full sweep is property-tested in tests/compiled_equivalence.rs).
+    let rows = session
+        .predict_sweep(&cal.cm, &cal.fit, &kernel, &base_env, "n", &ns, &dev)
+        .unwrap();
+    for (x, compiled) in &rows {
+        let env: std::collections::BTreeMap<String, i64> =
+            [("n".to_string(), *x)].into_iter().collect();
+        let exact = session
+            .predict(&cal.cm, &cal.fit, &kernel, &env, &dev)
+            .unwrap();
+        let denom = exact.abs().max(compiled.abs()).max(f64::MIN_POSITIVE);
+        assert!(
+            (compiled - exact).abs() / denom <= COMPILED_REL_ERR_BOUND,
+            "n={x}: compiled {compiled} vs exact {exact}"
+        );
+    }
+
+    // 1. The exact per-query path (the pre-compiled-plan baseline):
+    // feature parse + symbolic statistics walk per query.
+    let exact = bench_recorded("exact per-query predict x256 (matmul, titan_v)", 20, || {
+        for &n in &ns {
+            let env: std::collections::BTreeMap<String, i64> =
+                [("n".to_string(), n)].into_iter().collect();
+            let _ = session
+                .predict(&cal.cm, &cal.fit, &kernel, &env, &dev)
+                .unwrap();
+        }
+    });
+
+    // 2. The compiled sweep: one plan lookup, then a dense f64 loop.
+    let compiled = bench_recorded("compiled sweep x256 (matmul, titan_v)", 200, || {
+        let _ = session
+            .predict_sweep(&cal.cm, &cal.fit, &kernel, &base_env, "n", &ns, &dev)
+            .unwrap();
+    });
+
+    // 3. A single compiled query (plan served from the session cache),
+    // the CLI's warm `predict` hot path.
+    let env2048: std::collections::BTreeMap<String, i64> =
+        [("n".to_string(), 2048i64)].into_iter().collect();
+    let single = bench_recorded("compiled single predict (matmul, titan_v)", 200, || {
+        let _ = session
+            .predict_compiled(&cal.cm, &cal.fit, &kernel, &env2048, &dev)
+            .unwrap();
+    });
+
+    let speedup = exact.mean_ms / compiled.mean_ms;
+    let evals_per_sec = ns.len() as f64 / (compiled.mean_ms / 1e3);
+    println!(
+        "batched speedup: {speedup:.0}x   throughput: {evals_per_sec:.3e} evals/s"
+    );
+    // The PR's acceptance criterion, enforced wherever the bench runs.
+    assert!(
+        speedup >= 100.0,
+        "compiled batched eval must be >= 100x the exact path, got {speedup:.1}x"
+    );
+
+    let p = write_baseline_with_summary(
+        &out_dir,
+        "batched_eval",
+        &[exact, compiled, single],
+        &[("speedup", speedup), ("evals_per_sec", evals_per_sec)],
+    )
+    .unwrap();
+    println!("baseline written to {}", p.display());
+
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

@@ -77,21 +77,39 @@ pub fn write_baseline(
     bench: &str,
     records: &[BenchRecord],
 ) -> Result<PathBuf, String> {
-    let j = Json::obj(vec![
-        ("schema", "perflex-bench-baseline".into()),
+    write_baseline_with_summary(dir, bench, records, &[])
+}
+
+/// [`write_baseline`] with extra derived metrics (e.g. a speedup ratio
+/// or an evals/sec throughput) serialized under a `summary` key.
+pub fn write_baseline_with_summary(
+    dir: &Path,
+    bench: &str,
+    records: &[BenchRecord],
+    summary: &[(&str, f64)],
+) -> Result<PathBuf, String> {
+    let mut fields = vec![
+        ("schema", Json::from("perflex-bench-baseline")),
         ("bench", bench.into()),
         (
             "note",
-            "regenerate with `cargo bench --bench baseline` (set \
-             PERFLEX_BENCH_DIR to choose the output directory); null \
-             metrics mean the baseline has not been measured yet"
+            "regenerate with `cargo bench` (set PERFLEX_BENCH_DIR to \
+             choose the output directory); null metrics mean the \
+             baseline has not been measured yet"
                 .into(),
         ),
         (
             "records",
             Json::Arr(records.iter().map(BenchRecord::to_json).collect()),
         ),
-    ]);
+    ];
+    if !summary.is_empty() {
+        fields.push((
+            "summary",
+            Json::obj(summary.iter().map(|&(k, v)| (k, Json::from(v))).collect()),
+        ));
+    }
+    let j = Json::obj(fields);
     let path = dir.join(format!("BENCH_{bench}.json"));
     std::fs::write(&path, j.to_string())
         .map_err(|e| format!("writing {}: {e}", path.display()))?;
@@ -128,6 +146,33 @@ mod tests {
             Some("noop")
         );
         assert!(records[0].get("mean_ms").and_then(Json::as_f64).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_metrics_serialize_under_a_summary_key() {
+        let dir = std::env::temp_dir()
+            .join(format!("perflex-bench-summary-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let rec = bench_recorded("noop", 1, || {});
+        let path = write_baseline_with_summary(
+            &dir,
+            "smoke",
+            std::slice::from_ref(&rec),
+            &[("speedup", 123.0), ("evals_per_sec", 4.0e6)],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let summary = j.get("summary").expect("summary key present");
+        assert_eq!(
+            summary.get("speedup").and_then(Json::as_f64),
+            Some(123.0)
+        );
+        assert_eq!(
+            summary.get("evals_per_sec").and_then(Json::as_f64),
+            Some(4.0e6)
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

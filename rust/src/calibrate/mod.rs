@@ -840,12 +840,27 @@ pub fn eval_with_kernel_cached<K: KernelRef>(
     cache: &StatsCache,
 ) -> Result<f64, String> {
     let st = cache.get_or_gather(kernel, sub_group_size)?;
+    eval_with_stats(model, fit, &st, env)
+}
+
+/// The exact evaluator against already-gathered statistics: per-query
+/// feature-spec parsing, `QPoly`/`Rat` rational walks and name-keyed
+/// environment maps.  This is the reference semantics the compiled
+/// path ([`crate::model::compiled::CompiledModel`]) is checked against;
+/// factored out so equivalence tests and benches can drive both sides
+/// from one `KernelStats` bundle.
+pub fn eval_with_stats(
+    model: &Model,
+    fit: &FitResult,
+    stats: &crate::stats::KernelStats,
+    env: &BTreeMap<String, i64>,
+) -> Result<f64, String> {
     let ienv: BTreeMap<String, i128> =
         env.iter().map(|(k, v)| (k.clone(), *v as i128)).collect();
     let mut feats = BTreeMap::new();
     for id in model.input_features() {
         let spec = FeatureSpec::parse(&id)?;
-        feats.insert(id, spec.eval(&st, &ienv)?);
+        feats.insert(id, spec.eval(stats, &ienv)?);
     }
     let params: BTreeMap<String, f64> = fit
         .param_names

@@ -656,119 +656,125 @@ fn granularity_and_rate(
 // Table 4 — held-out-device error per calibration target (extension).
 // ----------------------------------------------------------------------
 
-/// Cross-machine generalization, one row per (target, held-out
-/// device): calibrate the matmul model on every fleet device *except*
-/// one — per response variable (time, energy, average power) — and
-/// predict the held-out machine's measurements with it.  The paper's
-/// per-device calibration answers "how well does the model explain the
-/// machine it was fitted on"; this table answers the harder
-/// cross-machine question for each target, which is where the
-/// accuracy/scope balance actually bites.
+/// Cross-machine generalization, one row per (case, target, held-out
+/// device): calibrate each evaluation case's model on every fleet
+/// device *except* one — per response variable (time, energy, average
+/// power) — and predict the held-out machine's measurements with it.
+/// The paper's per-device calibration answers "how well does the model
+/// explain the machine it was fitted on"; this table answers the
+/// harder cross-machine question for each target, which is where the
+/// accuracy/scope balance actually bites.  Predictions run on the
+/// session's compiled evaluation plans (the same hot path the CLI's
+/// `predict` uses).
 fn table4(
     aot: Option<&Artifacts>,
     session: &Session,
 ) -> Result<ExperimentReport, String> {
     let mut rep = ExperimentReport::new(
         "table4",
-        "held-out-device error by calibration target (cross-machine extension)",
+        "held-out-device error by case and calibration target (cross-machine extension)",
     );
-    let case = &expsets::eval_cases()[0];
     let devices = fleet();
+    for case in &expsets::eval_cases() {
+        // fdiff is fitted with the linear form throughout (§8.5); the
+        // other two cases use the overlap form.
+        let nonlinear = case.id != "fdiff";
+        let points = expsets::eval_points(case.id)?;
+        rep.line(format!("case {} ({}):", case.id, points.label));
 
-    // Phase 1 (parallel over devices): one gathering per (device,
-    // target).  The targets of one device share its measurement sweep
-    // and symbolic passes through the session cache — a simulated
-    // launch yields every response variable at once.
-    let gathered: Vec<Vec<FeatureData>> = parallel_map(&devices, |device| {
-        Target::ALL
-            .iter()
-            .map(|&t| session.gather_case_data_for(case, device, t))
-            .collect::<Result<Vec<_>, String>>()
-    })?;
+        // Phase 1 (parallel over devices): one gathering per (device,
+        // target).  The targets of one device share its measurement
+        // sweep and symbolic passes through the session cache — a
+        // simulated launch yields every response variable at once.
+        let gathered: Vec<Vec<FeatureData>> = parallel_map(&devices, |device| {
+            Target::ALL
+                .iter()
+                .map(|&t| session.gather_case_data_for(case, device, t))
+                .collect::<Result<Vec<_>, String>>()
+        })?;
 
-    // Phase 2 (sequential; the AOT client stays on this thread): per
-    // (target, held-out device), fit the pooled data of the other
-    // devices and predict the held-out machine back.
-    let test = build_matmul(crate::ir::DType::F32, true, 16)?.freeze();
-    let ns = [1024i64, 2048, 3072];
-    for (ti, target) in Target::ALL.into_iter().enumerate() {
-        rep.line(format!("target {} ({}):", target.name(), target.unit()));
-        let mut t_errs = Vec::new();
-        for (di, held_out) in devices.iter().enumerate() {
-            if test.work_group_size() > held_out.max_wg_size {
-                rep.line(format!(
-                    "   {:<14} SKIP (work-group too large)",
-                    held_out.id
-                ));
-                continue;
-            }
-            // Pool every *other* device's calibration rows — the fit
-            // never sees the held-out machine.
-            let mut pool = FeatureData {
-                feature_ids: gathered[0][ti].feature_ids.clone(),
-                scaled: true,
-                target,
-                ..Default::default()
-            };
-            for (dj, per_target) in gathered.iter().enumerate() {
-                if dj == di {
+        // Phase 2 (sequential; the AOT client stays on this thread):
+        // per (target, held-out device), fit the pooled data of the
+        // other devices and predict the held-out machine back.
+        for (ti, target) in Target::ALL.into_iter().enumerate() {
+            rep.line(format!(" target {} ({}):", target.name(), target.unit()));
+            let mut t_errs = Vec::new();
+            for (di, held_out) in devices.iter().enumerate() {
+                if points.kernel.work_group_size() > held_out.max_wg_size {
+                    rep.line(format!(
+                        "   {:<14} SKIP (work-group too large)",
+                        held_out.id
+                    ));
                     continue;
                 }
-                let d = &per_target[ti];
-                if d.feature_ids != pool.feature_ids {
-                    return Err(format!(
-                        "feature columns diverge across the fleet: {:?} vs {:?}",
-                        pool.feature_ids, d.feature_ids
-                    ));
+                // Pool every *other* device's calibration rows — the
+                // fit never sees the held-out machine.
+                let mut pool = FeatureData {
+                    feature_ids: gathered[0][ti].feature_ids.clone(),
+                    scaled: true,
+                    target,
+                    ..Default::default()
+                };
+                for (dj, per_target) in gathered.iter().enumerate() {
+                    if dj == di {
+                        continue;
+                    }
+                    let d = &per_target[ti];
+                    if d.feature_ids != pool.feature_ids {
+                        return Err(format!(
+                            "feature columns diverge across the fleet: {:?} vs {:?}",
+                            pool.feature_ids, d.feature_ids
+                        ));
+                    }
+                    pool.rows.extend(d.rows.iter().cloned());
+                    pool.outputs.extend(d.outputs.iter().cloned());
+                    pool.labels.extend(d.labels.iter().cloned());
                 }
-                pool.rows.extend(d.rows.iter().cloned());
-                pool.outputs.extend(d.outputs.iter().cloned());
-                pool.labels.extend(d.labels.iter().cloned());
-            }
-            let cm = (case.model)(held_out.id, true);
-            let opts = LmOptions::default();
-            let fit = match aot {
-                Some(a) => fit_cost_model_aot(a, &cm, &pool, &opts)?,
-                None => fit_cost_model_native(&cm, &pool, &opts)?,
-            };
-            let mut errs = Vec::new();
-            let mut mid = (0.0, 0.0);
-            for &n in &ns {
-                let env = env1("n", n);
-                let sample = session.measure(held_out, &test, &env)?;
-                let measured = target.of(&sample);
-                let predicted =
-                    session.predict(&cm, &fit, &test, &env, held_out)?;
-                if n == ns[1] {
-                    mid = (measured, predicted);
+                let cm = (case.model)(held_out.id, nonlinear);
+                let opts = LmOptions::default();
+                let fit = match aot {
+                    Some(a) => fit_cost_model_aot(a, &cm, &pool, &opts)?,
+                    None => fit_cost_model_native(&cm, &pool, &opts)?,
+                };
+                let mut errs = Vec::new();
+                let mut mid = (0.0, 0.0);
+                for (ei, env) in points.envs.iter().enumerate() {
+                    let sample = session.measure(held_out, &points.kernel, env)?;
+                    let measured = target.of(&sample);
+                    let predicted = session
+                        .predict_compiled(&cm, &fit, &points.kernel, env, held_out)?;
+                    if ei == 1 {
+                        mid = (measured, predicted);
+                    }
+                    errs.push((predicted - measured).abs() / measured);
+                    rep.predictions.push(Prediction {
+                        device: held_out.id.into(),
+                        variant: points.label.clone(),
+                        sizes: env.clone(),
+                        measured,
+                        predicted,
+                        target: target.name().into(),
+                    });
                 }
-                errs.push((predicted - measured).abs() / measured);
-                rep.predictions.push(Prediction {
-                    device: held_out.id.into(),
-                    variant: "matmul_pf".into(),
-                    sizes: env,
-                    measured,
-                    predicted,
-                    target: target.name().into(),
-                });
+                let g = geomean(&errs);
+                t_errs.extend(errs);
+                rep.line(format!(
+                    "   {:<14} geomean err {:>5.1}%   (mid size: measured {}, predicted {})",
+                    held_out.id,
+                    100.0 * g,
+                    fmt_target(target, mid.0),
+                    fmt_target(target, mid.1),
+                ));
+                rep.summary.insert(
+                    format!("err_{}_{}_{}", case.id, target.name(), held_out.id),
+                    g,
+                );
             }
-            let g = geomean(&errs);
-            t_errs.extend(errs);
-            rep.line(format!(
-                "   {:<14} geomean err {:>5.1}%   (n={}: measured {}, predicted {})",
-                held_out.id,
-                100.0 * g,
-                ns[1],
-                fmt_target(target, mid.0),
-                fmt_target(target, mid.1),
-            ));
-            rep.summary
-                .insert(format!("err_{}_{}", target.name(), held_out.id), g);
+            rep.summary.insert(
+                format!("geomean_rel_err_{}_{}", case.id, target.name()),
+                geomean(&t_errs),
+            );
         }
-        rep.summary.insert(
-            format!("geomean_rel_err_{}", target.name()),
-            geomean(&t_errs),
-        );
     }
     rep.summary
         .insert("geomean_rel_err".into(), rep.overall_geomean());
@@ -1094,6 +1100,20 @@ fn all_experiments(
         100.0 * overall
     ));
     rep.summary.insert("geomean_rel_err".into(), overall);
+    // The cross-machine extension rides along (all cases × targets),
+    // but stays out of the OVERALL geomean: that number reproduces the
+    // paper's §10 per-device evaluation, and held-out-device errors
+    // answer a different (harder) question.
+    let sub = dispatch_experiment("table4", aot, session)?;
+    if let Some(&g) = sub.summary.get("geomean_rel_err") {
+        rep.line(format!(
+            "table4 (cross-machine, excluded from OVERALL): geomean rel err {:.1}%",
+            100.0 * g
+        ));
+    }
+    for (k, v) in sub.summary {
+        rep.summary.insert(format!("table4.{k}"), v);
+    }
     Ok(rep)
 }
 

@@ -207,6 +207,59 @@ pub fn eval_case(id: &str) -> Option<EvalCase> {
     eval_cases().into_iter().find(|c| c.id == id)
 }
 
+/// One representative held-out application kernel per evaluation case,
+/// with the problem sizes it is predicted at.  Shared by the table-4
+/// cross-machine harness and the compiled-vs-exact equivalence suite,
+/// so both exercise the same (kernel, env) points; the remaining
+/// variants per case are covered by figs. 7-9.
+pub struct EvalPoints {
+    /// Variant label used in prediction records.
+    pub label: String,
+    pub kernel: crate::ir::FrozenKernel,
+    pub envs: Vec<std::collections::BTreeMap<String, i64>>,
+}
+
+/// Build the evaluation points of one case.
+pub fn eval_points(case_id: &str) -> Result<EvalPoints, String> {
+    use crate::uipick::apps::{build_dg, build_fdiff, build_matmul, DgVariant};
+    fn env1(k: &str, v: i64) -> std::collections::BTreeMap<String, i64> {
+        let mut e = std::collections::BTreeMap::new();
+        e.insert(k.to_string(), v);
+        e
+    }
+    match case_id {
+        "matmul" => Ok(EvalPoints {
+            label: "matmul_pf".into(),
+            kernel: build_matmul(crate::ir::DType::F32, true, 16)?.freeze(),
+            envs: [1024i64, 2048, 3072]
+                .iter()
+                .map(|&n| env1("n", n))
+                .collect(),
+        }),
+        "dg" => Ok(EvalPoints {
+            label: "dg_plain".into(),
+            kernel: build_dg(DgVariant::Plain, 64, 16)?.freeze(),
+            envs: [65536i64, 131072, 262144]
+                .iter()
+                .map(|&nel| {
+                    let mut e = env1("nelements", nel);
+                    e.insert("nmatrices".into(), 3);
+                    e
+                })
+                .collect(),
+        }),
+        "fdiff" => Ok(EvalPoints {
+            label: "fdiff_16".into(),
+            kernel: build_fdiff(16)?.freeze(),
+            envs: [2016i64, 4032, 6048]
+                .iter()
+                .map(|&n| env1("n", n))
+                .collect(),
+        }),
+        other => Err(format!("no evaluation points for case '{other}'")),
+    }
+}
+
 /// Generate the union of a case's measurement kernels.
 pub fn generate_measurement_kernels(
     sets: &[Vec<String>],

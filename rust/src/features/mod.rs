@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::ir::{DType, MemScope};
-use crate::polyhedral::QPoly;
+use crate::polyhedral::{PolyPlan, QPoly};
 use crate::stats::{Direction, KernelStats, MemAccessStat};
 
 /// A constraint on an integer quantity (stride or AFR).
@@ -244,6 +244,155 @@ impl BoundFeature {
                         continue;
                     }
                     acc += t.count.eval_f64(env);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Lower to a [`CompiledFeature`] against a shared variable table
+    /// (`slot` as in [`QPoly::lower`]).  `stats` must be the bundle
+    /// this feature was bound against: per-env filter residues
+    /// (parametric-stride and AFR constraints) are compiled from its
+    /// access polynomials.  Constant-stride constraints were already
+    /// decided at bind time and compile to nothing.
+    pub fn lower(
+        &self,
+        stats: &KernelStats,
+        slot: &mut impl FnMut(&str) -> u32,
+    ) -> CompiledFeature {
+        let kind = match &self.kind {
+            BoundKind::Const(c) => CompiledKind::Const(*c),
+            BoundKind::Poly(p) => CompiledKind::Poly(p.lower(slot)),
+            BoundKind::PolyProduct(a, b) => {
+                CompiledKind::PolyProduct(a.lower(slot), b.lower(slot))
+            }
+            BoundKind::Mem { terms, filter } => {
+                let mut out = Vec::with_capacity(terms.len());
+                for t in terms {
+                    let mut checks = Vec::new();
+                    if t.needs_check {
+                        let m = &stats.mem[t.index];
+                        for (axis, c) in &filter.lstrides {
+                            let p = &m.lstrides[*axis as usize];
+                            if p.as_constant().is_none() {
+                                checks.push(CompiledCheck::Stride {
+                                    plan: p.lower(slot),
+                                    c: *c,
+                                });
+                            }
+                        }
+                        for (axis, c) in &filter.gstrides {
+                            let p = &m.gstrides[*axis as usize];
+                            if p.as_constant().is_none() {
+                                checks.push(CompiledCheck::Stride {
+                                    plan: p.lower(slot),
+                                    c: *c,
+                                });
+                            }
+                        }
+                        if let Some(c) = &filter.afr {
+                            checks.push(CompiledCheck::Afr {
+                                count_wi: m.count_wi.lower(slot),
+                                footprint: m.footprint.lower(slot),
+                                c: *c,
+                            });
+                        }
+                    }
+                    out.push(CompiledMemTerm {
+                        count: t.count.lower(slot),
+                        checks,
+                    });
+                }
+                CompiledKind::Mem(out)
+            }
+        };
+        CompiledFeature { kind }
+    }
+}
+
+/// One membership re-check a compiled mem term must pass per
+/// environment — the residue of a [`MemAccessFilter`] after everything
+/// statically decidable (tag/scope/dtype/direction, constant-stride
+/// constraints) has been folded away at bind time.
+#[derive(Clone, Debug)]
+enum CompiledCheck {
+    /// A constrained stride whose polynomial is parametric.
+    Stride { plan: PolyPlan, c: Constraint },
+    /// An access-to-footprint-ratio constraint, replicating
+    /// [`MemAccessStat::afr`]'s clamp-and-divide exactly.
+    Afr {
+        count_wi: PolyPlan,
+        footprint: PolyPlan,
+        c: Constraint,
+    },
+}
+
+impl CompiledCheck {
+    fn passes(&self, vals: &[f64]) -> bool {
+        match self {
+            CompiledCheck::Stride { plan, c } => c.matches(plan.eval(vals)),
+            CompiledCheck::Afr {
+                count_wi,
+                footprint,
+                c,
+            } => {
+                let count = count_wi.eval(vals);
+                let fp = footprint.eval(vals).min(count);
+                let afr = if fp == 0.0 { 0.0 } else { count / fp };
+                c.matches(afr)
+            }
+        }
+    }
+}
+
+/// One memory-access contribution of a [`CompiledFeature`]: the
+/// access's `count_at_granularity` polynomial lowered to a flat plan,
+/// plus whatever filter residue must still pass per environment.
+#[derive(Clone, Debug)]
+struct CompiledMemTerm {
+    count: PolyPlan,
+    checks: Vec<CompiledCheck>,
+}
+
+#[derive(Clone, Debug)]
+enum CompiledKind {
+    Const(f64),
+    Poly(PolyPlan),
+    PolyProduct(PolyPlan, PolyPlan),
+    Mem(Vec<CompiledMemTerm>),
+}
+
+/// A [`BoundFeature`] lowered all the way to flat f64 plans: no
+/// `KernelStats` access, no string maps, no rational arithmetic at
+/// evaluation time — just [`PolyPlan::eval`] over a dense value slice.
+/// This is the per-feature building block of
+/// [`crate::model::compiled::CompiledModel`]; see there for the
+/// end-to-end accuracy guarantee versus the exact path.
+///
+/// Structure is preserved from the bound feature: mem terms are summed
+/// in the same `KernelStats::mem` order with the same per-term checks
+/// (constraint epsilons included), so the only divergence from
+/// [`BoundFeature::eval`] is f64 rounding inside the plans.
+#[derive(Clone, Debug)]
+pub struct CompiledFeature {
+    kind: CompiledKind,
+}
+
+impl CompiledFeature {
+    /// Evaluate over `vals`, indexed by the slot table shared with the
+    /// other features of the same compiled model.
+    pub fn eval(&self, vals: &[f64]) -> f64 {
+        match &self.kind {
+            CompiledKind::Const(c) => *c,
+            CompiledKind::Poly(p) => p.eval(vals),
+            CompiledKind::PolyProduct(a, b) => a.eval(vals) * b.eval(vals),
+            CompiledKind::Mem(terms) => {
+                let mut acc = 0.0;
+                for t in terms {
+                    if t.checks.iter().all(|c| c.passes(vals)) {
+                        acc += t.count.eval(vals);
+                    }
                 }
                 acc
             }

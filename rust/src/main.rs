@@ -12,7 +12,7 @@
 //! perflex measure <device> <tag>... [--store <dir>]
 //! perflex calibrate <case> <device> [--store <dir>] [--target <name>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
-//!               [--target <name>]
+//!               [--target <name>] [--sweep k=lo..hi[:step]]
 //! perflex experiment <id>|all [--no-aot] [--json <dir>] [--store <dir>]
 //! perflex store ls|stat|verify|gc|compact --store <dir> [--dry-run]
 //!               [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]
@@ -22,6 +22,17 @@
 //! and `predict` predicts: `time` (the default), `energy` or
 //! `avg_power`.  Fits for different targets persist side by side in
 //! the store; an unknown name is rejected with the valid list.
+//!
+//! `predict` runs on the compiled evaluation plan (see
+//! `perflex::model::compiled`): the fitted model is lowered once to
+//! flat f64 arithmetic and each query is a dense evaluation, agreeing
+//! with the exact path within a documented relative-error bound.
+//! `--sweep k=lo..hi[:step]` batch-predicts over a range of one size
+//! variable (the remaining `k=v` bindings stay fixed), emitting one
+//! JSON row per point on stdout — machine-readable input for
+//! experiment tables and autotuning sweeps.  Duplicate `k=v` bindings
+//! and malformed ranges are rejected with the offending argument
+//! named.
 //!
 //! `--store <dir>` opens a persistent artifact store (see
 //! `perflex::session`): symbolic kernel statistics and calibration
@@ -70,6 +81,7 @@ fn usage() -> String {
      calibrate | predict | experiment | store\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
      calibrate/predict flag: --target time|energy|avg_power (default: time)\n\
+     predict flag: --sweep k=lo..hi[:step] emits one JSON row per point\n\
      store maintenance: perflex store ls|stat|verify|gc|compact --store <dir>\n\
      \x20    [--dry-run] [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]\n\
      run `perflex experiment all` to reproduce the paper's evaluation"
@@ -125,6 +137,17 @@ fn print_ledger(session: &Session) {
     }
     if let Some((locks, contended)) = session.store_lock_ledger() {
         println!("store lock: {locks} acquisitions, {contended} contended");
+    }
+    // The compiled-path ledger proves predictions ran on the lowered
+    // f64 plans rather than the exact evaluator; CI greps for it on
+    // warm predicts.  Commands that never predict (measure, calibrate)
+    // print nothing here.
+    let (lowerings, hits, evals) = session.compiled_ledger();
+    if lowerings > 0 || evals > 0 {
+        println!(
+            "compiled eval: {lowerings} lowerings, {hits} cache hits, \
+             {evals} evaluations"
+        );
     }
 }
 
@@ -224,6 +247,16 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                 Some(name) => perflex::calibrate::Target::parse(&name)?,
                 None => perflex::calibrate::Target::Time,
             };
+            // `--sweep` batch-predicts over one size variable; parse
+            // (and reject malformed ranges) before any calibration
+            // work starts.
+            let sweep = match take_flag_value(&mut rest, "--sweep")? {
+                Some(arg) => Some(parse_sweep(&arg)?),
+                None => None,
+            };
+            if cmd == "calibrate" && sweep.is_some() {
+                return Err("--sweep only applies to predict".into());
+            }
             let case_id = rest
                 .first()
                 .ok_or("calibrate <case:matmul|dg|fdiff> <device>")?;
@@ -289,25 +322,67 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             }
             if cmd == "predict" {
                 let variant = rest.get(2).ok_or("predict ... <variant> <k=v>...")?;
-                let mut env: BTreeMap<String, i64> = BTreeMap::new();
-                for kv in &rest[3..] {
-                    let (k, v) = kv
-                        .split_once('=')
-                        .ok_or_else(|| format!("expected k=v, got '{kv}'"))?;
-                    env.insert(k.into(), v.parse().map_err(|_| "bad int")?);
+                let env = parse_size_bindings(&rest[3..])?;
+                if let Some(sw) = &sweep {
+                    if let Some(fixed) = env.get(&sw.var) {
+                        return Err(format!(
+                            "size variable '{}' is both swept (--sweep) and \
+                             fixed ({}={fixed}); drop one of the two",
+                            sw.var, sw.var
+                        ));
+                    }
                 }
                 let kernel = build_variant(case_id, variant)?.freeze();
-                let predicted =
-                    session.predict(&cal.cm, &cal.fit, &kernel, &env, &device)?;
-                let measured = target.of(&session.measure(&device, &kernel, &env)?);
-                // fmt_target(Time, ·) == fmt_time(·), so time output is
-                // byte-identical to the pre-target renderer.
-                println!(
-                    "predicted {} / measured {} (err {:.1}%)",
-                    perflex::coordinator::report::fmt_target(target, predicted),
-                    perflex::coordinator::report::fmt_target(target, measured),
-                    100.0 * (predicted - measured).abs() / measured
-                );
+                match &sweep {
+                    // Batched prediction over the compiled plan: one
+                    // JSON row per point, predictions only (sweeps are
+                    // what-if queries, not measurements).
+                    Some(sw) => {
+                        use perflex::util::json::Json;
+                        let rows = session.predict_sweep(
+                            &cal.cm,
+                            &cal.fit,
+                            &kernel,
+                            &env,
+                            &sw.var,
+                            &sw.values(),
+                            &device,
+                        )?;
+                        for (x, v) in rows {
+                            let mut sizes: BTreeMap<String, Json> = env
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::from(*v)))
+                                .collect();
+                            sizes.insert(sw.var.clone(), Json::from(x));
+                            let mut row: BTreeMap<String, Json> = BTreeMap::new();
+                            row.insert("sizes".into(), Json::Obj(sizes));
+                            row.insert("predicted".into(), Json::from(v));
+                            row.insert("unit".into(), Json::from(target.unit()));
+                            if target != perflex::calibrate::Target::Time {
+                                row.insert("target".into(), Json::from(target.name()));
+                            }
+                            println!("{}", Json::Obj(row));
+                        }
+                    }
+                    None => {
+                        // Single queries run on the same compiled plan
+                        // (the CI-asserted warm hot path); the exact
+                        // evaluator remains the reference the plan is
+                        // equivalence-tested against.
+                        let predicted = session
+                            .predict_compiled(&cal.cm, &cal.fit, &kernel, &env, &device)?;
+                        let measured =
+                            target.of(&session.measure(&device, &kernel, &env)?);
+                        // fmt_target(Time, ·) == fmt_time(·), so time output is
+                        // byte-identical to the pre-target renderer.
+                        println!(
+                            "predicted {} / measured {} (err {:.1}%)",
+                            perflex::coordinator::report::fmt_target(target, predicted),
+                            perflex::coordinator::report::fmt_target(target, measured),
+                            100.0 * (predicted - measured).abs() / measured
+                        );
+                    }
+                }
             }
             if store_dir.is_some() {
                 print_ledger(&session);
@@ -530,6 +605,92 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
     }
 }
 
+/// Parse `k=v` size bindings.  A duplicate binding is an error naming
+/// the offending argument, not a silent overwrite: `n=1024 n=2048`
+/// used to predict at 2048 while the user thought both were honored.
+fn parse_size_bindings(args: &[String]) -> Result<BTreeMap<String, i64>, String> {
+    let mut env = BTreeMap::new();
+    for kv in args {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| format!("expected k=v, got '{kv}'"))?;
+        let v: i64 = v
+            .parse()
+            .map_err(|_| format!("bad integer in size binding '{kv}'"))?;
+        if env.insert(k.to_string(), v).is_some() {
+            return Err(format!(
+                "size variable '{k}' bound more than once \
+                 (duplicate binding '{kv}')"
+            ));
+        }
+    }
+    Ok(env)
+}
+
+/// A parsed `--sweep k=lo..hi[:step]` range (inclusive bounds,
+/// positive step, step defaults to 1).
+#[derive(Clone, Debug, PartialEq)]
+struct Sweep {
+    var: String,
+    lo: i64,
+    hi: i64,
+    step: i64,
+}
+
+impl Sweep {
+    fn values(&self) -> Vec<i64> {
+        let mut out = Vec::new();
+        let mut x = self.lo;
+        while x <= self.hi {
+            out.push(x);
+            x += self.step;
+        }
+        out
+    }
+}
+
+/// Parse a `--sweep` argument; every rejection names the argument it
+/// is rejecting so a malformed range in a long command line is
+/// findable.
+fn parse_sweep(arg: &str) -> Result<Sweep, String> {
+    let err = |why: String| format!("--sweep {arg}: {why} (expected k=lo..hi[:step])");
+    let (var, range) = arg
+        .split_once('=')
+        .ok_or_else(|| err("missing '='".into()))?;
+    if var.is_empty() {
+        return Err(err("empty variable name".into()));
+    }
+    let (range, step) = match range.split_once(':') {
+        Some((r, s)) => (
+            r,
+            s.parse::<i64>()
+                .map_err(|_| err(format!("bad step '{s}'")))?,
+        ),
+        None => (range, 1),
+    };
+    let (lo, hi) = range
+        .split_once("..")
+        .ok_or_else(|| err("missing '..'".into()))?;
+    let lo: i64 = lo
+        .parse()
+        .map_err(|_| err(format!("bad lower bound '{lo}'")))?;
+    let hi: i64 = hi
+        .parse()
+        .map_err(|_| err(format!("bad upper bound '{hi}'")))?;
+    if step <= 0 {
+        return Err(err(format!("step must be positive, got {step}")));
+    }
+    if lo > hi {
+        return Err(err(format!("empty range ({lo} > {hi})")));
+    }
+    Ok(Sweep {
+        var: var.to_string(),
+        lo,
+        hi,
+        step,
+    })
+}
+
 fn build_variant(case: &str, variant: &str) -> Result<perflex::ir::Kernel, String> {
     use perflex::uipick::apps::*;
     match (case, variant) {
@@ -544,7 +705,7 @@ fn build_variant(case: &str, variant: &str) -> Result<perflex::ir::Kernel, Strin
 
 #[cfg(test)]
 mod tests {
-    use super::{take_flag, take_flag_value};
+    use super::{parse_size_bindings, parse_sweep, take_flag, take_flag_value, Sweep};
 
     fn args(v: &[&str]) -> Vec<String> {
         v.iter().map(|s| s.to_string()).collect()
@@ -591,5 +752,57 @@ mod tests {
             "no stray flag copy may survive as a positional argument"
         );
         assert!(!take_flag(&mut a, "--dry-run"));
+    }
+
+    #[test]
+    fn size_bindings_parse_and_reject_duplicates() {
+        let env = parse_size_bindings(&args(&["n=2048", "m=16"])).unwrap();
+        assert_eq!(env.get("n"), Some(&2048));
+        assert_eq!(env.get("m"), Some(&16));
+
+        let err = parse_size_bindings(&args(&["n=1024", "n=2048"])).unwrap_err();
+        assert!(err.contains("'n'"), "{err}");
+        assert!(err.contains("n=2048"), "{err}");
+
+        let err = parse_size_bindings(&args(&["n2048"])).unwrap_err();
+        assert!(err.contains("n2048"), "{err}");
+        let err = parse_size_bindings(&args(&["n=big"])).unwrap_err();
+        assert!(err.contains("n=big"), "{err}");
+    }
+
+    #[test]
+    fn sweep_parses_ranges_and_steps() {
+        assert_eq!(
+            parse_sweep("n=1024..4096:1024").unwrap(),
+            Sweep {
+                var: "n".into(),
+                lo: 1024,
+                hi: 4096,
+                step: 1024,
+            }
+        );
+        // Step defaults to 1; bounds are inclusive.
+        assert_eq!(parse_sweep("k=3..6").unwrap().values(), vec![3, 4, 5, 6]);
+        // A step that overshoots still includes the lower bound.
+        assert_eq!(parse_sweep("k=5..9:10").unwrap().values(), vec![5]);
+    }
+
+    #[test]
+    fn sweep_rejections_name_the_argument() {
+        for bad in [
+            "n",            // missing '='
+            "=1..4",        // empty variable
+            "n=14",         // missing '..'
+            "n=a..4",       // bad lower bound
+            "n=1..b",       // bad upper bound
+            "n=1..4:x",     // bad step
+            "n=1..4:0",     // non-positive step
+            "n=1..4:-2",    // negative step
+            "n=9..1",       // empty range
+        ] {
+            let err = parse_sweep(bad).unwrap_err();
+            assert!(err.contains(bad), "error for '{bad}' must name it: {err}");
+            assert!(err.contains("k=lo..hi[:step]"), "{err}");
+        }
     }
 }

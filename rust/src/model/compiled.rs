@@ -1,0 +1,344 @@
+//! Compiled model evaluation: the batched-prediction hot path.
+//!
+//! Warm prediction pays no counting passes and no LM iterations, but
+//! the exact evaluator ([`crate::calibrate::eval_with_stats`]) still
+//! re-parses feature identifiers, walks `QPoly` trees with `Rat`
+//! i128 gcd arithmetic per monomial, and round-trips every value
+//! through name-keyed `BTreeMap`s — per query.  A [`CompiledModel`]
+//! does all of that once: it lowers a fitted [`CostModel`] bound to
+//! one kernel's [`KernelStats`] into flat f64 plans
+//! ([`crate::polyhedral::PolyPlan`] per feature, coefficients fetched
+//! from the [`FitResult`] up front), after which each evaluation is a
+//! few dense loops over a value slice — no allocation, no map lookups,
+//! no rational arithmetic.  This is ROADMAP item 2's "millions of
+//! model evaluations per second" engine for sweeps, capacity planning
+//! and the autotuning arc.
+//!
+//! # Accuracy: the compiled-vs-exact contract
+//!
+//! Exactness stays in calibration; the compiled path is a *prediction*
+//! fast path checked against the exact path.  The guarantee:
+//!
+//! > For every environment on which the exact path succeeds, the
+//! > compiled prediction agrees within [`COMPILED_REL_ERR_BOUND`]
+//! > relative error.
+//!
+//! Where the two paths can differ, and why the bound holds:
+//!
+//! * **Feature polynomials.**  The exact path evaluates each `QPoly`
+//!   in rational arithmetic and rounds once at the end; the compiled
+//!   plan accumulates in f64.  Both visit monomials in the same order,
+//!   so the divergence is ordinary floating-point rounding — a few ulp
+//!   per term ([`crate::polyhedral::PolyPlan`] documents the summation
+//!   bound).  Counting polynomials have single-digit degrees and a few
+//!   dozen terms, keeping this at ~1e-13 relative in practice.
+//! * **Floor boundaries.**  `floor` factors snap near-integer
+//!   arguments before truncating (see `FLOOR_SNAP_TOL` in
+//!   `polyhedral::qpoly`), so arguments that are exactly integral in
+//!   rational arithmetic truncate identically; a genuinely fractional
+//!   argument is at least one part in `den·D` away from the boundary
+//!   (D = the lcm of coefficient denominators), out of reach of ulp
+//!   noise until the floor's unit error is itself below the relative
+//!   bound.
+//! * **Filter re-checks.**  Parametric-stride and AFR constraints are
+//!   re-evaluated per environment on both paths with the same 1e-9
+//!   comparison epsilons; compiled check values differ from exact ones
+//!   by ulps, far inside those epsilons for the integer-valued strides
+//!   and well-separated AFR values the counting pass produces.
+//! * **Model combination.**  The compiled combiner reproduces
+//!   [`CostModel::to_model`]'s expression tree exactly — same per-term
+//!   `p·f` products, same left-associated group sums in term order,
+//!   same `(o + a) + b` / tanh-switch association — so no new rounding
+//!   is introduced at this level.  The nonlinear switch can *amplify*
+//!   a feature-level perturbation by at most
+//!   `1 + sup|x·sech²(x)| ≈ 1.45` in the relevant regime, which is
+//!   why [`COMPILED_REL_ERR_BOUND`] carries generous headroom over the
+//!   observed ~1e-12.
+//!
+//! The contract is enforced by `tests/compiled_equivalence.rs`
+//! (property-tested over every eval case, fleet device and calibration
+//! target, including degenerate and near-i128-overflow sizes) and by
+//! unit tests here.
+
+use std::collections::BTreeMap;
+
+use crate::calibrate::{FitResult, Target};
+use crate::features::{CompiledFeature, FeatureSpec};
+use crate::model::cost_model::{CostModel, EDGE_PARAM};
+use crate::stats::KernelStats;
+
+/// Maximum relative error of a compiled prediction versus the exact
+/// path, on any environment where the exact path succeeds.  See the
+/// module docs for the derivation; typical agreement is ~1e-12 and the
+/// bound carries headroom for tanh-switch amplification and deep
+/// floor nests.
+pub const COMPILED_REL_ERR_BOUND: f64 = 1e-6;
+
+/// A fitted cost model lowered to a flat f64 evaluation plan for one
+/// kernel: fitted coefficients × compiled feature plans over a shared
+/// size-variable table.  Build with [`CompiledModel::compile`];
+/// evaluate with [`CompiledModel::eval_env`] (name-keyed convenience)
+/// or [`CompiledModel::eval_slots`] (the allocation-free batch form —
+/// bind once, then mutate the value slice between calls).
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    /// Size-variable names; `vals[i]` in [`CompiledModel::eval_slots`]
+    /// is the value of `vars[i]`.
+    vars: Vec<String>,
+    /// One compiled feature per cost term, in `CostModel::terms` order
+    /// (duplicated feature names stay duplicated — they compile to
+    /// identical plans, preserving the exact path's term structure).
+    features: Vec<CompiledFeature>,
+    /// Fitted coefficient for each term.
+    coeffs: Vec<f64>,
+    /// Cost group of each term (`CostGroup as u8`).
+    groups: Vec<u8>,
+    /// Fitted `p_edge` for the nonlinear overlap form; `None` for the
+    /// linear form.
+    edge: Option<f64>,
+    target: Target,
+}
+
+impl CompiledModel {
+    /// Lower `cm` with fitted parameters `fit` against one kernel's
+    /// statistics.  Fails if the fit is missing a term's parameter
+    /// (or `p_edge` for the nonlinear form), or a term's feature
+    /// cannot be parsed/bound (e.g. a wall-time input feature).
+    pub fn compile(
+        cm: &CostModel,
+        fit: &FitResult,
+        stats: &KernelStats,
+    ) -> Result<CompiledModel, String> {
+        let mut vars: Vec<String> = Vec::new();
+        let mut features = Vec::with_capacity(cm.terms.len());
+        let mut coeffs = Vec::with_capacity(cm.terms.len());
+        let mut groups = Vec::with_capacity(cm.terms.len());
+        {
+            let mut slot = |name: &str| -> u32 {
+                match vars.iter().position(|v| v == name) {
+                    Some(i) => i as u32,
+                    None => {
+                        vars.push(name.to_string());
+                        (vars.len() - 1) as u32
+                    }
+                }
+            };
+            for t in &cm.terms {
+                let coeff = fit.param(&t.param).ok_or_else(|| {
+                    format!(
+                        "compile: fit ({} params) is missing parameter '{}' \
+                         for feature '{}'",
+                        fit.param_names.len(),
+                        t.param,
+                        t.feature
+                    )
+                })?;
+                let spec = FeatureSpec::parse(&t.feature)?;
+                let bound = spec.bind(stats)?;
+                features.push(bound.lower(stats, &mut slot));
+                coeffs.push(coeff);
+                groups.push(t.group as u8);
+            }
+        }
+        let edge = if cm.nonlinear {
+            Some(fit.param(EDGE_PARAM).ok_or_else(|| {
+                format!("compile: nonlinear fit is missing '{EDGE_PARAM}'")
+            })?)
+        } else {
+            None
+        };
+        Ok(CompiledModel {
+            vars,
+            features,
+            coeffs,
+            groups,
+            edge,
+            target: fit.target,
+        })
+    }
+
+    /// Size-variable names, in slot order.
+    pub fn vars(&self) -> &[String] {
+        &self.vars
+    }
+
+    /// Slot index of a size variable, if the model depends on it.
+    pub fn slot_of(&self, name: &str) -> Option<usize> {
+        self.vars.iter().position(|v| v == name)
+    }
+
+    /// The calibration target the fitted coefficients explain.
+    pub fn target(&self) -> Target {
+        self.target
+    }
+
+    /// Resolve a name-keyed environment to a slot-ordered value vector
+    /// for [`CompiledModel::eval_slots`]; errors name the first
+    /// unbound size variable.  Extra bindings are ignored, matching
+    /// the exact path.
+    pub fn bind_env(&self, env: &BTreeMap<String, i64>) -> Result<Vec<f64>, String> {
+        self.vars
+            .iter()
+            .map(|v| {
+                env.get(v).map(|x| *x as f64).ok_or_else(|| {
+                    format!("unbound size variable '{v}' (bind it as {v}=<int>)")
+                })
+            })
+            .collect()
+    }
+
+    /// Single-query convenience: [`CompiledModel::bind_env`] +
+    /// [`CompiledModel::eval_slots`].
+    pub fn eval_env(&self, env: &BTreeMap<String, i64>) -> Result<f64, String> {
+        Ok(self.eval_slots(&self.bind_env(env)?))
+    }
+
+    /// The hot path: evaluate at one point of a batch.  `vals` is
+    /// indexed by [`CompiledModel::vars`] (see
+    /// [`CompiledModel::bind_env`]); callers running sweeps mutate one
+    /// slot between calls and re-evaluate — no per-query allocation.
+    ///
+    /// The combining arithmetic reproduces [`CostModel::to_model`]'s
+    /// expression tree operation-for-operation (see module docs), so
+    /// divergence from the exact path comes only from the feature
+    /// plans.
+    pub fn eval_slots(&self, vals: &[f64]) -> f64 {
+        let (mut o, mut a, mut b) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..self.features.len() {
+            let v = self.coeffs[i] * self.features[i].eval(vals);
+            match self.groups[i] {
+                0 => o += v,
+                1 => a += v,
+                _ => b += v,
+            }
+        }
+        match self.edge {
+            None => (o + a) + b,
+            Some(p_edge) => {
+                let u = a - b;
+                let denom = (a + b) + 1e-30;
+                let s1 = ((p_edge * u / denom).tanh() + 1.0) / 2.0;
+                (o + b) + u * s1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::eval_with_stats;
+    use crate::ir::DType;
+    use crate::model::CostGroup;
+
+    fn fit_for(cm: &CostModel, seed: u64) -> FitResult {
+        let mut rng = crate::util::Rng::new(seed);
+        let names: Vec<String> = cm.to_model().params();
+        let params: Vec<f64> = names
+            .iter()
+            .map(|n| {
+                if n == EDGE_PARAM {
+                    rng.uniform_in(1.0, 1e4)
+                } else {
+                    // Log-uniform over realistic per-feature cost scales.
+                    10f64.powf(rng.uniform_in(-9.0, -3.0))
+                }
+            })
+            .collect();
+        FitResult {
+            param_names: names,
+            params,
+            residual: 0.0,
+            iterations: 0,
+            target: Target::Time,
+            converged: true,
+        }
+    }
+
+    fn rel_diff(x: f64, y: f64) -> f64 {
+        (x - y).abs() / x.abs().max(y.abs()).max(f64::MIN_POSITIVE)
+    }
+
+    #[test]
+    fn compiled_matches_exact_for_matmul_both_forms() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        for (seed, nonlinear) in [(1u64, false), (2, true)] {
+            let case = &crate::coordinator::expsets::eval_cases()[0];
+            let cm = (case.model)("titan_v", nonlinear);
+            let fit = fit_for(&cm, seed);
+            let model = cm.to_model();
+            let compiled = CompiledModel::compile(&cm, &fit, &stats).unwrap();
+            assert_eq!(compiled.target(), Target::Time);
+            for n in [1i64, 16, 1024, 2048, 3584] {
+                let env: BTreeMap<String, i64> =
+                    [("n".to_string(), n)].into_iter().collect();
+                let exact = eval_with_stats(&model, &fit, &stats, &env).unwrap();
+                let fast = compiled.eval_env(&env).unwrap();
+                assert!(
+                    rel_diff(exact, fast) <= COMPILED_REL_ERR_BOUND,
+                    "nonlinear={nonlinear} n={n}: exact {exact} vs compiled {fast}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_slots_supports_in_place_sweeps() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        let case = &crate::coordinator::expsets::eval_cases()[0];
+        let cm = (case.model)("titan_v", true);
+        let fit = fit_for(&cm, 7);
+        let compiled = CompiledModel::compile(&cm, &fit, &stats).unwrap();
+        let base: BTreeMap<String, i64> =
+            [("n".to_string(), 1024i64)].into_iter().collect();
+        let mut vals = compiled.bind_env(&base).unwrap();
+        let slot = compiled.slot_of("n").unwrap();
+        for n in [1024i64, 1280, 2048] {
+            vals[slot] = n as f64;
+            let swept = compiled.eval_slots(&vals);
+            let env: BTreeMap<String, i64> =
+                [("n".to_string(), n)].into_iter().collect();
+            assert_eq!(swept, compiled.eval_env(&env).unwrap(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn compile_errors_name_the_missing_piece() {
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        let cm = CostModel::new("titan_v", true).term(
+            "madd",
+            "f_op_float32_madd",
+            CostGroup::OnChip,
+        );
+        // Missing the term's parameter entirely.
+        let empty = FitResult {
+            param_names: vec![],
+            params: vec![],
+            residual: 0.0,
+            iterations: 0,
+            target: Target::Time,
+            converged: true,
+        };
+        let err = CompiledModel::compile(&cm, &empty, &stats).unwrap_err();
+        assert!(err.contains("p_madd"), "{err}");
+        // Nonlinear fit without p_edge.
+        let no_edge = FitResult {
+            param_names: vec!["p_madd".into()],
+            params: vec![1e-6],
+            residual: 0.0,
+            iterations: 0,
+            target: Target::Time,
+            converged: true,
+        };
+        let err = CompiledModel::compile(&cm, &no_edge, &stats).unwrap_err();
+        assert!(err.contains(EDGE_PARAM), "{err}");
+        // Unbound size variable at eval time, named in the error.
+        let fit = fit_for(&cm, 3);
+        let compiled = CompiledModel::compile(&cm, &fit, &stats).unwrap();
+        let err = compiled.eval_env(&BTreeMap::new()).unwrap_err();
+        assert!(err.contains("'n'"), "{err}");
+    }
+}

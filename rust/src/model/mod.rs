@@ -19,9 +19,11 @@
 //! builtin family, which additionally maps onto the AOT JAX/Pallas
 //! `lm_step` artifact.
 
+pub mod compiled;
 pub mod cost_model;
 pub mod expr;
 
+pub use compiled::{CompiledModel, COMPILED_REL_ERR_BOUND};
 pub use cost_model::{CostGroup, CostModel, CostTerm};
 pub use expr::ModelExpr;
 

@@ -18,5 +18,5 @@ pub mod qpoly;
 pub mod sum;
 
 pub use domain::{Assumptions, LoopExtent, NestedDomain};
-pub use qpoly::{Atom, QPoly};
+pub use qpoly::{Atom, PolyPlan, QPoly};
 pub use sum::sum_over;

@@ -288,6 +288,38 @@ impl QPoly {
         self.try_eval(env).map(|r| r.to_f64())
     }
 
+    /// Lower to a flat f64 evaluation plan ([`PolyPlan`]).  `slot`
+    /// resolves a variable name to its index in the caller's value
+    /// vector (called once per distinct name, in term order), so many
+    /// polynomials can be lowered against one shared variable table —
+    /// the compiled-model path
+    /// ([`crate::model::compiled::CompiledModel`]) lowers every feature
+    /// of a model this way and evaluates them all from a single dense
+    /// slice per environment.
+    pub fn lower(&self, slot: &mut impl FnMut(&str) -> u32) -> PolyPlan {
+        let mut terms = Vec::with_capacity(self.terms.len());
+        for (m, c) in &self.terms {
+            let mut powers = Vec::new();
+            let mut floors = Vec::new();
+            for (a, e) in &m.0 {
+                match a {
+                    Atom::Var(name) => powers.push((slot(name), *e)),
+                    Atom::Floor { num, den } => floors.push(FloorFactor {
+                        num: num.lower(slot),
+                        den: *den as f64,
+                        exp: *e,
+                    }),
+                }
+            }
+            terms.push(PlanTerm {
+                coeff: c.to_f64(),
+                powers,
+                floors,
+            });
+        }
+        PolyPlan { terms }
+    }
+
     /// Rewrite floor atoms using divisibility assumptions; see
     /// [`crate::polyhedral::Assumptions::simplify`].
     pub(crate) fn map_atoms(&self, f: &mut impl FnMut(&Atom) -> QPoly) -> QPoly {
@@ -301,6 +333,108 @@ impl QPoly {
             out = &out + &term;
         }
         out
+    }
+}
+
+/// Relative tolerance at which [`PolyPlan`] snaps a floor argument to
+/// the nearest integer before truncating.  The exact path evaluates
+/// `floor(num/den)` in rational arithmetic, where an argument that *is*
+/// an integer floors to itself; the f64 numerator can land a few ulp
+/// below that boundary and would otherwise floor one unit low.  Snapping
+/// within `1e-9` relative recovers every such case: a rational argument
+/// that is genuinely below an integer sits at least `1/(den·D)` below it
+/// (D = the coefficient denominators' lcm), which exceeds the snap
+/// window until the argument is so large that an off-by-one in the floor
+/// is itself below the documented relative-error bound.
+const FLOOR_SNAP_TOL: f64 = 1e-9;
+
+/// One multiplicative `floor((num)/den)^exp` factor of a [`PlanTerm`].
+#[derive(Clone, Debug)]
+struct FloorFactor {
+    num: PolyPlan,
+    den: f64,
+    exp: u32,
+}
+
+/// One `coeff · Π slot^exp · Π floor(...)^exp` term of a [`PolyPlan`].
+#[derive(Clone, Debug)]
+struct PlanTerm {
+    coeff: f64,
+    powers: Vec<(u32, u32)>,
+    floors: Vec<FloorFactor>,
+}
+
+/// A quasi-polynomial lowered to a flat f64 evaluation plan: the
+/// `BTreeMap`-of-`Monomial` structure and exact [`Rat`] coefficients of
+/// a [`QPoly`] become a dense term list with f64 coefficients, integer
+/// exponents over *variable slots* (indices into a caller-owned value
+/// slice) and pre-lowered floor factors.  [`PolyPlan::eval`] is the
+/// compiled hot path: no allocation, no map lookups, no rational
+/// arithmetic — just fused multiply-adds over a slice.
+///
+/// # Accuracy
+///
+/// Terms are visited in the same order as [`QPoly::eval`] visits
+/// monomials, so the only divergence from the exact path is f64
+/// rounding: each term contributes at most a few ulp of relative error
+/// (one rounding per multiply plus the coefficient conversion), and the
+/// final sum obeys the standard summation bound
+/// `|plan − exact| ≤ c·n·2⁻⁵³·Σᵢ|tᵢ|` over the n term magnitudes
+/// `|tᵢ|`.  Floor factors additionally snap near-integer arguments
+/// (see [`FLOOR_SNAP_TOL`]) so boundary cases truncate like the exact
+/// rational path.  The model-level guarantee built on top of this is
+/// documented at [`crate::model::compiled::COMPILED_REL_ERR_BOUND`].
+#[derive(Clone, Debug, Default)]
+pub struct PolyPlan {
+    terms: Vec<PlanTerm>,
+}
+
+impl PolyPlan {
+    /// Number of flat terms (0 for a zero polynomial).
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Evaluate over `vals`, indexed by the slots handed out during
+    /// [`QPoly::lower`].  Slots beyond `vals.len()` panic (the caller
+    /// owns the variable table and sizes `vals` to it).
+    pub fn eval(&self, vals: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for t in &self.terms {
+            let mut v = t.coeff;
+            for &(slot, e) in &t.powers {
+                v *= powi(vals[slot as usize], e);
+            }
+            for f in &t.floors {
+                v *= powi(snapped_floor(f.num.eval(vals) / f.den), f.exp);
+            }
+            acc += v;
+        }
+        acc
+    }
+}
+
+/// Small-exponent power by repeated multiplication (counting
+/// polynomials have single-digit degrees; this keeps rounding behavior
+/// deterministic and obvious).
+#[inline]
+fn powi(base: f64, e: u32) -> f64 {
+    let mut out = 1.0;
+    for _ in 0..e {
+        out *= base;
+    }
+    out
+}
+
+/// `x.floor()`, snapping to the nearest integer first when `x` is
+/// within [`FLOOR_SNAP_TOL`] (relative) of it.
+#[inline]
+fn snapped_floor(x: f64) -> f64 {
+    let r = x.round();
+    if (x - r).abs() <= FLOOR_SNAP_TOL * r.abs().max(1.0) {
+        r
+    } else {
+        x.floor()
     }
 }
 
@@ -417,6 +551,53 @@ mod tests {
         assert_eq!(fd.eval(&env(&[("n", 64)])), Rat::int(3));
         assert_eq!(fd.eval(&env(&[("n", 65)])), Rat::int(3));
         assert_eq!(fd.eval(&env(&[("n", 80)])), Rat::int(4));
+    }
+
+    #[test]
+    fn lowered_plan_matches_exact_eval() {
+        // (n + 1)^2 * floor((n - 16)/16) + m/3 — exercises variable
+        // powers, a nested floor numerator and a non-integer rational
+        // coefficient through one shared slot table.
+        let n = QPoly::var("n");
+        let p = {
+            let sq = (&n + &QPoly::one()).pow(2);
+            let fd = (&n - &QPoly::int(16)).floor_div(16);
+            let t = &sq * &fd;
+            &t + &QPoly::var("m").scale(Rat::new(1, 3))
+        };
+        let mut vars: Vec<String> = Vec::new();
+        let plan = p.lower(&mut |name| match vars.iter().position(|v| v == name) {
+            Some(i) => i as u32,
+            None => {
+                vars.push(name.to_string());
+                (vars.len() - 1) as u32
+            }
+        });
+        assert!(plan.num_terms() > 0);
+        for (nv, mv) in [(1i128, 0i128), (16, 3), (64, 7), (65, 9), (1 << 30, 5)] {
+            let exact = p.eval_f64(&env(&[("n", nv), ("m", mv)]));
+            let vals: Vec<f64> = vars
+                .iter()
+                .map(|v| if v == "n" { nv as f64 } else { mv as f64 })
+                .collect();
+            let fast = plan.eval(&vals);
+            let denom = exact.abs().max(fast.abs()).max(1.0);
+            assert!(
+                (exact - fast).abs() / denom < 1e-12,
+                "n={nv} m={mv}: exact {exact} vs plan {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapped_floor_recovers_near_integer_arguments() {
+        assert_eq!(snapped_floor(3.0), 3.0);
+        // A few ulp below an integer boundary snaps up...
+        assert_eq!(snapped_floor(2.9999999999999), 3.0);
+        assert_eq!(snapped_floor(-1.0000000000001), -1.0);
+        // ...but genuinely fractional arguments truncate.
+        assert_eq!(snapped_floor(2.9), 2.0);
+        assert_eq!(snapped_floor(-1.5), -2.0);
     }
 
     #[test]

@@ -96,8 +96,10 @@ pub use store::{
     GcOutcome, IndexVerifyOutcome, STORE_FORMAT_VERSION,
 };
 
+use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::calibrate::{
     eval_with_kernel_cached, gather_features_by_ids_cached_for, FeatureData,
@@ -106,7 +108,7 @@ use crate::calibrate::{
 use crate::coordinator::expsets::{self, EvalCase};
 use crate::gpusim::{measure_with_cache, DeviceProfile, MeasuredSample};
 use crate::ir::KernelRef;
-use crate::model::CostModel;
+use crate::model::{CompiledModel, CostModel};
 use crate::runtime::{fit_cost_model_aot, fit_cost_model_native, Artifacts};
 use crate::stats::StatsCache;
 use crate::util::Fnv128;
@@ -128,6 +130,15 @@ pub struct Calibration {
 pub struct Session {
     cache: StatsCache,
     store: Option<Arc<ArtifactStore>>,
+    /// Compiled evaluation plans, cached beside the fits they were
+    /// lowered from and keyed by everything that shaped them (kernel
+    /// fingerprint, sub-group size, model terms, fitted parameters,
+    /// target) — see [`compiled_key`].  Shared across the scoped
+    /// threads of fleet harnesses like the stats cache is.
+    compiled: Mutex<HashMap<u128, Arc<CompiledModel>>>,
+    compiled_compiles: AtomicU64,
+    compiled_cache_hits: AtomicU64,
+    compiled_evals: AtomicU64,
 }
 
 impl Session {
@@ -145,6 +156,7 @@ impl Session {
         Ok(Session {
             cache: StatsCache::with_backing(store.clone()),
             store: Some(store),
+            ..Session::default()
         })
     }
 
@@ -434,6 +446,129 @@ impl Session {
             &self.cache,
         )
     }
+
+    /// Lower `(cm, fit)` bound to `knl`'s statistics into a
+    /// [`CompiledModel`], cached beside the fit for the life of the
+    /// session.  Warm loads compile once per (kernel, fit) pair; every
+    /// later prediction is a cache hit.  Two threads racing on a cold
+    /// key may both compile (the result is identical and the last
+    /// insert wins) — the ledger counts both, which is why CI asserts
+    /// "≥ 1 compile", not "== 1".
+    pub fn compiled_model<K: KernelRef>(
+        &self,
+        cm: &CostModel,
+        fit: &FitResult,
+        knl: &K,
+        device: &DeviceProfile,
+    ) -> Result<Arc<CompiledModel>, String> {
+        let key = compiled_key(cm, fit, knl.fingerprint(), device.sub_group_size);
+        if let Some(c) = self.compiled.lock().unwrap().get(&key) {
+            self.compiled_cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(c.clone());
+        }
+        let stats = self.cache.get_or_gather(knl, device.sub_group_size)?;
+        let compiled = Arc::new(CompiledModel::compile(cm, fit, &stats)?);
+        self.compiled_compiles.fetch_add(1, Ordering::Relaxed);
+        self.compiled.lock().unwrap().insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// [`Session::predict`] through the compiled hot path: flat f64
+    /// plans instead of per-query spec parsing and rational `QPoly`
+    /// walks, agreeing with the exact path within
+    /// [`crate::model::compiled::COMPILED_REL_ERR_BOUND`] relative
+    /// error.  The CLI's `predict` runs here; experiment report paths
+    /// that promise byte-identical output against historical runs stay
+    /// on the exact [`Session::predict`].
+    pub fn predict_compiled<K: KernelRef>(
+        &self,
+        cm: &CostModel,
+        fit: &FitResult,
+        knl: &K,
+        env: &std::collections::BTreeMap<String, i64>,
+        device: &DeviceProfile,
+    ) -> Result<f64, String> {
+        let compiled = self.compiled_model(cm, fit, knl, device)?;
+        self.compiled_evals.fetch_add(1, Ordering::Relaxed);
+        compiled.eval_env(env)
+    }
+
+    /// Batched prediction: sweep `var` over `values` with the other
+    /// size variables fixed by `base_env`, reusing one bound value
+    /// vector across the whole batch (one slot store + one dense
+    /// evaluation per point — no per-point allocation).  Returns
+    /// `(value, prediction)` rows in sweep order.  Errors name any
+    /// unbound size variable; a `var` the model does not depend on
+    /// yields constant predictions.
+    pub fn predict_sweep<K: KernelRef>(
+        &self,
+        cm: &CostModel,
+        fit: &FitResult,
+        knl: &K,
+        base_env: &std::collections::BTreeMap<String, i64>,
+        var: &str,
+        values: &[i64],
+        device: &DeviceProfile,
+    ) -> Result<Vec<(i64, f64)>, String> {
+        let compiled = self.compiled_model(cm, fit, knl, device)?;
+        let mut vals = Vec::with_capacity(compiled.vars().len());
+        for v in compiled.vars() {
+            if v == var {
+                vals.push(0.0);
+            } else {
+                vals.push(*base_env.get(v).ok_or_else(|| {
+                    format!("unbound size variable '{v}' (bind it as {v}=<int>)")
+                })? as f64);
+            }
+        }
+        let slot = compiled.slot_of(var);
+        let mut out = Vec::with_capacity(values.len());
+        for &x in values {
+            if let Some(s) = slot {
+                vals[s] = x as f64;
+            }
+            out.push((x, compiled.eval_slots(&vals)));
+        }
+        self.compiled_evals
+            .fetch_add(values.len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// The compiled-path ledger: `(lowerings, cache hits,
+    /// evaluations)`.  A warm predict should show at least one
+    /// lowering (or hit) and one evaluation; CI asserts the line this
+    /// feeds to prove the hot path is actually exercised.
+    pub fn compiled_ledger(&self) -> (u64, u64, u64) {
+        (
+            self.compiled_compiles.load(Ordering::Relaxed),
+            self.compiled_cache_hits.load(Ordering::Relaxed),
+            self.compiled_evals.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Cache key for a session's compiled models: everything that shapes
+/// the lowered plan — kernel fingerprint and sub-group size (the
+/// statistics), the model's device/form/terms, and the fit's target,
+/// parameter names and exact parameter bits.
+fn compiled_key(cm: &CostModel, fit: &FitResult, kernel_fp: u128, sg: u64) -> u128 {
+    let mut h = Fnv128::new();
+    h.update(b"perflex-compiled-v1");
+    h.update(&kernel_fp.to_be_bytes());
+    h.update(sg.to_string().as_bytes());
+    h.update(cm.device.as_bytes());
+    h.update(if cm.nonlinear { b"overlap" } else { b"linear" });
+    for t in &cm.terms {
+        h.update(t.param.as_bytes());
+        h.update(t.feature.as_bytes());
+        h.update(&[t.group as u8]);
+    }
+    h.update(fit.target.name().as_bytes());
+    for (name, p) in fit.param_names.iter().zip(fit.params.iter()) {
+        h.update(name.as_bytes());
+        h.update(&p.to_bits().to_be_bytes());
+    }
+    h.finish()
 }
 
 /// The full identity of a case's *time* calibration on a device; see

@@ -1,0 +1,163 @@
+//! The compiled-vs-exact contract (`perflex::model::compiled` module
+//! docs): for every environment on which the exact evaluator succeeds,
+//! the compiled plan agrees within `COMPILED_REL_ERR_BOUND` relative
+//! error.  Property-tested over the full cross product — every
+//! evaluation case, every fleet device (both sub-group sizes), both
+//! model forms and every calibration target — with synthetic fits
+//! (deterministically seeded, log-uniform over realistic cost scales)
+//! and sizes that include the degenerate and the extreme: 1, powers of
+//! two straddling the tile sizes, and values large enough that the
+//! exact path's i128 rational monomials approach overflow.
+
+use std::collections::BTreeMap;
+
+use perflex::calibrate::{eval_with_stats, FitResult, Target};
+use perflex::coordinator::expsets;
+use perflex::gpusim::fleet;
+use perflex::model::cost_model::EDGE_PARAM;
+use perflex::model::{CompiledModel, COMPILED_REL_ERR_BOUND};
+use perflex::util::Rng;
+
+/// Synthetic fitted parameters: log-uniform over the per-feature cost
+/// scales real calibrations land in, with a step-sharpness `p_edge`
+/// spanning soft to hard switches.  Synthetic fits decouple the
+/// equivalence property from the LM optimizer: agreement must hold for
+/// *any* parameter vector, not just converged ones.
+fn synthetic_fit(names: Vec<String>, target: Target, seed: u64) -> FitResult {
+    let mut rng = Rng::new(seed);
+    let params: Vec<f64> = names
+        .iter()
+        .map(|n| {
+            if n == EDGE_PARAM {
+                rng.uniform_in(1.0, 1e4)
+            } else {
+                10f64.powf(rng.uniform_in(-9.0, -3.0))
+            }
+        })
+        .collect();
+    FitResult {
+        param_names: names,
+        params,
+        residual: 0.0,
+        iterations: 0,
+        target,
+        converged: true,
+    }
+}
+
+fn rel_diff(x: f64, y: f64) -> f64 {
+    (x - y).abs() / x.abs().max(y.abs()).max(f64::MIN_POSITIVE)
+}
+
+/// Degenerate and extreme sizes.  The cap at 2^30 keeps the *exact*
+/// path's rational monomials (degree <= 3 with coefficient numerators)
+/// within i128 while still exercising magnitudes where a compiled-path
+/// rounding bug would be visible; the compiled path itself has no such
+/// ceiling.
+const SIZES: &[i64] = &[
+    1,
+    2,
+    16,
+    17,
+    256,
+    1024,
+    4096,
+    1 << 20,
+    (1 << 30) - 1,
+    1 << 30,
+];
+
+#[test]
+fn compiled_agrees_with_exact_across_cases_devices_and_targets() {
+    let mut combos = 0usize;
+    let mut seed = 0u64;
+    for case in expsets::eval_cases() {
+        let points = expsets::eval_points(case.id).unwrap();
+        // The case's primary size variable (swept below); the remaining
+        // bindings (e.g. dg's nmatrices) stay at their representative
+        // values so exact-path magnitudes remain within i128.
+        let base = points.envs[0].clone();
+        let primary = base.keys().next().unwrap().clone();
+
+        // One symbolic counting pass per distinct sub-group size.
+        let mut stats_by_sg: BTreeMap<u64, perflex::stats::KernelStats> =
+            BTreeMap::new();
+        for device in fleet() {
+            let sg = device.sub_group_size;
+            let stats = &*stats_by_sg
+                .entry(sg)
+                .or_insert_with(|| perflex::stats::gather(&points.kernel, sg).unwrap());
+            for nonlinear in [false, true] {
+                let cm = (case.model)(device.id, nonlinear);
+                let model = cm.to_model();
+                for target in Target::ALL {
+                    seed += 1;
+                    let fit = synthetic_fit(cm.param_names(), target, seed);
+                    let compiled =
+                        CompiledModel::compile(&cm, &fit, stats).unwrap();
+                    assert_eq!(compiled.target(), target);
+
+                    let mut rng = Rng::new(seed ^ 0x5eed);
+                    let sizes: Vec<i64> = SIZES
+                        .iter()
+                        .copied()
+                        .chain((0..3).map(|_| rng.int_in(1, 1 << 20)))
+                        .collect();
+                    for s in sizes {
+                        let mut env = base.clone();
+                        env.insert(primary.clone(), s);
+                        let exact =
+                            eval_with_stats(&model, &fit, stats, &env).unwrap();
+                        let fast = compiled.eval_env(&env).unwrap();
+                        assert!(
+                            rel_diff(exact, fast) <= COMPILED_REL_ERR_BOUND,
+                            "{} on {} (nonlinear={nonlinear}, target {}, \
+                             {primary}={s}): exact {exact} vs compiled {fast} \
+                             (rel diff {:.3e})",
+                            case.id,
+                            device.id,
+                            target.name(),
+                            rel_diff(exact, fast)
+                        );
+                    }
+                    combos += 1;
+                }
+            }
+        }
+    }
+    // The cross product must actually have been covered: 3 cases x
+    // 5 devices x 2 forms x 3 targets.
+    assert_eq!(combos, 3 * 5 * 2 * 3);
+}
+
+/// Sweeping via slot mutation (the batch hot path) is bit-identical to
+/// independent name-keyed evaluations at every point.
+#[test]
+fn slot_sweeps_match_independent_evaluations() {
+    for case in expsets::eval_cases() {
+        let points = expsets::eval_points(case.id).unwrap();
+        let base = points.envs[0].clone();
+        let primary = base.keys().next().unwrap().clone();
+        let stats = perflex::stats::gather(&points.kernel, 32).unwrap();
+        let cm = (case.model)("titan_v", true);
+        let fit = synthetic_fit(cm.param_names(), Target::Time, 42);
+        let compiled = CompiledModel::compile(&cm, &fit, &stats).unwrap();
+
+        let mut vals = compiled.bind_env(&base).unwrap();
+        let slot = compiled.slot_of(&primary);
+        for s in [1i64, 64, 1000, 4096, 1 << 16] {
+            if let Some(i) = slot {
+                vals[i] = s as f64;
+            }
+            let swept = compiled.eval_slots(&vals);
+            let mut env = base.clone();
+            env.insert(primary.clone(), s);
+            assert_eq!(
+                swept,
+                compiled.eval_env(&env).unwrap(),
+                "{}: {primary}={s}",
+                case.id
+            );
+        }
+    }
+}
