@@ -1,0 +1,57 @@
+//! Benchmark: the static kernel verifier (`perflex::analysis`) per
+//! kernel family — the gate cost every counted, measured, or autotuned
+//! candidate pays before the rest of the pipeline touches it.  Writes
+//! `BENCH_analysis.json` into `$PERFLEX_BENCH_DIR` (default: the
+//! working directory); the `bench-baselines` CI job tracks it against
+//! the checked-in copy.
+
+use perflex::analysis::Analyzer;
+use perflex::bench_harness::{bench_recorded, write_baseline_with_summary};
+use perflex::ir::DType;
+use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, build_transpose, DgVariant};
+use perflex::uipick::micro::build_barrier_pattern;
+
+fn main() {
+    let out_dir = std::env::var("PERFLEX_BENCH_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+
+    let analyzer = Analyzer::new();
+    let families = [
+        (
+            "verify matmul_pf",
+            build_matmul(DType::F32, true, 16).unwrap(),
+        ),
+        (
+            "verify dg_m_prefetch_t",
+            build_dg(DgVariant::MPrefetchT, 64, 16).unwrap(),
+        ),
+        ("verify fdiff_18x18", build_fdiff(18).unwrap()),
+        ("verify transpose", build_transpose(16).unwrap()),
+        (
+            "verify barrier_pattern",
+            build_barrier_pattern(DType::F32).unwrap(),
+        ),
+    ];
+
+    let mut records = Vec::new();
+    for (name, knl) in &families {
+        records.push(bench_recorded(name, 100, || {
+            let diags = analyzer.check(knl);
+            assert!(diags.is_empty(), "{name}: {diags:?}");
+        }));
+    }
+
+    // Throughput summary: how many candidate kernels per second the
+    // autotune pruning gate can clear (mean over the family mix).
+    let total_mean_ms: f64 = records.iter().map(|r| r.mean_ms).sum();
+    let kernels_per_sec = families.len() as f64 * 1e3 / total_mean_ms.max(1e-6);
+    let p = write_baseline_with_summary(
+        &out_dir,
+        "analysis",
+        &records,
+        &[("kernels_per_sec", kernels_per_sec)],
+    )
+    .unwrap();
+    println!("baseline written to {}", p.display());
+}

@@ -1,0 +1,1065 @@
+//! Static kernel verifier: a polyhedral analysis pass that proves a
+//! kernel race-free, in-bounds, and barrier-correct *before* it is
+//! counted, measured, or autotuned.
+//!
+//! The paper's pipeline trusts every kernel it counts: transform
+//! chains (`split_iname`, `add_prefetch`, `remove_work`) are assumed
+//! to produce valid GPU programs, and an invalid variant silently
+//! yields a plausible-looking model.  This module reuses the existing
+//! polyhedral machinery ([`NestedDomain`](crate::polyhedral::NestedDomain)
+//! bounds, [`QPoly`] evaluation, [`Assumptions`](crate::polyhedral::Assumptions)
+//! sample points, [`AffExpr`](crate::ir::AffExpr) subscripts) to check,
+//! per kernel — symbolically, without executing anything:
+//!
+//! 1. **Write-race freedom** ([`DiagCode::RaceWrite`]) — every
+//!    assignment to shared memory must cover all parallel axes of the
+//!    launch grid in its subscripts, and must do so *injectively*: no
+//!    two work-items may write the same flattened location.
+//! 2. **Bounds safety** ([`DiagCode::OobAccess`]) — each access's
+//!    symbolic index interval, under the kernel's assumptions, stays
+//!    inside the declared [`ArrayDecl`](crate::ir::ArrayDecl) shape.
+//! 3. **Barrier / scope correctness** ([`DiagCode::MissingBarrier`],
+//!    [`DiagCode::DivergentBarrier`], [`DiagCode::ScopeMisuse`]) —
+//!    cross-work-item reads of local memory must be ordered after a
+//!    write (so the scheduler can place a barrier between them),
+//!    barriers must not sit under local-iname-dependent loop bounds
+//!    (work-items would diverge on barrier arrival), and
+//!    `Private`/`Local` arrays must not be subscripted inconsistently
+//!    with their scope.
+//! 4. **Hygiene lints** ([`DiagCode::UnusedIname`],
+//!    [`DiagCode::DeadArray`], [`DiagCode::UnprovableGuard`]) —
+//!    warnings for loops that drive nothing, declared-but-unaccessed
+//!    arrays, and loop bounds whose `floor` guards the assumptions
+//!    could not discharge.
+//!
+//! The entry point is [`Analyzer::check`]; [`verify`] is the
+//! gate-shaped wrapper (`Err` on any Error-severity diagnostic) that
+//! `transform`/`uipick` tests and the future autotune pruning loop
+//! (ROADMAP item 3) call before pricing a candidate with the compiled
+//! evaluator.  `perflex lint` exposes the same pass on the CLI.
+//!
+//! Every check degrades gracefully: a kernel that fails
+//! [`Kernel::validate`] or has structurally broken accesses gets a
+//! single [`DiagCode::MalformedKernel`] diagnostic instead of a panic
+//! (the hostile-input direction of ROADMAP item 5).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::ir::{Access, IndexTag, Kernel, LhsRef, MemScope};
+use crate::polyhedral::qpoly::Atom;
+use crate::polyhedral::QPoly;
+use crate::schedule::{self, ScheduleItem};
+use crate::util::json::Json;
+use crate::util::Rat;
+
+/// How bad a diagnostic is.  `Error` means the kernel must not be
+/// counted, measured, or autotuned; `Warn` is advisory hygiene.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes.  The string forms (`RACE_WRITE`, …) are a
+/// public contract: CI and downstream tooling match on them, so they
+/// must never be renamed, only added to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DiagCode {
+    /// Two work-items can write the same memory location.
+    RaceWrite,
+    /// An access index can fall outside the declared array shape.
+    OobAccess,
+    /// A cross-work-item local read is not ordered after any write, so
+    /// no barrier can be (or is) placed between them.
+    MissingBarrier,
+    /// A barrier sits under a loop whose trip count depends on a local
+    /// iname: work-items would diverge on barrier arrival.
+    DivergentBarrier,
+    /// A `Private`/`Local` array is subscripted inconsistently with
+    /// its scope (private memory indexed by a parallel iname, local
+    /// memory indexed by a group iname).
+    ScopeMisuse,
+    /// A sequential loop that drives no statement and no subscript.
+    UnusedIname,
+    /// An array that is declared but never loaded or stored.
+    DeadArray,
+    /// A loop bound still contains a `floor` atom the kernel's
+    /// assumptions could not discharge.
+    UnprovableGuard,
+    /// The kernel failed structural validation; no further checks ran.
+    MalformedKernel,
+}
+
+impl DiagCode {
+    /// The stable wire/string form of the code.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::RaceWrite => "RACE_WRITE",
+            DiagCode::OobAccess => "OOB_ACCESS",
+            DiagCode::MissingBarrier => "MISSING_BARRIER",
+            DiagCode::DivergentBarrier => "DIVERGENT_BARRIER",
+            DiagCode::ScopeMisuse => "SCOPE_MISUSE",
+            DiagCode::UnusedIname => "UNUSED_INAME",
+            DiagCode::DeadArray => "DEAD_ARRAY",
+            DiagCode::UnprovableGuard => "UNPROVABLE_GUARD",
+            DiagCode::MalformedKernel => "MALFORMED_KERNEL",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::RaceWrite
+            | DiagCode::OobAccess
+            | DiagCode::MissingBarrier
+            | DiagCode::DivergentBarrier
+            | DiagCode::ScopeMisuse
+            | DiagCode::MalformedKernel => Severity::Error,
+            DiagCode::UnusedIname
+            | DiagCode::DeadArray
+            | DiagCode::UnprovableGuard => Severity::Warn,
+        }
+    }
+
+    /// All codes, for catalogs and exhaustiveness tests.
+    pub fn all() -> &'static [DiagCode] {
+        &[
+            DiagCode::RaceWrite,
+            DiagCode::OobAccess,
+            DiagCode::MissingBarrier,
+            DiagCode::DivergentBarrier,
+            DiagCode::ScopeMisuse,
+            DiagCode::UnusedIname,
+            DiagCode::DeadArray,
+            DiagCode::UnprovableGuard,
+            DiagCode::MalformedKernel,
+        ]
+    }
+}
+
+/// One finding of the verifier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    /// Kernel the finding is about.
+    pub kernel: String,
+    /// Statement id, when the finding anchors to one.
+    pub stmt: Option<String>,
+    /// Array or iname the finding anchors to, when applicable.
+    pub object: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", self.code.as_str().into()),
+            ("severity", self.severity().as_str().into()),
+            (
+                "stmt",
+                match &self.stmt {
+                    Some(s) => s.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "object",
+                match &self.object {
+                    Some(s) => s.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+            ("message", self.message.as_str().into()),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity().as_str(), self.code.as_str())?;
+        if let Some(s) = &self.stmt {
+            write!(f, " stmt '{s}'")?;
+        }
+        if let Some(o) = &self.object {
+            write!(f, " '{o}'")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Count of Error-severity diagnostics in a report.
+pub fn error_count(diags: &[Diagnostic]) -> usize {
+    diags
+        .iter()
+        .filter(|d| d.severity() == Severity::Error)
+        .count()
+}
+
+/// Gate form: `Err` listing every Error-severity finding, `Ok` when
+/// the kernel is provably race-free, in-bounds, and barrier-correct
+/// (warnings do not fail the gate).  This is the pruning predicate the
+/// autotune loop (ROADMAP item 3) applies before pricing a variant.
+pub fn verify(knl: &Kernel) -> Result<Vec<Diagnostic>, String> {
+    let diags = Analyzer::new().check(knl);
+    let errors: Vec<&Diagnostic> = diags
+        .iter()
+        .filter(|d| d.severity() == Severity::Error)
+        .collect();
+    if errors.is_empty() {
+        return Ok(diags);
+    }
+    let mut msg = format!(
+        "kernel '{}' failed static verification ({} error(s)):",
+        knl.name,
+        errors.len()
+    );
+    for e in errors {
+        msg.push_str(&format!("\n  {e}"));
+    }
+    Err(msg)
+}
+
+/// The static verifier.  Stateless; `new()` + [`check`](Analyzer::check).
+#[derive(Default)]
+pub struct Analyzer;
+
+/// Interval of integer values an iname (or index expression) can take
+/// at one sample point.  `lo > hi` encodes an empty loop.
+#[derive(Clone, Copy, Debug)]
+struct Interval {
+    lo: i128,
+    hi: i128,
+}
+
+impl Interval {
+    fn extent(&self) -> i128 {
+        (self.hi - self.lo + 1).max(0)
+    }
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer
+    }
+
+    /// Run every check and return all findings (deterministic order:
+    /// structural gate, then per-statement checks in statement order,
+    /// then kernel-wide checks).
+    pub fn check(&self, knl: &Kernel) -> Vec<Diagnostic> {
+        let mut diags = Vec::new();
+
+        // Structural gate: validate() plus the access-shape invariants
+        // flatten_access() would otherwise assert on.  A malformed
+        // kernel gets exactly one diagnostic and no further analysis.
+        if let Some(d) = self.structural_gate(knl) {
+            return vec![d];
+        }
+
+        let envs = sample_envs(knl);
+        self.check_races(knl, &envs, &mut diags);
+        self.check_bounds(knl, &envs, &mut diags);
+        self.check_scopes(knl, &mut diags);
+        self.check_missing_barriers(knl, &mut diags);
+        self.check_divergent_barriers(knl, &mut diags);
+        self.check_unused_inames(knl, &mut diags);
+        self.check_dead_arrays(knl, &mut diags);
+        self.check_unprovable_guards(knl, &mut diags);
+        diags
+    }
+
+    fn malformed(&self, knl: &Kernel, message: String) -> Diagnostic {
+        Diagnostic {
+            code: DiagCode::MalformedKernel,
+            kernel: knl.name.clone(),
+            stmt: None,
+            object: None,
+            message,
+        }
+    }
+
+    fn structural_gate(&self, knl: &Kernel) -> Option<Diagnostic> {
+        if let Err(e) = knl.validate() {
+            return Some(self.malformed(knl, e));
+        }
+        // validate() does not check access rank; flatten_access()
+        // asserts on it, so the analyzer must pre-check.
+        for s in &knl.stmts {
+            for acc in accesses_of(s) {
+                let decl = match knl.arrays.get(&acc.array) {
+                    Some(d) => d,
+                    None => {
+                        return Some(self.malformed(
+                            knl,
+                            format!(
+                                "stmt '{}' accesses undeclared array '{}'",
+                                s.id, acc.array
+                            ),
+                        ))
+                    }
+                };
+                if decl.shape.len() != acc.indices.len() {
+                    return Some(self.malformed(
+                        knl,
+                        format!(
+                            "stmt '{}' accesses '{}' with {} subscript(s), \
+                             declared rank {}",
+                            s.id,
+                            acc.array,
+                            acc.indices.len(),
+                            decl.shape.len()
+                        ),
+                    ));
+                }
+            }
+        }
+        None
+    }
+
+    /// Check 1: write-race freedom.  For every store to shared memory
+    /// (`Global`: shared across the grid; `Local`: shared across the
+    /// work-group), the subscripts must (a) *cover* every relevant
+    /// parallel axis — some iname on that axis appears with a nonzero
+    /// coefficient — and (b) be *injective* over the relevant parallel
+    /// inames: sorting the flattened strides ascending, each parallel
+    /// stride must exceed the combined span of everything below it, so
+    /// distinct work-items always land on distinct locations.
+    fn check_races(
+        &self,
+        knl: &Kernel,
+        envs: &[BTreeMap<String, i128>],
+        diags: &mut Vec<Diagnostic>,
+    ) {
+        for s in &knl.stmts {
+            let acc = match &s.lhs {
+                LhsRef::Array(a) => a,
+                // Temporaries are per-work-item registers: no race.
+                LhsRef::Temp(_) => continue,
+            };
+            let scope = knl.arrays[&acc.array].scope;
+            if scope == MemScope::Private {
+                continue; // per-work-item storage: no race possible
+            }
+            // Group axes are only shared for Global arrays; each
+            // work-group has its own copy of a Local array.
+            let relevant = |tag: IndexTag| match tag {
+                IndexTag::Local(_) => true,
+                IndexTag::Group(_) => scope == MemScope::Global,
+                _ => false,
+            };
+
+            let lf = knl.flatten_access(acc);
+            'env: for env in envs {
+                let boxes = match iname_boxes(knl, env) {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                // (a) coverage of every relevant, non-trivial axis.
+                let mut axes: BTreeMap<(u8, u8), (i128, bool)> = BTreeMap::new();
+                for l in &knl.domain.loops {
+                    let key = match knl.tag(&l.var) {
+                        IndexTag::Group(a) if relevant(IndexTag::Group(a)) => {
+                            (0u8, a)
+                        }
+                        IndexTag::Local(a) => (1u8, a),
+                        _ => continue,
+                    };
+                    let ext = boxes.get(&l.var).map(|b| b.extent()).unwrap_or(1);
+                    let covered = acc
+                        .indices
+                        .iter()
+                        .any(|ix| ix.coeff(&l.var) != 0);
+                    let e = axes.entry(key).or_insert((1, false));
+                    e.0 = e.0.max(ext);
+                    e.1 |= covered;
+                }
+                for ((kind, axis), (ext, covered)) in &axes {
+                    if *ext > 1 && !*covered {
+                        let axis_name =
+                            format!("{}.{axis}", if *kind == 0 { "g" } else { "l" });
+                        diags.push(Diagnostic {
+                            code: DiagCode::RaceWrite,
+                            kernel: knl.name.clone(),
+                            stmt: Some(s.id.clone()),
+                            object: Some(acc.array.clone()),
+                            message: format!(
+                                "store to '{}' does not use parallel axis \
+                                 {axis_name}: all work-items along it write \
+                                 the same location",
+                                acc.array
+                            ),
+                        });
+                        break 'env;
+                    }
+                }
+                // (b) injectivity over the relevant parallel inames.
+                let mut entries: Vec<(String, Rat, i128, bool)> = Vec::new();
+                let mut ok = true;
+                for (var, c) in &lf.coeffs {
+                    let cv = match c.try_eval(env) {
+                        Ok(v) => v,
+                        Err(_) => {
+                            ok = false;
+                            break;
+                        }
+                    };
+                    if cv.is_zero() {
+                        continue;
+                    }
+                    let ext = match boxes.get(var) {
+                        Some(b) => b.extent(),
+                        None => 1, // parameter: a single value per launch
+                    };
+                    if ext <= 1 {
+                        continue;
+                    }
+                    entries.push((
+                        var.clone(),
+                        cv.abs(),
+                        ext,
+                        relevant(knl.tag(var)),
+                    ));
+                }
+                if !ok {
+                    continue;
+                }
+                entries.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+                let mut span = Rat::int(0);
+                for (var, c, ext, is_parallel) in &entries {
+                    if *is_parallel && *c < span + Rat::int(1) {
+                        diags.push(Diagnostic {
+                            code: DiagCode::RaceWrite,
+                            kernel: knl.name.clone(),
+                            stmt: Some(s.id.clone()),
+                            object: Some(acc.array.clone()),
+                            message: format!(
+                                "store to '{}' is not injective over parallel \
+                                 iname '{var}': stride {c} overlaps the \
+                                 {span}-wide span of lower-stride subscripts",
+                                acc.array
+                            ),
+                        });
+                        break 'env;
+                    }
+                    span = span + *c * Rat::int(*ext - 1);
+                }
+            }
+        }
+    }
+
+    /// Check 2: bounds safety.  Each subscript's interval — propagated
+    /// from the loop bounds at assumption-derived sample sizes — must
+    /// stay inside `[0, shape_d)`.
+    fn check_bounds(
+        &self,
+        knl: &Kernel,
+        envs: &[BTreeMap<String, i128>],
+        diags: &mut Vec<Diagnostic>,
+    ) {
+        let mut flagged: BTreeSet<(String, String)> = BTreeSet::new();
+        for s in &knl.stmts {
+            for acc in accesses_of(s) {
+                if flagged.contains(&(s.id.clone(), acc.array.clone())) {
+                    continue;
+                }
+                let decl = &knl.arrays[&acc.array];
+                'env: for env in envs {
+                    let boxes = match iname_boxes(knl, env) {
+                        Ok(b) => b,
+                        Err(_) => continue,
+                    };
+                    for (d, ix) in acc.indices.iter().enumerate() {
+                        let iv = match affine_interval(ix, env, &boxes) {
+                            Ok(iv) => iv,
+                            Err(_) => continue,
+                        };
+                        if iv.lo > iv.hi {
+                            continue; // empty loop: access never executes
+                        }
+                        let dim = match decl.shape[d].try_eval(env) {
+                            Ok(v) => v,
+                            Err(_) => continue,
+                        };
+                        if iv.lo < 0 || Rat::int(iv.hi) >= dim {
+                            flagged.insert((s.id.clone(), acc.array.clone()));
+                            diags.push(Diagnostic {
+                                code: DiagCode::OobAccess,
+                                kernel: knl.name.clone(),
+                                stmt: Some(s.id.clone()),
+                                object: Some(acc.array.clone()),
+                                message: format!(
+                                    "subscript {d} of '{}' spans [{}, {}] but \
+                                     the axis has {} entries at {}",
+                                    acc.array,
+                                    iv.lo,
+                                    iv.hi,
+                                    dim,
+                                    fmt_env(env),
+                                ),
+                            });
+                            break 'env;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Check 3a: scope consistency.  Private memory is per-work-item,
+    /// so subscripting it by a parallel iname is a scope violation
+    /// (each work-item only ever sees its own copy); local memory is
+    /// per-work-group, so a group iname in a local subscript addresses
+    /// storage that does not vary with the group.
+    fn check_scopes(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        let mut flagged: BTreeSet<(String, String)> = BTreeSet::new();
+        for s in &knl.stmts {
+            for acc in accesses_of(s) {
+                let scope = knl.arrays[&acc.array].scope;
+                for ix in &acc.indices {
+                    for var in ix.vars() {
+                        if ix.coeff(var) == 0 {
+                            continue;
+                        }
+                        let bad = match (scope, knl.tag(var)) {
+                            (MemScope::Private, t) if t.is_parallel() => Some(
+                                format!(
+                                    "private array '{}' subscripted by \
+                                     parallel iname '{var}' — each work-item \
+                                     only sees its own copy",
+                                    acc.array
+                                ),
+                            ),
+                            (MemScope::Local, IndexTag::Group(_)) => Some(
+                                format!(
+                                    "local array '{}' subscripted by group \
+                                     iname '{var}' — local memory does not \
+                                     vary with the work-group",
+                                    acc.array
+                                ),
+                            ),
+                            _ => None,
+                        };
+                        if let Some(message) = bad {
+                            if flagged.insert((s.id.clone(), acc.array.clone()))
+                            {
+                                diags.push(Diagnostic {
+                                    code: DiagCode::ScopeMisuse,
+                                    kernel: knl.name.clone(),
+                                    stmt: Some(s.id.clone()),
+                                    object: Some(acc.array.clone()),
+                                    message,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Check 3b: missing barriers.  The scheduler places barriers
+    /// between ordered writes and reads of *communicating* local
+    /// arrays (accessed with more than one parallel-coefficient
+    /// signature, i.e. data actually crosses work-items).  That
+    /// ordering comes from statement dependencies: a cross-item read
+    /// with no dependency path back to a writer may be scheduled
+    /// before the write, and no barrier can fix an unordered pair.
+    fn check_missing_barriers(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        let communicating = schedule::communicating_local_arrays(knl);
+        if communicating.is_empty() {
+            return;
+        }
+        // Transitive dependency closure, statement id -> reachable ids.
+        let idx: BTreeMap<&str, usize> = knl
+            .stmts
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.as_str(), i))
+            .collect();
+        let mut reach: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); knl.stmts.len()];
+        for (i, s) in knl.stmts.iter().enumerate() {
+            let mut stack: Vec<usize> = s
+                .deps
+                .iter()
+                .filter_map(|d| idx.get(d.as_str()).copied())
+                .collect();
+            while let Some(j) = stack.pop() {
+                if reach[i].insert(j) {
+                    stack.extend(
+                        knl.stmts[j]
+                            .deps
+                            .iter()
+                            .filter_map(|d| idx.get(d.as_str()).copied()),
+                    );
+                }
+            }
+        }
+        for (i, s) in knl.stmts.iter().enumerate() {
+            for l in s.rhs.loads() {
+                if !communicating.contains(&l.array) {
+                    continue;
+                }
+                let ordered_after_write = reach[i].iter().any(|&j| {
+                    matches!(&knl.stmts[j].lhs,
+                             LhsRef::Array(a) if a.array == l.array)
+                });
+                if !ordered_after_write {
+                    diags.push(Diagnostic {
+                        code: DiagCode::MissingBarrier,
+                        kernel: knl.name.clone(),
+                        stmt: Some(s.id.clone()),
+                        object: Some(l.array.clone()),
+                        message: format!(
+                            "cross-work-item read of local array '{}' has no \
+                             dependency on any statement writing it, so no \
+                             barrier separates the exchange",
+                            l.array
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Check 3c: divergent barriers.  Linearize the kernel and verify
+    /// no barrier sits inside a loop whose bounds depend (transitively)
+    /// on a local iname — such a loop has a per-work-item trip count,
+    /// and work-items would reach the barrier different numbers of
+    /// times.
+    fn check_divergent_barriers(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        let sched = match schedule::linearize(knl) {
+            Ok(s) => s,
+            Err(e) => {
+                diags.push(self.malformed(knl, format!("unschedulable: {e}")));
+                return;
+            }
+        };
+        // Inames whose bounds depend on a local iname, transitively.
+        let mut tainted: BTreeSet<String> = knl
+            .domain
+            .loops
+            .iter()
+            .filter(|l| matches!(knl.tag(&l.var), IndexTag::Local(_)))
+            .map(|l| l.var.clone())
+            .collect();
+        loop {
+            let mut grew = false;
+            for l in &knl.domain.loops {
+                if tainted.contains(&l.var) {
+                    continue;
+                }
+                if tainted
+                    .iter()
+                    .any(|t| l.lo.mentions(t) || l.hi.mentions(t))
+                {
+                    tainted.insert(l.var.clone());
+                    grew = true;
+                }
+            }
+            if !grew {
+                break;
+            }
+        }
+
+        fn walk(
+            knl: &Kernel,
+            items: &[ScheduleItem],
+            divergent_loop: Option<&str>,
+            tainted: &BTreeSet<String>,
+            diags: &mut Vec<Diagnostic>,
+        ) {
+            for item in items {
+                match item {
+                    ScheduleItem::Barrier => {
+                        if let Some(iname) = divergent_loop {
+                            let d = Diagnostic {
+                                code: DiagCode::DivergentBarrier,
+                                kernel: knl.name.clone(),
+                                stmt: None,
+                                object: Some(iname.to_string()),
+                                message: format!(
+                                    "barrier under loop '{iname}' whose trip \
+                                     count depends on a local iname: \
+                                     work-items diverge on barrier arrival"
+                                ),
+                            };
+                            if !diags.contains(&d) {
+                                diags.push(d);
+                            }
+                        }
+                    }
+                    ScheduleItem::Stmt(_) => {}
+                    ScheduleItem::Loop { iname, body } => {
+                        let inner = if tainted.contains(iname) {
+                            Some(iname.as_str())
+                        } else {
+                            divergent_loop
+                        };
+                        walk(knl, body, inner, tainted, diags);
+                    }
+                }
+            }
+        }
+        walk(knl, &sched.items, None, &tainted, diags);
+    }
+
+    /// Check 4a: unused inames.  A sequential loop no statement nests
+    /// in, no subscript reads, and no other bound references is dead
+    /// weight (parallel inames define the launch grid even when only
+    /// subscripts use them, so they are exempt).
+    fn check_unused_inames(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        for l in &knl.domain.loops {
+            if knl.tag(&l.var).is_parallel() {
+                continue;
+            }
+            let in_within = knl.stmts.iter().any(|s| s.within.contains(&l.var));
+            let in_subscript = knl.stmts.iter().any(|s| {
+                accesses_of(s).iter().any(|a| {
+                    a.indices.iter().any(|ix| ix.coeff(&l.var) != 0)
+                })
+            });
+            let in_bounds = knl.domain.loops.iter().any(|o| {
+                o.var != l.var
+                    && (o.lo.mentions(&l.var) || o.hi.mentions(&l.var))
+            });
+            if !in_within && !in_subscript && !in_bounds {
+                diags.push(Diagnostic {
+                    code: DiagCode::UnusedIname,
+                    kernel: knl.name.clone(),
+                    stmt: None,
+                    object: Some(l.var.clone()),
+                    message: format!(
+                        "sequential iname '{}' drives no statement, subscript, \
+                         or bound",
+                        l.var
+                    ),
+                });
+            }
+        }
+    }
+
+    /// Check 4b: dead arrays — declared but never loaded or stored.
+    fn check_dead_arrays(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        let mut used: BTreeSet<&str> = BTreeSet::new();
+        for s in &knl.stmts {
+            for acc in accesses_of(s) {
+                used.insert(acc.array.as_str());
+            }
+        }
+        for name in knl.arrays.keys() {
+            if !used.contains(name.as_str()) {
+                diags.push(Diagnostic {
+                    code: DiagCode::DeadArray,
+                    kernel: knl.name.clone(),
+                    stmt: None,
+                    object: Some(name.clone()),
+                    message: format!("array '{name}' is never accessed"),
+                });
+            }
+        }
+    }
+
+    /// Check 4c: unprovable guards.  A surviving `floor` atom in a
+    /// loop bound means the assumptions did not discharge a split or
+    /// tiling guard; counting and scheduling treat the bound as exact,
+    /// so the variant's model may not match its real iteration space.
+    fn check_unprovable_guards(&self, knl: &Kernel, diags: &mut Vec<Diagnostic>) {
+        for l in &knl.domain.loops {
+            if has_floor(&l.lo) || has_floor(&l.hi) {
+                diags.push(Diagnostic {
+                    code: DiagCode::UnprovableGuard,
+                    kernel: knl.name.clone(),
+                    stmt: None,
+                    object: Some(l.var.clone()),
+                    message: format!(
+                        "bounds of '{}' contain a floor() the assumptions \
+                         cannot discharge; add a divisibility assumption or \
+                         pad the domain",
+                        l.var
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Every array access of a statement (the store target plus all loads).
+fn accesses_of(s: &crate::ir::Stmt) -> Vec<&Access> {
+    let mut out = Vec::new();
+    if let LhsRef::Array(a) = &s.lhs {
+        out.push(a);
+    }
+    out.extend(s.rhs.loads());
+    out
+}
+
+/// Does the polynomial contain any `floor` atom?
+fn has_floor(q: &QPoly) -> bool {
+    q.terms().any(|(m, _)| {
+        m.0.iter().any(|(a, _)| matches!(a, Atom::Floor { .. }))
+    })
+}
+
+/// Sample problem sizes derived from the kernel's assumptions: the
+/// smallest size satisfying every divisibility/minimum constraint, and
+/// twice that, so size-dependent violations show up at both a corner
+/// and an interior point.  Parameters without constraints default to a
+/// small non-degenerate value.
+fn sample_envs(knl: &Kernel) -> Vec<BTreeMap<String, i128>> {
+    let mut base: BTreeMap<String, i128> = BTreeMap::new();
+    for p in &knl.params {
+        let k = knl.assumptions.divisible.get(p).copied().unwrap_or(1).max(1);
+        let lo = knl.assumptions.min_value.get(p).copied().unwrap_or(0);
+        let mut v = lo.max(if k > 1 { k } else { 4 });
+        v = v.div_euclid(k) * k + if v % k == 0 { 0 } else { k };
+        base.insert(p.clone(), v.max(1));
+    }
+    let doubled: BTreeMap<String, i128> =
+        base.iter().map(|(k, v)| (k.clone(), v * 2)).collect();
+    if base == doubled {
+        vec![base]
+    } else {
+        vec![base, doubled]
+    }
+}
+
+/// Integer interval of every iname at one sample size, propagated in
+/// domain order (bounds may reference earlier inames: the interval of
+/// such a bound is taken over the corners of the referenced boxes,
+/// exact for the affine bounds our transforms produce).
+fn iname_boxes(
+    knl: &Kernel,
+    env: &BTreeMap<String, i128>,
+) -> Result<BTreeMap<String, Interval>, String> {
+    let mut boxes: BTreeMap<String, Interval> = BTreeMap::new();
+    for l in &knl.domain.loops {
+        let lo = qpoly_interval(&l.lo, env, &boxes)?;
+        let hi = qpoly_interval(&l.hi, env, &boxes)?;
+        boxes.insert(l.var.clone(), Interval { lo: lo.lo, hi: hi.hi });
+    }
+    Ok(boxes)
+}
+
+/// Interval of a bound polynomial over the corner points of the boxes
+/// of the inames it mentions.
+fn qpoly_interval(
+    q: &QPoly,
+    env: &BTreeMap<String, i128>,
+    boxes: &BTreeMap<String, Interval>,
+) -> Result<Interval, String> {
+    let vars: Vec<&String> =
+        boxes.keys().filter(|v| q.mentions(v.as_str())).collect();
+    if vars.len() > 12 {
+        return Err(format!("bound mentions {} inames", vars.len()));
+    }
+    let mut lo: Option<Rat> = None;
+    let mut hi: Option<Rat> = None;
+    for corner in 0..(1u32 << vars.len()) {
+        let mut full = env.clone();
+        for (bit, v) in vars.iter().enumerate() {
+            let b = boxes[v.as_str()];
+            full.insert(
+                (*v).clone(),
+                if corner & (1 << bit) != 0 { b.hi } else { b.lo },
+            );
+        }
+        let v = q.try_eval(&full)?;
+        lo = Some(match lo {
+            Some(cur) => cur.min(v),
+            None => v,
+        });
+        hi = Some(match hi {
+            Some(cur) => cur.max(v),
+            None => v,
+        });
+    }
+    let (lo, hi) = (lo.unwrap_or(Rat::int(0)), hi.unwrap_or(Rat::int(0)));
+    // Bounds are inclusive integers: round inward.
+    Ok(Interval {
+        lo: -(-lo).floor(),
+        hi: hi.floor(),
+    })
+}
+
+/// Interval of an affine subscript given iname boxes and parameter
+/// values (exact: the expression is linear).
+fn affine_interval(
+    ix: &crate::ir::AffExpr,
+    env: &BTreeMap<String, i128>,
+    boxes: &BTreeMap<String, Interval>,
+) -> Result<Interval, String> {
+    let mut lo = ix.constant as i128;
+    let mut hi = ix.constant as i128;
+    for var in ix.vars() {
+        let c = ix.coeff(var) as i128;
+        if c == 0 {
+            continue;
+        }
+        let b = match boxes.get(var) {
+            Some(b) => *b,
+            None => match env.get(var) {
+                Some(v) => Interval { lo: *v, hi: *v },
+                None => return Err(format!("unbound subscript var '{var}'")),
+            },
+        };
+        if c > 0 {
+            lo += c * b.lo;
+            hi += c * b.hi;
+        } else {
+            lo += c * b.hi;
+            hi += c * b.lo;
+        }
+    }
+    Ok(Interval { lo, hi })
+}
+
+fn fmt_env(env: &BTreeMap<String, i128>) -> String {
+    if env.is_empty() {
+        return "{}".to_string();
+    }
+    let parts: Vec<String> =
+        env.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    parts.join(", ")
+}
+
+/// Render a lint report for a batch of kernels as stable JSON (the
+/// `perflex lint --json` payload, asserted in CI).
+pub fn report_to_json(entries: &[(String, String, Vec<Diagnostic>)]) -> Json {
+    let mut errors = 0i64;
+    let mut warnings = 0i64;
+    let kernels: Vec<Json> = entries
+        .iter()
+        .map(|(kernel, generator, diags)| {
+            for d in diags {
+                match d.severity() {
+                    Severity::Error => errors += 1,
+                    Severity::Warn => warnings += 1,
+                }
+            }
+            Json::obj(vec![
+                ("kernel", kernel.as_str().into()),
+                ("generator", generator.as_str().into()),
+                (
+                    "diagnostics",
+                    Json::Arr(diags.iter().map(Diagnostic::to_json).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", "perflex-lint".into()),
+        ("kernels", Json::Arr(kernels)),
+        ("errors", errors.into()),
+        ("warnings", warnings.into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AffExpr, ArrayDecl, DType, Expr, Stmt};
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn code_strings_are_stable() {
+        let all: Vec<&str> = DiagCode::all().iter().map(|c| c.as_str()).collect();
+        assert_eq!(
+            all,
+            vec![
+                "RACE_WRITE",
+                "OOB_ACCESS",
+                "MISSING_BARRIER",
+                "DIVERGENT_BARRIER",
+                "SCOPE_MISUSE",
+                "UNUSED_INAME",
+                "DEAD_ARRAY",
+                "UNPROVABLE_GUARD",
+                "MALFORMED_KERNEL",
+            ]
+        );
+    }
+
+    #[test]
+    fn malformed_kernel_gates_all_other_checks() {
+        // Rank mismatch: 2-D array, 1 subscript. validate() passes
+        // (it does not check rank) but flatten_access would assert.
+        let n = QPoly::var("n");
+        let dom =
+            NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+        let mut k = Kernel::new("bad_rank", &["n"], dom);
+        k.add_array(ArrayDecl::global("a", DType::F32, vec![n.clone(), n]));
+        k.add_stmt(Stmt::new(
+            "s",
+            LhsRef::Array(Access::new("a", vec![AffExpr::var("i")])),
+            Expr::fconst(0.0),
+            &["i"],
+        ));
+        let diags = Analyzer::new().check(&k);
+        assert_eq!(codes(&diags), vec!["MALFORMED_KERNEL"]);
+        assert!(verify(&k).is_err());
+    }
+
+    #[test]
+    fn interval_propagation_handles_negative_strides() {
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to(
+            "i",
+            QPoly::int(16),
+        )]);
+        let mut k = Kernel::new("neg", &[], dom);
+        k.add_array(ArrayDecl::global("a", DType::F32, vec![QPoly::int(16)]));
+        // a[15 - i] is in bounds; a[14 - i] is not (hits -1).
+        k.add_stmt(Stmt::new(
+            "ok",
+            LhsRef::Array(Access::new(
+                "a",
+                vec![AffExpr::scaled_var("i", -1).plus_cst(15)],
+            )),
+            Expr::fconst(0.0),
+            &["i"],
+        ));
+        assert!(Analyzer::new()
+            .check(&k)
+            .iter()
+            .all(|d| d.code != DiagCode::OobAccess));
+        k.stmts[0].lhs = LhsRef::Array(Access::new(
+            "a",
+            vec![AffExpr::scaled_var("i", -1).plus_cst(14)],
+        ));
+        assert!(Analyzer::new()
+            .check(&k)
+            .iter()
+            .any(|d| d.code == DiagCode::OobAccess));
+    }
+
+    #[test]
+    fn report_json_is_stable() {
+        let d = Diagnostic {
+            code: DiagCode::RaceWrite,
+            kernel: "k".into(),
+            stmt: Some("s".into()),
+            object: Some("a".into()),
+            message: "m".into(),
+        };
+        let j = report_to_json(&[("k".into(), "g".into(), vec![d])]);
+        let text = j.to_string();
+        assert!(text.contains("\"schema\":\"perflex-lint\""), "{text}");
+        assert!(text.contains("\"code\":\"RACE_WRITE\""), "{text}");
+        assert!(text.contains("\"errors\":1"), "{text}");
+    }
+}

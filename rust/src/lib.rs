@@ -41,6 +41,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+pub mod analysis;
 pub mod gpusim;
 pub mod ir;
 pub mod bench_harness;

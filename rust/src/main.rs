@@ -9,6 +9,7 @@
 //! perflex list-devices                    the simulated fleet (Table 2)
 //! perflex gen <tag>...                    generate measurement kernels
 //! perflex show <tag>...                   print kernel schedule listings
+//! perflex lint [--json] [tag...]          static kernel verifier
 //! perflex measure <device> <tag>... [--store <dir>]
 //! perflex calibrate <case> <device> [--store <dir>] [--target <name>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
@@ -17,6 +18,13 @@
 //! perflex store ls|stat|verify|gc|compact --store <dir> [--dry-run]
 //!               [--temp-ttl-secs <n>] [--lease-ttl-secs <n>]
 //! ```
+//!
+//! `lint` runs the static kernel verifier (`perflex::analysis`) over
+//! the generated kernel inventory (all generators when no tags are
+//! given), deduplicated by structural fingerprint.  Error-severity
+//! findings (races, out-of-bounds accesses, barrier defects, scope
+//! misuse) make the command exit non-zero; `--json` emits the stable
+//! `perflex-lint` report document instead of the human listing.
 //!
 //! `--target <name>` selects the response variable `calibrate` fits
 //! and `predict` predicts: `time` (the default), `energy` or
@@ -77,8 +85,10 @@ fn main() {
 
 fn usage() -> String {
     "usage: perflex <command> [...]\n\
-     commands: list-generators | list-devices | gen | show | measure | \
-     calibrate | predict | experiment | store\n\
+     commands: list-generators | list-devices | gen | show | lint | \
+     measure | calibrate | predict | experiment | store\n\
+     lint [--json] [tag...] statically verifies kernels (races, bounds, \
+     barriers)\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
      calibrate/predict flag: --target time|energy|avg_power (default: time)\n\
      predict flag: --sweep k=lo..hi[:step] emits one JSON row per point\n\
@@ -208,6 +218,57 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     print!("{}", sched.listing(&k.kernel));
                     println!();
                 }
+            }
+            Ok(())
+        }
+        "lint" => {
+            let json = take_flag(&mut rest, "--json");
+            let tags: Vec<&str> = rest.iter().map(|s| s.as_str()).collect();
+            // No tags = lint the whole inventory: every generator with
+            // its full argument product, deduplicated structurally so
+            // size-only twins verify once.
+            let knls = KernelCollection::all().generate_kernels(&tags)?;
+            let analyzer = perflex::analysis::Analyzer::new();
+            let mut seen = std::collections::BTreeSet::new();
+            let mut entries = Vec::new();
+            for k in &knls {
+                if !seen.insert(k.kernel.fingerprint()) {
+                    continue;
+                }
+                let diags = analyzer.check(&k.kernel);
+                entries.push((k.kernel.name.clone(), k.generator.clone(), diags));
+            }
+            let errors: usize = entries
+                .iter()
+                .map(|(_, _, d)| perflex::analysis::error_count(d))
+                .sum();
+            let warnings: usize =
+                entries.iter().map(|(_, _, d)| d.len()).sum::<usize>() - errors;
+            if json {
+                println!("{}", perflex::analysis::report_to_json(&entries));
+            } else {
+                for (kernel, generator, diags) in &entries {
+                    if diags.is_empty() {
+                        println!("{kernel:<28} [{generator}] OK");
+                    } else {
+                        println!("{kernel:<28} [{generator}]");
+                        for d in diags {
+                            println!("    {d}");
+                        }
+                    }
+                }
+                println!(
+                    "{} kernel(s): {} error(s), {} warning(s)",
+                    entries.len(),
+                    errors,
+                    warnings
+                );
+            }
+            if errors > 0 {
+                return Err(format!(
+                    "lint found {errors} error(s) across {} kernel(s)",
+                    entries.len()
+                ));
             }
             Ok(())
         }

@@ -186,6 +186,11 @@ impl Assumptions {
                     .trim()
                     .parse()
                     .map_err(|_| format!("bad modulus in '{clause}'"))?;
+                if k <= 0 {
+                    return Err(format!(
+                        "modulus must be positive in '{clause}'"
+                    ));
+                }
                 out.divisible.insert(var.trim().to_string(), k);
             } else {
                 return Err(format!("unsupported assumption clause '{clause}'"));

@@ -121,7 +121,7 @@ fn local_io(
 /// (potentially) read by another, so barriers are required.  Arrays
 /// whose every access shares one lid mapping are thread-private in
 /// pattern (the lmem microbenchmark's shape) and need no barrier.
-fn communicating_local_arrays(knl: &Kernel) -> Vec<String> {
+pub(crate) fn communicating_local_arrays(knl: &Kernel) -> Vec<String> {
     use std::collections::BTreeMap;
     let mut sigs: BTreeMap<String, Vec<Vec<(String, QPoly)>>> = BTreeMap::new();
     let mut record = |knl: &Kernel, a: &crate::ir::Access| {

@@ -124,8 +124,18 @@ pub fn add_prefetch(
             lo = Some(lo.map_or(c + sweep_min, |v| v.min(c + sweep_min)));
             hi = Some(hi.map_or(c + sweep_max, |v| v.max(c + sweep_max)));
         }
-        let (lo, hi) = (lo.unwrap(), hi.unwrap());
-        let mut offset = base_offset.unwrap();
+        // `subscripts` is non-empty here (checked above), so every
+        // axis saw at least one index expression; degrade to an error
+        // anyway rather than trusting that invariant with a panic.
+        let (lo, hi, mut offset) = match (lo, hi, base_offset) {
+            (Some(lo), Some(hi), Some(offset)) => (lo, hi, offset),
+            _ => {
+                return Err(format!(
+                    "add_prefetch: no usable footprint for '{array}' on \
+                     axis {d}"
+                ))
+            }
+        };
         offset.constant = lo;
         footprint.push(AxisFootprint {
             offset,

@@ -9,6 +9,8 @@
 //! stride-1 pattern) is appended so optimizing compilers cannot drop
 //! the chain.
 
+use std::collections::BTreeSet;
+
 use crate::ir::{
     Access, AffExpr, ArrayDecl, Expr, IndexTag, Kernel, LhsRef, MemScope, Stmt,
 };
@@ -45,12 +47,6 @@ pub fn remove_work(knl: &Kernel, spec: &RemoveSpec) -> Result<Kernel, String> {
     let mut out = knl.clone();
     out.name = format!("{}_rmwork", knl.name);
 
-    let local_arrays: Vec<String> = out
-        .arrays
-        .values()
-        .filter(|a| a.scope == MemScope::Local)
-        .map(|a| a.name.clone())
-        .collect();
     let is_global =
         |out: &Kernel, a: &Access| out.arrays[&a.array].scope == MemScope::Global;
 
@@ -164,10 +160,25 @@ pub fn remove_work(knl: &Kernel, spec: &RemoveSpec) -> Result<Kernel, String> {
 
     out.stmts = new_stmts;
 
-    // Drop now-unused local arrays and temps (keep read_tgt).
-    for la in &local_arrays {
-        out.arrays.remove(la);
-    }
+    // Drop now-unused arrays — the local tiles whose transactions were
+    // stripped *and* any global whose every access was removed (a
+    // declared-but-dead array would otherwise ride along in every
+    // derived measurement kernel) — and temps (keep read_tgt).
+    let used_arrays: Vec<String> = out
+        .stmts
+        .iter()
+        .flat_map(|s| {
+            s.rhs
+                .loads()
+                .into_iter()
+                .map(|l| l.array.clone())
+                .chain(match &s.lhs {
+                    LhsRef::Array(a) => Some(a.array.clone()),
+                    _ => None,
+                })
+        })
+        .collect();
+    out.arrays.retain(|name, _| used_arrays.contains(name));
     let used_temps: Vec<String> = out
         .stmts
         .iter()
@@ -184,9 +195,53 @@ pub fn remove_work(knl: &Kernel, spec: &RemoveSpec) -> Result<Kernel, String> {
         .collect();
     out.temps.retain(|name, _| used_temps.contains(name));
 
-    // Remove fetch inames that no longer index anything? They remain in
-    // the domain harmlessly (zero-cost loops are dropped by scheduling
-    // if no statement nests in them).
+    // Prune sequential loops that no surviving statement nests in and
+    // no subscript or bound references (e.g. the rank-superfluous
+    // fetch iname of a removed prefetch tile).  Parallel inames are
+    // kept even when unused: they define the launch grid, and dropping
+    // one would change the kernel's work-group shape.
+    let mut used_inames: BTreeSet<String> = BTreeSet::new();
+    for s in &out.stmts {
+        used_inames.extend(s.within.iter().cloned());
+        let mut record = |acc: &Access| {
+            for ix in &acc.indices {
+                used_inames.extend(ix.vars().cloned());
+            }
+        };
+        if let LhsRef::Array(a) = &s.lhs {
+            record(a);
+        }
+        for l in s.rhs.loads() {
+            record(l);
+        }
+    }
+    for l in &out.domain.loops {
+        for o in &out.domain.loops {
+            if o.var != l.var && (o.lo.mentions(&l.var) || o.hi.mentions(&l.var))
+            {
+                used_inames.insert(l.var.clone());
+            }
+        }
+    }
+    let keep: Vec<String> = out
+        .domain
+        .loops
+        .iter()
+        .filter(|l| {
+            out.tag(&l.var).is_parallel() || used_inames.contains(&l.var)
+        })
+        .map(|l| l.var.clone())
+        .collect();
+    if keep.len() < out.domain.loops.len() {
+        out.domain.loops.retain(|l| keep.contains(&l.var));
+        for iname in out.iname_tags.keys().cloned().collect::<Vec<_>>() {
+            if !keep.contains(&iname) {
+                out.iname_tags.remove(&iname);
+            }
+        }
+        out.loop_priority.retain(|p| keep.contains(p));
+    }
+
     out.validate()?;
     Ok(out)
 }

@@ -15,7 +15,11 @@ use crate::polyhedral::{LoopExtent, QPoly};
 /// `split_iname` rejects unprovable splits rather than emitting
 /// conditionals.
 pub fn split_iname(knl: &Kernel, iname: &str, factor: i64) -> Result<Kernel, String> {
-    assert!(factor > 0);
+    if factor <= 0 {
+        return Err(format!(
+            "split_iname: factor must be positive, got {factor}"
+        ));
+    }
     let mut out = knl.clone();
     let pos = out
         .domain

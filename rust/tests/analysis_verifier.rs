@@ -1,0 +1,354 @@
+//! Seeded-defect and clean-sweep suite for the static kernel verifier
+//! (`perflex::analysis`).
+//!
+//! True positives: one minimal kernel per diagnostic code, asserting
+//! the exact code fires and nothing else does.  True negatives: every
+//! kernel the repo ships — every UiPiCK generator variant and every
+//! transform-chain variant the experiments use — must lint completely
+//! clean, so the verifier can gate counting, measurement, and the
+//! future autotune pruning loop without false alarms.
+
+use std::collections::BTreeSet;
+
+use perflex::analysis::{self, Analyzer, DiagCode};
+use perflex::ir::{
+    Access, AffExpr, ArrayDecl, DType, Expr, IndexTag, Kernel, LhsRef, MemScope, Stmt,
+};
+use perflex::polyhedral::{LoopExtent, NestedDomain, QPoly};
+use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, build_transpose, DgVariant};
+use perflex::uipick::KernelCollection;
+
+fn codes(diags: &[analysis::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code.as_str()).collect()
+}
+
+/// A 16x16 work-group over two local axes, one global output row.
+fn two_axis_grid(name: &str) -> Kernel {
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("li0", QPoly::int(16)),
+        LoopExtent::zero_to("li1", QPoly::int(16)),
+    ]);
+    let mut k = Kernel::new(name, &[], dom);
+    k.iname_tags.insert("li0".into(), IndexTag::Local(0));
+    k.iname_tags.insert("li1".into(), IndexTag::Local(1));
+    k
+}
+
+#[test]
+fn race_write_fires_when_a_parallel_axis_is_not_covered() {
+    // 16x16 work-items all storing out[li0]: every li1 along a fixed
+    // li0 writes the same element.
+    let mut k = two_axis_grid("race_axis");
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li0")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
+    assert!(analysis::verify(&k).is_err());
+}
+
+#[test]
+fn race_write_fires_on_non_injective_subscript() {
+    // out[li0 + li1] collides: (1, 0) and (0, 1) write element 1.
+    let mut k = two_axis_grid("race_collide");
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(32)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new(
+            "out",
+            vec![AffExpr::var("li0").plus(&AffExpr::var("li1"))],
+        )),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
+    let msg = analysis::verify(&k).unwrap_err();
+    assert!(msg.contains("RACE_WRITE"), "{msg}");
+}
+
+#[test]
+fn oob_access_fires_when_subscript_exceeds_shape() {
+    // out[li0 + 1] reaches index 16 of a 16-element array.
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li0", QPoly::int(16))]);
+    let mut k = Kernel::new("oob", &[], dom);
+    k.iname_tags.insert("li0".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li0").plus_cst(1)])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["OOB_ACCESS"], "{diags:?}");
+}
+
+/// The barrier_pattern shape: work-item li writes buf[li], then reads
+/// buf[15-li] — data crosses work-items, so the read must be ordered
+/// after the write for the scheduler to fence the exchange.
+fn exchange_kernel(with_dep: bool) -> Kernel {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("exchange", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::local("buf", DType::F32, vec![QPoly::int(16)]));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "w",
+        LhsRef::Array(Access::new("buf", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let read = Stmt::new(
+        "r",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+        Expr::load(Access::new(
+            "buf",
+            vec![AffExpr::scaled_var("li", -1).plus_cst(15)],
+        )),
+        &[],
+    );
+    k.add_stmt(if with_dep { read.with_deps(&["w"]) } else { read });
+    k
+}
+
+#[test]
+fn missing_barrier_fires_on_unordered_cross_item_read() {
+    let k = exchange_kernel(false);
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["MISSING_BARRIER"], "{diags:?}");
+}
+
+#[test]
+fn dependency_ordered_exchange_lints_clean() {
+    let k = exchange_kernel(true);
+    let diags = Analyzer::new().check(&k);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn divergent_barrier_fires_under_local_dependent_trip_count() {
+    // The exchange sits inside `t in 0..=li`: each work-item runs the
+    // loop a different number of times, so the barriers the scheduler
+    // inserts into the loop body are reached divergently.
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("li", QPoly::int(16)),
+        LoopExtent::new("t", QPoly::zero(), QPoly::var("li")),
+    ]);
+    let mut k = Kernel::new("divergent", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::local("buf", DType::F32, vec![QPoly::int(16)]));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "w",
+        LhsRef::Array(Access::new("buf", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &["t"],
+    ));
+    k.add_stmt(
+        Stmt::new(
+            "r",
+            LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+            Expr::load(Access::new(
+                "buf",
+                vec![AffExpr::scaled_var("li", -1).plus_cst(15)],
+            )),
+            &["t"],
+        )
+        .with_deps(&["w"]),
+    );
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["DIVERGENT_BARRIER"], "{diags:?}");
+}
+
+#[test]
+fn scope_misuse_fires_for_private_array_with_parallel_subscript() {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("private_misuse", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl {
+        name: "acc".into(),
+        dtype: DType::F32,
+        scope: MemScope::Private,
+        shape: vec![QPoly::int(16)],
+        axis_order: vec![0],
+    });
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("acc", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["SCOPE_MISUSE"], "{diags:?}");
+}
+
+#[test]
+fn scope_misuse_fires_for_local_array_with_group_subscript() {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("gi", QPoly::int(8))]);
+    let mut k = Kernel::new("local_misuse", &[], dom);
+    k.iname_tags.insert("gi".into(), IndexTag::Group(0));
+    k.add_array(ArrayDecl::local("larr", DType::F32, vec![QPoly::int(8)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("larr", vec![AffExpr::var("gi")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["SCOPE_MISUSE"], "{diags:?}");
+}
+
+#[test]
+fn unused_iname_warns_without_failing_the_gate() {
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("li", QPoly::int(16)),
+        LoopExtent::zero_to("z", QPoly::int(4)),
+    ]);
+    let mut k = Kernel::new("unused", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["UNUSED_INAME"], "{diags:?}");
+    assert_eq!(diags[0].object.as_deref(), Some("z"));
+    // Warnings pass the gate form.
+    assert_eq!(analysis::verify(&k).unwrap().len(), 1);
+}
+
+#[test]
+fn dead_array_warns_without_failing_the_gate() {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("dead", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_array(ArrayDecl::global("scratch", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["DEAD_ARRAY"], "{diags:?}");
+    assert_eq!(diags[0].object.as_deref(), Some("scratch"));
+    assert!(analysis::verify(&k).is_ok());
+}
+
+#[test]
+fn unprovable_guard_warns_on_surviving_floor_bound() {
+    // 0 <= i <= floor((n-1)/16) with no divisibility assumption: the
+    // bound keeps its floor atom, which counting treats as exact.
+    let hi = (&QPoly::var("n") - &QPoly::one()).floor_div(16);
+    let dom = NestedDomain::new(vec![LoopExtent::new("i", QPoly::zero(), hi)]);
+    let mut k = Kernel::new("floored", &["n"], dom);
+    k.add_array(ArrayDecl::global("a", DType::F32, vec![QPoly::var("n")]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("a", vec![AffExpr::var("i")])),
+        Expr::fconst(1.0),
+        &["i"],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["UNPROVABLE_GUARD"], "{diags:?}");
+    assert!(analysis::verify(&k).is_ok());
+}
+
+#[test]
+fn malformed_kernel_is_the_only_diagnostic_for_broken_structure() {
+    // Undeclared array: validate() rejects it, the analyzer reports
+    // exactly one MALFORMED_KERNEL and runs nothing else (the other
+    // passes would panic in flatten_access).
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("ghost_store", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("ghost", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["MALFORMED_KERNEL"], "{diags:?}");
+    assert_eq!(diags[0].code.severity(), analysis::Severity::Error);
+}
+
+#[test]
+fn every_code_has_a_stable_severity() {
+    for c in DiagCode::all() {
+        match c {
+            DiagCode::UnusedIname | DiagCode::DeadArray | DiagCode::UnprovableGuard => {
+                assert_eq!(c.severity(), analysis::Severity::Warn, "{}", c.as_str())
+            }
+            _ => assert_eq!(c.severity(), analysis::Severity::Error, "{}", c.as_str()),
+        }
+    }
+}
+
+/// True-negative sweep 1: every UiPiCK generator variant (the full
+/// Cartesian product of every generator's argument domains) lints
+/// completely clean — zero errors *and* zero warnings.
+#[test]
+fn every_uipick_generator_variant_lints_clean() {
+    let knls = KernelCollection::all().generate_kernels(&[]).unwrap();
+    assert!(!knls.is_empty());
+    let analyzer = Analyzer::new();
+    let mut seen = BTreeSet::new();
+    let mut checked = 0usize;
+    for k in &knls {
+        if !seen.insert(k.kernel.fingerprint()) {
+            continue;
+        }
+        let diags = analyzer.check(&k.kernel);
+        assert!(
+            diags.is_empty(),
+            "{} (generator {}) is not clean: {:?}",
+            k.kernel.name,
+            k.generator,
+            diags
+        );
+        checked += 1;
+    }
+    assert!(checked >= 20, "only {checked} distinct kernels checked");
+}
+
+/// True-negative sweep 2: every transform-chain variant `experiment
+/// all` prices (the paper's app kernels at their measured
+/// configurations) passes the gate form with no findings at all.
+#[test]
+fn every_experiment_transform_chain_verifies_clean() {
+    let mut variants: Vec<(String, Kernel)> = vec![
+        (
+            "matmul/prefetch".into(),
+            build_matmul(DType::F32, true, 16).unwrap(),
+        ),
+        (
+            "matmul/no_prefetch".into(),
+            build_matmul(DType::F32, false, 16).unwrap(),
+        ),
+        ("fdiff/16x16".into(), build_fdiff(16).unwrap()),
+        ("fdiff/18x18".into(), build_fdiff(18).unwrap()),
+        ("transpose".into(), build_transpose(16).unwrap()),
+    ];
+    for v in [
+        DgVariant::Plain,
+        DgVariant::UPrefetch,
+        DgVariant::MPrefetch,
+        DgVariant::MPrefetchT,
+    ] {
+        variants.push((format!("dg/{}", v.label()), build_dg(v, 64, 16).unwrap()));
+    }
+    for (label, knl) in &variants {
+        let diags = analysis::verify(knl).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(diags.is_empty(), "{label} has warnings: {diags:?}");
+    }
+}
