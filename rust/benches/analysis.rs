@@ -5,10 +5,13 @@
 //! working directory); the `bench-baselines` CI job tracks it against
 //! the checked-in copy.
 
-use perflex::analysis::Analyzer;
+use perflex::analysis::{admissible, check_equiv, check_feasibility, Analyzer};
 use perflex::bench_harness::{bench_recorded, write_baseline_with_summary};
+use perflex::gpusim::{device_by_id, fleet};
 use perflex::ir::DType;
-use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, build_transpose, DgVariant};
+use perflex::uipick::apps::{
+    build_dg, build_fdiff, build_matmul, build_transpose, fdiff_base, matmul_base, DgVariant,
+};
 use perflex::uipick::micro::build_barrier_pattern;
 
 fn main() {
@@ -43,9 +46,37 @@ fn main() {
     }
 
     // Throughput summary: how many candidate kernels per second the
-    // autotune pruning gate can clear (mean over the family mix).
+    // hygiene gate can clear (mean over the family mix).  Computed over
+    // the verify records only so the figure stays comparable across
+    // baselines as further gate stages are benchmarked below.
     let total_mean_ms: f64 = records.iter().map(|r| r.mean_ms).sum();
     let kernels_per_sec = families.len() as f64 * 1e3 / total_mean_ms.max(1e-6);
+
+    // The rest of the pruning predicate: resource feasibility across
+    // the whole fleet, transform-chain equivalence, and the combined
+    // `admissible` gate on the paper's scope example (the 18x18 tile
+    // that AMD's 256-item work-group limit rejects).
+    let devices = fleet();
+    let fdiff18 = build_fdiff(18).unwrap();
+    records.push(bench_recorded("feasibility fleet fdiff_18x18", 100, || {
+        for d in &devices {
+            let f = check_feasibility(&fdiff18, d).unwrap();
+            assert_eq!(f.usage.wg_size, 324, "{}", d.id);
+        }
+    }));
+
+    let mm_base = matmul_base(DType::F32, true);
+    let mm_cand = build_matmul(DType::F32, true, 16).unwrap();
+    records.push(bench_recorded("equiv matmul_pf", 100, || {
+        let diags = check_equiv(&mm_base, &mm_cand);
+        assert!(diags.is_empty(), "{diags:?}");
+    }));
+
+    let amd = device_by_id("amd_r9_fury").unwrap();
+    let fd_base = fdiff_base(18);
+    records.push(bench_recorded("admissible fdiff_18x18 amd", 100, || {
+        assert!(admissible(&fd_base, &fdiff18, &amd).is_err());
+    }));
     let p = write_baseline_with_summary(
         &out_dir,
         "analysis",

@@ -1,0 +1,400 @@
+//! Transform-chain equivalence: does a transformed kernel still
+//! compute what its baseline computes?
+//!
+//! The check is observational, over the kernel's *global* effects —
+//! local tiles, private accumulators, and extra fetch statements are
+//! exactly what legitimate transforms add, so only globally visible
+//! behavior is compared.  At each assumption-derived sample size (the
+//! same envs as the race/bounds checks, over the *merged* assumptions
+//! of both kernels) it summarizes, per global array:
+//!
+//! * the set of arrays written, and per array the **write-instance
+//!   count** (box volume of the writing statements' iteration domains)
+//!   and the **flattened write-location hull** (interval of the
+//!   linearized subscript over the interval-propagated iname boxes);
+//! * the set of arrays read, and per array the flattened
+//!   **read-location hull** — the candidate's hull must *cover* the
+//!   baseline's (a bounding-box prefetch legitimately over-reads the
+//!   stencil's halo corners; reading extra is harmless, reading less
+//!   means values are missing from the computation);
+//! * the **op volume** per operation kind (adds, muls, fused madds, …
+//!   times iteration count).
+//!
+//! A divergence in any of these is a [`DiagCode::SemanticsChanged`]
+//! finding: a tiling that drops the last partial tile loses write
+//! instances, a halo-less `add_prefetch` shrinks the read
+//! hull, a `remove_work` spec erases arrays from the read/write sets
+//! and shifts op volume.  Hulls and box volumes are abstractions:
+//! agreement is necessary, not sufficient, for true equivalence — but
+//! the shipped transform chains are exactly preserved by them, so a
+//! flag is always worth a look and the sweep in
+//! `tests/analysis_equiv.rs` pins zero false positives.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{
+    iname_boxes, sample_envs_from, Analyzer, DiagCode, Diagnostic, Interval,
+};
+use crate::ir::{Kernel, LhsRef, MemScope, Stmt};
+use crate::util::Rat;
+
+/// Compare `candidate` against `baseline` and report every observable
+/// divergence as a [`DiagCode::SemanticsChanged`] diagnostic (empty =
+/// equivalent under the summarized abstraction).
+pub fn check_equiv(baseline: &Kernel, candidate: &Kernel) -> Vec<Diagnostic> {
+    let gate = Analyzer::new();
+    if let Some(d) = gate.structural_gate(baseline) {
+        return vec![d];
+    }
+    if let Some(d) = gate.structural_gate(candidate) {
+        return vec![d];
+    }
+
+    let mut diags = Vec::new();
+    let bp: BTreeSet<&String> = baseline.params.iter().collect();
+    let cp: BTreeSet<&String> = candidate.params.iter().collect();
+    if bp != cp {
+        diags.push(changed(
+            candidate,
+            None,
+            format!(
+                "parameter set {:?} differs from baseline {:?}",
+                candidate.params, baseline.params
+            ),
+        ));
+        return diags;
+    }
+
+    let mut assumptions = baseline.assumptions.clone();
+    assumptions.merge(&candidate.assumptions);
+    let envs = sample_envs_from(&baseline.params, &assumptions);
+
+    // One finding per (aspect, array) across all sample sizes.
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for env in &envs {
+        let (b, c) = match (summarize(baseline, env), summarize(candidate, env))
+        {
+            (Some(b), Some(c)) => (b, c),
+            // Interval propagation failed at this size: stay silent
+            // rather than guess (the verifier's own checks degrade the
+            // same way).
+            _ => continue,
+        };
+        compare(candidate, env, &b, &c, &mut seen, &mut diags);
+    }
+    diags
+}
+
+fn changed(knl: &Kernel, object: Option<&str>, message: String) -> Diagnostic {
+    Diagnostic {
+        code: DiagCode::SemanticsChanged,
+        kernel: knl.name.clone(),
+        stmt: None,
+        object: object.map(str::to_string),
+        message,
+    }
+}
+
+/// Global-effect summary of one kernel at one sample size.
+struct Summary {
+    /// Global array -> (write-instance count, flattened location hull).
+    writes: BTreeMap<String, (i128, Interval)>,
+    /// Global array -> flattened read-location hull.
+    reads: BTreeMap<String, Interval>,
+    /// Op kind -> instances (op count per statement body × iteration
+    /// count).
+    ops: BTreeMap<&'static str, i128>,
+}
+
+fn summarize(knl: &Kernel, env: &BTreeMap<String, i128>) -> Option<Summary> {
+    let boxes = iname_boxes(knl, env).ok()?;
+    let mut writes: BTreeMap<String, (i128, Interval)> = BTreeMap::new();
+    let mut reads: BTreeMap<String, Interval> = BTreeMap::new();
+    let mut ops: BTreeMap<&'static str, i128> = BTreeMap::new();
+
+    for s in &knl.stmts {
+        // Iteration count of the statement: box volume over its
+        // nesting (exact for the rectangular domains the generators
+        // and transforms produce; a hull overestimate otherwise, taken
+        // identically on both sides).
+        let mut count: i128 = 1;
+        for iname in &s.within {
+            let ext = boxes.get(iname).map(|b| b.extent()).unwrap_or(1);
+            count = count.saturating_mul(ext.max(0));
+        }
+        if count == 0 {
+            continue;
+        }
+
+        let oc = s.rhs.count_ops();
+        for (kind, n) in [
+            ("add", oc.add),
+            ("sub", oc.sub),
+            ("mul", oc.mul),
+            ("div", oc.div),
+            ("madd", oc.madd),
+        ] {
+            if n > 0 {
+                *ops.entry(kind).or_insert(0) += n as i128 * count;
+            }
+        }
+
+        if let LhsRef::Array(acc) = &s.lhs {
+            if knl.arrays[&acc.array].scope == MemScope::Global {
+                let hull = access_hull(knl, s, env, &boxes)?;
+                writes
+                    .entry(acc.array.clone())
+                    .and_modify(|(n, h)| {
+                        *n += count;
+                        *h = union(*h, hull);
+                    })
+                    .or_insert((count, hull));
+            }
+        }
+        for l in s.rhs.loads() {
+            if knl.arrays[&l.array].scope != MemScope::Global {
+                continue;
+            }
+            let hull = hull_of(knl, l, env, &boxes)?;
+            reads
+                .entry(l.array.clone())
+                .and_modify(|h| *h = union(*h, hull))
+                .or_insert(hull);
+        }
+    }
+    Some(Summary { writes, reads, ops })
+}
+
+fn union(a: Interval, b: Interval) -> Interval {
+    Interval {
+        lo: a.lo.min(b.lo),
+        hi: a.hi.max(b.hi),
+    }
+}
+
+fn access_hull(
+    knl: &Kernel,
+    s: &Stmt,
+    env: &BTreeMap<String, i128>,
+    boxes: &BTreeMap<String, Interval>,
+) -> Option<Interval> {
+    match &s.lhs {
+        LhsRef::Array(acc) => hull_of(knl, acc, env, boxes),
+        LhsRef::Temp(_) => None,
+    }
+}
+
+/// Interval of the flattened (element-linearized) subscript of one
+/// access over the iname boxes: the layout-aware location footprint,
+/// so `tag_data_axes` permutations that still cover the same storage
+/// compare equal.
+fn hull_of(
+    knl: &Kernel,
+    acc: &crate::ir::Access,
+    env: &BTreeMap<String, i128>,
+    boxes: &BTreeMap<String, Interval>,
+) -> Option<Interval> {
+    let lf = knl.flatten_access(acc);
+    let mut lo = lf.constant.try_eval(env).ok()?;
+    let mut hi = lo;
+    for (var, coeff) in &lf.coeffs {
+        let c = coeff.try_eval(env).ok()?;
+        if c.is_zero() {
+            continue;
+        }
+        let b = match boxes.get(var) {
+            Some(b) => *b,
+            None => {
+                let v = *env.get(var)?;
+                Interval { lo: v, hi: v }
+            }
+        };
+        if c > Rat::int(0) {
+            lo = lo + c * Rat::int(b.lo);
+            hi = hi + c * Rat::int(b.hi);
+        } else {
+            lo = lo + c * Rat::int(b.hi);
+            hi = hi + c * Rat::int(b.lo);
+        }
+    }
+    Some(Interval {
+        lo: lo.floor(),
+        hi: hi.floor(),
+    })
+}
+
+fn compare(
+    candidate: &Kernel,
+    env: &BTreeMap<String, i128>,
+    b: &Summary,
+    c: &Summary,
+    seen: &mut BTreeSet<String>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let at = super::fmt_env(env);
+    let mut push = |key: String, object: Option<&str>, message: String| {
+        if seen.insert(key) {
+            diags.push(changed(candidate, object, message));
+        }
+    };
+
+    for (arr, (bn, bh)) in &b.writes {
+        match c.writes.get(arr) {
+            None => push(
+                format!("write-set:{arr}"),
+                Some(arr),
+                format!(
+                    "global array '{arr}' is written by the baseline but \
+                     not by the candidate"
+                ),
+            ),
+            Some((cn, ch)) => {
+                if cn != bn {
+                    push(
+                        format!("write-count:{arr}"),
+                        Some(arr),
+                        format!(
+                            "candidate writes '{arr}' {cn} time(s) vs \
+                             baseline {bn} at {at}: iterations were \
+                             dropped or duplicated"
+                        ),
+                    );
+                }
+                if ch != bh {
+                    push(
+                        format!("write-hull:{arr}"),
+                        Some(arr),
+                        format!(
+                            "candidate write footprint of '{arr}' spans \
+                             [{}, {}] vs baseline [{}, {}] at {at}",
+                            ch.lo, ch.hi, bh.lo, bh.hi
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    for arr in c.writes.keys() {
+        if !b.writes.contains_key(arr) {
+            push(
+                format!("write-set:{arr}"),
+                Some(arr),
+                format!(
+                    "global array '{arr}' is written by the candidate but \
+                     not by the baseline"
+                ),
+            );
+        }
+    }
+
+    for (arr, bh) in &b.reads {
+        match c.reads.get(arr) {
+            None => push(
+                format!("read-set:{arr}"),
+                Some(arr),
+                format!(
+                    "global array '{arr}' is read by the baseline but not \
+                     by the candidate"
+                ),
+            ),
+            Some(ch) => {
+                if ch.lo > bh.lo || ch.hi < bh.hi {
+                    push(
+                        format!("read-hull:{arr}"),
+                        Some(arr),
+                        format!(
+                            "candidate read footprint of '{arr}' spans \
+                             [{}, {}], not covering baseline [{}, {}] at \
+                             {at}: part of the input was dropped",
+                            ch.lo, ch.hi, bh.lo, bh.hi
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    for arr in c.reads.keys() {
+        if !b.reads.contains_key(arr) {
+            push(
+                format!("read-set:{arr}"),
+                Some(arr),
+                format!(
+                    "global array '{arr}' is read by the candidate but not \
+                     by the baseline"
+                ),
+            );
+        }
+    }
+
+    if b.ops != c.ops {
+        let fmt = |m: &BTreeMap<&'static str, i128>| {
+            if m.is_empty() {
+                "none".to_string()
+            } else {
+                m.iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            }
+        };
+        push(
+            "op-volume".to_string(),
+            None,
+            format!(
+                "candidate op volume ({}) differs from baseline ({}) at {at}",
+                fmt(&c.ops),
+                fmt(&b.ops)
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Access, AffExpr, ArrayDecl, DType, Expr};
+    use crate::polyhedral::{LoopExtent, NestedDomain, QPoly};
+
+    /// `res[i] = u[i] + u[i+1]` over `i in [0, n)`.
+    fn stencil_base() -> Kernel {
+        let n = QPoly::var("n");
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+        let mut k = Kernel::new("stencil_base", &["n"], dom);
+        k.add_array(ArrayDecl::global(
+            "u",
+            DType::F32,
+            vec![&n + &QPoly::one()],
+        ));
+        k.add_array(ArrayDecl::global("res", DType::F32, vec![n]));
+        k.add_stmt(Stmt::new(
+            "comp",
+            LhsRef::Array(Access::new("res", vec![AffExpr::var("i")])),
+            Expr::add(
+                Expr::load(Access::new("u", vec![AffExpr::var("i")])),
+                Expr::load(Access::new(
+                    "u",
+                    vec![AffExpr::var("i").plus_cst(1)],
+                )),
+            ),
+            &["i"],
+        ));
+        k
+    }
+
+    #[test]
+    fn identical_kernels_are_equivalent() {
+        let k = stencil_base();
+        assert!(check_equiv(&k, &k).is_empty());
+    }
+
+    #[test]
+    fn parameter_set_mismatch_is_flagged() {
+        let b = stencil_base();
+        let mut c = stencil_base();
+        c.params.push("m".to_string());
+        let diags = check_equiv(&b, &c);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, DiagCode::SemanticsChanged);
+        assert!(diags[0].message.contains("parameter set"));
+    }
+}

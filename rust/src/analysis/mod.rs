@@ -32,23 +32,47 @@
 //!    arrays, and loop bounds whose `floor` guards the assumptions
 //!    could not discharge.
 //!
+//! Two sibling passes extend correctness checking into *pruning*:
+//!
+//! 5. **Resource feasibility** ([`resources`]) — a symbolic per-kernel
+//!    resource model (work-group size, local-memory bytes as a
+//!    [`QPoly`] over the tiles `add_prefetch` materializes, private
+//!    pressure, barrier count) checked against a
+//!    [`DeviceProfile`](crate::gpusim::DeviceProfile), yielding
+//!    [`DiagCode::WgSizeExceeded`], [`DiagCode::ExcessiveLocalMem`]
+//!    and the [`DiagCode::LowOccupancy`] warning.
+//! 6. **Transform equivalence** ([`equiv`]) — proves a transformed
+//!    kernel still computes what its baseline computes (per-array
+//!    write counts and footprints, read footprints, op volume at
+//!    sampled sizes), yielding [`DiagCode::SemanticsChanged`].
+//!
 //! The entry point is [`Analyzer::check`]; [`verify`] is the
-//! gate-shaped wrapper (`Err` on any Error-severity diagnostic) that
-//! `transform`/`uipick` tests and the future autotune pruning loop
-//! (ROADMAP item 3) call before pricing a candidate with the compiled
-//! evaluator.  `perflex lint` exposes the same pass on the CLI.
+//! gate-shaped wrapper (a typed [`AnalysisError`] on any
+//! Error-severity diagnostic) that `transform`/`uipick` tests call,
+//! and [`admissible`] is the complete pruning predicate — correctness
+//! + equivalence + feasibility — the autotune loop (ROADMAP item 3)
+//! applies per candidate before pricing it with the compiled
+//! evaluator.  `perflex lint [--device <id>|--all-devices]` exposes
+//! the same passes on the CLI.
 //!
 //! Every check degrades gracefully: a kernel that fails
 //! [`Kernel::validate`] or has structurally broken accesses gets a
 //! single [`DiagCode::MalformedKernel`] diagnostic instead of a panic
 //! (the hostile-input direction of ROADMAP item 5).
 
+pub mod equiv;
+pub mod resources;
+
+pub use equiv::check_equiv;
+pub use resources::{check_feasibility, Feasibility, ResourceUsage};
+
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
+use crate::gpusim::DeviceProfile;
 use crate::ir::{Access, IndexTag, Kernel, LhsRef, MemScope};
 use crate::polyhedral::qpoly::Atom;
-use crate::polyhedral::QPoly;
+use crate::polyhedral::{Assumptions, QPoly};
 use crate::schedule::{self, ScheduleItem};
 use crate::util::json::Json;
 use crate::util::Rat;
@@ -98,6 +122,20 @@ pub enum DiagCode {
     UnprovableGuard,
     /// The kernel failed structural validation; no further checks ran.
     MalformedKernel,
+    /// The kernel's work-group size exceeds the device's
+    /// `max_wg_size`: the launch would be rejected.
+    WgSizeExceeded,
+    /// The kernel's per-work-group local-memory footprint exceeds the
+    /// device's `local_mem_bytes_per_sm`: not even one work-group fits.
+    ExcessiveLocalMem,
+    /// The local-memory footprint caps resident work-groups per SM
+    /// below the device's nominal `wgs_per_sm` (advisory: the kernel
+    /// runs, but latency hiding degrades).
+    LowOccupancy,
+    /// A transform chain altered what the kernel computes relative to
+    /// its baseline (write set/count/footprint, read footprint, or op
+    /// volume differs at a sampled size).
+    SemanticsChanged,
 }
 
 impl DiagCode {
@@ -113,6 +151,10 @@ impl DiagCode {
             DiagCode::DeadArray => "DEAD_ARRAY",
             DiagCode::UnprovableGuard => "UNPROVABLE_GUARD",
             DiagCode::MalformedKernel => "MALFORMED_KERNEL",
+            DiagCode::WgSizeExceeded => "WG_SIZE_EXCEEDED",
+            DiagCode::ExcessiveLocalMem => "EXCESSIVE_LOCAL_MEM",
+            DiagCode::LowOccupancy => "LOW_OCCUPANCY",
+            DiagCode::SemanticsChanged => "SEMANTICS_CHANGED",
         }
     }
 
@@ -123,10 +165,14 @@ impl DiagCode {
             | DiagCode::MissingBarrier
             | DiagCode::DivergentBarrier
             | DiagCode::ScopeMisuse
-            | DiagCode::MalformedKernel => Severity::Error,
+            | DiagCode::MalformedKernel
+            | DiagCode::WgSizeExceeded
+            | DiagCode::ExcessiveLocalMem
+            | DiagCode::SemanticsChanged => Severity::Error,
             DiagCode::UnusedIname
             | DiagCode::DeadArray
-            | DiagCode::UnprovableGuard => Severity::Warn,
+            | DiagCode::UnprovableGuard
+            | DiagCode::LowOccupancy => Severity::Warn,
         }
     }
 
@@ -142,6 +188,10 @@ impl DiagCode {
             DiagCode::DeadArray,
             DiagCode::UnprovableGuard,
             DiagCode::MalformedKernel,
+            DiagCode::WgSizeExceeded,
+            DiagCode::ExcessiveLocalMem,
+            DiagCode::LowOccupancy,
+            DiagCode::SemanticsChanged,
         ]
     }
 }
@@ -208,28 +258,129 @@ pub fn error_count(diags: &[Diagnostic]) -> usize {
         .count()
 }
 
-/// Gate form: `Err` listing every Error-severity finding, `Ok` when
-/// the kernel is provably race-free, in-bounds, and barrier-correct
-/// (warnings do not fail the gate).  This is the pruning predicate the
-/// autotune loop (ROADMAP item 3) applies before pricing a variant.
-pub fn verify(knl: &Kernel) -> Result<Vec<Diagnostic>, String> {
+/// Why [`verify`] rejected a kernel.  Callers (the lint CLI's exit
+/// codes, the autotune loop) distinguish a *malformed* kernel — the
+/// input never was a valid GPU program, nothing else was checked —
+/// from a well-formed kernel the checks found defects in.
+#[derive(Clone, Debug)]
+pub enum AnalysisError {
+    /// Structural validation failed; carries the single
+    /// [`DiagCode::MalformedKernel`] diagnostic.
+    Malformed {
+        kernel: String,
+        diagnostic: Diagnostic,
+    },
+    /// The kernel is well-formed but at least one check found an
+    /// Error-severity defect; carries the full report.
+    Rejected {
+        kernel: String,
+        diagnostics: Vec<Diagnostic>,
+    },
+}
+
+impl AnalysisError {
+    pub fn kernel(&self) -> &str {
+        match self {
+            AnalysisError::Malformed { kernel, .. }
+            | AnalysisError::Rejected { kernel, .. } => kernel,
+        }
+    }
+
+    /// Every diagnostic behind the rejection.
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        match self {
+            AnalysisError::Malformed { diagnostic, .. } => {
+                std::slice::from_ref(diagnostic)
+            }
+            AnalysisError::Rejected { diagnostics, .. } => diagnostics,
+        }
+    }
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AnalysisError::Malformed { kernel, diagnostic } => {
+                write!(f, "kernel '{kernel}' is malformed: {diagnostic}")
+            }
+            AnalysisError::Rejected {
+                kernel,
+                diagnostics,
+            } => {
+                let errors: Vec<&Diagnostic> = diagnostics
+                    .iter()
+                    .filter(|d| d.severity() == Severity::Error)
+                    .collect();
+                write!(
+                    f,
+                    "kernel '{kernel}' failed static verification \
+                     ({} error(s)):",
+                    errors.len()
+                )?;
+                for e in errors {
+                    write!(f, "\n  {e}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+/// Gate form: a typed [`AnalysisError`] carrying every finding, `Ok`
+/// when the kernel is provably race-free, in-bounds, and
+/// barrier-correct (warnings do not fail the gate).
+pub fn verify(knl: &Kernel) -> Result<Vec<Diagnostic>, AnalysisError> {
     let diags = Analyzer::new().check(knl);
-    let errors: Vec<&Diagnostic> = diags
-        .iter()
+    if let Some(d) =
+        diags.iter().find(|d| d.code == DiagCode::MalformedKernel)
+    {
+        return Err(AnalysisError::Malformed {
+            kernel: knl.name.clone(),
+            diagnostic: d.clone(),
+        });
+    }
+    if error_count(&diags) == 0 {
+        return Ok(diags);
+    }
+    Err(AnalysisError::Rejected {
+        kernel: knl.name.clone(),
+        diagnostics: diags,
+    })
+}
+
+/// The complete autotune pruning predicate (ROADMAP item 3): is
+/// `candidate` — a transform-chain variant of `baseline` — correct,
+/// equivalent to the baseline, and launchable on `device`?  Runs
+/// [`Analyzer::check`], [`equiv::check_equiv`], and
+/// [`resources::check_feasibility`], and returns every Error-severity
+/// finding; `Ok(())` means the enumeration loop may price the
+/// candidate with the compiled evaluator.
+pub fn admissible(
+    baseline: &Kernel,
+    candidate: &Kernel,
+    device: &DeviceProfile,
+) -> Result<(), Vec<Diagnostic>> {
+    let mut diags = Analyzer::new().check(candidate);
+    // A malformed candidate already carries its one gating diagnostic;
+    // the sibling passes would only re-derive it.
+    if !diags.iter().any(|d| d.code == DiagCode::MalformedKernel) {
+        diags.extend(equiv::check_equiv(baseline, candidate));
+        match resources::check_feasibility(candidate, device) {
+            Ok(f) => diags.extend(f.diags),
+            Err(d) => diags.push(d),
+        }
+    }
+    let errors: Vec<Diagnostic> = diags
+        .into_iter()
         .filter(|d| d.severity() == Severity::Error)
         .collect();
     if errors.is_empty() {
-        return Ok(diags);
+        Ok(())
+    } else {
+        Err(errors)
     }
-    let mut msg = format!(
-        "kernel '{}' failed static verification ({} error(s)):",
-        knl.name,
-        errors.len()
-    );
-    for e in errors {
-        msg.push_str(&format!("\n  {e}"));
-    }
-    Err(msg)
 }
 
 /// The static verifier.  Stateless; `new()` + [`check`](Analyzer::check).
@@ -238,7 +389,7 @@ pub struct Analyzer;
 
 /// Interval of integer values an iname (or index expression) can take
 /// at one sample point.  `lo > hi` encodes an empty loop.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct Interval {
     lo: i128,
     hi: i128,
@@ -818,10 +969,21 @@ fn has_floor(q: &QPoly) -> bool {
 /// and an interior point.  Parameters without constraints default to a
 /// small non-degenerate value.
 fn sample_envs(knl: &Kernel) -> Vec<BTreeMap<String, i128>> {
+    sample_envs_from(&knl.params, &knl.assumptions)
+}
+
+/// [`sample_envs`] over an explicit parameter list and assumption set —
+/// the equivalence checker samples the *merged* assumptions of a
+/// baseline/candidate pair so both kernels are summarized at the same
+/// sizes.
+fn sample_envs_from(
+    params: &[String],
+    assumptions: &Assumptions,
+) -> Vec<BTreeMap<String, i128>> {
     let mut base: BTreeMap<String, i128> = BTreeMap::new();
-    for p in &knl.params {
-        let k = knl.assumptions.divisible.get(p).copied().unwrap_or(1).max(1);
-        let lo = knl.assumptions.min_value.get(p).copied().unwrap_or(0);
+    for p in params {
+        let k = assumptions.divisible.get(p).copied().unwrap_or(1).max(1);
+        let lo = assumptions.min_value.get(p).copied().unwrap_or(0);
         let mut v = lo.max(if k > 1 { k } else { 4 });
         v = v.div_euclid(k) * k + if v % k == 0 { 0 } else { k };
         base.insert(p.clone(), v.max(1));
@@ -934,32 +1096,66 @@ fn fmt_env(env: &BTreeMap<String, i128>) -> String {
     parts.join(", ")
 }
 
+/// One kernel's lint result: the verifier report plus per-device
+/// feasibility verdicts (empty unless `--device`/`--all-devices`).
+pub struct LintEntry {
+    pub kernel: String,
+    pub generator: String,
+    pub diags: Vec<Diagnostic>,
+    pub feasibility: Vec<resources::Feasibility>,
+}
+
+impl LintEntry {
+    /// Every diagnostic of the entry — verifier findings first, then
+    /// feasibility findings per device in device order.
+    pub fn all_diags(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags
+            .iter()
+            .chain(self.feasibility.iter().flat_map(|f| f.diags.iter()))
+    }
+}
+
 /// Render a lint report for a batch of kernels as stable JSON (the
-/// `perflex lint --json` payload, asserted in CI).
-pub fn report_to_json(entries: &[(String, String, Vec<Diagnostic>)]) -> Json {
+/// `perflex lint --json` payload, asserted in CI).  Schema version 2:
+/// each kernel gains a `feasibility` array (one object per checked
+/// device), and the top-level error/warning totals include feasibility
+/// findings.
+pub fn report_to_json(entries: &[LintEntry]) -> Json {
     let mut errors = 0i64;
     let mut warnings = 0i64;
     let kernels: Vec<Json> = entries
         .iter()
-        .map(|(kernel, generator, diags)| {
-            for d in diags {
+        .map(|e| {
+            for d in e.all_diags() {
                 match d.severity() {
                     Severity::Error => errors += 1,
                     Severity::Warn => warnings += 1,
                 }
             }
             Json::obj(vec![
-                ("kernel", kernel.as_str().into()),
-                ("generator", generator.as_str().into()),
+                ("kernel", e.kernel.as_str().into()),
+                ("generator", e.generator.as_str().into()),
                 (
                     "diagnostics",
-                    Json::Arr(diags.iter().map(Diagnostic::to_json).collect()),
+                    Json::Arr(
+                        e.diags.iter().map(Diagnostic::to_json).collect(),
+                    ),
+                ),
+                (
+                    "feasibility",
+                    Json::Arr(
+                        e.feasibility
+                            .iter()
+                            .map(resources::Feasibility::to_json)
+                            .collect(),
+                    ),
                 ),
             ])
         })
         .collect();
     Json::obj(vec![
         ("schema", "perflex-lint".into()),
+        ("version", 2i64.into()),
         ("kernels", Json::Arr(kernels)),
         ("errors", errors.into()),
         ("warnings", warnings.into()),
@@ -991,6 +1187,10 @@ mod tests {
                 "DEAD_ARRAY",
                 "UNPROVABLE_GUARD",
                 "MALFORMED_KERNEL",
+                "WG_SIZE_EXCEEDED",
+                "EXCESSIVE_LOCAL_MEM",
+                "LOW_OCCUPANCY",
+                "SEMANTICS_CHANGED",
             ]
         );
     }
@@ -1012,7 +1212,13 @@ mod tests {
         ));
         let diags = Analyzer::new().check(&k);
         assert_eq!(codes(&diags), vec!["MALFORMED_KERNEL"]);
-        assert!(verify(&k).is_err());
+        match verify(&k) {
+            Err(AnalysisError::Malformed { kernel, diagnostic }) => {
+                assert_eq!(kernel, "bad_rank");
+                assert_eq!(diagnostic.code, DiagCode::MalformedKernel);
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1056,9 +1262,16 @@ mod tests {
             object: Some("a".into()),
             message: "m".into(),
         };
-        let j = report_to_json(&[("k".into(), "g".into(), vec![d])]);
+        let j = report_to_json(&[LintEntry {
+            kernel: "k".into(),
+            generator: "g".into(),
+            diags: vec![d],
+            feasibility: vec![],
+        }]);
         let text = j.to_string();
         assert!(text.contains("\"schema\":\"perflex-lint\""), "{text}");
+        assert!(text.contains("\"version\":2"), "{text}");
+        assert!(text.contains("\"feasibility\":[]"), "{text}");
         assert!(text.contains("\"code\":\"RACE_WRITE\""), "{text}");
         assert!(text.contains("\"errors\":1"), "{text}");
     }

@@ -1,0 +1,350 @@
+//! Symbolic per-kernel resource model and device feasibility check.
+//!
+//! Derives what a kernel asks of the hardware — work-group size,
+//! local-memory footprint in bytes (a [`QPoly`] over the array shapes
+//! `add_prefetch` materializes), private/temporary pressure, and
+//! barrier count — and checks it against a
+//! [`DeviceProfile`](crate::gpusim::DeviceProfile)'s published limits
+//! (`max_wg_size`, `local_mem_bytes_per_sm`, `wgs_per_sm`).  This is
+//! the "can this device even launch it?" half of the autotune pruning
+//! predicate [`admissible`](super::admissible): the simulator rejects
+//! an oversized launch at run time ([`crate::gpusim::exec`]), but the
+//! enumeration loop needs the same answer for free, before pricing.
+//!
+//! The checks mirror the pruning practice of autotuning-space search
+//! (arxiv 2102.05299): a candidate that cannot launch, or that fits
+//! but starves the SM of resident work-groups, is discarded or
+//! deprioritized without ever being measured.
+
+use super::{sample_envs, Analyzer, DiagCode, Diagnostic};
+use crate::gpusim::DeviceProfile;
+use crate::ir::{IndexTag, Kernel, MemScope};
+use crate::polyhedral::QPoly;
+use crate::schedule;
+use crate::util::json::Json;
+
+/// What one kernel asks of the hardware, derived symbolically.
+#[derive(Clone, Debug)]
+pub struct ResourceUsage {
+    /// Work-items per work-group (product of local-axis extents; local
+    /// extents are constant by construction).
+    pub wg_size: u64,
+    /// Bytes of local (shared/LDS) memory per work-group: the summed
+    /// byte sizes of every `Local`-scope array.  Symbolic in the
+    /// problem-size parameters when a tile shape is.
+    pub local_mem_bytes: QPoly,
+    /// Bytes of private storage per work-item: `Private`-scope arrays
+    /// plus scalar temporaries.  Advisory — register allocation is out
+    /// of scope for a black-box model — but recorded so tooling can
+    /// see a transform's private-pressure trend.
+    pub private_bytes: QPoly,
+    /// Barriers one work-item passes per kernel launch (from the
+    /// linearized schedule).
+    pub barriers_per_item: QPoly,
+}
+
+/// One kernel × one device: the derived usage, the resident-group
+/// bound, and any limit violations.
+#[derive(Clone, Debug)]
+pub struct Feasibility {
+    /// Device id the verdict is for.
+    pub device: String,
+    pub usage: ResourceUsage,
+    /// Work-groups resident per SM once the local-memory footprint is
+    /// applied to `wgs_per_sm` (`None` when the footprint stays
+    /// symbolic at every sample size; 0 when nothing fits).
+    pub resident_wgs: Option<u64>,
+    /// Feasibility findings for this device (empty = launchable at
+    /// full nominal occupancy).
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Feasibility {
+    /// True when the kernel can launch on the device (no
+    /// Error-severity finding; warnings allowed).
+    pub fn launchable(&self) -> bool {
+        super::error_count(&self.diags) == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lmem = match self.usage.local_mem_bytes.as_constant() {
+            Some(r) => (r.floor() as f64).into(),
+            None => self.usage.local_mem_bytes.to_string().into(),
+        };
+        Json::obj(vec![
+            ("device", self.device.as_str().into()),
+            ("wg_size", (self.usage.wg_size as f64).into()),
+            ("local_mem_bytes", lmem),
+            (
+                "barriers_per_item",
+                self.usage.barriers_per_item.to_string().into(),
+            ),
+            (
+                "resident_wgs",
+                match self.resident_wgs {
+                    Some(n) => (n as f64).into(),
+                    None => Json::Null,
+                },
+            ),
+            ("launchable", self.launchable().into()),
+            (
+                "diagnostics",
+                Json::Arr(self.diags.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Derive the symbolic resource usage of a kernel.  `Err` carries a
+/// single [`DiagCode::MalformedKernel`] diagnostic when the kernel is
+/// structurally broken or unschedulable (same degradation contract as
+/// [`Analyzer::check`]).
+pub fn usage(knl: &Kernel) -> Result<ResourceUsage, Diagnostic> {
+    let gate = Analyzer::new();
+    if let Some(d) = gate.structural_gate(knl) {
+        return Err(d);
+    }
+
+    // Work-group size: max constant extent per local axis, multiplied
+    // across axes.  Mirrors `Kernel::lsize` but degrades to a
+    // diagnostic instead of panicking on a non-constant local extent.
+    let mut wg_size = 1u64;
+    for axis in 0..3u8 {
+        let mut axis_extent = 1u64;
+        for iname in knl.inames_with_tag(IndexTag::Local(axis)) {
+            let l = knl
+                .domain
+                .loops
+                .iter()
+                .find(|l| l.var == iname)
+                .expect("validate() checked tagged inames exist");
+            let ext = knl.assumptions.simplify(&l.extent());
+            match ext.as_constant().and_then(|r| r.as_integer()) {
+                Some(v) if v >= 1 => axis_extent = axis_extent.max(v as u64),
+                _ => {
+                    return Err(gate.malformed(
+                        knl,
+                        format!(
+                            "local iname '{iname}' has non-constant extent \
+                             {ext}: the work-group size is undefined"
+                        ),
+                    ))
+                }
+            }
+        }
+        wg_size = wg_size.saturating_mul(axis_extent);
+    }
+
+    let mut local_mem_bytes = QPoly::zero();
+    let mut private_bytes = QPoly::zero();
+    for a in knl.arrays.values() {
+        let bytes = a
+            .size_elems()
+            .scale(crate::util::Rat::int(a.dtype.size_bytes() as i128));
+        match a.scope {
+            MemScope::Local => local_mem_bytes = &local_mem_bytes + &bytes,
+            MemScope::Private => private_bytes = &private_bytes + &bytes,
+            MemScope::Global => {}
+        }
+    }
+    for t in knl.temps.values() {
+        private_bytes = &private_bytes
+            + &QPoly::int(t.dtype.size_bytes() as i128);
+    }
+    local_mem_bytes = knl.assumptions.simplify(&local_mem_bytes);
+    private_bytes = knl.assumptions.simplify(&private_bytes);
+
+    let barriers_per_item = match schedule::linearize(knl) {
+        Ok(s) => knl.assumptions.simplify(&s.barrier_count(knl)),
+        Err(e) => {
+            return Err(gate.malformed(knl, format!("unschedulable: {e}")))
+        }
+    };
+
+    Ok(ResourceUsage {
+        wg_size,
+        local_mem_bytes,
+        private_bytes,
+        barriers_per_item,
+    })
+}
+
+/// Largest value the footprint takes over the kernel's sample sizes
+/// (the same assumption-derived envs the race/bounds checks use).
+fn max_sampled_bytes(q: &QPoly, knl: &Kernel) -> Option<i128> {
+    if let Some(r) = q.as_constant() {
+        return Some(r.floor());
+    }
+    let mut best: Option<i128> = None;
+    for env in sample_envs(knl) {
+        if let Ok(v) = q.try_eval(&env) {
+            let v = v.floor();
+            best = Some(best.map_or(v, |b| b.max(v)));
+        }
+    }
+    best
+}
+
+/// Check a kernel's derived usage against one device's limits.  `Err`
+/// carries the [`DiagCode::MalformedKernel`] diagnostic when usage
+/// derivation itself failed.
+pub fn check_feasibility(
+    knl: &Kernel,
+    dev: &DeviceProfile,
+) -> Result<Feasibility, Diagnostic> {
+    let usage = usage(knl)?;
+    let mut diags = Vec::new();
+
+    if usage.wg_size > dev.max_wg_size {
+        diags.push(Diagnostic {
+            code: DiagCode::WgSizeExceeded,
+            kernel: knl.name.clone(),
+            stmt: None,
+            object: Some(dev.id.to_string()),
+            message: format!(
+                "work-group size {} exceeds max_wg_size {} on {}: the \
+                 launch would be rejected",
+                usage.wg_size, dev.max_wg_size, dev.id
+            ),
+        });
+    }
+
+    let budget = dev.local_mem_bytes_per_sm as i128;
+    let lmem = max_sampled_bytes(&usage.local_mem_bytes, knl);
+    let mut resident_wgs = Some(dev.wgs_per_sm);
+    match lmem {
+        Some(bytes) if bytes > budget => {
+            resident_wgs = Some(0);
+            diags.push(Diagnostic {
+                code: DiagCode::ExcessiveLocalMem,
+                kernel: knl.name.clone(),
+                stmt: None,
+                object: Some(dev.id.to_string()),
+                message: format!(
+                    "local-memory footprint {} = {} B per work-group \
+                     exceeds local_mem_bytes_per_sm {} B on {}: not even \
+                     one work-group fits",
+                    usage.local_mem_bytes, bytes, budget, dev.id
+                ),
+            });
+        }
+        Some(bytes) if bytes > 0 => {
+            let fit = (budget / bytes) as u64;
+            if fit < dev.wgs_per_sm {
+                resident_wgs = Some(fit);
+                diags.push(Diagnostic {
+                    code: DiagCode::LowOccupancy,
+                    kernel: knl.name.clone(),
+                    stmt: None,
+                    object: Some(dev.id.to_string()),
+                    message: format!(
+                        "local-memory footprint {} = {} B caps residency \
+                         at {} work-group(s)/SM on {} (nominal wgs_per_sm \
+                         {}): latency hiding degrades",
+                        usage.local_mem_bytes, bytes, fit, dev.id,
+                        dev.wgs_per_sm
+                    ),
+                });
+            }
+        }
+        Some(_) => {}
+        None => {
+            // Symbolic at every sample size: record the unknown rather
+            // than guessing (parameters involved are named so the
+            // caller can constrain them).
+            resident_wgs = None;
+            let vars: Vec<String> =
+                usage.local_mem_bytes.vars().into_iter().collect();
+            diags.push(Diagnostic {
+                code: DiagCode::ExcessiveLocalMem,
+                kernel: knl.name.clone(),
+                stmt: None,
+                object: Some(dev.id.to_string()),
+                message: format!(
+                    "local-memory footprint {} could not be bounded (free \
+                     parameters: {}) against local_mem_bytes_per_sm {} B \
+                     on {}",
+                    usage.local_mem_bytes,
+                    vars.join(", "),
+                    budget,
+                    dev.id
+                ),
+            });
+        }
+    }
+
+    Ok(Feasibility {
+        device: dev.id.to_string(),
+        usage,
+        resident_wgs,
+        diags,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_id;
+    use crate::ir::{Access, AffExpr, ArrayDecl, DType, Expr, LhsRef, Stmt};
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+
+    /// One local tile of `elems` f32 entries, written per work-item.
+    fn lmem_kernel(elems: i128) -> Kernel {
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to(
+            "li",
+            QPoly::int(16),
+        )]);
+        let mut k = Kernel::new("lmem_case", &[], dom);
+        k.iname_tags.insert("li".into(), IndexTag::Local(0));
+        k.add_array(ArrayDecl::local(
+            "tile",
+            DType::F32,
+            vec![QPoly::int(elems)],
+        ));
+        k.add_stmt(Stmt::new(
+            "w",
+            LhsRef::Array(Access::new("tile", vec![AffExpr::var("li")])),
+            Expr::fconst(1.0),
+            &["li"],
+        ));
+        k
+    }
+
+    #[test]
+    fn usage_derives_symbolic_local_footprint() {
+        let k = lmem_kernel(256);
+        let u = usage(&k).unwrap();
+        assert_eq!(u.wg_size, 16);
+        assert_eq!(
+            u.local_mem_bytes.as_constant().unwrap(),
+            crate::util::Rat::int(1024)
+        );
+        assert!(u.barriers_per_item.is_zero());
+    }
+
+    #[test]
+    fn excessive_local_mem_flags_oversized_tile() {
+        // 2^18 f32 = 1 MiB: over every device's budget.
+        let k = lmem_kernel(1 << 18);
+        let f =
+            check_feasibility(&k, &device_by_id("titan_v").unwrap()).unwrap();
+        assert!(!f.launchable());
+        assert_eq!(f.resident_wgs, Some(0));
+        assert_eq!(f.diags.len(), 1);
+        assert_eq!(f.diags[0].code, DiagCode::ExcessiveLocalMem);
+        assert!(f.diags[0].message.contains("98304"), "{}", f.diags[0]);
+    }
+
+    #[test]
+    fn low_occupancy_warns_but_stays_launchable() {
+        // 6000 f32 = 24000 B: 2 groups fit in Kepler's 48 KiB, below
+        // the nominal 8.
+        let k = lmem_kernel(6000);
+        let f = check_feasibility(&k, &device_by_id("tesla_k40c").unwrap())
+            .unwrap();
+        assert!(f.launchable());
+        assert_eq!(f.resident_wgs, Some(2));
+        assert_eq!(f.diags.len(), 1);
+        assert_eq!(f.diags[0].code, DiagCode::LowOccupancy);
+    }
+}

@@ -26,10 +26,17 @@ pub struct DeviceProfile {
     /// Compute units (SMs / CUs).
     pub sm_count: u64,
     pub clock_ghz: f64,
-    /// OpenCL max work-group size (AMD: 256 — blocks the 18x18 stencil).
+    /// OpenCL max work-group size (AMD: 256 — blocks the 18x18
+    /// stencil; `analysis::resources` enforces this statically via
+    /// `WG_SIZE_EXCEEDED`).
     pub max_wg_size: u64,
     /// Resident work-groups per SM (256-item groups).
     pub wgs_per_sm: u64,
+    /// Local (shared/LDS) memory per SM in bytes.  Bounds a kernel's
+    /// local footprint (`EXCESSIVE_LOCAL_MEM`) and, divided by the
+    /// per-group footprint, the resident work-groups that feed
+    /// `LOW_OCCUPANCY`.
+    pub local_mem_bytes_per_sm: u64,
     /// f32 FMA lanes per SM per cycle (peak FLOP/s = 2x this x SMs x clock).
     pub fma_lanes_per_sm: u64,
     /// f32 div throughput lanes per SM per cycle.
@@ -105,6 +112,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             clock_ghz: 1.2,
             max_wg_size: 1024,
             wgs_per_sm: 8,
+            // Volta: 96 KiB unified shared memory per SM.
+            local_mem_bytes_per_sm: 98_304,
             fma_lanes_per_sm: 64,
             div_lanes_per_sm: 16,
             f64_ratio: 0.5,
@@ -137,6 +146,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             clock_ghz: 1.0,
             max_wg_size: 1024,
             wgs_per_sm: 8,
+            // Maxwell: 96 KiB dedicated shared memory per SM.
+            local_mem_bytes_per_sm: 98_304,
             fma_lanes_per_sm: 128,
             div_lanes_per_sm: 32,
             f64_ratio: 1.0 / 32.0,
@@ -169,6 +180,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             clock_ghz: 0.745,
             max_wg_size: 1024,
             wgs_per_sm: 8,
+            // Kepler: 48 KiB shared (of the 64 KiB L1/shared split).
+            local_mem_bytes_per_sm: 49_152,
             fma_lanes_per_sm: 192,
             div_lanes_per_sm: 32,
             f64_ratio: 1.0 / 3.0,
@@ -203,6 +216,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             clock_ghz: 1.15,
             max_wg_size: 1024,
             wgs_per_sm: 8,
+            // Fermi: 48 KiB shared (of the 64 KiB L1/shared split).
+            local_mem_bytes_per_sm: 49_152,
             fma_lanes_per_sm: 32,
             div_lanes_per_sm: 8,
             f64_ratio: 0.5,
@@ -239,6 +254,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             // The paper could not run the 18x18 stencil variant here.
             max_wg_size: 256,
             wgs_per_sm: 8,
+            // GCN3: 64 KiB LDS per CU.
+            local_mem_bytes_per_sm: 65_536,
             fma_lanes_per_sm: 64,
             div_lanes_per_sm: 16,
             f64_ratio: 1.0 / 16.0,
@@ -348,5 +365,23 @@ mod tests {
     fn amd_work_group_limit() {
         assert_eq!(device_by_id("amd_r9_fury").unwrap().max_wg_size, 256);
         assert!(device_by_id("titan_v").unwrap().max_wg_size >= 1024);
+    }
+
+    #[test]
+    fn local_mem_budgets_match_spec_sheets() {
+        let expect = [
+            ("titan_v", 96 * 1024),
+            ("gtx_titan_x", 96 * 1024),
+            ("tesla_k40c", 48 * 1024),
+            ("tesla_c2070", 48 * 1024),
+            ("amd_r9_fury", 64 * 1024),
+        ];
+        for (id, bytes) in expect {
+            assert_eq!(
+                device_by_id(id).unwrap().local_mem_bytes_per_sm,
+                bytes,
+                "{id}"
+            );
+        }
     }
 }

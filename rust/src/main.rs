@@ -9,7 +9,8 @@
 //! perflex list-devices                    the simulated fleet (Table 2)
 //! perflex gen <tag>...                    generate measurement kernels
 //! perflex show <tag>...                   print kernel schedule listings
-//! perflex lint [--json] [tag...]          static kernel verifier
+//! perflex lint [--json] [--device <id>|--all-devices] [tag...]
+//!                                         static kernel verifier
 //! perflex measure <device> <tag>... [--store <dir>]
 //! perflex calibrate <case> <device> [--store <dir>] [--target <name>]
 //! perflex predict <case> <device> <variant> <k=v>... [--store <dir>]
@@ -21,10 +22,17 @@
 //!
 //! `lint` runs the static kernel verifier (`perflex::analysis`) over
 //! the generated kernel inventory (all generators when no tags are
-//! given), deduplicated by structural fingerprint.  Error-severity
-//! findings (races, out-of-bounds accesses, barrier defects, scope
-//! misuse) make the command exit non-zero; `--json` emits the stable
-//! `perflex-lint` report document instead of the human listing.
+//! given), deduplicated by structural fingerprint.  `--device <id>`
+//! (or `--all-devices`) additionally checks every kernel's derived
+//! resource usage — work-group size, local-memory bytes, barrier
+//! count — against the device's limits and prints per-device
+//! feasibility lines; `--json` emits the stable `perflex-lint` report
+//! document (schema version 2: per-kernel `feasibility` arrays)
+//! instead of the human listing.  Exit codes are typed: 1 =
+//! Error-severity findings (races, out-of-bounds accesses, barrier
+//! defects, infeasible launches), 3 = a structurally malformed kernel
+//! (`MALFORMED_KERNEL` — the input never was a valid GPU program),
+//! 2 = usage or internal errors (every other command's failure code).
 //!
 //! `--target <name>` selects the response variable `calibrate` fits
 //! and `predict` predicts: `time` (the default), `energy` or
@@ -76,19 +84,42 @@ fn main() {
     let code = match dispatch(args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e}");
-            2
+            eprintln!("error: {}", e.msg);
+            e.code
         }
     };
     std::process::exit(code);
+}
+
+/// A CLI failure carrying its process exit code.  2 is the historical
+/// catch-all (usage mistakes, internal errors); `lint` distinguishes
+/// defect findings (1) from malformed input kernels (3) so scripts —
+/// and the autotune driver — can tell "your kernel is wrong" from
+/// "your kernel is not a kernel".
+struct CliError {
+    code: i32,
+    msg: String,
+}
+
+impl From<String> for CliError {
+    fn from(msg: String) -> CliError {
+        CliError { code: 2, msg }
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(msg: &str) -> CliError {
+        CliError::from(msg.to_string())
+    }
 }
 
 fn usage() -> String {
     "usage: perflex <command> [...]\n\
      commands: list-generators | list-devices | gen | show | lint | \
      measure | calibrate | predict | experiment | store\n\
-     lint [--json] [tag...] statically verifies kernels (races, bounds, \
-     barriers)\n\
+     lint [--json] [--device <id>|--all-devices] [tag...] statically \
+     verifies kernels (races, bounds, barriers) and, per device, launch \
+     feasibility (work-group size, local memory, occupancy)\n\
      global flag: --store <dir> persists calibration artifacts across runs\n\
      calibrate/predict flag: --target time|energy|avg_power (default: time)\n\
      predict flag: --sweep k=lo..hi[:step] emits one JSON row per point\n\
@@ -170,7 +201,7 @@ fn print_store_ledger(store: &perflex::session::ArtifactStore) {
     println!("store lock: {locks} acquisitions, {contended} contended");
 }
 
-fn dispatch(mut args: Vec<String>) -> Result<(), String> {
+fn dispatch(mut args: Vec<String>) -> Result<(), CliError> {
     let store_dir = take_flag_value(&mut args, "--store")?;
     let cmd = args.first().cloned().ok_or_else(usage)?;
     let mut rest: Vec<String> = args[1..].to_vec();
@@ -222,38 +253,100 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "lint" => {
+            use perflex::analysis::{self, DiagCode, LintEntry, Severity};
             let json = take_flag(&mut rest, "--json");
+            let all_devices = take_flag(&mut rest, "--all-devices");
+            let device_flag = take_flag_value(&mut rest, "--device")?;
+            if all_devices && device_flag.is_some() {
+                return Err(
+                    "pass either --device <id> or --all-devices, not both"
+                        .into(),
+                );
+            }
+            // Devices to run the feasibility pass against (none by
+            // default: correctness checks are device-independent).
+            let devices: Vec<perflex::gpusim::DeviceProfile> = if all_devices {
+                fleet()
+            } else {
+                match device_flag {
+                    Some(id) => vec![device_by_id(&id)
+                        .ok_or_else(|| format!("unknown device '{id}'"))?],
+                    None => Vec::new(),
+                }
+            };
             let tags: Vec<&str> = rest.iter().map(|s| s.as_str()).collect();
             // No tags = lint the whole inventory: every generator with
             // its full argument product, deduplicated structurally so
             // size-only twins verify once.
             let knls = KernelCollection::all().generate_kernels(&tags)?;
-            let analyzer = perflex::analysis::Analyzer::new();
+            let analyzer = analysis::Analyzer::new();
             let mut seen = std::collections::BTreeSet::new();
-            let mut entries = Vec::new();
+            let mut entries: Vec<LintEntry> = Vec::new();
             for k in &knls {
                 if !seen.insert(k.kernel.fingerprint()) {
                     continue;
                 }
                 let diags = analyzer.check(&k.kernel);
-                entries.push((k.kernel.name.clone(), k.generator.clone(), diags));
+                // A malformed kernel's one diagnostic already gates
+                // everything; feasibility would just re-derive it.
+                let feasibility = if diags
+                    .iter()
+                    .any(|d| d.code == DiagCode::MalformedKernel)
+                {
+                    Vec::new()
+                } else {
+                    devices
+                        .iter()
+                        .filter_map(|d| {
+                            analysis::check_feasibility(&k.kernel, d).ok()
+                        })
+                        .collect()
+                };
+                entries.push(LintEntry {
+                    kernel: k.kernel.name.clone(),
+                    generator: k.generator.clone(),
+                    diags,
+                    feasibility,
+                });
             }
-            let errors: usize = entries
-                .iter()
-                .map(|(_, _, d)| perflex::analysis::error_count(d))
-                .sum();
-            let warnings: usize =
-                entries.iter().map(|(_, _, d)| d.len()).sum::<usize>() - errors;
+            let mut errors = 0usize;
+            let mut warnings = 0usize;
+            for e in &entries {
+                for d in e.all_diags() {
+                    match d.severity() {
+                        Severity::Error => errors += 1,
+                        Severity::Warn => warnings += 1,
+                    }
+                }
+            }
             if json {
-                println!("{}", perflex::analysis::report_to_json(&entries));
+                println!("{}", analysis::report_to_json(&entries));
             } else {
-                for (kernel, generator, diags) in &entries {
-                    if diags.is_empty() {
-                        println!("{kernel:<28} [{generator}] OK");
+                for e in &entries {
+                    let clean = e.all_diags().next().is_none();
+                    if clean {
+                        println!("{:<28} [{}] OK", e.kernel, e.generator);
                     } else {
-                        println!("{kernel:<28} [{generator}]");
-                        for d in diags {
+                        println!("{:<28} [{}]", e.kernel, e.generator);
+                        for d in &e.diags {
                             println!("    {d}");
+                        }
+                    }
+                    for f in &e.feasibility {
+                        let resident = match f.resident_wgs {
+                            Some(n) => n.to_string(),
+                            None => "?".to_string(),
+                        };
+                        println!(
+                            "    @{:<12} wg {:>4}  lmem {:>6} B  \
+                             resident {resident}/SM  {}",
+                            f.device,
+                            f.usage.wg_size,
+                            f.usage.local_mem_bytes,
+                            if f.launchable() { "ok" } else { "INFEASIBLE" }
+                        );
+                        for d in &f.diags {
+                            println!("        {d}");
                         }
                     }
                 }
@@ -264,11 +357,32 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                     warnings
                 );
             }
+            let malformed = entries
+                .iter()
+                .filter(|e| {
+                    e.diags
+                        .iter()
+                        .any(|d| d.code == DiagCode::MalformedKernel)
+                })
+                .count();
+            if malformed > 0 {
+                return Err(CliError {
+                    code: 3,
+                    msg: format!(
+                        "lint hit {malformed} malformed kernel(s) across {} \
+                         kernel(s)",
+                        entries.len()
+                    ),
+                });
+            }
             if errors > 0 {
-                return Err(format!(
-                    "lint found {errors} error(s) across {} kernel(s)",
-                    entries.len()
-                ));
+                return Err(CliError {
+                    code: 1,
+                    msg: format!(
+                        "lint found {errors} error(s) across {} kernel(s)",
+                        entries.len()
+                    ),
+                });
             }
             Ok(())
         }
@@ -390,7 +504,8 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                             "size variable '{}' is both swept (--sweep) and \
                              fixed ({}={fixed}); drop one of the two",
                             sw.var, sw.var
-                        ));
+                        )
+                        .into());
                     }
                 }
                 let kernel = build_variant(case_id, variant)?.freeze();
@@ -504,7 +619,8 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                 return Err(format!(
                     "store directory '{dir}' does not exist (store \
                      ls/stat/gc never create one)"
-                ));
+                )
+                .into());
             }
             let store = perflex::session::ArtifactStore::open(&dir)?;
             // Fits are reachable while this binary can still mint their
@@ -612,7 +728,7 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                         Err("store index does not match a full rebuild scan \
                              (a `store gc` checkpoint, or the next open's \
                              rebuild, will heal it)"
-                            .to_string())
+                            .into())
                     }
                 }
                 "gc" => {
@@ -655,14 +771,15 @@ fn dispatch(mut args: Vec<String>) -> Result<(), String> {
                 other => Err(format!(
                     "unknown store subcommand '{other}' \
                      (ls|stat|verify|gc|compact)"
-                )),
+                )
+                .into()),
             }
         }
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
         }
-        other => Err(format!("unknown command '{other}'\n{}", usage())),
+        other => Err(format!("unknown command '{other}'\n{}", usage()).into()),
     }
 }
 

@@ -5,7 +5,7 @@
 //! `floor(poly / d)` term — exactly the quasi-polynomial class that
 //! integer point counts of parametric polytopes live in (Barvinok 1994).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::ops::{Add, Mul, Neg, Sub};
 
@@ -236,6 +236,27 @@ impl QPoly {
                 Atom::Floor { num, .. } => num.mentions(name),
             })
         })
+    }
+
+    /// Every named variable mentioned anywhere in the polynomial,
+    /// including inside floor atoms.  Diagnostics use this to name the
+    /// parameters a symbolic resource bound depends on.
+    pub fn vars(&self) -> BTreeSet<String> {
+        fn collect(q: &QPoly, out: &mut BTreeSet<String>) {
+            for m in q.terms.keys() {
+                for (a, _) in &m.0 {
+                    match a {
+                        Atom::Var(v) => {
+                            out.insert(v.clone());
+                        }
+                        Atom::Floor { num, .. } => collect(num, out),
+                    }
+                }
+            }
+        }
+        let mut out = BTreeSet::new();
+        collect(self, &mut out);
+        out
     }
 
     /// Substitute `name := value`, including occurrences inside floor
@@ -531,6 +552,15 @@ mod tests {
         assert_eq!(p.as_constant(), Some(Rat::int(7)));
         let q = &p - &p;
         assert!(q.is_zero());
+    }
+
+    #[test]
+    fn vars_sees_inside_floor_atoms() {
+        let p = &(&QPoly::var("n") * &QPoly::var("m"))
+            + &QPoly::var("k").floor_div(16);
+        let vars: Vec<String> = p.vars().into_iter().collect();
+        assert_eq!(vars, vec!["k", "m", "n"]);
+        assert!(QPoly::int(7).vars().is_empty());
     }
 
     #[test]

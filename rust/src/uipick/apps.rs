@@ -5,6 +5,10 @@
 //!
 //! Builders are public: the experiment coordinator uses them directly
 //! to construct the kernels whose execution times the models predict.
+//! Each `build_*` transform chain starts from a public `*_base`
+//! untransformed kernel — the baseline `analysis::equiv` certifies the
+//! chain against (and the autotuner's reference when enumerating
+//! alternative chains over the same computation).
 
 use std::collections::BTreeMap;
 
@@ -17,9 +21,10 @@ use crate::transform::{
     add_prefetch, assume, prioritize_loops, split_iname, tag_data_axes, tag_inames,
 };
 
-/// §2.1 / §8.3: square matmul `c = a @ b` with 16x16 work-groups,
-/// optionally prefetching 16x16 tiles of both inputs into local memory.
-pub fn build_matmul(dtype: DType, prefetch: bool, tile: i64) -> Result<Kernel, String> {
+/// Untransformed square matmul `c = a @ b`: the plain `i, j, k` triple
+/// loop [`build_matmul`]'s transform chain starts from.  `prefetch`
+/// only selects the variant's name and memory-access tags.
+pub fn matmul_base(dtype: DType, prefetch: bool) -> Kernel {
     let n = QPoly::var("n");
     let dom = NestedDomain::new(vec![
         LoopExtent::zero_to("i", n.clone()),
@@ -80,6 +85,13 @@ pub fn build_matmul(dtype: DType, prefetch: bool, tile: i64) -> Result<Kernel, S
         )
         .with_deps(&["upd"]),
     );
+    knl
+}
+
+/// §2.1 / §8.3: square matmul `c = a @ b` with 16x16 work-groups,
+/// optionally prefetching 16x16 tiles of both inputs into local memory.
+pub fn build_matmul(dtype: DType, prefetch: bool, tile: i64) -> Result<Kernel, String> {
+    let knl = matmul_base(dtype, prefetch);
     let knl = assume(&knl, &format!("n >= {tile} and n % {tile} = 0"))?;
     let knl = split_iname(&knl, "i", tile)?;
     let knl = split_iname(&knl, "j", tile)?;
@@ -126,11 +138,12 @@ impl DgVariant {
     }
 }
 
-/// §8.4: `res[m, e, i] = Σ_j diff_mat[m, i, j] * u[e, j]` over
-/// `nelements` elements with `nunit_nodes` nodes and `nmatrices`
-/// differentiation matrices; element index parallelized over
-/// (g.0, l.0), node index over (g.1, l.1).
-pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kernel, String> {
+/// Untransformed DG differentiation kernel: the loop nest
+/// [`build_dg`]'s transform chain starts from.  The `UPrefetch`
+/// variant already differs structurally here (duplicated init/store
+/// `m` loops, private per-`m` accumulator array), so the baseline is
+/// per-variant.
+pub fn dg_base(variant: DgVariant, nunit_nodes: i64) -> Kernel {
     let nel = QPoly::var("nelements");
     let nmat = QPoly::var("nmatrices");
     let nun = QPoly::int(nunit_nodes as i128);
@@ -191,8 +204,6 @@ pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kern
         DgVariant::MPrefetchT => "dg_res_t",
         _ => "dg_res",
     };
-    let vtag = res_tag.to_string(); // reuse helper name below
-    let _ = &vtag;
     let dm_ld = Expr::load(Access::tagged(
         "diff_mat",
         dm_tag,
@@ -279,7 +290,15 @@ pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kern
             .with_deps(&["upd"]),
         );
     }
+    knl
+}
 
+/// §8.4: `res[m, e, i] = Σ_j diff_mat[m, i, j] * u[e, j]` over
+/// `nelements` elements with `nunit_nodes` nodes and `nmatrices`
+/// differentiation matrices; element index parallelized over
+/// (g.0, l.0), node index over (g.1, l.1).
+pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kernel, String> {
+    let knl = dg_base(variant, nunit_nodes);
     let knl = assume(
         &knl,
         &format!("nelements >= {lsize} and nelements % {lsize} = 0"),
@@ -313,12 +332,11 @@ pub fn build_dg(variant: DgVariant, nunit_nodes: i64, lsize: i64) -> Result<Kern
     Ok(knl)
 }
 
-/// §8.5: 2-D five-point stencil with bounding-box prefetch.  `lsize` is
-/// the work-group edge (16 or 18); tiles of `(lsize-2)^2` interior
-/// points are computed per work-group.
-pub fn build_fdiff(lsize: i64) -> Result<Kernel, String> {
+/// Untransformed 2-D five-point stencil: the plain `i, j` nest
+/// [`build_fdiff`]'s transform chain starts from.  `lsize` only
+/// selects the variant's name and memory-access tags.
+pub fn fdiff_base(lsize: i64) -> Kernel {
     let n = QPoly::var("n");
-    let interior = lsize - 2;
     let dom = NestedDomain::new(vec![
         LoopExtent::zero_to("i", n.clone()),
         LoopExtent::zero_to("j", n.clone()),
@@ -363,6 +381,15 @@ pub fn build_fdiff(lsize: i64) -> Result<Kernel, String> {
         rhs,
         &["i", "j"],
     ));
+    knl
+}
+
+/// §8.5: 2-D five-point stencil with bounding-box prefetch.  `lsize` is
+/// the work-group edge (16 or 18); tiles of `(lsize-2)^2` interior
+/// points are computed per work-group.
+pub fn build_fdiff(lsize: i64) -> Result<Kernel, String> {
+    let interior = lsize - 2;
+    let knl = fdiff_base(lsize);
     let knl = assume(
         &knl,
         &format!("n >= {interior} and n % {interior} = 0"),
@@ -375,9 +402,9 @@ pub fn build_fdiff(lsize: i64) -> Result<Kernel, String> {
     add_prefetch(&knl, "u", &["i_in", "j_in"], true)
 }
 
-/// Square transpose `out[j, i] = in[i, j]` — a classic
-/// uncoalesced-store pattern for the measurement library.
-pub fn build_transpose(tile: i64) -> Result<Kernel, String> {
+/// Untransformed square transpose: the plain `i, j` nest
+/// [`build_transpose`]'s transform chain starts from.
+pub fn transpose_base() -> Kernel {
     let n = QPoly::var("n");
     let dom = NestedDomain::new(vec![
         LoopExtent::zero_to("i", n.clone()),
@@ -400,6 +427,13 @@ pub fn build_transpose(tile: i64) -> Result<Kernel, String> {
         )),
         &["i", "j"],
     ));
+    knl
+}
+
+/// Square transpose `out[j, i] = in[i, j]` — a classic
+/// uncoalesced-store pattern for the measurement library.
+pub fn build_transpose(tile: i64) -> Result<Kernel, String> {
+    let knl = transpose_base();
     let knl = assume(&knl, &format!("n >= {tile} and n % {tile} = 0"))?;
     let knl = split_iname(&knl, "i", tile)?;
     let knl = split_iname(&knl, "j", tile)?;

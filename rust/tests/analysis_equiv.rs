@@ -1,0 +1,272 @@
+//! Property suite for the transform-equivalence checker and the
+//! complete autotune pruning predicate (`perflex::analysis`).
+//!
+//! Positive sweep: every transform chain the repo ships is equivalent
+//! to its untransformed baseline, and `admissible` accepts every
+//! (chain, device) pair the simulator can launch — zero false
+//! positives, asserted in CI.  Negative sweep: a seeded breaking chain
+//! per transform family (a partial-tile-dropping split, a halo-dropped
+//! prefetch, a `remove_work` strip) is caught as `SEMANTICS_CHANGED`.
+
+use std::collections::BTreeSet;
+
+use perflex::analysis::{admissible, check_equiv, DiagCode};
+use perflex::gpusim::fleet;
+use perflex::ir::{
+    Access, AffExpr, ArrayDecl, DType, Expr, Kernel, LhsRef, Stmt,
+};
+use perflex::polyhedral::{LoopExtent, NestedDomain, QPoly};
+use perflex::transform::{assume, remove_work, split_iname, RemoveSpec};
+use perflex::uipick::apps::{
+    build_dg, build_fdiff, build_matmul, build_transpose, dg_base, fdiff_base,
+    matmul_base, transpose_base, DgVariant,
+};
+use perflex::uipick::KernelCollection;
+
+/// Every shipped transform chain as (label, baseline, candidate).
+fn shipped_chains() -> Vec<(String, Kernel, Kernel)> {
+    let mut v = Vec::new();
+    for dtype in [DType::F32, DType::F64] {
+        for prefetch in [false, true] {
+            v.push((
+                format!("matmul/{dtype:?}/prefetch={prefetch}"),
+                matmul_base(dtype, prefetch),
+                build_matmul(dtype, prefetch, 16).unwrap(),
+            ));
+        }
+    }
+    for variant in [
+        DgVariant::Plain,
+        DgVariant::UPrefetch,
+        DgVariant::MPrefetch,
+        DgVariant::MPrefetchT,
+    ] {
+        v.push((
+            format!("dg/{}", variant.label()),
+            dg_base(variant, 64),
+            build_dg(variant, 64, 16).unwrap(),
+        ));
+    }
+    for lsize in [16, 18] {
+        v.push((
+            format!("fdiff/{lsize}x{lsize}"),
+            fdiff_base(lsize),
+            build_fdiff(lsize).unwrap(),
+        ));
+    }
+    v.push((
+        "transpose".to_string(),
+        transpose_base(),
+        build_transpose(16).unwrap(),
+    ));
+    v
+}
+
+/// Positive sweep 1: split/tag/prefetch/prioritize/tag_data_axes — the
+/// full shipped chain of every app kernel — preserves the baseline's
+/// observable semantics.
+#[test]
+fn every_shipped_chain_is_equivalent_to_its_baseline() {
+    for (label, base, cand) in &shipped_chains() {
+        let diags = check_equiv(base, cand);
+        assert!(diags.is_empty(), "{label}: false positive(s) {diags:?}");
+    }
+}
+
+/// Positive sweep 2: every UiPiCK inventory kernel is (trivially)
+/// equivalent to itself — the summarizer handles every shipped
+/// structure without degrading into a spurious finding.
+#[test]
+fn every_inventory_kernel_is_self_equivalent() {
+    let knls = KernelCollection::all().generate_kernels(&[]).unwrap();
+    let mut seen = BTreeSet::new();
+    let mut checked = 0usize;
+    for k in &knls {
+        if !seen.insert(k.kernel.fingerprint()) {
+            continue;
+        }
+        let diags = check_equiv(&k.kernel, &k.kernel);
+        assert!(
+            diags.is_empty(),
+            "{} (generator {}): {:?}",
+            k.kernel.name,
+            k.generator,
+            diags
+        );
+        checked += 1;
+    }
+    assert!(checked >= 20, "only {checked} distinct kernels checked");
+}
+
+/// `res[i] = u[i] + u[i+1]` over `i in [0, n)` — the 1-D stencil the
+/// seeded breaking chains start from.
+fn stencil_base() -> Kernel {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+    let mut k = Kernel::new("stencil1d", &["n"], dom);
+    k.add_array(ArrayDecl::global("u", DType::F32, vec![&n + &QPoly::one()]));
+    k.add_array(ArrayDecl::global("res", DType::F32, vec![n]));
+    k.add_stmt(Stmt::new(
+        "comp",
+        LhsRef::Array(Access::new("res", vec![AffExpr::var("i")])),
+        Expr::add(
+            Expr::load(Access::new("u", vec![AffExpr::var("i")])),
+            Expr::load(Access::new("u", vec![AffExpr::var("i").plus_cst(1)])),
+        ),
+        &["i"],
+    ));
+    k
+}
+
+/// Seeded break 1 (`split_iname` family): a split of `i` by 4 that
+/// forgets the last tile — `i_out` runs to `(n-8)/4` instead of
+/// `(n-4)/4`, so a quarter of the writes vanish.  The real
+/// `split_iname` refuses unprovable splits outright (asserted below),
+/// so the defect is seeded by hand: it is exactly what a
+/// guard-dropping split would produce.
+#[test]
+fn partial_tile_dropping_split_is_caught() {
+    let base = stencil_base();
+    assert!(
+        split_iname(&base, "i", 3).is_err(),
+        "split_iname should refuse an unprovable split"
+    );
+
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![
+        LoopExtent::new(
+            "i_out",
+            QPoly::zero(),
+            (&n - &QPoly::int(8)).floor_div(4),
+        ),
+        LoopExtent::zero_to("i_in", QPoly::int(4)),
+    ]);
+    let mut bad = Kernel::new("stencil1d", &["n"], dom);
+    bad.add_array(ArrayDecl::global("u", DType::F32, vec![&n + &QPoly::one()]));
+    bad.add_array(ArrayDecl::global("res", DType::F32, vec![n]));
+    let ix = AffExpr::scaled_var("i_out", 4).plus(&AffExpr::var("i_in"));
+    bad.add_stmt(Stmt::new(
+        "comp",
+        LhsRef::Array(Access::new("res", vec![ix.clone()])),
+        Expr::add(
+            Expr::load(Access::new("u", vec![ix.clone()])),
+            Expr::load(Access::new("u", vec![ix.plus_cst(1)])),
+        ),
+        &["i_out", "i_in"],
+    ));
+    let bad = assume(&bad, "n >= 8 and n % 4 = 0").unwrap();
+
+    let diags = check_equiv(&base, &bad);
+    assert!(!diags.is_empty(), "dropped partial tile not caught");
+    assert!(
+        diags.iter().all(|d| d.code == DiagCode::SemanticsChanged),
+        "{diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| d.object.as_deref() == Some("res")),
+        "expected a finding on the written array: {diags:?}"
+    );
+}
+
+/// Seeded break 2 (`add_prefetch` shape): a staging transform that
+/// fetches the tile without the stencil halo — the candidate reads
+/// `u[i]` into a tile and computes from the tile alone, so `u[n]` (the
+/// halo) never reaches the computation.
+#[test]
+fn halo_dropped_prefetch_is_caught() {
+    let base = stencil_base();
+
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", n.clone())]);
+    let mut bad = Kernel::new("stencil1d", &["n"], dom);
+    bad.add_array(ArrayDecl::global("u", DType::F32, vec![&n + &QPoly::one()]));
+    bad.add_array(ArrayDecl::global("res", DType::F32, vec![n.clone()]));
+    bad.add_array(ArrayDecl::local("tile", DType::F32, vec![n]));
+    bad.add_stmt(Stmt::new(
+        "fetch",
+        LhsRef::Array(Access::new("tile", vec![AffExpr::var("i")])),
+        Expr::load(Access::new("u", vec![AffExpr::var("i")])),
+        &["i"],
+    ));
+    bad.add_stmt(
+        Stmt::new(
+            "comp",
+            LhsRef::Array(Access::new("res", vec![AffExpr::var("i")])),
+            Expr::add(
+                Expr::load(Access::new("tile", vec![AffExpr::var("i")])),
+                Expr::load(Access::new("tile", vec![AffExpr::var("i")])),
+            ),
+            &["i"],
+        )
+        .with_deps(&["fetch"]),
+    );
+
+    let diags = check_equiv(&base, &bad);
+    assert!(
+        diags.iter().any(|d| {
+            d.code == DiagCode::SemanticsChanged
+                && d.object.as_deref() == Some("u")
+                && d.message.contains("not covering")
+        }),
+        "halo drop not caught: {diags:?}"
+    );
+}
+
+/// Seeded break 3 (`remove_work`): stripping the `b` loads from the
+/// tiled matmul (the calibration microbenchmark move) is *not* an
+/// equivalent kernel — the read set and op volume both change.
+#[test]
+fn remove_work_strip_is_caught() {
+    let full = build_matmul(DType::F32, false, 16).unwrap();
+    let stripped = remove_work(&full, &RemoveSpec::arrays(&["b"])).unwrap();
+    let diags = check_equiv(&full, &stripped);
+    assert!(
+        diags.iter().any(|d| {
+            d.code == DiagCode::SemanticsChanged
+                && d.object.as_deref() == Some("b")
+        }),
+        "stripped read set not caught: {diags:?}"
+    );
+    assert!(
+        diags.iter().all(|d| d.code == DiagCode::SemanticsChanged),
+        "{diags:?}"
+    );
+}
+
+/// The complete pruning predicate over the shipped inventory: every
+/// (chain, device) pair the simulator can launch is admissible, and
+/// the one oversized launch (the 18x18 stencil tile on AMD's 256-item
+/// limit) is rejected for exactly that reason.
+#[test]
+fn admissible_accepts_launchable_chains_and_rejects_oversized_wg() {
+    let mut rejected = Vec::new();
+    for (label, base, cand) in &shipped_chains() {
+        for dev in fleet() {
+            let verdict = admissible(base, cand, &dev);
+            if cand.work_group_size() > dev.max_wg_size {
+                let errs = verdict.expect_err(&format!(
+                    "{label} on {}: oversized work-group not rejected",
+                    dev.id
+                ));
+                assert!(
+                    errs.iter().all(|d| d.code == DiagCode::WgSizeExceeded),
+                    "{label} on {}: {errs:?}",
+                    dev.id
+                );
+                rejected.push(format!("{label}@{}", dev.id));
+            } else {
+                assert!(
+                    verdict.is_ok(),
+                    "{label} on {}: false positive {:?}",
+                    dev.id,
+                    verdict.err()
+                );
+            }
+        }
+    }
+    assert_eq!(
+        rejected,
+        vec!["fdiff/18x18@amd_r9_fury"],
+        "exactly the paper's scope example should be pruned"
+    );
+}

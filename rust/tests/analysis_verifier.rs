@@ -2,15 +2,21 @@
 //! (`perflex::analysis`).
 //!
 //! True positives: one minimal kernel per diagnostic code, asserting
-//! the exact code fires and nothing else does.  True negatives: every
-//! kernel the repo ships — every UiPiCK generator variant and every
-//! transform-chain variant the experiments use — must lint completely
-//! clean, so the verifier can gate counting, measurement, and the
-//! future autotune pruning loop without false alarms.
+//! the exact code fires and nothing else does — and a meta-test
+//! asserting the registry of seeded defects covers *every* code in
+//! `DiagCode::all()`, so a new code cannot ship without a kernel that
+//! triggers it.  True negatives: every kernel the repo ships — every
+//! UiPiCK generator variant and every transform-chain variant the
+//! experiments use — must lint completely clean, so the verifier can
+//! gate counting, measurement, and the autotune pruning loop without
+//! false alarms.
 
 use std::collections::BTreeSet;
 
-use perflex::analysis::{self, Analyzer, DiagCode};
+use perflex::analysis::{
+    self, check_equiv, check_feasibility, Analyzer, AnalysisError, DiagCode,
+};
+use perflex::gpusim::device_by_id;
 use perflex::ir::{
     Access, AffExpr, ArrayDecl, DType, Expr, IndexTag, Kernel, LhsRef, MemScope, Stmt,
 };
@@ -34,10 +40,14 @@ fn two_axis_grid(name: &str) -> Kernel {
     k
 }
 
-#[test]
-fn race_write_fires_when_a_parallel_axis_is_not_covered() {
-    // 16x16 work-items all storing out[li0]: every li1 along a fixed
-    // li0 writes the same element.
+// ---------------------------------------------------------------------
+// Seeded-defect builders: one minimal kernel per diagnostic code.  The
+// per-code tests and the coverage meta-test both draw from these.
+// ---------------------------------------------------------------------
+
+/// RACE_WRITE (axis not covered): 16x16 work-items all storing
+/// out[li0] — every li1 along a fixed li0 writes the same element.
+fn race_axis_kernel() -> Kernel {
     let mut k = two_axis_grid("race_axis");
     k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
     k.add_stmt(Stmt::new(
@@ -46,14 +56,12 @@ fn race_write_fires_when_a_parallel_axis_is_not_covered() {
         Expr::fconst(1.0),
         &[],
     ));
-    let diags = Analyzer::new().check(&k);
-    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
-    assert!(analysis::verify(&k).is_err());
+    k
 }
 
-#[test]
-fn race_write_fires_on_non_injective_subscript() {
-    // out[li0 + li1] collides: (1, 0) and (0, 1) write element 1.
+/// RACE_WRITE (non-injective): out[li0 + li1] collides — (1, 0) and
+/// (0, 1) write element 1.
+fn race_collide_kernel() -> Kernel {
     let mut k = two_axis_grid("race_collide");
     k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(32)]));
     k.add_stmt(Stmt::new(
@@ -65,15 +73,11 @@ fn race_write_fires_on_non_injective_subscript() {
         Expr::fconst(1.0),
         &[],
     ));
-    let diags = Analyzer::new().check(&k);
-    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
-    let msg = analysis::verify(&k).unwrap_err();
-    assert!(msg.contains("RACE_WRITE"), "{msg}");
+    k
 }
 
-#[test]
-fn oob_access_fires_when_subscript_exceeds_shape() {
-    // out[li0 + 1] reaches index 16 of a 16-element array.
+/// OOB_ACCESS: out[li0 + 1] reaches index 16 of a 16-element array.
+fn oob_kernel() -> Kernel {
     let dom = NestedDomain::new(vec![LoopExtent::zero_to("li0", QPoly::int(16))]);
     let mut k = Kernel::new("oob", &[], dom);
     k.iname_tags.insert("li0".into(), IndexTag::Local(0));
@@ -84,13 +88,13 @@ fn oob_access_fires_when_subscript_exceeds_shape() {
         Expr::fconst(1.0),
         &[],
     ));
-    let diags = Analyzer::new().check(&k);
-    assert_eq!(codes(&diags), vec!["OOB_ACCESS"], "{diags:?}");
+    k
 }
 
 /// The barrier_pattern shape: work-item li writes buf[li], then reads
 /// buf[15-li] — data crosses work-items, so the read must be ordered
-/// after the write for the scheduler to fence the exchange.
+/// after the write for the scheduler to fence the exchange.  With
+/// `with_dep: false` this seeds MISSING_BARRIER.
 fn exchange_kernel(with_dep: bool) -> Kernel {
     let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
     let mut k = Kernel::new("exchange", &[], dom);
@@ -116,25 +120,11 @@ fn exchange_kernel(with_dep: bool) -> Kernel {
     k
 }
 
-#[test]
-fn missing_barrier_fires_on_unordered_cross_item_read() {
-    let k = exchange_kernel(false);
-    let diags = Analyzer::new().check(&k);
-    assert_eq!(codes(&diags), vec!["MISSING_BARRIER"], "{diags:?}");
-}
-
-#[test]
-fn dependency_ordered_exchange_lints_clean() {
-    let k = exchange_kernel(true);
-    let diags = Analyzer::new().check(&k);
-    assert!(diags.is_empty(), "{diags:?}");
-}
-
-#[test]
-fn divergent_barrier_fires_under_local_dependent_trip_count() {
-    // The exchange sits inside `t in 0..=li`: each work-item runs the
-    // loop a different number of times, so the barriers the scheduler
-    // inserts into the loop body are reached divergently.
+/// DIVERGENT_BARRIER: the exchange sits inside `t in 0..=li` — each
+/// work-item runs the loop a different number of times, so the
+/// barriers the scheduler inserts into the loop body are reached
+/// divergently.
+fn divergent_kernel() -> Kernel {
     let dom = NestedDomain::new(vec![
         LoopExtent::zero_to("li", QPoly::int(16)),
         LoopExtent::new("t", QPoly::zero(), QPoly::var("li")),
@@ -161,12 +151,11 @@ fn divergent_barrier_fires_under_local_dependent_trip_count() {
         )
         .with_deps(&["w"]),
     );
-    let diags = Analyzer::new().check(&k);
-    assert_eq!(codes(&diags), vec!["DIVERGENT_BARRIER"], "{diags:?}");
+    k
 }
 
-#[test]
-fn scope_misuse_fires_for_private_array_with_parallel_subscript() {
+/// SCOPE_MISUSE: a private array subscripted by a parallel iname.
+fn private_misuse_kernel() -> Kernel {
     let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
     let mut k = Kernel::new("private_misuse", &[], dom);
     k.iname_tags.insert("li".into(), IndexTag::Local(0));
@@ -183,7 +172,158 @@ fn scope_misuse_fires_for_private_array_with_parallel_subscript() {
         Expr::fconst(1.0),
         &[],
     ));
+    k
+}
+
+/// UNUSED_INAME: sequential loop `z` drives nothing.
+fn unused_iname_kernel() -> Kernel {
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("li", QPoly::int(16)),
+        LoopExtent::zero_to("z", QPoly::int(4)),
+    ]);
+    let mut k = Kernel::new("unused", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    k
+}
+
+/// DEAD_ARRAY: `scratch` is declared but never accessed.
+fn dead_array_kernel() -> Kernel {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("dead", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
+    k.add_array(ArrayDecl::global("scratch", DType::F32, vec![QPoly::int(16)]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    k
+}
+
+/// UNPROVABLE_GUARD: `0 <= i <= floor((n-1)/16)` with no divisibility
+/// assumption — the bound keeps its floor atom, which counting treats
+/// as exact.
+fn floored_kernel() -> Kernel {
+    let hi = (&QPoly::var("n") - &QPoly::one()).floor_div(16);
+    let dom = NestedDomain::new(vec![LoopExtent::new("i", QPoly::zero(), hi)]);
+    let mut k = Kernel::new("floored", &["n"], dom);
+    k.add_array(ArrayDecl::global("a", DType::F32, vec![QPoly::var("n")]));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("a", vec![AffExpr::var("i")])),
+        Expr::fconst(1.0),
+        &["i"],
+    ));
+    k
+}
+
+/// MALFORMED_KERNEL: a store to an undeclared array — validate()
+/// rejects it and the analyzer runs nothing else.
+fn ghost_store_kernel() -> Kernel {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("ghost_store", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_stmt(Stmt::new(
+        "st",
+        LhsRef::Array(Access::new("ghost", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    k
+}
+
+/// EXCESSIVE_LOCAL_MEM / LOW_OCCUPANCY: a 16-item work-group writing
+/// one local tile of `elems` f32 entries.
+fn lmem_kernel(elems: i128) -> Kernel {
+    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
+    let mut k = Kernel::new("lmem_case", &[], dom);
+    k.iname_tags.insert("li".into(), IndexTag::Local(0));
+    k.add_array(ArrayDecl::local("tile", DType::F32, vec![QPoly::int(elems)]));
+    k.add_stmt(Stmt::new(
+        "w",
+        LhsRef::Array(Access::new("tile", vec![AffExpr::var("li")])),
+        Expr::fconst(1.0),
+        &["li"],
+    ));
+    k
+}
+
+/// SEMANTICS_CHANGED: a baseline writing 16 elements of `res` and a
+/// "candidate" writing only the first 8 — write count and footprint
+/// both shrink.
+fn shrunk_write_pair() -> (Kernel, Kernel) {
+    let build = |extent: i128| {
+        let dom = NestedDomain::new(vec![LoopExtent::zero_to("i", QPoly::int(extent))]);
+        let mut k = Kernel::new("shrunk", &[], dom);
+        k.add_array(ArrayDecl::global("res", DType::F32, vec![QPoly::int(16)]));
+        k.add_stmt(Stmt::new(
+            "st",
+            LhsRef::Array(Access::new("res", vec![AffExpr::var("i")])),
+            Expr::fconst(1.0),
+            &["i"],
+        ));
+        k
+    };
+    (build(16), build(8))
+}
+
+#[test]
+fn race_write_fires_when_a_parallel_axis_is_not_covered() {
+    let k = race_axis_kernel();
     let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
+    assert!(analysis::verify(&k).is_err());
+}
+
+#[test]
+fn race_write_fires_on_non_injective_subscript() {
+    let k = race_collide_kernel();
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["RACE_WRITE"], "{diags:?}");
+    let err = analysis::verify(&k).unwrap_err();
+    assert!(matches!(err, AnalysisError::Rejected { .. }));
+    let msg = err.to_string();
+    assert!(msg.contains("RACE_WRITE"), "{msg}");
+}
+
+#[test]
+fn oob_access_fires_when_subscript_exceeds_shape() {
+    let diags = Analyzer::new().check(&oob_kernel());
+    assert_eq!(codes(&diags), vec!["OOB_ACCESS"], "{diags:?}");
+}
+
+#[test]
+fn missing_barrier_fires_on_unordered_cross_item_read() {
+    let k = exchange_kernel(false);
+    let diags = Analyzer::new().check(&k);
+    assert_eq!(codes(&diags), vec!["MISSING_BARRIER"], "{diags:?}");
+}
+
+#[test]
+fn dependency_ordered_exchange_lints_clean() {
+    let k = exchange_kernel(true);
+    let diags = Analyzer::new().check(&k);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn divergent_barrier_fires_under_local_dependent_trip_count() {
+    let diags = Analyzer::new().check(&divergent_kernel());
+    assert_eq!(codes(&diags), vec!["DIVERGENT_BARRIER"], "{diags:?}");
+}
+
+#[test]
+fn scope_misuse_fires_for_private_array_with_parallel_subscript() {
+    let diags = Analyzer::new().check(&private_misuse_kernel());
     assert_eq!(codes(&diags), vec!["SCOPE_MISUSE"], "{diags:?}");
 }
 
@@ -205,19 +345,7 @@ fn scope_misuse_fires_for_local_array_with_group_subscript() {
 
 #[test]
 fn unused_iname_warns_without_failing_the_gate() {
-    let dom = NestedDomain::new(vec![
-        LoopExtent::zero_to("li", QPoly::int(16)),
-        LoopExtent::zero_to("z", QPoly::int(4)),
-    ]);
-    let mut k = Kernel::new("unused", &[], dom);
-    k.iname_tags.insert("li".into(), IndexTag::Local(0));
-    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
-    k.add_stmt(Stmt::new(
-        "st",
-        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
-        Expr::fconst(1.0),
-        &[],
-    ));
+    let k = unused_iname_kernel();
     let diags = Analyzer::new().check(&k);
     assert_eq!(codes(&diags), vec!["UNUSED_INAME"], "{diags:?}");
     assert_eq!(diags[0].object.as_deref(), Some("z"));
@@ -227,17 +355,7 @@ fn unused_iname_warns_without_failing_the_gate() {
 
 #[test]
 fn dead_array_warns_without_failing_the_gate() {
-    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
-    let mut k = Kernel::new("dead", &[], dom);
-    k.iname_tags.insert("li".into(), IndexTag::Local(0));
-    k.add_array(ArrayDecl::global("out", DType::F32, vec![QPoly::int(16)]));
-    k.add_array(ArrayDecl::global("scratch", DType::F32, vec![QPoly::int(16)]));
-    k.add_stmt(Stmt::new(
-        "st",
-        LhsRef::Array(Access::new("out", vec![AffExpr::var("li")])),
-        Expr::fconst(1.0),
-        &[],
-    ));
+    let k = dead_array_kernel();
     let diags = Analyzer::new().check(&k);
     assert_eq!(codes(&diags), vec!["DEAD_ARRAY"], "{diags:?}");
     assert_eq!(diags[0].object.as_deref(), Some("scratch"));
@@ -246,18 +364,7 @@ fn dead_array_warns_without_failing_the_gate() {
 
 #[test]
 fn unprovable_guard_warns_on_surviving_floor_bound() {
-    // 0 <= i <= floor((n-1)/16) with no divisibility assumption: the
-    // bound keeps its floor atom, which counting treats as exact.
-    let hi = (&QPoly::var("n") - &QPoly::one()).floor_div(16);
-    let dom = NestedDomain::new(vec![LoopExtent::new("i", QPoly::zero(), hi)]);
-    let mut k = Kernel::new("floored", &["n"], dom);
-    k.add_array(ArrayDecl::global("a", DType::F32, vec![QPoly::var("n")]));
-    k.add_stmt(Stmt::new(
-        "st",
-        LhsRef::Array(Access::new("a", vec![AffExpr::var("i")])),
-        Expr::fconst(1.0),
-        &["i"],
-    ));
+    let k = floored_kernel();
     let diags = Analyzer::new().check(&k);
     assert_eq!(codes(&diags), vec!["UNPROVABLE_GUARD"], "{diags:?}");
     assert!(analysis::verify(&k).is_ok());
@@ -265,32 +372,131 @@ fn unprovable_guard_warns_on_surviving_floor_bound() {
 
 #[test]
 fn malformed_kernel_is_the_only_diagnostic_for_broken_structure() {
-    // Undeclared array: validate() rejects it, the analyzer reports
-    // exactly one MALFORMED_KERNEL and runs nothing else (the other
-    // passes would panic in flatten_access).
-    let dom = NestedDomain::new(vec![LoopExtent::zero_to("li", QPoly::int(16))]);
-    let mut k = Kernel::new("ghost_store", &[], dom);
-    k.iname_tags.insert("li".into(), IndexTag::Local(0));
-    k.add_stmt(Stmt::new(
-        "st",
-        LhsRef::Array(Access::new("ghost", vec![AffExpr::var("li")])),
-        Expr::fconst(1.0),
-        &[],
-    ));
+    let k = ghost_store_kernel();
     let diags = Analyzer::new().check(&k);
     assert_eq!(codes(&diags), vec!["MALFORMED_KERNEL"], "{diags:?}");
     assert_eq!(diags[0].code.severity(), analysis::Severity::Error);
+    // The typed gate distinguishes malformed from well-formed-but-bad.
+    match analysis::verify(&k) {
+        Err(AnalysisError::Malformed { kernel, diagnostic }) => {
+            assert_eq!(kernel, "ghost_store");
+            assert_eq!(diagnostic.code, DiagCode::MalformedKernel);
+        }
+        other => panic!("expected Malformed, got {other:?}"),
+    }
 }
 
 #[test]
 fn every_code_has_a_stable_severity() {
     for c in DiagCode::all() {
         match c {
-            DiagCode::UnusedIname | DiagCode::DeadArray | DiagCode::UnprovableGuard => {
+            DiagCode::UnusedIname
+            | DiagCode::DeadArray
+            | DiagCode::UnprovableGuard
+            | DiagCode::LowOccupancy => {
                 assert_eq!(c.severity(), analysis::Severity::Warn, "{}", c.as_str())
             }
             _ => assert_eq!(c.severity(), analysis::Severity::Error, "{}", c.as_str()),
         }
+    }
+}
+
+/// Coverage meta-test: every code in `DiagCode::all()` has a seeded
+/// defect in this file that triggers exactly that code.  Adding a
+/// diagnostic code without a kernel demonstrating it fails here.
+#[test]
+fn every_diag_code_has_a_seeded_defect() {
+    let analyzer = Analyzer::new();
+    let amd = device_by_id("amd_r9_fury").unwrap();
+    let titan = device_by_id("titan_v").unwrap();
+    let k40c = device_by_id("tesla_k40c").unwrap();
+    let fdiff18 = build_fdiff(18).unwrap();
+    let (equiv_base, equiv_bad) = shrunk_write_pair();
+
+    let registry: Vec<(DiagCode, Vec<analysis::Diagnostic>)> = vec![
+        (DiagCode::RaceWrite, analyzer.check(&race_axis_kernel())),
+        (DiagCode::OobAccess, analyzer.check(&oob_kernel())),
+        (
+            DiagCode::MissingBarrier,
+            analyzer.check(&exchange_kernel(false)),
+        ),
+        (
+            DiagCode::DivergentBarrier,
+            analyzer.check(&divergent_kernel()),
+        ),
+        (
+            DiagCode::ScopeMisuse,
+            analyzer.check(&private_misuse_kernel()),
+        ),
+        (DiagCode::UnusedIname, analyzer.check(&unused_iname_kernel())),
+        (DiagCode::DeadArray, analyzer.check(&dead_array_kernel())),
+        (
+            DiagCode::UnprovableGuard,
+            analyzer.check(&floored_kernel()),
+        ),
+        (
+            DiagCode::MalformedKernel,
+            analyzer.check(&ghost_store_kernel()),
+        ),
+        (
+            DiagCode::WgSizeExceeded,
+            check_feasibility(&fdiff18, &amd).unwrap().diags,
+        ),
+        (
+            DiagCode::ExcessiveLocalMem,
+            check_feasibility(&lmem_kernel(1 << 18), &titan).unwrap().diags,
+        ),
+        (
+            DiagCode::LowOccupancy,
+            check_feasibility(&lmem_kernel(6000), &k40c).unwrap().diags,
+        ),
+        (
+            DiagCode::SemanticsChanged,
+            check_equiv(&equiv_base, &equiv_bad),
+        ),
+    ];
+
+    let mut covered: BTreeSet<DiagCode> = BTreeSet::new();
+    for (code, diags) in &registry {
+        assert!(
+            !diags.is_empty(),
+            "{}: seeded defect produced no diagnostic",
+            code.as_str()
+        );
+        assert!(
+            diags.iter().all(|d| d.code == *code),
+            "{}: stray codes in seeded-defect report {:?}",
+            code.as_str(),
+            diags
+        );
+        covered.insert(*code);
+    }
+    for code in DiagCode::all() {
+        assert!(
+            covered.contains(code),
+            "no seeded defect for {}",
+            code.as_str()
+        );
+    }
+}
+
+/// Regression (the paper's motivating example): the 18x18 stencil tile
+/// launches 324 work-items per group — over AMD's 256 limit, fine on
+/// every Nvidia device of the fleet.
+#[test]
+fn amd_rejects_the_18x18_stencil_work_group() {
+    let k = build_fdiff(18).unwrap();
+    let amd = device_by_id("amd_r9_fury").unwrap();
+    let f = check_feasibility(&k, &amd).unwrap();
+    assert_eq!(f.usage.wg_size, 324);
+    assert!(!f.launchable());
+    assert_eq!(codes(&f.diags), vec!["WG_SIZE_EXCEEDED"], "{:?}", f.diags);
+    assert!(f.diags[0].message.contains("324"), "{}", f.diags[0]);
+    assert!(f.diags[0].message.contains("256"), "{}", f.diags[0]);
+    for id in ["titan_v", "gtx_titan_x", "tesla_k40c", "tesla_c2070"] {
+        let f = check_feasibility(&k, &device_by_id(id).unwrap()).unwrap();
+        assert!(f.launchable(), "{id}: {:?}", f.diags);
+        assert!(f.diags.is_empty(), "{id}: {:?}", f.diags);
     }
 }
 
