@@ -5,7 +5,7 @@
 //! working directory); the `bench-baselines` CI job tracks it against
 //! the checked-in copy.
 
-use perflex::analysis::{admissible, check_equiv, check_feasibility, Analyzer};
+use perflex::analysis::{access, admissible, check_equiv, check_feasibility, Analyzer};
 use perflex::bench_harness::{bench_recorded, write_baseline_with_summary};
 use perflex::gpusim::{device_by_id, fleet};
 use perflex::ir::DType;
@@ -20,28 +20,39 @@ fn main() {
         .unwrap_or_else(|_| std::path::PathBuf::from("."));
 
     let analyzer = Analyzer::new();
+    // Expected diagnostic codes per family: the transposed store is
+    // genuinely uncoalesced (a Warn-severity access-pattern finding);
+    // everything else verifies spotless.
     let families = [
         (
             "verify matmul_pf",
             build_matmul(DType::F32, true, 16).unwrap(),
+            vec![],
         ),
         (
             "verify dg_m_prefetch_t",
             build_dg(DgVariant::MPrefetchT, 64, 16).unwrap(),
+            vec![],
         ),
-        ("verify fdiff_18x18", build_fdiff(18).unwrap()),
-        ("verify transpose", build_transpose(16).unwrap()),
+        ("verify fdiff_18x18", build_fdiff(18).unwrap(), vec![]),
+        (
+            "verify transpose",
+            build_transpose(16).unwrap(),
+            vec!["UNCOALESCED_GLOBAL"],
+        ),
         (
             "verify barrier_pattern",
             build_barrier_pattern(DType::F32).unwrap(),
+            vec![],
         ),
     ];
 
     let mut records = Vec::new();
-    for (name, knl) in &families {
+    for (name, knl, expected) in &families {
         records.push(bench_recorded(name, 100, || {
             let diags = analyzer.check(knl);
-            assert!(diags.is_empty(), "{name}: {diags:?}");
+            let codes: Vec<&str> = diags.iter().map(|d| d.code.as_str()).collect();
+            assert_eq!(&codes, expected, "{name}: {diags:?}");
         }));
     }
 
@@ -77,6 +88,25 @@ fn main() {
     records.push(bench_recorded("admissible fdiff_18x18 amd", 100, || {
         assert!(admissible(&fd_base, &fdiff18, &amd).is_err());
     }));
+
+    // The access-pattern pass on its own: the per-candidate report the
+    // pruning gate attaches to Ok results, on the worst case (the
+    // transposed store's parametric stride needs env sampling) and
+    // across the whole fleet's geometries.
+    let titan = device_by_id("titan_v").unwrap();
+    let transpose = build_transpose(16).unwrap();
+    records.push(bench_recorded("access report transpose titan_v", 100, || {
+        let rep = access::report(&transpose, &titan).unwrap();
+        assert_eq!(rep.penalized().len(), 1, "{rep:?}");
+    }));
+    records.push(bench_recorded("access report matmul_pf fleet", 100, || {
+        for d in &devices {
+            let knl = &families[0].1;
+            let rep = access::report(knl, d).unwrap();
+            assert!(rep.penalized().is_empty(), "{}: {rep:?}", d.id);
+        }
+    }));
+
     let p = write_baseline_with_summary(
         &out_dir,
         "analysis",

@@ -1,0 +1,156 @@
+//! Deterministic randomized no-panic smoke target — the offline crate
+//! set has no `cargo-fuzz`/libFuzzer, so this plain bench binary plays
+//! that role on two parser/serializer surfaces that take untrusted
+//! text:
+//!
+//! 1. `Assumptions::parse`: mutated clause soup must never panic, and
+//!    every accepted string must also be accepted when parsed again
+//!    (idempotent acceptance).
+//! 2. The `perflex lint --json` document: reports built from
+//!    adversarial diagnostic strings (quotes, backslashes, control
+//!    characters, non-ASCII) must serialize to JSON that the in-tree
+//!    parser round-trips.
+//!
+//! Iteration count comes from `PERFLEX_FUZZ_ITERS` (default 2000 — the
+//! CI short smoke mode); the seed is fixed so failures reproduce.
+
+use perflex::analysis::{report_to_json, DiagCode, Diagnostic, LintEntry};
+use perflex::polyhedral::Assumptions;
+use perflex::util::json::Json;
+use perflex::util::Rng;
+
+fn iters() -> u64 {
+    std::env::var("PERFLEX_FUZZ_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000)
+}
+
+/// Characters the assumption grammar uses, plus noise it must reject
+/// gracefully.
+const ASSUME_CHARS: &[char] = &[
+    'n', 'm', 'x', '_', '0', '1', '2', '9', ' ', '>', '=', '%', '-', '+', 'a',
+    'd', '(', ')', '\t', '\u{e9}',
+];
+
+fn mutate(rng: &mut Rng, base: &str) -> String {
+    let mut chars: Vec<char> = base.chars().collect();
+    for _ in 0..rng.below(4) + 1 {
+        let c = ASSUME_CHARS[rng.below(ASSUME_CHARS.len() as u64) as usize];
+        match rng.below(3) {
+            0 if !chars.is_empty() => {
+                let i = rng.below(chars.len() as u64) as usize;
+                chars[i] = c;
+            }
+            1 => {
+                let i = rng.below(chars.len() as u64 + 1) as usize;
+                chars.insert(i, c);
+            }
+            _ if !chars.is_empty() => {
+                let i = rng.below(chars.len() as u64) as usize;
+                chars.remove(i);
+            }
+            _ => {}
+        }
+    }
+    chars.into_iter().collect()
+}
+
+fn fuzz_assumptions(rng: &mut Rng, n: u64) -> (u64, u64) {
+    let corpus = [
+        "n >= 16 and n % 16 = 0",
+        "nelements >= 32768 and nmatrices >= 3",
+        "m % 254 = 0",
+        "n >= 2",
+        "",
+    ];
+    let (mut ok, mut err) = (0u64, 0u64);
+    for i in 0..n {
+        let base = corpus[(i % corpus.len() as u64) as usize];
+        let text = mutate(rng, base);
+        match Assumptions::parse(&text) {
+            Ok(_) => {
+                ok += 1;
+                // Acceptance must be stable under re-parse.
+                Assumptions::parse(&text).unwrap_or_else(|e| {
+                    panic!("accepted then rejected {text:?}: {e}")
+                });
+            }
+            Err(_) => err += 1,
+        }
+    }
+    (ok, err)
+}
+
+/// A hostile string: JSON-escaping landmines plus raw code points.
+fn wild_string(rng: &mut Rng) -> String {
+    let mut s = String::new();
+    for _ in 0..rng.below(12) {
+        s.push(match rng.below(8) {
+            0 => '"',
+            1 => '\\',
+            2 => '\n',
+            3 => '\u{1}',
+            4 => '\u{e9}',
+            5 => '\u{1f600}',
+            6 => '/',
+            _ => char::from(b'a' + (rng.below(26) as u8)),
+        });
+    }
+    s
+}
+
+fn fuzz_lint_json(rng: &mut Rng, n: u64) {
+    let all = DiagCode::all();
+    for _ in 0..n {
+        let mut entries = Vec::new();
+        for _ in 0..rng.below(3) + 1 {
+            let diags: Vec<Diagnostic> = (0..rng.below(4))
+                .map(|_| Diagnostic {
+                    code: all[rng.below(all.len() as u64) as usize],
+                    kernel: wild_string(rng),
+                    stmt: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(wild_string(rng))
+                    },
+                    object: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(wild_string(rng))
+                    },
+                    message: wild_string(rng),
+                })
+                .collect();
+            entries.push(LintEntry {
+                kernel: wild_string(rng),
+                generator: wild_string(rng),
+                diags,
+                feasibility: Vec::new(),
+            });
+        }
+        let text = report_to_json(&entries).to_string();
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("emitted unparseable JSON: {e}\n{text}"));
+        // The document head must survive the trip.
+        assert_eq!(
+            parsed.get("version").and_then(Json::as_i64),
+            Some(3),
+            "{text}"
+        );
+    }
+}
+
+fn main() {
+    let n = iters();
+    let mut rng = Rng::new(0x5EED_F00D);
+    let (ok, err) = fuzz_assumptions(&mut rng, n);
+    // The corpus seeds are valid, so mutation must keep finding both
+    // accepted and rejected strings — otherwise the target is dead.
+    assert!(ok > 0 && err > 0, "degenerate corpus: ok={ok} err={err}");
+    fuzz_lint_json(&mut rng, n);
+    println!(
+        "fuzz_smoke: {n} assumption mutations ({ok} ok / {err} rejected), \
+         {n} lint JSON round-trips — no panics"
+    );
+}

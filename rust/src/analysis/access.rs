@@ -1,0 +1,538 @@
+//! Symbolic memory access-pattern analysis: coalescing and bank
+//! conflicts, derived per access from the lid(0) stride.
+//!
+//! The counting pass already records *how many* accesses a kernel
+//! performs; the dominant cross-GPU cost drivers are access *patterns*
+//! — how many memory transactions a sub-group's access coalesces into,
+//! and how many ways a local-memory access serializes across banks.
+//! This pass derives both statically, per global/local array access:
+//!
+//! * **Transactions per sub-group access.**  A sub-group of `sg`
+//!   work-items accessing `e`-byte elements with lid(0) stride `s`
+//!   touches a span of `sg·|s|·e` bytes, i.e.
+//!   `ceil(sg·|s|·e / cacheline_bytes)` cache lines, clamped between
+//!   the contiguous baseline `ceil(sg·e / cacheline_bytes)` and the
+//!   one-line-per-lane worst case `sg`.  A stride-0 (uniform) access is
+//!   a single broadcast transaction.  For 4-byte elements on a 32-wide
+//!   sub-group with 128-byte lines this reduces to the familiar
+//!   `min(s, sg)` transactions.  Accesses whose transaction count
+//!   exceeds the contiguous baseline get
+//!   [`DiagCode::UncoalescedGlobal`].
+//! * **Bank-conflict multiplier.**  `sg` lanes with stride `s` over
+//!   `B` local-memory banks touch `B / gcd(|s|, B)` distinct banks, so
+//!   the access serializes `gcd(|s|, B)`-way.  Multipliers above 1 get
+//!   [`DiagCode::BankConflict`].
+//!
+//! Strides come from [`Kernel::lid_stride`] (the flattened access
+//! form), simplified under the kernel's assumptions; parametric
+//! strides are evaluated at the same assumption-derived sample sizes
+//! the race/bounds checks use, taking the worst case.
+//!
+//! Three consumers: [`Analyzer::check`](super::Analyzer::check) runs
+//! the pass with the device-independent [`Geometry`] (warp 32, 128-byte
+//! lines, 32 banks); [`check_feasibility`](super::check_feasibility)
+//! re-runs it with the target device's geometry; and
+//! [`admissible`](super::admissible) returns the full [`AccessReport`]
+//! so the autotune loop can explain *why* a candidate's memory cost
+//! regressed, not just whether it is valid.  The feature families
+//! `f_mem_transactions[_tag:<t>]` and `f_bank_conflict_factor`
+//! ([`crate::features`]) lower the same per-access factors into model
+//! features.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{sample_envs, Analyzer, DiagCode, Diagnostic};
+use crate::gpusim::{
+    DeviceProfile, DEFAULT_CACHELINE_BYTES, DEFAULT_LOCAL_MEM_BANKS,
+    DEFAULT_SUB_GROUP_SIZE,
+};
+use crate::ir::{Kernel, LhsRef, MemScope};
+use crate::polyhedral::QPoly;
+use crate::util::json::Json;
+
+/// The three hardware numbers the access-pattern model consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// Sub-group (warp/wavefront) width in work-items.
+    pub sub_group: u64,
+    /// Coalescing-unit (cache line) width in bytes.
+    pub cacheline_bytes: u64,
+    /// Local-memory bank count.
+    pub local_mem_banks: u64,
+}
+
+impl Geometry {
+    /// The device-independent geometry used by [`Analyzer::check`]:
+    /// warp 32, 128-byte lines, 32 banks (every NVIDIA fleet device).
+    pub fn device_independent() -> Geometry {
+        Geometry {
+            sub_group: DEFAULT_SUB_GROUP_SIZE,
+            cacheline_bytes: DEFAULT_CACHELINE_BYTES,
+            local_mem_banks: DEFAULT_LOCAL_MEM_BANKS,
+        }
+    }
+
+    /// The geometry of one fleet device.
+    pub fn for_device(dev: &DeviceProfile) -> Geometry {
+        Geometry {
+            sub_group: dev.sub_group_size,
+            cacheline_bytes: dev.cacheline_bytes,
+            local_mem_banks: dev.local_mem_banks,
+        }
+    }
+}
+
+impl Default for Geometry {
+    fn default() -> Geometry {
+        Geometry::device_independent()
+    }
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b.max(1)
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+/// Transactions a *contiguous* (stride-1) sub-group access of
+/// `elem_bytes`-byte elements needs: the baseline every other stride is
+/// judged against (1 line for f32 at warp 32 / 128-byte lines; 2 lines
+/// for f64).
+pub fn contiguous_txns(elem_bytes: u64, geom: &Geometry) -> u64 {
+    ceil_div(geom.sub_group * elem_bytes, geom.cacheline_bytes).max(1)
+}
+
+/// Transactions one sub-group access with constant lid(0) stride
+/// `stride` (elements) needs: 1 for a uniform (stride-0) broadcast,
+/// otherwise `ceil(sg·|s|·e / line)` clamped to
+/// `[contiguous_txns, sub_group]`.
+pub fn txns_for_stride(stride: i128, elem_bytes: u64, geom: &Geometry) -> u64 {
+    if stride == 0 {
+        return 1;
+    }
+    let lo = contiguous_txns(elem_bytes, geom);
+    let hi = geom.sub_group.max(lo);
+    let span = (stride.unsigned_abs().min(u64::MAX as u128) as u64)
+        .saturating_mul(geom.sub_group)
+        .saturating_mul(elem_bytes);
+    ceil_div(span, geom.cacheline_bytes).clamp(lo, hi)
+}
+
+/// Bank-conflict serialization factor of a constant lid(0) stride:
+/// `gcd(|s|, banks)` (1 = conflict-free; a stride-0 broadcast is
+/// conflict-free by hardware broadcast).
+pub fn bank_conflict_multiplier(stride: i128, geom: &Geometry) -> u64 {
+    if stride == 0 {
+        return 1;
+    }
+    gcd(
+        stride.unsigned_abs().min(u64::MAX as u128) as u64,
+        geom.local_mem_banks,
+    )
+}
+
+/// One classified array access: its symbolic lid(0) stride and the
+/// derived transaction / bank-conflict factors.
+#[derive(Clone, Debug)]
+pub struct AccessPattern {
+    /// Statement the access belongs to.
+    pub stmt: String,
+    pub array: String,
+    pub tag: Option<String>,
+    pub scope: MemScope,
+    /// True for the statement's store target, false for a load.
+    pub store: bool,
+    /// lid(0) stride in elements, simplified under the kernel's
+    /// assumptions (possibly symbolic in the problem sizes).
+    pub stride: QPoly,
+    /// Global arrays: transactions per sub-group access (worst case
+    /// over the sample sizes when the stride is parametric).
+    pub txns_per_access: Option<u64>,
+    /// Global arrays: the contiguous baseline for the element width.
+    pub contiguous_txns: Option<u64>,
+    /// Local arrays: bank-conflict serialization factor.
+    pub bank_multiplier: Option<u64>,
+}
+
+impl AccessPattern {
+    /// True when the access pays more than the ideal pattern would: an
+    /// uncoalesced global access or a bank-conflicted local one.
+    pub fn is_penalized(&self) -> bool {
+        match (self.txns_per_access, self.contiguous_txns) {
+            (Some(t), Some(b)) if t > b => return true,
+            _ => {}
+        }
+        matches!(self.bank_multiplier, Some(m) if m > 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<u64>| match v {
+            Some(n) => (n as f64).into(),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("stmt", self.stmt.as_str().into()),
+            ("array", self.array.as_str().into()),
+            (
+                "tag",
+                match &self.tag {
+                    Some(t) => t.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "scope",
+                match self.scope {
+                    MemScope::Global => "global".into(),
+                    MemScope::Local => "local".into(),
+                    MemScope::Private => "private".into(),
+                },
+            ),
+            ("store", self.store.into()),
+            ("lid0_stride", self.stride.to_string().into()),
+            ("txns_per_access", opt(self.txns_per_access)),
+            ("contiguous_txns", opt(self.contiguous_txns)),
+            ("bank_multiplier", opt(self.bank_multiplier)),
+            ("penalized", self.is_penalized().into()),
+        ])
+    }
+}
+
+/// Per-candidate access-pattern report: what [`super::admissible`]
+/// returns alongside its verdict, so the pruning loop can explain a
+/// cost regression (a candidate may be perfectly *valid* and still
+/// pay 32x the memory transactions of its baseline).
+#[derive(Clone, Debug)]
+pub struct AccessReport {
+    pub kernel: String,
+    /// Device id the geometry came from.
+    pub device: String,
+    pub geometry: Geometry,
+    /// Every global/local access of the kernel, classified.
+    pub accesses: Vec<AccessPattern>,
+}
+
+impl AccessReport {
+    /// The accesses paying a coalescing or bank-conflict penalty.
+    pub fn penalized(&self) -> Vec<&AccessPattern> {
+        self.accesses.iter().filter(|a| a.is_penalized()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", self.kernel.as_str().into()),
+            ("device", self.device.as_str().into()),
+            ("sub_group", (self.geometry.sub_group as f64).into()),
+            (
+                "cacheline_bytes",
+                (self.geometry.cacheline_bytes as f64).into(),
+            ),
+            (
+                "local_mem_banks",
+                (self.geometry.local_mem_banks as f64).into(),
+            ),
+            (
+                "accesses",
+                Json::Arr(
+                    self.accesses.iter().map(AccessPattern::to_json).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Round a sampled rational stride to the integer magnitude the
+/// transaction/bank model consumes (non-integer strides round away
+/// from zero; they do not occur in practice).
+fn sampled_stride(r: crate::util::Rat) -> i128 {
+    let a = r.abs();
+    let s = if a.is_integer() {
+        a.as_integer().unwrap_or(0)
+    } else {
+        a.floor() + 1
+    };
+    if r < crate::util::Rat::ZERO {
+        -s
+    } else {
+        s
+    }
+}
+
+/// Worst-case factor of a possibly-parametric stride: exact for
+/// constant strides, the max over the kernel's sample sizes otherwise,
+/// degrading to `cap` when no sample point evaluates.
+fn worst_factor(
+    stride: &QPoly,
+    envs: &[BTreeMap<String, i128>],
+    cap: u64,
+    f: impl Fn(i128) -> u64,
+) -> u64 {
+    if let Some(s) = stride.as_constant() {
+        return f(sampled_stride(s));
+    }
+    let mut worst: Option<u64> = None;
+    for env in envs {
+        if let Ok(v) = stride.try_eval(env) {
+            let t = f(sampled_stride(v));
+            worst = Some(worst.map_or(t, |w| w.max(t)));
+        }
+    }
+    worst.unwrap_or(cap)
+}
+
+/// Classify every global/local access of the kernel.  Assumes the
+/// structural gate has passed (subscript ranks match declarations).
+fn classify(
+    knl: &Kernel,
+    envs: &[BTreeMap<String, i128>],
+    geom: &Geometry,
+) -> Vec<AccessPattern> {
+    let mut out = Vec::new();
+    for s in &knl.stmts {
+        // Store target first, then loads (the `accesses_of` order).
+        let mut accs: Vec<(&crate::ir::Access, bool)> = Vec::new();
+        if let LhsRef::Array(a) = &s.lhs {
+            accs.push((a, true));
+        }
+        accs.extend(s.rhs.loads().into_iter().map(|l| (l, false)));
+        for (acc, store) in accs {
+            let decl = &knl.arrays[&acc.array];
+            if decl.scope == MemScope::Private {
+                continue;
+            }
+            let stride = knl.assumptions.simplify(&knl.lid_stride(acc, 0));
+            let elem_bytes = decl.dtype.size_bytes() as u64;
+            let (txns, baseline, banks) = match decl.scope {
+                MemScope::Global => (
+                    Some(worst_factor(&stride, envs, geom.sub_group, |s| {
+                        txns_for_stride(s, elem_bytes, geom)
+                    })),
+                    Some(contiguous_txns(elem_bytes, geom)),
+                    None,
+                ),
+                MemScope::Local => (
+                    None,
+                    None,
+                    Some(worst_factor(
+                        &stride,
+                        envs,
+                        geom.local_mem_banks,
+                        |s| bank_conflict_multiplier(s, geom),
+                    )),
+                ),
+                MemScope::Private => unreachable!(),
+            };
+            out.push(AccessPattern {
+                stmt: s.id.clone(),
+                array: acc.array.clone(),
+                tag: acc.tag.clone(),
+                scope: decl.scope,
+                store,
+                stride,
+                txns_per_access: txns,
+                contiguous_txns: baseline,
+                bank_multiplier: banks,
+            });
+        }
+    }
+    out
+}
+
+/// The access-pattern check: one Warn-severity diagnostic per
+/// (statement, array) whose pattern pays a penalty under `geom` —
+/// [`DiagCode::UncoalescedGlobal`] for global accesses needing more
+/// transactions than the contiguous baseline,
+/// [`DiagCode::BankConflict`] for local accesses serializing across
+/// banks.  The diagnostic message carries the symbolic stride and the
+/// derived factor.
+pub(super) fn check_access_patterns(
+    knl: &Kernel,
+    envs: &[BTreeMap<String, i128>],
+    geom: &Geometry,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut flagged: BTreeSet<(String, String)> = BTreeSet::new();
+    for p in classify(knl, envs, geom) {
+        match (p.txns_per_access, p.contiguous_txns, p.bank_multiplier) {
+            (Some(txns), Some(base), _) if txns > base => {
+                if flagged.insert((p.stmt.clone(), p.array.clone())) {
+                    diags.push(Diagnostic {
+                        code: DiagCode::UncoalescedGlobal,
+                        kernel: knl.name.clone(),
+                        stmt: Some(p.stmt),
+                        object: Some(p.array.clone()),
+                        message: format!(
+                            "global access to '{}' with lid(0) stride {} \
+                             needs {} transaction(s) per {}-item sub-group \
+                             access at {} B lines (contiguous baseline: {})",
+                            p.array,
+                            p.stride,
+                            txns,
+                            geom.sub_group,
+                            geom.cacheline_bytes,
+                            base
+                        ),
+                    });
+                }
+            }
+            (_, _, Some(mult)) if mult > 1 => {
+                if flagged.insert((p.stmt.clone(), p.array.clone())) {
+                    diags.push(Diagnostic {
+                        code: DiagCode::BankConflict,
+                        kernel: knl.name.clone(),
+                        stmt: Some(p.stmt),
+                        object: Some(p.array.clone()),
+                        message: format!(
+                            "local access to '{}' with lid(0) stride {} \
+                             serializes {}-way across {} banks",
+                            p.array, p.stride, mult, geom.local_mem_banks
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Build the full [`AccessReport`] of a kernel under one device's
+/// geometry.  `Err` carries the single
+/// [`DiagCode::MalformedKernel`](super::DiagCode::MalformedKernel)
+/// diagnostic when the kernel is structurally broken (same degradation
+/// contract as [`Analyzer::check`]).
+pub fn report(
+    knl: &Kernel,
+    dev: &DeviceProfile,
+) -> Result<AccessReport, Diagnostic> {
+    let gate = Analyzer::new();
+    if let Some(d) = gate.structural_gate(knl) {
+        return Err(d);
+    }
+    let geom = Geometry::for_device(dev);
+    let envs = sample_envs(knl);
+    Ok(AccessReport {
+        kernel: knl.name.clone(),
+        device: dev.id.to_string(),
+        geometry: geom,
+        accesses: classify(knl, &envs, &geom),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_id;
+    use crate::ir::{
+        Access, AffExpr, ArrayDecl, DType, Expr, IndexTag, Stmt,
+    };
+    use crate::polyhedral::{LoopExtent, NestedDomain};
+
+    fn geom() -> Geometry {
+        Geometry::device_independent()
+    }
+
+    #[test]
+    fn transaction_factors_reduce_to_min_s_sg_for_f32() {
+        // f32 at warp 32 / 128 B lines: baseline 1, stride-s access
+        // needs min(s, 32) transactions — the Tentpole's closed form.
+        let g = geom();
+        assert_eq!(contiguous_txns(4, &g), 1);
+        assert_eq!(txns_for_stride(0, 4, &g), 1);
+        for s in [1i128, 2, 4, 8, 16, 32, 64, -2] {
+            let expect = s.unsigned_abs().min(32) as u64;
+            assert_eq!(txns_for_stride(s, 4, &g), expect.max(1), "s={s}");
+        }
+    }
+
+    #[test]
+    fn f64_baseline_is_two_lines() {
+        let g = geom();
+        assert_eq!(contiguous_txns(8, &g), 2);
+        // Stride-1 f64 pays the baseline — not a coalescing penalty.
+        assert_eq!(txns_for_stride(1, 8, &g), 2);
+        assert_eq!(txns_for_stride(2, 8, &g), 4);
+        assert_eq!(txns_for_stride(32, 8, &g), 32);
+    }
+
+    #[test]
+    fn bank_multipliers_follow_gcd() {
+        let g = geom();
+        assert_eq!(bank_conflict_multiplier(0, &g), 1);
+        assert_eq!(bank_conflict_multiplier(1, &g), 1);
+        assert_eq!(bank_conflict_multiplier(-1, &g), 1);
+        assert_eq!(bank_conflict_multiplier(2, &g), 2);
+        assert_eq!(bank_conflict_multiplier(16, &g), 16);
+        assert_eq!(bank_conflict_multiplier(32, &g), 32);
+        assert_eq!(bank_conflict_multiplier(17, &g), 1);
+    }
+
+    /// 16x16 work-group storing to `out[li0 * stride_elems]`-style
+    /// flattened addresses.
+    fn strided_store(stride_elems: i128) -> Kernel {
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("li1", QPoly::int(16)),
+            LoopExtent::zero_to("li0", QPoly::int(16)),
+        ]);
+        let mut k = Kernel::new("strided_store", &[], dom);
+        k.iname_tags.insert("li1".into(), IndexTag::Local(1));
+        k.iname_tags.insert("li0".into(), IndexTag::Local(0));
+        k.add_array(ArrayDecl::global(
+            "out",
+            DType::F32,
+            vec![QPoly::int(16 * stride_elems.max(1) * 16)],
+        ));
+        k.add_stmt(Stmt::new(
+            "st",
+            LhsRef::Array(Access::new(
+                "out",
+                vec![AffExpr::scaled_var("li0", stride_elems as i64).plus(
+                    &AffExpr::scaled_var("li1", (16 * stride_elems) as i64),
+                )],
+            )),
+            Expr::fconst(1.0),
+            &["li1", "li0"],
+        ));
+        k
+    }
+
+    #[test]
+    fn strided_global_store_is_flagged_contiguous_is_not() {
+        let envs = sample_envs(&strided_store(1));
+        let mut diags = Vec::new();
+        check_access_patterns(&strided_store(1), &envs, &geom(), &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+        let mut diags = Vec::new();
+        check_access_patterns(&strided_store(32), &envs, &geom(), &mut diags);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DiagCode::UncoalescedGlobal);
+        assert!(diags[0].message.contains("32 transaction"), "{}", diags[0]);
+    }
+
+    #[test]
+    fn report_classifies_against_device_geometry() {
+        let k = strided_store(2);
+        // NVIDIA: stride-2 f32 = 2 lines vs baseline 1 — penalized.
+        let titan = device_by_id("titan_v").unwrap();
+        let r = report(&k, &titan).unwrap();
+        assert_eq!(r.accesses.len(), 1);
+        assert_eq!(r.accesses[0].txns_per_access, Some(2));
+        assert_eq!(r.accesses[0].contiguous_txns, Some(1));
+        assert_eq!(r.penalized().len(), 1);
+        // AMD coalesces 64-wide wavefronts at 64 B lines: baseline 4,
+        // stride 2 needs 8.
+        let amd = device_by_id("amd_r9_fury").unwrap();
+        let r = report(&k, &amd).unwrap();
+        assert_eq!(r.accesses[0].contiguous_txns, Some(4));
+        assert_eq!(r.accesses[0].txns_per_access, Some(8));
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"penalized\":true"), "{j}");
+        assert!(j.contains("\"cacheline_bytes\":64"), "{j}");
+    }
+}

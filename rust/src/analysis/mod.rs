@@ -31,6 +31,11 @@
 //!    warnings for loops that drive nothing, declared-but-unaccessed
 //!    arrays, and loop bounds whose `floor` guards the assumptions
 //!    could not discharge.
+//! 5. **Access-pattern lints** ([`access`]:
+//!    [`DiagCode::UncoalescedGlobal`], [`DiagCode::BankConflict`]) —
+//!    warnings for global accesses whose lid(0) stride costs more
+//!    memory transactions per sub-group than a contiguous access, and
+//!    local accesses that serialize across local-memory banks.
 //!
 //! Two sibling passes extend correctness checking into *pruning*:
 //!
@@ -60,9 +65,11 @@
 //! single [`DiagCode::MalformedKernel`] diagnostic instead of a panic
 //! (the hostile-input direction of ROADMAP item 5).
 
+pub mod access;
 pub mod equiv;
 pub mod resources;
 
+pub use access::{AccessPattern, AccessReport};
 pub use equiv::check_equiv;
 pub use resources::{check_feasibility, Feasibility, ResourceUsage};
 
@@ -136,6 +143,15 @@ pub enum DiagCode {
     /// its baseline (write set/count/footprint, read footprint, or op
     /// volume differs at a sampled size).
     SemanticsChanged,
+    /// A global access's lid(0) stride makes each sub-group access pay
+    /// more memory transactions than a contiguous access would
+    /// (advisory: the kernel is correct, but global bandwidth is
+    /// wasted).  See [`access`].
+    UncoalescedGlobal,
+    /// A local access's lid(0) stride serializes across local-memory
+    /// banks (advisory: on-chip throughput degrades by the conflict
+    /// multiplier).  See [`access`].
+    BankConflict,
 }
 
 impl DiagCode {
@@ -155,6 +171,8 @@ impl DiagCode {
             DiagCode::ExcessiveLocalMem => "EXCESSIVE_LOCAL_MEM",
             DiagCode::LowOccupancy => "LOW_OCCUPANCY",
             DiagCode::SemanticsChanged => "SEMANTICS_CHANGED",
+            DiagCode::UncoalescedGlobal => "UNCOALESCED_GLOBAL",
+            DiagCode::BankConflict => "BANK_CONFLICT",
         }
     }
 
@@ -172,7 +190,9 @@ impl DiagCode {
             DiagCode::UnusedIname
             | DiagCode::DeadArray
             | DiagCode::UnprovableGuard
-            | DiagCode::LowOccupancy => Severity::Warn,
+            | DiagCode::LowOccupancy
+            | DiagCode::UncoalescedGlobal
+            | DiagCode::BankConflict => Severity::Warn,
         }
     }
 
@@ -192,6 +212,8 @@ impl DiagCode {
             DiagCode::ExcessiveLocalMem,
             DiagCode::LowOccupancy,
             DiagCode::SemanticsChanged,
+            DiagCode::UncoalescedGlobal,
+            DiagCode::BankConflict,
         ]
     }
 }
@@ -355,13 +377,16 @@ pub fn verify(knl: &Kernel) -> Result<Vec<Diagnostic>, AnalysisError> {
 /// equivalent to the baseline, and launchable on `device`?  Runs
 /// [`Analyzer::check`], [`equiv::check_equiv`], and
 /// [`resources::check_feasibility`], and returns every Error-severity
-/// finding; `Ok(())` means the enumeration loop may price the
-/// candidate with the compiled evaluator.
+/// finding; `Ok` carries the candidate's [`AccessReport`] under the
+/// device's geometry, so when the enumeration loop prices the
+/// candidate with the compiled evaluator it can also *explain* a cost
+/// regression (an admissible candidate may still pay 32x the memory
+/// transactions of its baseline).
 pub fn admissible(
     baseline: &Kernel,
     candidate: &Kernel,
     device: &DeviceProfile,
-) -> Result<(), Vec<Diagnostic>> {
+) -> Result<AccessReport, Vec<Diagnostic>> {
     let mut diags = Analyzer::new().check(candidate);
     // A malformed candidate already carries its one gating diagnostic;
     // the sibling passes would only re-derive it.
@@ -377,7 +402,7 @@ pub fn admissible(
         .filter(|d| d.severity() == Severity::Error)
         .collect();
     if errors.is_empty() {
-        Ok(())
+        access::report(candidate, device).map_err(|d| vec![d])
     } else {
         Err(errors)
     }
@@ -428,6 +453,12 @@ impl Analyzer {
         self.check_unused_inames(knl, &mut diags);
         self.check_dead_arrays(knl, &mut diags);
         self.check_unprovable_guards(knl, &mut diags);
+        access::check_access_patterns(
+            knl,
+            &envs,
+            &access::Geometry::device_independent(),
+            &mut diags,
+        );
         diags
     }
 
@@ -1116,10 +1147,13 @@ impl LintEntry {
 }
 
 /// Render a lint report for a batch of kernels as stable JSON (the
-/// `perflex lint --json` payload, asserted in CI).  Schema version 2:
-/// each kernel gains a `feasibility` array (one object per checked
-/// device), and the top-level error/warning totals include feasibility
-/// findings.
+/// `perflex lint --json` payload, asserted in CI).  Schema version 3:
+/// version 2 gave each kernel a `feasibility` array (one object per
+/// checked device) with the top-level error/warning totals including
+/// feasibility findings; version 3 adds the Warn-severity
+/// access-pattern codes (`UNCOALESCED_GLOBAL`, `BANK_CONFLICT`) to the
+/// diagnostic vocabulary, so the `warnings` total is no longer zero on
+/// a healthy inventory.
 pub fn report_to_json(entries: &[LintEntry]) -> Json {
     let mut errors = 0i64;
     let mut warnings = 0i64;
@@ -1155,7 +1189,7 @@ pub fn report_to_json(entries: &[LintEntry]) -> Json {
         .collect();
     Json::obj(vec![
         ("schema", "perflex-lint".into()),
-        ("version", 2i64.into()),
+        ("version", 3i64.into()),
         ("kernels", Json::Arr(kernels)),
         ("errors", errors.into()),
         ("warnings", warnings.into()),
@@ -1191,6 +1225,8 @@ mod tests {
                 "EXCESSIVE_LOCAL_MEM",
                 "LOW_OCCUPANCY",
                 "SEMANTICS_CHANGED",
+                "UNCOALESCED_GLOBAL",
+                "BANK_CONFLICT",
             ]
         );
     }
@@ -1270,7 +1306,7 @@ mod tests {
         }]);
         let text = j.to_string();
         assert!(text.contains("\"schema\":\"perflex-lint\""), "{text}");
-        assert!(text.contains("\"version\":2"), "{text}");
+        assert!(text.contains("\"version\":3"), "{text}");
         assert!(text.contains("\"feasibility\":[]"), "{text}");
         assert!(text.contains("\"code\":\"RACE_WRITE\""), "{text}");
         assert!(text.contains("\"errors\":1"), "{text}");

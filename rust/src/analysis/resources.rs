@@ -273,6 +273,17 @@ pub fn check_feasibility(
         }
     }
 
+    // Device-geometry access-pattern lints: the kernel-level pass in
+    // `Analyzer::check` uses the device-independent geometry; here the
+    // same pass re-runs against *this* device's cache-line width and
+    // bank count so per-device reports reflect real coalescing.
+    super::access::check_access_patterns(
+        knl,
+        &sample_envs(knl),
+        &super::access::Geometry::for_device(dev),
+        &mut diags,
+    );
+
     Ok(Feasibility {
         device: dev.id.to_string(),
         usage,

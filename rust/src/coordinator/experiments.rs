@@ -49,7 +49,7 @@ use crate::uipick::KernelCollection;
 /// Every runnable experiment.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
-    "table2", "table3", "table4", "all",
+    "table2", "table3", "table4", "access", "all",
 ];
 
 /// Dispatch with a fresh in-memory session.
@@ -90,6 +90,9 @@ fn dispatch_experiment(
         "table2" => table2(),
         "table3" => table3(aot, session),
         "table4" => table4(aot, session),
+        // Not part of "all": the OVERALL number reproduces the paper's
+        // fixed three-model evaluation.
+        "access" => access_experiment(aot, session),
         "all" => all_experiments(aot, session),
         other => Err(format!(
             "unknown experiment '{other}'; known: {EXPERIMENT_IDS:?}"
@@ -645,6 +648,13 @@ fn granularity_and_rate(
                 }
             }
         }
+        FeatureSpec::MemTransactions { .. } => {
+            // One transaction moves one (default) cache line.
+            ("SG", format!("{} B/s", rate(128.0)))
+        }
+        FeatureSpec::BankConflictFactor => {
+            ("SG", format!("{} acc/s", rate(1.0)))
+        }
         FeatureSpec::SyncBarrierPerWg => ("WG", "-".into()),
         FeatureSpec::ThreadGroups => ("WG", "-".into()),
         FeatureSpec::SyncKernelLaunch => ("K", "-".into()),
@@ -1073,6 +1083,140 @@ fn fig9(aot: Option<&Artifacts>, session: &Session) -> Result<ExperimentReport, 
         aot,
         session,
     )
+}
+
+// ----------------------------------------------------------------------
+// Access — the access-pattern-aware model form (ISSUE 10).
+// ----------------------------------------------------------------------
+
+/// The calibration sets of the `access` experiment: the matmul sets
+/// plus add-flops and the stencil sweep (the model spans both cases),
+/// plus strided `gmem_pattern` kernels so the transaction feature sees
+/// uncoalesced traffic during calibration, not just at prediction time.
+fn access_measurement_sets() -> Vec<Vec<String>> {
+    let mut sets = expsets::matmul_measurement_sets();
+    sets.push(vec![
+        "flops_add_pattern".into(),
+        "dtype:float32".into(),
+        "nelements:1048576".into(),
+        "m:1024,1152,1280,1408".into(),
+    ]);
+    sets.push(vec![
+        "gmem_from_fdiff".into(),
+        "lsize:16,18".into(),
+        "n:2016,4032,6048,8064".into(),
+    ]);
+    sets.push(vec![
+        "gmem_pattern".into(),
+        "dtype:float32".into(),
+        "lid_stride_0:2,4".into(),
+        "lid_stride_1:16".into(),
+        "n_arrays:1".into(),
+        "nelements:4194304".into(),
+    ]);
+    sets
+}
+
+/// Fit [`expsets::access_model`] — a single per-transaction global term
+/// (`f_mem_transactions`) plus a bank-conflict excess term instead of
+/// one tagged term per distinct pattern — and show the trade on the
+/// matmul and stencil variants: fewer parameters, one shared rate.
+fn access_experiment(
+    aot: Option<&Artifacts>,
+    session: &Session,
+) -> Result<ExperimentReport, String> {
+    let cache = session.cache();
+    let mut rep = ExperimentReport::new(
+        "access",
+        "access-pattern-aware model (f_mem_transactions / \
+         f_bank_conflict_factor) on the matmul and stencil variants",
+    );
+    let m_knls =
+        expsets::generate_measurement_kernels(&access_measurement_sets())?;
+    rep.line(format!("measurement kernels: {}", m_knls.len()));
+
+    let ns = [1024i64, 2048, 3072];
+    let fns = [2016i64, 4032, 6048];
+    let variants = vec![
+        VariantSpec {
+            label: "matmul_pf".into(),
+            kernel: build_matmul(crate::ir::DType::F32, true, 16)?.freeze(),
+            envs: ns.iter().map(|&n| env1("n", n)).collect(),
+        },
+        VariantSpec {
+            label: "matmul_nopf".into(),
+            kernel: build_matmul(crate::ir::DType::F32, false, 16)?.freeze(),
+            envs: ns.iter().map(|&n| env1("n", n)).collect(),
+        },
+        VariantSpec {
+            label: "fdiff_16".into(),
+            kernel: build_fdiff(16)?.freeze(),
+            envs: fns.iter().map(|&n| env1("n", n)).collect(),
+        },
+        VariantSpec {
+            label: "fdiff_18".into(),
+            kernel: build_fdiff(18)?.freeze(),
+            envs: fns.iter().map(|&n| env1("n", n)).collect(),
+        },
+    ];
+
+    // One NVIDIA part and the GCN3 part: the feature values are
+    // device-independent, the fitted rates are not.
+    for dev_id in ["titan_v", "amd_r9_fury"] {
+        let device = crate::gpusim::device_by_id(dev_id).unwrap();
+        let cm = expsets::access_model(device.id, true);
+        let mut data = gather_features_by_ids_cached(
+            cm.feature_columns(),
+            &m_knls,
+            &device,
+            cache,
+        )?;
+        data.scale_features_by_output()?;
+        let fit = match aot {
+            Some(a) => fit_cost_model_aot(a, &cm, &data, &LmOptions::default())?,
+            None => fit_cost_model_native(&cm, &data, &LmOptions::default())?,
+        };
+        rep.summary
+            .insert(format!("residual_{dev_id}"), fit.residual);
+        for v in &variants {
+            if v.kernel.work_group_size() > device.max_wg_size {
+                rep.line(format!(
+                    "{:<14} {:<14} SKIP (work-group too large)",
+                    device.id, v.label
+                ));
+                continue;
+            }
+            let mut v_errs = Vec::new();
+            for env in &v.envs {
+                let measured =
+                    measure_with_cache(&device, &v.kernel, env, cache)?.time_s;
+                let predicted =
+                    predict(&cm, &fit, &v.kernel, env, &device, session)?;
+                v_errs.push((predicted - measured).abs() / measured);
+                rep.predictions.push(Prediction {
+                    device: device.id.into(),
+                    variant: v.label.clone(),
+                    sizes: env.clone(),
+                    measured,
+                    predicted,
+                    target: "time".into(),
+                });
+            }
+            let g = geomean(&v_errs);
+            rep.line(format!(
+                "{:<14} {:<14} geomean err {:>5.1}%",
+                device.id,
+                v.label,
+                100.0 * g
+            ));
+            rep.summary
+                .insert(format!("err_{}_{}", device.id, v.label), g);
+        }
+    }
+    let overall = rep.overall_geomean();
+    rep.line(format!("overall geomean rel err: {:.1}%", 100.0 * overall));
+    rep.summary.insert("geomean_rel_err".into(), overall);
+    Ok(rep)
 }
 
 fn all_experiments(

@@ -181,6 +181,26 @@ pub fn fdiff_measurement_sets() -> Vec<Vec<String>> {
     sets
 }
 
+/// The access-pattern-aware model form (ISSUE 10): instead of one
+/// tagged term per distinct global pattern, a single
+/// `f_mem_transactions` term charges every global access its
+/// coalescing-model transaction count, and `f_bank_conflict_factor`
+/// charges local accesses their excess bank serialization.  Scope
+/// (§5): fewer parameters than the per-tag models, at the cost of
+/// assuming one per-transaction rate — the `access` experiment shows
+/// where that trade lands on the matmul/stencil variants.
+///
+/// Not part of [`eval_cases`] (the Fig. 6 set is fixed at three); the
+/// `access` experiment fits it directly.
+pub fn access_model(device: &str, nonlinear: bool) -> CostModel {
+    with_overhead(CostModel::new(device, nonlinear))
+        .term("gtxn", "f_mem_transactions", CostGroup::Gmem)
+        .term("f32add", "f_op_float32_add", CostGroup::OnChip)
+        .term("f32madd", "f_op_float32_madd", CostGroup::OnChip)
+        .term("f32lmem", "f_mem_access_local_float32", CostGroup::OnChip)
+        .term("bankx", "f_bank_conflict_factor", CostGroup::OnChip)
+}
+
 /// The three evaluation cases.
 pub fn eval_cases() -> Vec<EvalCase> {
     vec![

@@ -8,6 +8,9 @@
 //! f_mem_access_global_float32_load
 //! f_mem_access_global_float32_lstrides:{0:1,1:>16}_afr:1
 //! f_mem_access_tag:aLD
+//! f_mem_transactions
+//! f_mem_transactions_tag:aLD
+//! f_bank_conflict_factor
 //! f_sync_local_barrier_per_wg
 //! f_sync_kernel_launch
 //! f_thread_groups
@@ -18,13 +21,23 @@
 //! access contributes to the feature iff it matches every given filter
 //! (the paper's property-based characterization), or is named directly
 //! by its memory-access tag.
+//!
+//! The `f_mem_transactions[_tag:<t>]` and `f_bank_conflict_factor`
+//! families weigh each access by its *pattern* — the coalescing-model
+//! transaction count and the bank-conflict serialization factor of
+//! [`crate::analysis::access`] — rather than its raw count.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::analysis::access::{
+    bank_conflict_multiplier, contiguous_txns, txns_for_stride, Geometry,
+};
+use crate::gpusim::{DEFAULT_CACHELINE_BYTES, DEFAULT_LOCAL_MEM_BANKS};
 use crate::ir::{DType, MemScope};
 use crate::polyhedral::{PolyPlan, QPoly};
 use crate::stats::{Direction, KernelStats, MemAccessStat};
+use crate::util::Rat;
 
 /// A constraint on an integer quantity (stride or AFR).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -407,6 +420,13 @@ pub enum FeatureSpec {
     Op { dtype: DType, op: String },
     /// `f_mem_access_...` — classified memory access count.
     MemAccess(MemAccessFilter),
+    /// `f_mem_transactions[_tag:<t>]` — global-memory transactions
+    /// under the coalescing model of [`crate::analysis::access`],
+    /// optionally restricted to one memory-access tag.
+    MemTransactions { tag: Option<String> },
+    /// `f_bank_conflict_factor` — excess bank-serialized local-memory
+    /// accesses (zero for conflict-free kernels).
+    BankConflictFactor,
     /// `f_sync_local_barrier_per_wg` — per-work-item barriers × groups.
     SyncBarrierPerWg,
     /// `f_sync_kernel_launch` — constant 1 per launch.
@@ -436,10 +456,27 @@ impl FeatureSpec {
                 op: op.to_string(),
             });
         }
+        if let Some(rest) = body.strip_prefix("mem_transactions") {
+            if rest.is_empty() {
+                return Ok(FeatureSpec::MemTransactions { tag: None });
+            }
+            if let Some(t) = rest.strip_prefix("_tag:") {
+                if !t.is_empty() {
+                    return Ok(FeatureSpec::MemTransactions {
+                        tag: Some(t.to_string()),
+                    });
+                }
+            }
+            return Err(format!(
+                "bad mem_transactions feature '{id}' (expected \
+                 f_mem_transactions or f_mem_transactions_tag:<t>)"
+            ));
+        }
         if let Some(rest) = body.strip_prefix("mem_access") {
             return Ok(FeatureSpec::MemAccess(parse_mem_filter(rest)?));
         }
         match body {
+            "bank_conflict_factor" => Ok(FeatureSpec::BankConflictFactor),
             "sync_local_barrier_per_wg" => Ok(FeatureSpec::SyncBarrierPerWg),
             "sync_kernel_launch" => Ok(FeatureSpec::SyncKernelLaunch),
             "thread_groups" => Ok(FeatureSpec::ThreadGroups),
@@ -449,7 +486,15 @@ impl FeatureSpec {
                         device: dev.to_string(),
                     })
                 } else {
-                    Err(format!("unknown feature '{id}'"))
+                    Err(format!(
+                        "unknown feature '{id}'; valid families: \
+                         f_op_<dtype>_<op>, f_mem_access[_<filters>], \
+                         f_mem_transactions[_tag:<t>], \
+                         f_bank_conflict_factor, \
+                         f_sync_local_barrier_per_wg, \
+                         f_sync_kernel_launch, f_thread_groups, \
+                         f_cl_wall_time_<device>"
+                    ))
                 }
             }
         }
@@ -474,6 +519,12 @@ impl FeatureSpec {
                 .filter(|m| f.matches(m, env))
                 .map(|m| m.count_at_granularity(sg).eval_f64(env))
                 .sum()),
+            FeatureSpec::MemTransactions { tag } => {
+                Ok(mem_transactions_poly(stats, tag.as_deref()).eval_f64(env))
+            }
+            FeatureSpec::BankConflictFactor => {
+                Ok(bank_conflict_poly(stats).eval_f64(env))
+            }
             FeatureSpec::SyncBarrierPerWg => {
                 Ok(stats.barriers_per_wi.eval_f64(env) * stats.num_groups.eval_f64(env))
             }
@@ -520,6 +571,12 @@ impl FeatureSpec {
                     terms,
                     filter: f.clone(),
                 }
+            }
+            FeatureSpec::MemTransactions { tag } => {
+                BoundKind::Poly(mem_transactions_poly(stats, tag.as_deref()))
+            }
+            FeatureSpec::BankConflictFactor => {
+                BoundKind::Poly(bank_conflict_poly(stats))
             }
             FeatureSpec::SyncBarrierPerWg => BoundKind::PolyProduct(
                 stats.barriers_per_wi.clone(),
@@ -635,6 +692,76 @@ fn parse_stride_map(body: &str) -> Result<BTreeMap<u8, Constraint>, String> {
     Ok(out)
 }
 
+/// Device-independent access-pattern geometry at this statistics
+/// bundle's sub-group size (128-byte lines, 32 banks).  Features stay
+/// device-independent — they are gathered once per kernel and reused
+/// across every device — so the per-device refinement lives in the
+/// analysis feasibility pass, not here.
+fn feature_geometry(stats: &KernelStats) -> Geometry {
+    Geometry {
+        sub_group: stats.sub_group_size,
+        cacheline_bytes: DEFAULT_CACHELINE_BYTES,
+        local_mem_banks: DEFAULT_LOCAL_MEM_BANKS,
+    }
+}
+
+/// The `f_mem_transactions` polynomial: for every global access
+/// (optionally restricted to one tag), `count_wi · txns / sg` — the
+/// total memory transactions the kernel issues under the coalescing
+/// model of [`crate::analysis::access`].  Constant lid(0) strides get
+/// their exact transaction factor; parametric strides are charged the
+/// one-line-per-lane worst case so the feature stays polynomial in the
+/// problem sizes.  Shared by [`FeatureSpec::eval`] and
+/// [`FeatureSpec::bind`] so the two paths agree bit for bit.
+fn mem_transactions_poly(stats: &KernelStats, tag: Option<&str>) -> QPoly {
+    let geom = feature_geometry(stats);
+    let sg = geom.sub_group as i128;
+    let mut acc = QPoly::zero();
+    for m in &stats.mem {
+        if m.scope != MemScope::Global {
+            continue;
+        }
+        if let Some(t) = tag {
+            if m.tag.as_deref() != Some(t) {
+                continue;
+            }
+        }
+        let elem = m.dtype.size_bytes();
+        let txns =
+            match m.lstrides[0].as_constant().and_then(|r| r.as_integer()) {
+                Some(s) => txns_for_stride(s, elem, &geom),
+                None => geom.sub_group.max(contiguous_txns(elem, &geom)),
+            };
+        acc = &acc + &m.count_wi.scale(Rat::new(txns as i128, sg));
+    }
+    acc
+}
+
+/// The `f_bank_conflict_factor` polynomial: for every local access
+/// whose lid(0) stride serializes `m`-way across the banks, the
+/// *excess* serialized accesses `count_wi · (m − 1) / sg`.
+/// Conflict-free kernels contribute exactly zero.  Shared by
+/// [`FeatureSpec::eval`] and [`FeatureSpec::bind`].
+fn bank_conflict_poly(stats: &KernelStats) -> QPoly {
+    let geom = feature_geometry(stats);
+    let sg = geom.sub_group as i128;
+    let mut acc = QPoly::zero();
+    for m in &stats.mem {
+        if m.scope != MemScope::Local {
+            continue;
+        }
+        let mult =
+            match m.lstrides[0].as_constant().and_then(|r| r.as_integer()) {
+                Some(s) => bank_conflict_multiplier(s, &geom),
+                None => geom.local_mem_banks,
+            };
+        if mult > 1 {
+            acc = &acc + &m.count_wi.scale(Rat::new(mult as i128 - 1, sg));
+        }
+    }
+    acc
+}
+
 impl fmt::Display for FeatureSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -683,6 +810,16 @@ impl fmt::Display for FeatureSpec {
                     write!(f, "_afr:{a}")?;
                 }
                 Ok(())
+            }
+            FeatureSpec::MemTransactions { tag } => {
+                write!(f, "f_mem_transactions")?;
+                if let Some(t) = tag {
+                    write!(f, "_tag:{t}")?;
+                }
+                Ok(())
+            }
+            FeatureSpec::BankConflictFactor => {
+                write!(f, "f_bank_conflict_factor")
             }
             FeatureSpec::SyncBarrierPerWg => write!(f, "f_sync_local_barrier_per_wg"),
             FeatureSpec::SyncKernelLaunch => write!(f, "f_sync_kernel_launch"),
@@ -761,6 +898,149 @@ mod tests {
     }
 
     #[test]
+    fn parse_access_pattern_features() {
+        let f = FeatureSpec::parse("f_mem_transactions").unwrap();
+        assert_eq!(f, FeatureSpec::MemTransactions { tag: None });
+        assert_eq!(f.to_string(), "f_mem_transactions");
+        let f = FeatureSpec::parse("f_mem_transactions_tag:mm_pf_a").unwrap();
+        assert_eq!(
+            f,
+            FeatureSpec::MemTransactions {
+                tag: Some("mm_pf_a".into())
+            }
+        );
+        assert_eq!(f.to_string(), "f_mem_transactions_tag:mm_pf_a");
+        assert_eq!(
+            FeatureSpec::parse("f_bank_conflict_factor").unwrap(),
+            FeatureSpec::BankConflictFactor
+        );
+        assert!(FeatureSpec::parse("f_mem_transactions_tag:").is_err());
+        assert!(FeatureSpec::parse("f_mem_transactions_bogus").is_err());
+    }
+
+    #[test]
+    fn unknown_family_error_lists_valid_families() {
+        let e = FeatureSpec::parse("f_mm_transactions").unwrap_err();
+        assert!(e.contains("unknown feature"), "{e}");
+        for fam in [
+            "f_op_<dtype>_<op>",
+            "f_mem_access",
+            "f_mem_transactions",
+            "f_bank_conflict_factor",
+            "f_sync_local_barrier_per_wg",
+            "f_sync_kernel_launch",
+            "f_thread_groups",
+            "f_cl_wall_time_<device>",
+        ] {
+            assert!(e.contains(fam), "missing {fam} in: {e}");
+        }
+    }
+
+    /// 16x16 work-group; one global f32 store with lid(0) stride
+    /// `gstride` and one local f32 store with lid(0) stride `lstride`
+    /// (both injective, so no analyzer noise).
+    fn pattern_kernel(gstride: i64, lstride: i64) -> crate::ir::Kernel {
+        use crate::ir::{
+            Access, AffExpr, ArrayDecl, Expr, IndexTag, Kernel, LhsRef, Stmt,
+        };
+        use crate::polyhedral::{LoopExtent, NestedDomain};
+        let dom = NestedDomain::new(vec![
+            LoopExtent::zero_to("li1", QPoly::int(16)),
+            LoopExtent::zero_to("li0", QPoly::int(16)),
+        ]);
+        let mut k = Kernel::new("pattern_case", &[], dom);
+        k.iname_tags.insert("li1".into(), IndexTag::Local(1));
+        k.iname_tags.insert("li0".into(), IndexTag::Local(0));
+        k.add_array(ArrayDecl::global(
+            "out",
+            DType::F32,
+            vec![QPoly::int(16 * gstride.max(1) as i128 * 16)],
+        ));
+        k.add_array(ArrayDecl::local(
+            "tile",
+            DType::F32,
+            vec![QPoly::int(16 * lstride.max(1) as i128 * 16)],
+        ));
+        k.add_stmt(Stmt::new(
+            "gst",
+            LhsRef::Array(Access::tagged(
+                "out",
+                "pat_out",
+                vec![AffExpr::scaled_var("li0", gstride)
+                    .plus(&AffExpr::scaled_var("li1", 16 * gstride))],
+            )),
+            Expr::fconst(1.0),
+            &["li1", "li0"],
+        ));
+        k.add_stmt(Stmt::new(
+            "lst",
+            LhsRef::Array(Access::new(
+                "tile",
+                vec![AffExpr::scaled_var("li0", lstride)
+                    .plus(&AffExpr::scaled_var("li1", 16 * lstride))],
+            )),
+            Expr::fconst(1.0),
+            &["li1", "li0"],
+        ));
+        k
+    }
+
+    #[test]
+    fn mem_transactions_weighs_strided_accesses() {
+        // 256 work-items, one global store each.  Stride 1: 256/32 = 8
+        // transactions.  Stride 4: 4 lines per sub-group access, 32.
+        let env: BTreeMap<String, i128> = BTreeMap::new();
+        let spec = FeatureSpec::parse("f_mem_transactions").unwrap();
+        let stats = crate::stats::gather(&pattern_kernel(1, 1), 32).unwrap();
+        assert_eq!(spec.eval(&stats, &env).unwrap(), 8.0);
+        let stats = crate::stats::gather(&pattern_kernel(4, 1), 32).unwrap();
+        assert_eq!(spec.eval(&stats, &env).unwrap(), 32.0);
+        // Tag filtering: the only global access carries tag pat_out.
+        let tagged =
+            FeatureSpec::parse("f_mem_transactions_tag:pat_out").unwrap();
+        assert_eq!(tagged.eval(&stats, &env).unwrap(), 32.0);
+        let other =
+            FeatureSpec::parse("f_mem_transactions_tag:nope").unwrap();
+        assert_eq!(other.eval(&stats, &env).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn bank_conflict_factor_counts_excess_serialization() {
+        // Stride-1 local store: conflict-free, exactly zero.  Stride
+        // 16 over 32 banks: 16-way serialization, 256·15/32 = 120
+        // excess accesses.
+        let env: BTreeMap<String, i128> = BTreeMap::new();
+        let spec = FeatureSpec::parse("f_bank_conflict_factor").unwrap();
+        let stats = crate::stats::gather(&pattern_kernel(1, 1), 32).unwrap();
+        assert_eq!(spec.eval(&stats, &env).unwrap(), 0.0);
+        let stats = crate::stats::gather(&pattern_kernel(1, 16), 32).unwrap();
+        assert_eq!(spec.eval(&stats, &env).unwrap(), 120.0);
+    }
+
+    #[test]
+    fn access_pattern_features_are_zero_penalty_on_clean_apps() {
+        // The shipped matmul variants are coalesced and conflict-free:
+        // the bank factor must be exactly zero and the transaction
+        // count must equal the per-sub-group global access count.
+        let k = crate::uipick::apps::build_matmul(DType::F32, true, 16).unwrap();
+        let stats = crate::stats::gather(&k, 32).unwrap();
+        let env: BTreeMap<String, i128> =
+            [("n".to_string(), 1024i128)].into_iter().collect();
+        let bank = FeatureSpec::parse("f_bank_conflict_factor").unwrap();
+        assert_eq!(bank.eval(&stats, &env).unwrap(), 0.0);
+        let txn = FeatureSpec::parse("f_mem_transactions").unwrap();
+        let expect: f64 = stats
+            .mem
+            .iter()
+            .filter(|m| m.scope == MemScope::Global)
+            .map(|m| m.count_wi.eval_f64(&env) / 32.0)
+            .sum();
+        let got = txn.eval(&stats, &env).unwrap();
+        assert!(got > 0.0);
+        assert!((got - expect).abs() <= expect * 1e-9, "{got} vs {expect}");
+    }
+
+    #[test]
     fn parse_sync_and_misc() {
         assert_eq!(
             FeatureSpec::parse("f_sync_local_barrier_per_wg").unwrap(),
@@ -801,6 +1081,9 @@ mod tests {
             "f_mem_access_local_float32",
             "f_mem_access_local_float32_lstrides:{0:<2}",
             "f_mem_access_global_float32_load_lstrides:{1:>16}",
+            "f_mem_transactions",
+            "f_mem_transactions_tag:mm_pf_a",
+            "f_bank_conflict_factor",
             "f_sync_local_barrier_per_wg",
             "f_sync_kernel_launch",
             "f_thread_groups",
@@ -869,6 +1152,9 @@ mod tests {
             "f_mem_access_local_float32",
             "f_mem_access_tag:bLD",
             "f_mem_access_global_float32_load_lstrides:{0:1}_gstrides:{0:>0,1:0}_afr:>1",
+            "f_mem_transactions",
+            "f_mem_transactions_tag:dg_u_prefetch_u",
+            "f_bank_conflict_factor",
             "f_sync_kernel_launch",
             "f_cl_wall_time_amd_r9_fury",
         ] {

@@ -12,6 +12,14 @@
 /// 64-wide wavefronts.
 pub const DEFAULT_SUB_GROUP_SIZE: u64 = 32;
 
+/// Device-independent coalescing-unit width in bytes, used by the
+/// access-pattern pass and features when no [`DeviceProfile`] is in
+/// scope (every NVIDIA fleet device coalesces at 128 B).
+pub const DEFAULT_CACHELINE_BYTES: u64 = 128;
+
+/// Device-independent local-memory bank count (32 across the fleet).
+pub const DEFAULT_LOCAL_MEM_BANKS: u64 = 32;
+
 /// One simulated GPU.
 #[derive(Clone, Debug)]
 pub struct DeviceProfile {
@@ -55,6 +63,15 @@ pub struct DeviceProfile {
     pub l2_gbps: f64,
     /// Memory transaction (cache line) size.
     pub line_bytes: u64,
+    /// Coalescing-unit width in bytes (Table 2): the cache-line
+    /// granularity `analysis::access` divides a sub-group's footprint
+    /// by when counting global-memory transactions.  Matches
+    /// `line_bytes` on the NVIDIA parts; GCN3 coalesces at 64 B.
+    pub cacheline_bytes: u64,
+    /// Local (shared/LDS) memory banks.  A sub-group access whose
+    /// lid(0) stride shares a factor with this count serializes into
+    /// `gcd(stride, banks)`-way bank conflicts (`BANK_CONFLICT`).
+    pub local_mem_banks: u64,
     /// Sequential-loop stride (bytes) beyond which a streaming access
     /// loses DRAM row locality...
     pub row_hop_bytes: u64,
@@ -124,6 +141,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             l2_kb: 4608,
             l2_gbps: 2200.0,
             line_bytes: 128,
+            cacheline_bytes: 128,
+            local_mem_banks: 32,
             row_hop_bytes: 2048,
             row_hop_factor: 3.2,
             overlap: 0.95,
@@ -158,6 +177,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             l2_kb: 3072,
             l2_gbps: 1100.0,
             line_bytes: 128,
+            cacheline_bytes: 128,
+            local_mem_banks: 32,
             row_hop_bytes: 2048,
             row_hop_factor: 4.2,
             overlap: 0.92,
@@ -192,6 +213,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             l2_kb: 1536,
             l2_gbps: 800.0,
             line_bytes: 128,
+            cacheline_bytes: 128,
+            local_mem_banks: 32,
             row_hop_bytes: 2048,
             row_hop_factor: 4.8,
             // Kepler's in-order scheduling hides almost no on-chip
@@ -228,6 +251,8 @@ pub fn fleet() -> Vec<DeviceProfile> {
             l2_kb: 768,
             l2_gbps: 450.0,
             line_bytes: 128,
+            cacheline_bytes: 128,
+            local_mem_banks: 32,
             row_hop_bytes: 2048,
             row_hop_factor: 5.0,
             overlap: 0.05,
@@ -266,6 +291,10 @@ pub fn fleet() -> Vec<DeviceProfile> {
             l2_kb: 2048,
             l2_gbps: 1600.0,
             line_bytes: 128,
+            // GCN3 coalesces at 64 B granularity (4 B x 16-lane
+            // quarter-wavefront), half the NVIDIA 128 B unit.
+            cacheline_bytes: 64,
+            local_mem_banks: 32,
             row_hop_bytes: 2048,
             row_hop_factor: 3.8,
             overlap: 0.85,
@@ -359,6 +388,22 @@ mod tests {
         let fermi = device_by_id("tesla_c2070").unwrap();
         assert!(fermi.pj_per_op > volta.pj_per_op);
         assert!(fermi.pj_per_dram_byte > volta.pj_per_dram_byte);
+    }
+
+    #[test]
+    fn access_geometry_matches_table2() {
+        // Coalescing unit and bank count feed the access-pattern pass:
+        // 128 B lines / 32 banks on the NVIDIA parts, 64 B coalescing
+        // on GCN3.
+        for d in fleet() {
+            let expect_line = if d.vendor == "amd" {
+                64
+            } else {
+                DEFAULT_CACHELINE_BYTES
+            };
+            assert_eq!(d.cacheline_bytes, expect_line, "{}", d.id);
+            assert_eq!(d.local_mem_banks, DEFAULT_LOCAL_MEM_BANKS, "{}", d.id);
+        }
     }
 
     #[test]

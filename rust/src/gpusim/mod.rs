@@ -23,7 +23,10 @@
 pub mod device;
 pub mod exec;
 
-pub use device::{device_by_id, fleet, DeviceProfile, DEFAULT_SUB_GROUP_SIZE};
+pub use device::{
+    device_by_id, fleet, DeviceProfile, DEFAULT_CACHELINE_BYTES,
+    DEFAULT_LOCAL_MEM_BANKS, DEFAULT_SUB_GROUP_SIZE,
+};
 pub use exec::{
     is_per_kernel_measure_error, measure, measure_with_cache, simulate_time,
     simulate_time_with_cache, CostBreakdown, MeasuredSample,

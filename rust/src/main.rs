@@ -25,10 +25,14 @@
 //! given), deduplicated by structural fingerprint.  `--device <id>`
 //! (or `--all-devices`) additionally checks every kernel's derived
 //! resource usage — work-group size, local-memory bytes, barrier
-//! count — against the device's limits and prints per-device
-//! feasibility lines; `--json` emits the stable `perflex-lint` report
-//! document (schema version 2: per-kernel `feasibility` arrays)
-//! instead of the human listing.  Exit codes are typed: 1 =
+//! count — against the device's limits, re-runs the access-pattern
+//! lints under the device's coalescing geometry, and prints per-device
+//! feasibility lines (findings identical to a kernel-level one are
+//! deduplicated, so device lines only carry what that device's
+//! geometry adds); `--json` emits the stable `perflex-lint` report
+//! document (schema version 3: per-kernel `feasibility` arrays plus
+//! the access-pattern warning codes) instead of the human listing.
+//! Exit codes are typed: 1 =
 //! Error-severity findings (races, out-of-bounds accesses, barrier
 //! defects, infeasible launches), 3 = a structurally malformed kernel
 //! (`MALFORMED_KERNEL` — the input never was a valid GPU program),
@@ -299,6 +303,22 @@ fn dispatch(mut args: Vec<String>) -> Result<(), CliError> {
                         .iter()
                         .filter_map(|d| {
                             analysis::check_feasibility(&k.kernel, d).ok()
+                        })
+                        .map(|mut f| {
+                            // Device-independent findings (the access
+                            // lints under the default geometry) already
+                            // print at kernel level; keep only what
+                            // this device's geometry adds, so
+                            // --all-devices does not repeat each
+                            // finding N times.
+                            f.diags.retain(|fd| {
+                                !diags.iter().any(|kd| {
+                                    kd.code == fd.code
+                                        && kd.stmt == fd.stmt
+                                        && kd.object == fd.object
+                                })
+                            });
+                            f
                         })
                         .collect()
                 };

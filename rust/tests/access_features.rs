@@ -1,0 +1,210 @@
+//! Equivalence suite for the access-pattern features
+//! (`f_mem_transactions[_tag:<t>]`, `f_bank_conflict_factor`) across
+//! their three evaluation paths:
+//!
+//! 1. direct [`FeatureSpec::eval`] over the exact `QPoly`,
+//! 2. the batched [`BoundFeature::eval`] path — must be *bit-for-bit*
+//!    identical to (1), and
+//! 3. the lowered [`CompiledFeature`] flat-plan path — must agree with
+//!    (1) within `COMPILED_REL_ERR_BOUND` relative error.
+//!
+//! Checked across the paper's app kernels (both coalesced and strided
+//! variants), a synthetic parametric-stride kernel, every device of
+//! the Table 2 fleet (whose sub-group sizes differ), and several
+//! problem sizes per kernel.
+
+use std::collections::BTreeMap;
+
+use perflex::features::{BoundFeature, CompiledFeature, FeatureSpec};
+use perflex::gpusim::fleet;
+use perflex::ir::{Access, AffExpr, ArrayDecl, DType, Expr, IndexTag, Kernel, LhsRef, Stmt};
+use perflex::model::COMPILED_REL_ERR_BOUND;
+use perflex::polyhedral::{LoopExtent, NestedDomain, QPoly};
+use perflex::uipick::apps::{build_dg, build_fdiff, build_matmul, build_transpose, DgVariant};
+
+fn env(pairs: &[(&str, i128)]) -> BTreeMap<String, i128> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        (a - b).abs() / a.abs().max(b.abs())
+    }
+}
+
+/// A 16x16 work-group storing into an `n x n` global array transposed
+/// (lid(0) stride is the *parametric* row pitch `n` — exercises the
+/// sampled-stride fallback) plus a 16-way bank-conflicted local store.
+fn strided_kernel() -> Kernel {
+    let n = QPoly::var("n");
+    let dom = NestedDomain::new(vec![
+        LoopExtent::zero_to("li0", QPoly::int(16)),
+        LoopExtent::zero_to("li1", QPoly::int(16)),
+    ]);
+    let mut k = Kernel::new("strided", &["n"], dom);
+    k.iname_tags.insert("li0".into(), IndexTag::Local(0));
+    k.iname_tags.insert("li1".into(), IndexTag::Local(1));
+    k.add_array(ArrayDecl::global(
+        "gout",
+        DType::F32,
+        vec![n.clone(), n],
+    ));
+    k.add_array(ArrayDecl::local("tile", DType::F32, vec![QPoly::int(4096)]));
+    k.add_stmt(Stmt::new(
+        "gst",
+        LhsRef::Array(Access::tagged(
+            "gout",
+            "st_out",
+            vec![AffExpr::var("li0"), AffExpr::var("li1")],
+        )),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    k.add_stmt(Stmt::new(
+        "lst",
+        LhsRef::Array(Access::new(
+            "tile",
+            vec![AffExpr::scaled_var("li0", 16)
+                .plus(&AffExpr::scaled_var("li1", 256))],
+        )),
+        Expr::fconst(1.0),
+        &[],
+    ));
+    k
+}
+
+#[test]
+fn access_features_compiled_matches_exact_across_fleet() {
+    let base = vec![
+        "f_mem_transactions".to_string(),
+        "f_bank_conflict_factor".to_string(),
+    ];
+    let with_tag = |t: &str| {
+        let mut ids = base.clone();
+        ids.push(format!("f_mem_transactions_tag:{t}"));
+        ids
+    };
+    let n_envs = |ns: &[i128]| -> Vec<BTreeMap<String, i128>> {
+        ns.iter().map(|&n| env(&[("n", n)])).collect()
+    };
+    let dg_envs = vec![
+        env(&[("nelements", 32768), ("nmatrices", 3)]),
+        env(&[("nelements", 131072), ("nmatrices", 3)]),
+    ];
+
+    let cases: Vec<(&str, Kernel, Vec<String>, Vec<BTreeMap<String, i128>>)> = vec![
+        (
+            "matmul/prefetch",
+            build_matmul(DType::F32, true, 16).unwrap(),
+            with_tag("mm_pf_a"),
+            n_envs(&[1024, 2048, 3584]),
+        ),
+        (
+            "matmul/no_prefetch",
+            build_matmul(DType::F32, false, 16).unwrap(),
+            base.clone(),
+            n_envs(&[1024, 2048]),
+        ),
+        (
+            "fdiff/16x16",
+            build_fdiff(16).unwrap(),
+            base.clone(),
+            n_envs(&[2016, 4032]),
+        ),
+        (
+            "dg/plain",
+            build_dg(DgVariant::Plain, 64, 16).unwrap(),
+            base.clone(),
+            dg_envs.clone(),
+        ),
+        (
+            "dg/u_prefetch",
+            build_dg(DgVariant::UPrefetch, 64, 16).unwrap(),
+            base.clone(),
+            dg_envs,
+        ),
+        (
+            "transpose",
+            build_transpose(16).unwrap(),
+            base.clone(),
+            n_envs(&[1024, 4096]),
+        ),
+        (
+            "strided",
+            strided_kernel(),
+            with_tag("st_out"),
+            n_envs(&[64, 1000]),
+        ),
+    ];
+
+    // Sanity counters: the sweep must exercise non-trivial values on
+    // both families, or the equivalence assertions prove nothing.
+    let mut max_txn = 0.0f64;
+    let mut max_bank = 0.0f64;
+    let mut combos = 0usize;
+
+    for dev in fleet() {
+        for (label, k, ids, envs) in &cases {
+            let stats = perflex::stats::gather(k, dev.sub_group_size)
+                .unwrap_or_else(|e| panic!("{label} on {}: {e}", dev.id));
+            let specs: Vec<FeatureSpec> =
+                ids.iter().map(|id| FeatureSpec::parse(id).unwrap()).collect();
+            let bounds: Vec<BoundFeature> =
+                specs.iter().map(|s| s.bind(&stats).unwrap()).collect();
+            // One slot table shared by all features of this kernel,
+            // exactly as CompiledModel shares one across its columns.
+            let mut names: Vec<String> = Vec::new();
+            let compiled: Vec<CompiledFeature> = {
+                let mut slot = |nm: &str| -> u32 {
+                    if let Some(i) = names.iter().position(|x| x == nm) {
+                        i as u32
+                    } else {
+                        names.push(nm.to_string());
+                        (names.len() - 1) as u32
+                    }
+                };
+                bounds.iter().map(|b| b.lower(&stats, &mut slot)).collect()
+            };
+            for e in envs {
+                let vals: Vec<f64> = names
+                    .iter()
+                    .map(|nm| {
+                        *e.get(nm).unwrap_or_else(|| {
+                            panic!("{label}: no env value for slot '{nm}'")
+                        }) as f64
+                    })
+                    .collect();
+                for (i, id) in ids.iter().enumerate() {
+                    let direct = specs[i].eval(&stats, e).unwrap();
+                    let batched = bounds[i].eval(&stats, e);
+                    assert_eq!(
+                        direct.to_bits(),
+                        batched.to_bits(),
+                        "{label} {id} on {}: bound path diverged \
+                         ({direct} vs {batched})",
+                        dev.id
+                    );
+                    let fast = compiled[i].eval(&vals);
+                    assert!(
+                        rel_diff(direct, fast) <= COMPILED_REL_ERR_BOUND,
+                        "{label} {id} on {}: compiled {fast} vs exact \
+                         {direct} (rel {})",
+                        dev.id,
+                        rel_diff(direct, fast)
+                    );
+                    if id.starts_with("f_mem_transactions") {
+                        max_txn = max_txn.max(direct);
+                    } else {
+                        max_bank = max_bank.max(direct);
+                    }
+                    combos += 1;
+                }
+            }
+        }
+    }
+    assert!(combos >= 5 * 7 * 2 * 2, "only {combos} combos checked");
+    assert!(max_txn > 0.0, "transaction feature never non-zero");
+    assert!(max_bank > 0.0, "bank-conflict feature never non-zero");
+}
